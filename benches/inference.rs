@@ -1,0 +1,78 @@
+//! Micro-bench: per-artifact PJRT call latency on the placement hot path.
+//! (hand-rolled harness: the offline dependency closure has no criterion)
+use dreamshard::bench::common::{make_suite, Which};
+use dreamshard::coordinator::{CostNet, DreamShard, PolicyNet, TrainCfg, Variant};
+use dreamshard::runtime::{Runtime, TensorF32};
+use dreamshard::tables::NUM_FEATURES;
+use dreamshard::util::Rng;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name}: {:.2} ms/call", per * 1e3);
+}
+
+fn main() {
+    let rt = Runtime::open_default().expect("artifacts");
+    let mut rng = Rng::new(0);
+    let var = Variant::for_devices(&rt, 4).unwrap();
+    let cost = CostNet::new(&rt, &mut rng).unwrap();
+    let policy = PolicyNet::new(&rt, &mut rng).unwrap();
+    let (e, d, s, f) = (var.e, var.d, var.s, NUM_FEATURES);
+    let feats = TensorF32::zeros(&[e, d, s, f]);
+    let mask = TensorF32::ones(&[e, d, s]);
+    let dmask = TensorF32::ones(&[e, d]);
+    bench("cost_fwd (E=16,D=4,S=48)", 50, || {
+        cost.predict_tensors(&rt, &var, &feats, &mask, &dmask, 16).unwrap();
+    });
+    let q = TensorF32::zeros(&[e, d, 3]);
+    let cur = TensorF32::zeros(&[e, f]);
+    let legal = TensorF32::ones(&[e, d]);
+    bench("policy_fwd", 50, || {
+        policy.logits(&rt, &var, &feats, &mask, &q, &cur, &legal, 16).unwrap();
+    });
+    // cost_train
+    let mut cost2 = cost.clone();
+    let bf = TensorF32::zeros(&[var.b_cost, d, s, f]);
+    let bm = TensorF32::ones(&[var.b_cost, d, s]);
+    let bd = TensorF32::ones(&[var.b_cost, d]);
+    let bq = TensorF32::zeros(&[var.b_cost, d, 3]);
+    let bc = TensorF32::zeros(&[var.b_cost]);
+    bench("cost_train (B=64)", 30, || {
+        cost2.train_batch(&rt, &var, &bf, &bm, &bd, &bq, &bc, 5e-4).unwrap();
+    });
+    // policy_train b512
+    let steps: Vec<dreamshard::coordinator::StepRec> = (0..500)
+        .map(|_| dreamshard::coordinator::StepRec {
+            feats: vec![0.0; d * s * f],
+            mask: vec![1.0; d * s],
+            q: vec![0.0; d * 3],
+            cur: vec![0.0; f],
+            legal: vec![1.0; d],
+            action: 0,
+        })
+        .collect();
+    let adv = vec![0.0f32; 500];
+    let mut pol2 = policy.clone();
+    bench("policy_train (500 steps -> b512)", 10, || {
+        pol2.train_steps(&rt, &var, &steps, &adv, 5e-4).unwrap();
+    });
+    // full placement inference
+    let suite = make_suite(Which::Dlrm, 50, 4, 2, 7);
+    let agent = {
+        let mut rng = Rng::new(1);
+        let mut a = DreamShard::new(&rt, 4, TrainCfg::default(), &mut rng).unwrap();
+        a.cost = cost;
+        a.policy = policy;
+        a
+    };
+    bench("place (50 tables, 4 devices)", 5, || {
+        agent.place(&rt, &suite.sim, &suite.ds, &suite.test[0]).unwrap();
+    });
+}

@@ -1,0 +1,39 @@
+//! End-to-end placement benchmarks: inference latency per task size (the
+//! paper's headline "hundreds of tables in less than a second", Fig. 8)
+//! and one full Algorithm-1 training iteration.
+use dreamshard::bench::common::{make_suite, Which};
+use dreamshard::coordinator::{DreamShard, TrainCfg};
+use dreamshard::runtime::Runtime;
+use dreamshard::util::Rng;
+use std::time::Instant;
+
+fn main() {
+    let rt = Runtime::open_default().expect("artifacts missing — run `make artifacts`");
+    let mut rng = Rng::new(0);
+    for (n, d) in [(10usize, 4usize), (50, 4), (100, 4), (200, 8)] {
+        let suite = make_suite(Which::Dlrm, n, d, 2, 7);
+        let agent = DreamShard::new(&rt, d, TrainCfg::default(), &mut rng).unwrap();
+        let task = &suite.test[0];
+        agent.place(&rt, &suite.sim, &suite.ds, task).unwrap(); // warm
+        let t0 = Instant::now();
+        let reps = 5;
+        for _ in 0..reps {
+            agent.place(&rt, &suite.sim, &suite.ds, task).unwrap();
+        }
+        println!(
+            "place {n} tables x {d} devices: {:.1} ms",
+            t0.elapsed().as_secs_f64() / reps as f64 * 1e3
+        );
+    }
+    // one full training iteration at the paper's default budget
+    let suite = make_suite(Which::Dlrm, 50, 4, 4, 7);
+    let mut agent = DreamShard::new(&rt, 4, TrainCfg::default(), &mut rng).unwrap();
+    let t0 = Instant::now();
+    agent
+        .train_iteration(&rt, &suite.sim, &suite.ds, &suite.train, 0, false, &mut rng)
+        .unwrap();
+    println!(
+        "one Algorithm-1 iteration (paper budget, DLRM-50 (4)): {:.1} s",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,32 @@
+//! Simulator micro-benchmarks: evaluation throughput at several task
+//! scales (the simulator is on the data-collection path and inside the
+//! RNN baseline's reward loop, so it must stay in the microsecond range).
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools};
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    println!("{name}: {:.1} us/call", t0.elapsed().as_secs_f64() / iters as f64 * 1e6);
+}
+
+fn main() {
+    for (n_tables, n_dev) in [(20usize, 4usize), (50, 4), (200, 8), (960, 128)] {
+        let ds = if n_dev > 8 { gen_prod(1024, 77) } else { gen_dlrm(856, 42) };
+        let (pool, _) = split_pools(&ds, 1);
+        let task = sample_tasks(&pool, n_tables.min(pool.len()), n_dev, 1, 7).remove(0);
+        let sim = Simulator::new(SimConfig::default());
+        let placement: Vec<usize> = (0..task.n_tables()).map(|i| i % n_dev).collect();
+        bench(
+            &format!("evaluate {n_tables} tables x {n_dev} devices"),
+            200,
+            || {
+                sim.evaluate(&ds, &task, &placement);
+            },
+        );
+    }
+}

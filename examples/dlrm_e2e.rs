@@ -1,0 +1,168 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//! 1. Plan: train DreamShard and place the DLRM model's 26 embedding
+//!    tables on a simulated 4-GPU cluster (vs random / expert baselines).
+//! 2. Train: run the actual DLRM model (Layer-2 JAX, embedding bags
+//!    through the Layer-1 Pallas kernel, AOT `dlrm_train` artifact) for a
+//!    few hundred steps on synthetic click data — from rust, via PJRT,
+//!    logging the loss curve.
+//! 3. Report: simulated distributed step time under each placement and
+//!    the measured loss curve (recorded in EXPERIMENTS.md).
+//!
+//!     make artifacts && cargo run --release --example dlrm_e2e
+
+use anyhow::Result;
+use std::io::Write;
+
+use dreamshard::baselines::{greedy_placement, random_placement, Expert};
+use dreamshard::coordinator::{DreamShard, TrainCfg};
+use dreamshard::runtime::{to_f32_vec, Runtime, TensorF32, TensorI32};
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools, Dataset, Table, Task};
+use dreamshard::util::Rng;
+
+/// Synthetic click batch with a planted signal: the label depends on one
+/// dense feature and on whether table 0's bag contains a "hot" index, so
+/// a learning model must use BOTH the dense path and the embeddings.
+struct BatchGen {
+    hash: Vec<u64>,
+    b: usize,
+    n_dense: usize,
+    pool: usize,
+    rng: Rng,
+}
+
+impl BatchGen {
+    fn next(&mut self) -> (TensorF32, TensorI32, TensorF32, TensorF32) {
+        let (b, nd, n, p) = (self.b, self.n_dense, self.hash.len(), self.pool);
+        let mut dense = TensorF32::zeros(&[b, nd]);
+        let mut idx = TensorI32::zeros(&[b, n, p]);
+        let mut w = TensorF32::zeros(&[b, n, p]);
+        let mut labels = TensorF32::zeros(&[b]);
+        for i in 0..b {
+            for j in 0..nd {
+                dense.set(&[i, j], self.rng.f32());
+            }
+            let mut hot = false;
+            for t in 0..n {
+                let k = 1 + self.rng.below(p); // actual pooling factor
+                for s in 0..k {
+                    let v = self.rng.below(self.hash[t] as usize) as i32;
+                    idx.data[(i * n + t) * p + s] = v;
+                    w.set(&[i, t, s], 1.0);
+                    if t == 0 && v % 7 == 0 {
+                        hot = true;
+                    }
+                }
+            }
+            let logit = 2.0 * (dense.get(&[i, 0]) - 0.5) + if hot { 1.5 } else { -0.5 };
+            labels.data[i] = if self.rng.f32() < 1.0 / (1.0 + (-logit).exp()) { 1.0 } else { 0.0 };
+        }
+        (dense, idx, w, labels)
+    }
+}
+
+/// Wrap the DLRM model's tables as a placement task for the planner.
+fn dlrm_as_task(hash: &[u64]) -> (Dataset, Task) {
+    let mut rng = Rng::new(5);
+    let base = gen_dlrm(hash.len(), 9);
+    let tables: Vec<Table> = hash
+        .iter()
+        .zip(base.tables.iter())
+        .map(|(&h, proto)| Table {
+            dim: 32,
+            hash_size: h,
+            pooling: 1.0 + rng.f32() * 7.0,
+            bins: proto.bins,
+        })
+        .collect();
+    let ds = Dataset { name: "dlrm-e2e".into(), tables };
+    let task = Task { table_ids: (0..hash.len()).collect(), n_devices: 4 };
+    (ds, task)
+}
+
+fn main() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let hash = rt.manifest.dlrm_hash.clone();
+    anyhow::ensure!(!hash.is_empty(), "dlrm artifacts missing — run `make artifacts`");
+    let b = rt.manifest.consts["DLRM_B"] as usize;
+    let nd = rt.manifest.consts["DLRM_NDENSE"] as usize;
+    let pool = rt.manifest.consts["DLRM_POOL"] as usize;
+    let n_params = rt.manifest.params["dlrm"].total;
+    println!(
+        "DLRM: {} tables, {} params ({:.1} MB), batch {b}",
+        hash.len(),
+        n_params,
+        n_params as f64 * 4.0 / 1e6
+    );
+
+    // ---- 1. placement planning ------------------------------------------
+    let (ds, task) = dlrm_as_task(&hash);
+    let sim = Simulator::new(SimConfig::default());
+    // train the planner on generic DLRM tasks, then place this model
+    let pool_ds = gen_dlrm(200, 42);
+    let (pool_tr, _) = split_pools(&pool_ds, 1);
+    let plan_tasks = sample_tasks(&pool_tr, 26, 4, 12, 2);
+    let mut rng = Rng::new(0);
+    let mut agent = DreamShard::new(&rt, 4, TrainCfg::fast(), &mut rng)?;
+    println!("\ntraining the placement agent ...");
+    agent.train(&rt, &sim, &pool_ds, &plan_tasks, &mut rng)?;
+
+    let p_rand = random_placement(&ds, &task, &sim, &mut rng);
+    let p_dim = greedy_placement(&ds, &task, &sim, Expert::Dim);
+    let p_ds = agent.place(&rt, &sim, &ds, &task)?;
+    println!("\nsimulated distributed step time for the DLRM embedding stage:");
+    for (name, p) in [("random", &p_rand), ("dim-based", &p_dim), ("DreamShard", &p_ds)] {
+        let eval = sim.evaluate(&ds, &task, p);
+        println!("  {name:<12} {:.2} ms", eval.latency);
+    }
+
+    // ---- 2. actually train the model through the AOT artifact ------------
+    let steps: usize = std::env::var("DLRM_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(300);
+    let mut theta = rt.init_params("dlrm", &mut Rng::new(7))?;
+    let mut m = vec![0.0f32; n_params];
+    let mut v = vec![0.0f32; n_params];
+    let mut gen = BatchGen { hash: hash.clone(), b, n_dense: nd, pool, rng: Rng::new(11) };
+    let mut curve = vec![];
+    println!("\ntraining DLRM for {steps} steps via the dlrm_train artifact ...");
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let (dense, idx, w, labels) = gen.next();
+        let out = rt.run("dlrm_train", &[
+            TensorF32::from_vec(std::mem::take(&mut theta), &[n_params]).literal(),
+            TensorF32::from_vec(std::mem::take(&mut m), &[n_params]).literal(),
+            TensorF32::from_vec(std::mem::take(&mut v), &[n_params]).literal(),
+            TensorF32::scalar1((step + 1) as f32).literal(),
+            TensorF32::scalar1(2e-3).literal(),
+            dense.literal(),
+            idx.literal(),
+            w.literal(),
+            labels.literal(),
+        ])?;
+        theta = to_f32_vec(&out[0], n_params)?;
+        m = to_f32_vec(&out[1], n_params)?;
+        v = to_f32_vec(&out[2], n_params)?;
+        let loss = to_f32_vec(&out[3], 1)?[0];
+        curve.push(loss);
+        if step % 20 == 0 || step + 1 == steps {
+            println!("  step {step:>4}: loss {loss:.4}");
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("trained {steps} steps in {dt:.1}s ({:.1} ms/step)", dt / steps as f64 * 1e3);
+
+    // loss must actually go down — this is the end-to-end signal
+    let head: f32 = curve[..20.min(curve.len())].iter().sum::<f32>() / 20.0_f32.min(curve.len() as f32);
+    let tail: f32 = curve[curve.len().saturating_sub(20)..].iter().sum::<f32>() / 20.0_f32.min(curve.len() as f32);
+    println!("loss: first-20 avg {head:.4} -> last-20 avg {tail:.4}");
+    anyhow::ensure!(tail < head, "DLRM loss did not decrease");
+
+    std::fs::create_dir_all("bench_out")?;
+    let mut f = std::fs::File::create("bench_out/dlrm_e2e_loss.csv")?;
+    writeln!(f, "step,loss")?;
+    for (i, l) in curve.iter().enumerate() {
+        writeln!(f, "{i},{l}")?;
+    }
+    println!("loss curve -> bench_out/dlrm_e2e_loss.csv");
+    Ok(())
+}

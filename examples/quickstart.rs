@@ -1,0 +1,58 @@
+//! Quickstart: train DreamShard on small DLRM tasks, place a task with
+//! unseen tables, and compare against the expert baselines.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use dreamshard::baselines::{greedy_placement, random_placement, ALL_EXPERTS};
+use dreamshard::coordinator::{DreamShard, TrainCfg};
+use dreamshard::runtime::Runtime;
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
+use dreamshard::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. open the AOT artifacts (python ran once at build time, never again)
+    let rt = Runtime::open_default()?;
+
+    // 2. a synthetic DLRM table pool and disjoint train/test tasks
+    let ds = gen_dlrm(856, 42);
+    let (pool_tr, pool_te) = split_pools(&ds, 1);
+    let train_tasks = sample_tasks(&pool_tr, 30, 4, 20, 2);
+    let test_task = sample_tasks(&pool_te, 30, 4, 1, 3).remove(0);
+
+    // 3. the simulated 4-GPU cluster (the "hardware" of this repo)
+    let sim = Simulator::new(SimConfig::default());
+
+    // 4. train (Algorithm 1): cost net + policy net on the estimated MDP
+    let mut rng = Rng::new(0);
+    let mut agent = DreamShard::new(&rt, 4, TrainCfg::fast(), &mut rng)?;
+    println!("training on {} tasks ...", train_tasks.len());
+    agent.train(&rt, &sim, &ds, &train_tasks, &mut rng)?;
+    for st in &agent.log {
+        println!(
+            "  iter {}: collected {:.1} ms | cost-loss {:.2} | {:.1}s",
+            st.iter, st.collected_mean_cost, st.cost_loss, st.wall_s
+        );
+    }
+
+    // 5. place a task of UNSEEN tables (Algorithm 2 — no simulator costs)
+    let placement = agent.place(&rt, &sim, &ds, &test_task)?;
+    let eval = sim.evaluate(&ds, &test_task, &placement);
+    println!("\n{}", sim.render_trace(&eval, "DreamShard"));
+
+    // 6. compare with the baselines
+    let mut rows = vec![("random".to_string(), {
+        let p = random_placement(&ds, &test_task, &sim, &mut rng);
+        sim.evaluate(&ds, &test_task, &p).latency
+    })];
+    for e in ALL_EXPERTS {
+        let p = greedy_placement(&ds, &test_task, &sim, e);
+        rows.push((e.name().to_string(), sim.evaluate(&ds, &test_task, &p).latency));
+    }
+    rows.push(("DreamShard".to_string(), eval.latency));
+    println!("strategy            cost (ms)");
+    for (name, ms) in rows {
+        println!("{name:<18}  {ms:>8.2}");
+    }
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Trace visualization (paper Fig. 1 / Figs. 23-28): render the four-stage
+//! embedding pipeline per device for random vs each expert strategy on a
+//! DLRM-50 (4) task. Pure substrate demo — no training required.
+//!
+//!     cargo run --release --example trace_viz [n_tables] [n_devices]
+
+use dreamshard::baselines::{greedy_placement, random_placement, ALL_EXPERTS};
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
+use dreamshard::util::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n_tables: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(50);
+    let n_devices: usize = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(4);
+
+    let ds = gen_dlrm(856, 42);
+    let (pool, _) = split_pools(&ds, 1);
+    let task = sample_tasks(&pool, n_tables, n_devices, 1, 7).remove(0);
+    let sim = Simulator::new(SimConfig::default());
+    let mut rng = Rng::new(0);
+
+    println!("task: {} tables on {} devices (F=fwd comp, f=fwd comm, b=bwd comm, B=bwd comp)\n", n_tables, n_devices);
+    let p = random_placement(&ds, &task, &sim, &mut rng);
+    print!("{}", sim.render_trace(&sim.evaluate(&ds, &task, &p), "random"));
+    println!();
+    for e in ALL_EXPERTS {
+        let p = greedy_placement(&ds, &task, &sim, e);
+        print!("{}", sim.render_trace(&sim.evaluate(&ds, &task, &p), e.name()));
+        println!();
+    }
+}

@@ -1,0 +1,3 @@
+"""Build-time-only python package: Layer-2 JAX models + Layer-1 Pallas
+kernels, AOT-lowered to HLO text by ``compile.aot``. Never imported at
+runtime — the rust coordinator executes the artifacts via PJRT."""

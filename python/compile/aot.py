@@ -1,0 +1,245 @@
+"""AOT compiler: lower every Layer-2 function to HLO text + a manifest.
+
+Run once via ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what
+the rust ``xla`` 0.1.6 crate links) rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md). Lowered with ``return_tuple=True``; the
+rust side unwraps with ``to_tuple``.
+
+The manifest (``manifest.txt``) is a whitespace-separated line format the
+rust loader parses without a JSON dependency:
+
+    const <name> <int>
+    params <net> <total_len>
+    segment <net> <param> <offset> <len> <init_bound>
+    dlrm_hash <v0> <v1> ...
+    artifact <name> <file> <k=v> ...
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import dlrm as dlrm_mod
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# Device-count x slots-per-device variants; (128, 16) is the Table-13
+# "ultra" scale (inference-only: the paper's generalization claim is that
+# nets trained at small D transfer to large D, so no ultra train artifacts).
+TRAIN_VARIANTS = [(2, 48), (4, 48), (8, 48)]
+ULTRA = (128, 16)
+E_FWD = 16          # episode batch for forward artifacts
+B_COST = 64         # cost-net train batch (paper N_batch)
+B_POLS = [512, 2048]  # policy-train step batches (rust picks smallest fit)
+N_TBL = 256         # table_cost batch
+T_RNN = 256         # RNN controller max sequence length
+E_RNN = 10          # RNN train episode batch (paper N_episode)
+DLRM_B = 256        # DLRM train/serve batch
+
+
+def to_hlo_text(fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def s(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out = out_dir
+        self.lines = []
+
+    def const(self, name, val):
+        self.lines.append(f"const {name} {val}")
+
+    def params(self, net, spec):
+        self.lines.extend(spec.manifest_lines(net))
+
+    def artifact(self, name, fn, specs, **meta):
+        text = to_hlo_text(fn, *specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, fname), "w") as f:
+            f.write(text)
+        kv = " ".join(f"{k}={v}" for k, v in meta.items())
+        self.lines.append(f"artifact {name} {fname} {kv}".rstrip())
+        print(f"  {name}: {len(text) / 1e6:.2f} MB")
+
+    def finish(self):
+        with open(os.path.join(self.out, "manifest.txt"), "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+def emit_cost_policy(em):
+    P_c = model.cost_spec().total
+    P_p = model.policy_spec().total
+    em.params("cost", model.cost_spec())
+    em.params("policy", model.policy_spec())
+
+    for D, S in TRAIN_VARIANTS + [ULTRA]:
+        E = E_FWD
+        em.artifact(
+            f"cost_fwd_d{D}s{S}",
+            functools.partial(model.cost_forward, use_pallas=True),
+            [s((P_c,)), s((E, D, S, model.F)), s((E, D, S)), s((E, D)),
+             s((model.F,))],
+            E=E, D=D, S=S)
+        em.artifact(
+            f"policy_fwd_d{D}s{S}",
+            functools.partial(model.policy_logits, use_pallas=True),
+            [s((P_p,)), s((E, D, S, model.F)), s((E, D, S)), s((E, D, 3)),
+             s((E, model.F)), s((E, D)), s((model.F,)), s((3,))],
+            E=E, D=D, S=S)
+
+    for D, S in TRAIN_VARIANTS:
+        B = B_COST
+        em.artifact(
+            f"cost_train_d{D}s{S}",
+            model.cost_train_step,
+            [s((P_c,)), s((P_c,)), s((P_c,)), s((1,)), s((1,)),
+             s((B, D, S, model.F)), s((B, D, S)), s((B, D)), s((B, D, 3)),
+             s((B,)), s((model.F,))],
+            B=B, D=D, S=S)
+        for B in B_POLS:
+            em.artifact(
+                f"policy_train_d{D}s{S}_b{B}",
+                model.policy_train_step,
+                [s((P_p,)), s((P_p,)), s((P_p,)), s((1,)), s((1,)),
+                 s((B, D, S, model.F)), s((B, D, S)), s((B, D, 3)),
+                 s((B, model.F)), s((B, D)), s((B,), I32), s((B,)), s((B,)),
+                 s((model.F,)), s((3,))],
+                B=B, D=D, S=S)
+
+    # Fused per-step artifact (cost fwd + policy fwd in one call) — the
+    # placement hot path. E=16 serves lockstep training episodes, E=1
+    # serves greedy inference without paying for idle lanes.
+    for D, S in TRAIN_VARIANTS + [ULTRA]:
+        for E in (E_FWD, 1):
+            em.artifact(
+                f"mdp_step_d{D}s{S}_e{E}",
+                model.mdp_step,
+                [s((P_c,)), s((P_p,)), s((E, D, S, model.F)), s((E, D, S)),
+                 s((E, D)), s((E, model.F)), s((E, D)), s((model.F,)),
+                 s((3,))],
+                E=E, D=D, S=S)
+
+    em.artifact(
+        "table_cost",
+        functools.partial(model.table_cost_forward, use_pallas=True),
+        [s((P_c,)), s((N_TBL, model.F)), s((model.F,))],
+        N=N_TBL)
+
+
+def emit_reduction_ablation(em):
+    """Alternate reductions for Figures 13-14 (D=4 variant only)."""
+    P_c = model.cost_spec().total
+    D, S, B = 4, 48, B_COST
+    combos = [("max", "max"), ("mean", "max"), ("sum", "sum"), ("sum", "mean")]
+    for tr, dr in combos:
+        em.artifact(
+            f"cost_train_red_{tr}_{dr}_d{D}s{S}",
+            functools.partial(model.cost_train_step, table_red=tr, dev_red=dr),
+            [s((P_c,)), s((P_c,)), s((P_c,)), s((1,)), s((1,)),
+             s((B, D, S, model.F)), s((B, D, S)), s((B, D)), s((B, D, 3)),
+             s((B,)), s((model.F,))],
+            B=B, D=D, S=S, table_red=tr, dev_red=dr)
+        em.artifact(
+            f"cost_fwd_red_{tr}_{dr}_d{D}s{S}",
+            functools.partial(model.cost_forward, table_red=tr, dev_red=dr),
+            [s((P_c,)), s((E_FWD, D, S, model.F)), s((E_FWD, D, S)),
+             s((E_FWD, D)), s((model.F,))],
+            E=E_FWD, D=D, S=S, table_red=tr, dev_red=dr)
+
+
+def emit_rnn(em):
+    for D in (2, 4, 8):
+        spec = model.rnn_spec(D)
+        em.params(f"rnn_d{D}", spec)
+        P = spec.total
+        em.artifact(
+            f"rnn_fwd_d{D}",
+            functools.partial(model.rnn_logits, n_devices=D),
+            [s((P,)), s((E_FWD, T_RNN, model.F)), s((E_FWD, T_RNN)),
+             s((E_FWD, T_RNN, D)), s((model.F,))],
+            E=E_FWD, T=T_RNN, D=D)
+        em.artifact(
+            f"rnn_train_d{D}",
+            functools.partial(model.rnn_train_step, n_devices=D),
+            [s((P,)), s((P,)), s((P,)), s((1,)), s((1,)),
+             s((E_RNN, T_RNN, model.F)), s((E_RNN, T_RNN)),
+             s((E_RNN, T_RNN, D)), s((E_RNN, T_RNN), I32), s((E_RNN,)),
+             s((model.F,))],
+            E=E_RNN, T=T_RNN, D=D)
+
+
+def emit_dlrm(em):
+    hs = dlrm_mod.dlrm_hash_sizes()
+    spec = dlrm_mod.dlrm_spec(hs)
+    em.params("dlrm", spec)
+    em.lines.append("dlrm_hash " + " ".join(str(v) for v in hs))
+    em.const("DLRM_B", DLRM_B)
+    em.const("DLRM_POOL", dlrm_mod.POOL)
+    em.const("DLRM_NDENSE", dlrm_mod.N_DENSE)
+    em.const("DLRM_DIM", dlrm_mod.EMB_DIM)
+    P = spec.total
+    B, N, Pl = DLRM_B, len(hs), dlrm_mod.POOL
+    em.artifact(
+        "dlrm_fwd",
+        functools.partial(dlrm_mod.dlrm_forward, hash_sizes=hs, use_pallas=True),
+        [s((P,)), s((B, dlrm_mod.N_DENSE)), s((B, N, Pl), I32), s((B, N, Pl))],
+        B=B, N=N, P=Pl)
+    em.artifact(
+        "dlrm_train",
+        functools.partial(dlrm_mod.dlrm_train_step, hash_sizes=hs),
+        [s((P,)), s((P,)), s((P,)), s((1,)), s((1,)),
+         s((B, dlrm_mod.N_DENSE)), s((B, N, Pl), I32), s((B, N, Pl)), s((B,))],
+        B=B, N=N, P=Pl)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma list of groups: core,rnn,ablation,dlrm")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    groups = set((args.only or "core,rnn,ablation,dlrm").split(","))
+
+    em = Emitter(args.out)
+    em.const("F", model.F)
+    em.const("L", model.L)
+    em.const("E_FWD", E_FWD)
+    em.const("B_COST", B_COST)
+    em.const("N_TBL", N_TBL)
+    em.const("T_RNN", T_RNN)
+    em.const("E_RNN", E_RNN)
+    if "core" in groups:
+        emit_cost_policy(em)
+    if "ablation" in groups:
+        emit_reduction_ablation(em)
+    if "rnn" in groups:
+        emit_rnn(em)
+    if "dlrm" in groups:
+        emit_dlrm(em)
+    em.finish()
+    print(f"manifest: {len(em.lines)} lines -> {args.out}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

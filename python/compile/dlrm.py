@@ -1,0 +1,83 @@
+"""Layer-2 DLRM model (Naumov et al. 2019) for the end-to-end driver.
+
+This is the recommendation model whose embedding tables DreamShard places.
+``examples/dlrm_e2e.rs`` trains it for a few hundred steps on synthetic
+click data through the AOT ``dlrm_train`` artifact, logging the loss curve,
+and reports the simulated distributed step time under different placements
+(the placement does not change the math — the tables are sharded
+model-parallel — so a single-process run validates numerics while the
+simulator accounts the distributed cost; see DESIGN.md Substitutions).
+
+Architecture (section A.1 / Figure 9): bottom MLP over dense features,
+embedding-bag lookup per sparse feature (the Pallas hot-spot kernel on the
+forward path), pairwise-dot feature interaction, top MLP, BCE loss.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+from .params import ParamSpec, adam_update
+
+N_DENSE = 13
+EMB_DIM = 32
+POOL = 8          # max pooling factor per sample (padded)
+
+
+def dlrm_hash_sizes(n_tables=26, seed=7):
+    """Deterministic per-table vocabulary sizes, power-law-ish like the
+    DLRM dataset (Figure 15): most ~1e4, a few large."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    sizes = (10 ** rng.uniform(3.3, 4.6, n_tables)).astype(int)
+    return [int(s) for s in sizes]
+
+
+def dlrm_spec(hash_sizes):
+    s = ParamSpec()
+    for i, v in enumerate(hash_sizes):
+        s.add(f"emb{i}", (v, EMB_DIM), fan_in=EMB_DIM)
+    s.linear("bot1", N_DENSE, 128).linear("bot2", 128, 64).linear("bot3", 64, EMB_DIM)
+    n = len(hash_sizes) + 1
+    n_int = n * (n - 1) // 2
+    s.linear("top1", n_int + EMB_DIM, 256).linear("top2", 256, 64).linear("top3", 64, 1)
+    return s
+
+
+def _mlp3(p, pre, x):
+    h = ref.linear_ref(x, p[f"{pre}1.w"], p[f"{pre}1.b"], relu=True)
+    h = ref.linear_ref(h, p[f"{pre}2.w"], p[f"{pre}2.b"], relu=True)
+    return ref.linear_ref(h, p[f"{pre}3.w"], p[f"{pre}3.b"])
+
+
+def dlrm_forward(theta, dense, idx, w, hash_sizes, *, use_pallas=False):
+    """Click logits. dense [B,13], idx [B,N,P] i32, w [B,N,P] -> [B]."""
+    p = dlrm_spec(hash_sizes).unflatten(theta)
+    bags = []
+    for i in range(len(hash_sizes)):
+        bag = kernels.embedding_bag if use_pallas else ref.embedding_bag_ref
+        bags.append(bag(p[f"emb{i}"], idx[:, i, :], w[:, i, :]))  # [B,E]
+    bot = _mlp3(p, "bot", dense)                                  # [B,E]
+    feats = jnp.stack([bot] + bags, axis=1)                       # [B,n,E]
+    inter = jnp.einsum("bne,bme->bnm", feats, feats)
+    n = feats.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    pairs = inter[:, iu, ju]                                      # [B,n(n-1)/2]
+    top_in = jnp.concatenate([bot, pairs], axis=-1)
+    return _mlp3(p, "top", top_in).reshape(-1)
+
+
+def dlrm_loss(theta, batch, hash_sizes):
+    dense, idx, w, labels = batch
+    logits = dlrm_forward(theta, dense, idx, w, hash_sizes)
+    # numerically-stable BCE with logits
+    return jnp.mean(jnp.maximum(logits, 0.0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def dlrm_train_step(theta, m, v, t, lr, dense, idx, w, labels, hash_sizes):
+    batch = (dense, idx, w, labels)
+    loss, grads = jax.value_and_grad(dlrm_loss)(theta, batch, hash_sizes)
+    theta2, m2, v2 = adam_update(None, theta, m, v, t, lr, grads)
+    return theta2, m2, v2, jnp.reshape(loss, (1,))

@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (interpret=True) + pure-jnp oracles."""
+
+from . import ref  # noqa: F401
+from .embedding_bag import embedding_bag  # noqa: F401
+from .linear import linear  # noqa: F401
+from .seg_reduce import device_sum, overall_max  # noqa: F401

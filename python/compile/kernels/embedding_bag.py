@@ -1,0 +1,51 @@
+"""Pallas fused embedding-bag kernel (the paper's compute hot spot).
+
+FBGEMM's fused TBE op — the operation whose cost DreamShard learns — is a
+CUDA gather + segment-sum tuned around warps and the L1/L2 cache. The TPU
+rethink (DESIGN.md section Hardware-Adaptation): tile the [B, E] output into
+VMEM-resident batch-blocks; each grid step streams one slab of (indices,
+weights) HBM->VMEM, gathers the referenced rows, and performs weighted sum
+pooling inside the tile. On a real TPU the pooled reduction of hot rows is
+expressed as a one-hot x table matmul so the MXU does the reduction in
+bf16; under interpret=True (mandatory on CPU PJRT) the same kernel runs as
+a plain gather + masked sum, which is numerically identical and is what the
+hypothesis suite checks against ``ref.embedding_bag_ref``.
+
+Padding convention: ``indices`` is padded per sample to the max pooling
+factor P; ``weights`` carries 1.0 for real indices and 0.0 for padding, so
+the pooled sum ignores padding without branching (and also supports
+weighted pooling for free).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bag_kernel(tbl_ref, idx_ref, w_ref, o_ref):
+    tbl = tbl_ref[...]                    # [V, E] (whole table in VMEM)
+    idx = idx_ref[...]                    # [Bt, P]
+    w = w_ref[...]                        # [Bt, P]
+    rows = jnp.take(tbl, idx, axis=0)     # [Bt, P, E]
+    o_ref[...] = jnp.sum(rows * w[..., None], axis=1)
+
+
+def embedding_bag(table, indices, weights, block_batch: int = 64):
+    """Weighted sum-pool lookup: [V,E],[B,P]i32,[B,P] -> [B,E] f32."""
+    V, E = table.shape
+    B, P = indices.shape
+    if B % block_batch != 0:
+        block_batch = B
+    grid = (B // block_batch,)
+    return pl.pallas_call(
+        _bag_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((V, E), lambda i: (0, 0)),
+            pl.BlockSpec((block_batch, P), lambda i: (i, 0)),
+            pl.BlockSpec((block_batch, P), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_batch, E), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, E), jnp.float32),
+        interpret=True,
+    )(table, indices, weights)

@@ -1,0 +1,55 @@
+"""Pallas fused linear (+ReLU) kernel.
+
+The shared table-feature MLPs of the cost and policy networks apply the
+same small dense layer to thousands of table-feature rows per call; this
+kernel tiles the row dimension into VMEM-resident blocks so each grid step
+streams one row-tile HBM->VMEM, runs the (I x O) matmul on the MXU, adds the
+bias, and optionally fuses the ReLU — one pass over HBM instead of the
+three (matmul, add, max) an unfused graph would take.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (see DESIGN.md
+section Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    # One row-tile of x, the full (small) weight in VMEM.
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    y = y + b_ref[...][None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def linear(x, w, b, relu: bool = False, block_rows: int = 128):
+    """Fused ``relu(x @ w + b)``.
+
+    x: [B, I] f32, w: [I, O] f32, b: [O] f32 -> [B, O] f32.
+    ``B`` must be a multiple of ``block_rows`` (callers pad; the L2 model
+    always works on padded slot grids so this holds by construction).
+    """
+    B, I = x.shape
+    O = w.shape[1]
+    if B % block_rows != 0:
+        # Degenerate/small cases: single block over all rows.
+        block_rows = B
+    grid = (B // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, I), lambda i: (i, 0)),
+            pl.BlockSpec((I, O), lambda i: (0, 0)),
+            pl.BlockSpec((O,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, O), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, O), jnp.float32),
+        interpret=True,
+    )(x, w, b)

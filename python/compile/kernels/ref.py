@@ -1,0 +1,49 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has an oracle here with the exact same
+signature; pytest (and hypothesis sweeps) assert allclose between the two.
+These references are also what the L2 model uses when ``use_pallas=False``
+(e.g. for fast AOT lowering of very large variants).
+"""
+
+import jax.numpy as jnp
+
+
+def linear_ref(x, w, b, relu: bool = False):
+    """y = x @ w + b, optionally ReLU'd. x: [B, I], w: [I, O], b: [O]."""
+    y = jnp.dot(x, w) + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def device_sum_ref(h, mask):
+    """Masked segment-sum of table reps into device reps.
+
+    h:    [D, S, L]  per-slot table representations
+    mask: [D, S]     1.0 where the slot holds a real table
+    ->    [D, L]     element-wise sum over the real slots of each device
+    """
+    return jnp.sum(h * mask[..., None], axis=-2)
+
+
+def overall_max_ref(hdev, dmask):
+    """Masked element-wise max over device reps (paper's max reduction).
+
+    hdev:  [D, L] device representations
+    dmask: [D]    1.0 for devices that exist in this task
+    ->     [L]    element-wise max over existing devices
+    """
+    neg = jnp.float32(-1e30)
+    masked = jnp.where(dmask[..., None] > 0, hdev, neg)
+    return jnp.max(masked, axis=-2)
+
+
+def embedding_bag_ref(table, indices, weights):
+    """Fused embedding-bag (sum pooling) over one table.
+
+    table:   [V, E]     embedding rows
+    indices: [B, P] i32 indices into the table (padded)
+    weights: [B, P]     per-index weights; 0.0 marks padding
+    ->       [B, E]     sum_p weights[b,p] * table[indices[b,p]]
+    """
+    gathered = table[indices]                      # [B, P, E]
+    return jnp.sum(gathered * weights[..., None], axis=1)

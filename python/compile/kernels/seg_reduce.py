@@ -1,0 +1,65 @@
+"""Pallas masked segment-reduction kernels.
+
+DreamShard's generalizable architecture hinges on two reductions
+(paper section 3.2 / B.3): an element-wise **sum** of table representations
+within each device (fixed-size device rep regardless of #tables) and an
+element-wise **max** across device representations (fixed-size overall rep
+regardless of #devices). At the ultra variant (128 devices x 32 slots)
+these reductions over the [D, S, L] rep grid are the cost-network hot
+spot, so both are fused Pallas kernels: one grid step per device streams
+that device's slot-tile into VMEM, applies the padding mask, and reduces —
+a single HBM pass with no materialized [D, S, L] * mask intermediate.
+
+All kernels lower with interpret=True (CPU PJRT cannot run Mosaic
+custom-calls).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _device_sum_kernel(h_ref, m_ref, o_ref):
+    h = h_ref[...]                       # [1, S, L] slot reps of one device
+    m = m_ref[...]                       # [1, S]
+    o_ref[...] = jnp.sum(h * m[..., None], axis=1)  # [1, L]
+
+
+def device_sum(h, mask):
+    """Masked sum of slot reps into device reps: [D,S,L],[D,S] -> [D,L]."""
+    D, S, L = h.shape
+    return pl.pallas_call(
+        _device_sum_kernel,
+        grid=(D,),
+        in_specs=[
+            pl.BlockSpec((1, S, L), lambda d: (d, 0, 0)),
+            pl.BlockSpec((1, S), lambda d: (d, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L), lambda d: (d, 0)),
+        out_shape=jax.ShapeDtypeStruct((D, L), jnp.float32),
+        interpret=True,
+    )(h, mask)
+
+
+def _overall_max_kernel(h_ref, m_ref, o_ref):
+    h = h_ref[...]                       # [D, L]
+    m = m_ref[...]                       # [D]
+    neg = jnp.float32(-1e30)
+    masked = jnp.where(m[..., None] > 0, h, neg)
+    o_ref[...] = jnp.max(masked, axis=0)
+
+
+def overall_max(hdev, dmask):
+    """Masked element-wise max over device reps: [D,L],[D] -> [L]."""
+    D, L = hdev.shape
+    return pl.pallas_call(
+        _overall_max_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((D, L), lambda i: (0, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((L,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((L,), jnp.float32),
+        interpret=True,
+    )(hdev, dmask)

@@ -1,0 +1,302 @@
+"""Layer-2 JAX models: DreamShard's cost network, policy network, and the
+RNN-based baseline controller (Mirhoseini et al. 2017, adapted per paper
+section D.2).
+
+Everything here is build-time only: ``aot.py`` lowers these functions to HLO
+text once, and the rust coordinator executes them via PJRT. Parameters are
+flat f32 vectors (see ``params.py``).
+
+Design notes
+------------
+* Forward (request-path) artifacts route their dense layers and reductions
+  through the Pallas kernels (``use_pallas=True``); training artifacts use
+  the pure-jnp references because ``pallas_call`` does not define reverse-
+  mode AD rules — XLA fuses the jnp path identically. The pytest suite
+  asserts the two paths agree to float tolerance.
+* ``fmask`` (21) and ``qscale`` (3) inputs let the rust harness run the
+  paper's feature ablations (Table 3/11/12: drop dim / hash / pooling /
+  size / distribution / cost features) against the SAME artifacts by
+  zeroing feature columns at train+inference time.
+* Reductions are parameters (``table_red``, ``dev_red``) so ``aot.py`` can
+  emit the sum/mean/max ablation variants of Figures 13-14.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+from .params import ParamSpec, adam_update
+
+F = 21          # table features (section A.2)
+L = 32          # latent dim
+H_TBL = 128     # shared table-MLP hidden
+H_HEAD = 64     # prediction-head hidden
+H_COST = 64     # policy cost-feature MLP hidden
+ENTROPY_W = 0.001
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+def cost_spec():
+    s = ParamSpec()
+    s.linear("tbl1", F, H_TBL).linear("tbl2", H_TBL, L)
+    for head in ("fwd", "bwd", "comm"):
+        s.linear(f"{head}1", L, H_HEAD).linear(f"{head}2", H_HEAD, 1)
+    s.linear("ovr1", L, H_HEAD).linear("ovr2", H_HEAD, 1)
+    return s
+
+
+def policy_spec():
+    s = ParamSpec()
+    s.linear("tbl1", F, H_TBL).linear("tbl2", H_TBL, L)
+    s.linear("cost1", 3, H_COST).linear("cost2", H_COST, L)
+    # Head input: [device rep ; cost rep ; current-table rep] (see DESIGN.md)
+    s.linear("head", 3 * L, 1)
+    return s
+
+
+def rnn_spec(n_devices):
+    s = ParamSpec()
+    s.linear("tbl1", F, H_TBL).linear("tbl2", H_TBL, L)
+    for gate in ("z", "r", "n"):
+        s.linear(f"gru_x{gate}", L, L)
+        s.linear(f"gru_h{gate}", L, L)
+    s.linear("head", 2 * L, n_devices)
+    return s
+
+
+# --------------------------------------------------------------------------
+# Shared pieces
+# --------------------------------------------------------------------------
+
+def _mlp2(p, pre, x, use_pallas):
+    """Two-layer MLP with ReLU hidden, over rows of a 2-D x."""
+    if use_pallas:
+        h = kernels.linear(x, p[f"{pre}1.w"], p[f"{pre}1.b"], relu=True)
+        return kernels.linear(h, p[f"{pre}2.w"], p[f"{pre}2.b"], relu=False)
+    h = ref.linear_ref(x, p[f"{pre}1.w"], p[f"{pre}1.b"], relu=True)
+    return ref.linear_ref(h, p[f"{pre}2.w"], p[f"{pre}2.b"], relu=False)
+
+
+def _table_reps(p, pre, feats, fmask, use_pallas):
+    """Shared table-feature MLP over an arbitrarily-shaped [..., F] grid."""
+    shape = feats.shape
+    x = (feats * fmask).reshape(-1, F)
+    h = _mlp2(p, pre, x, use_pallas)
+    return h.reshape(*shape[:-1], L)
+
+
+def _device_reduce(h, mask, table_red, use_pallas):
+    """[E,D,S,L],[E,D,S] -> [E,D,L] with the chosen table reduction."""
+    E, D, S, _ = h.shape
+    if table_red == "sum":
+        if use_pallas:
+            out = kernels.device_sum(h.reshape(E * D, S, L), mask.reshape(E * D, S))
+            return out.reshape(E, D, L)
+        return ref.device_sum_ref(h, mask)
+    m = mask[..., None]
+    if table_red == "mean":
+        return jnp.sum(h * m, axis=-2) / jnp.maximum(jnp.sum(m, axis=-2), 1.0)
+    if table_red == "max":
+        neg = jnp.float32(-1e30)
+        r = jnp.max(jnp.where(m > 0, h, neg), axis=-2)
+        return jnp.where(jnp.sum(m, axis=-2) > 0, r, 0.0)
+    raise ValueError(table_red)
+
+
+def _overall_reduce(hdev, dmask, dev_red, use_pallas):
+    """[E,D,L],[E,D] -> [E,L] with the chosen device reduction."""
+    if dev_red == "max":
+        if use_pallas:
+            E, D, _ = hdev.shape
+            return jax.vmap(kernels.overall_max)(hdev, dmask)
+        return jax.vmap(ref.overall_max_ref)(hdev, dmask)
+    m = dmask[..., None]
+    if dev_red == "sum":
+        return jnp.sum(hdev * m, axis=-2)
+    if dev_red == "mean":
+        return jnp.sum(hdev * m, axis=-2) / jnp.maximum(jnp.sum(m, axis=-2), 1.0)
+    raise ValueError(dev_red)
+
+
+# --------------------------------------------------------------------------
+# Cost network (paper section 3.2 / B.1)
+# --------------------------------------------------------------------------
+
+def cost_forward(theta, feats, mask, dmask, fmask, *, use_pallas=False,
+                 table_red="sum", dev_red="max"):
+    """Predict per-device cost features and the overall step cost.
+
+    feats [E,D,S,F], mask [E,D,S], dmask [E,D], fmask [F]
+    -> q [E,D,3] (fwd comp, bwd comp, bwd comm; ms), cost [E] (ms)
+    """
+    p = cost_spec().unflatten(theta)
+    h = _table_reps(p, "tbl", feats, fmask, use_pallas)        # [E,D,S,L]
+    hdev = _device_reduce(h, mask, table_red, use_pallas)      # [E,D,L]
+    E, D, _ = hdev.shape
+    flat = hdev.reshape(E * D, L)
+    qs = [
+        _mlp2(p, head, flat, use_pallas).reshape(E, D)
+        for head in ("fwd", "bwd", "comm")
+    ]
+    q = jnp.stack(qs, axis=-1) * dmask[..., None]              # [E,D,3]
+    hall = _overall_reduce(hdev, dmask, dev_red, use_pallas)   # [E,L]
+    cost = _mlp2(p, "ovr", hall, use_pallas).reshape(E)
+    return q, cost
+
+
+def table_cost_forward(theta, feats, fmask, *, use_pallas=False):
+    """Predicted single-table total cost (used to sort tables before an
+    episode, section B.4.2): feats [N,F] -> [N] (sum of the three heads)."""
+    p = cost_spec().unflatten(theta)
+    h = _table_reps(p, "tbl", feats, fmask, use_pallas)        # [N,L]
+    total = sum(
+        _mlp2(p, head, h, use_pallas).reshape(-1)
+        for head in ("fwd", "bwd", "comm")
+    )
+    return total
+
+
+def cost_loss(theta, batch, fmask, table_red="sum", dev_red="max"):
+    """Eq. 1: sum of cost-feature MSE and overall-cost MSE."""
+    feats, mask, dmask, q_tgt, c_tgt = batch
+    q, c = cost_forward(theta, feats, mask, dmask, fmask,
+                        table_red=table_red, dev_red=dev_red)
+    dn = jnp.maximum(jnp.sum(dmask), 1.0)
+    mse_q = jnp.sum(((q - q_tgt) ** 2) * dmask[..., None]) / (dn * 3.0)
+    mse_c = jnp.mean((c - c_tgt) ** 2)
+    return mse_q + mse_c
+
+
+def cost_train_step(theta, m, v, t, lr, feats, mask, dmask, q_tgt, c_tgt,
+                    fmask, table_red="sum", dev_red="max"):
+    batch = (feats, mask, dmask, q_tgt, c_tgt)
+    loss, grads = jax.value_and_grad(cost_loss)(
+        theta, batch, fmask, table_red=table_red, dev_red=dev_red)
+    theta2, m2, v2 = adam_update(None, theta, m, v, t, lr, grads)
+    return theta2, m2, v2, jnp.reshape(loss, (1,))
+
+
+# --------------------------------------------------------------------------
+# Policy network (paper section 3.3 / B.2)
+# --------------------------------------------------------------------------
+
+def policy_logits(phi, feats, mask, q, cur, legal, fmask, qscale,
+                  *, use_pallas=False):
+    """Device logits for the table currently being placed.
+
+    feats [E,D,S,F], mask [E,D,S], q [E,D,3] (cost features from the
+    estimated MDP), cur [E,F] (current table), legal [E,D], fmask [F],
+    qscale [3] -> logits [E,D] (illegal devices = -1e9).
+    """
+    p = policy_spec().unflatten(phi)
+    h = _table_reps(p, "tbl", feats, fmask, use_pallas)        # [E,D,S,L]
+    hdev = _device_reduce(h, mask, "sum", use_pallas)          # [E,D,L]
+    E, D, _ = hdev.shape
+    hq = _mlp2(p, "cost", (q * qscale).reshape(E * D, 3), use_pallas)
+    hq = hq.reshape(E, D, L)
+    hcur = _table_reps(p, "tbl", cur, fmask, use_pallas)       # [E,L]
+    hcur = jnp.broadcast_to(hcur[:, None, :], (E, D, L))
+    x = jnp.concatenate([hdev, hq, hcur], axis=-1).reshape(E * D, 3 * L)
+    score = ref.linear_ref(x, p["head.w"], p["head.b"]).reshape(E, D)
+    return jnp.where(legal > 0, score, -1e9)
+
+
+def _reinforce_loss(logits, legal, action, adv, smask):
+    """REINFORCE with baseline-subtracted advantage + entropy bonus (Eq. 2)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    B = logits.shape[0]
+    lp_a = logp[jnp.arange(B), action]
+    pr = jnp.exp(logp)
+    ent = -jnp.sum(jnp.where(legal > 0, pr * logp, 0.0), axis=-1)
+    per_step = lp_a * adv + ENTROPY_W * ent
+    n = jnp.maximum(jnp.sum(smask), 1.0)
+    return -jnp.sum(per_step * smask) / n
+
+
+def policy_loss(phi, batch, fmask, qscale):
+    feats, mask, q, cur, legal, action, adv, smask = batch
+    logits = policy_logits(phi, feats, mask, q, cur, legal, fmask, qscale)
+    return _reinforce_loss(logits, legal, action, adv, smask)
+
+
+def policy_train_step(phi, m, v, t, lr, feats, mask, q, cur, legal, action,
+                      adv, smask, fmask, qscale):
+    batch = (feats, mask, q, cur, legal, action, adv, smask)
+    loss, grads = jax.value_and_grad(policy_loss)(phi, batch, fmask, qscale)
+    phi2, m2, v2 = adam_update(None, phi, m, v, t, lr, grads)
+    return phi2, m2, v2, jnp.reshape(loss, (1,))
+
+
+def mdp_step(theta, phi, feats, mask, dmask, cur, legal, fmask, qscale,
+             *, use_pallas=True):
+    """Fused estimated-MDP step: one PJRT call per placement decision.
+
+    Runs the cost network to get the augmented state's cost features and
+    overall cost, then the policy network on top of them — halving the
+    per-step call count on the rust hot path (see EXPERIMENTS.md §Perf).
+    Returns (logits [E,D], q [E,D,3], cost [E]).
+    """
+    q, cost = cost_forward(theta, feats, mask, dmask, fmask,
+                           use_pallas=use_pallas)
+    logits = policy_logits(phi, feats, mask, q, cur, legal, fmask, qscale,
+                           use_pallas=use_pallas)
+    return logits, q, cost
+
+
+# --------------------------------------------------------------------------
+# RNN-based baseline (Mirhoseini et al. 2017, adapted per section D.2)
+# --------------------------------------------------------------------------
+
+def _gru_cell(p, x, h):
+    z = jax.nn.sigmoid(x @ p["gru_xz.w"] + p["gru_xz.b"] + h @ p["gru_hz.w"] + p["gru_hz.b"])
+    r = jax.nn.sigmoid(x @ p["gru_xr.w"] + p["gru_xr.b"] + h @ p["gru_hr.w"] + p["gru_hr.b"])
+    n = jnp.tanh(x @ p["gru_xn.w"] + p["gru_xn.b"] + (r * h) @ p["gru_hn.w"] + p["gru_hn.b"])
+    return (1.0 - z) * h + z * n
+
+
+def rnn_logits(psi, feats, tmask, legal, fmask, n_devices):
+    """GRU + content attention over the table sequence -> per-step logits.
+
+    feats [E,T,F], tmask [E,T], legal [E,T,D] -> [E,T,D].
+    The controller sees the whole (known) table list; the same feature-
+    extraction MLP as DreamShard is used for fairness (section D.2).
+    """
+    p = rnn_spec(n_devices).unflatten(psi)
+    reps = _table_reps(p, "tbl", feats, fmask, use_pallas=False)  # [E,T,L]
+
+    def step(h, x):
+        h2 = _gru_cell(p, x, h)
+        return h2, h2
+
+    E, T, _ = reps.shape
+    h0 = jnp.zeros((E, L))
+    _, hs = jax.lax.scan(step, h0, jnp.swapaxes(reps, 0, 1))
+    hs = jnp.swapaxes(hs, 0, 1)                                   # [E,T,L]
+    att = jnp.einsum("etl,eul->etu", hs, hs) / jnp.sqrt(jnp.float32(L))
+    att = jnp.where(tmask[:, None, :] > 0, att, -1e9)
+    ctx = jnp.einsum("etu,eul->etl", jax.nn.softmax(att, axis=-1), hs)
+    x = jnp.concatenate([hs, ctx], axis=-1)                       # [E,T,2L]
+    score = x @ p["head.w"] + p["head.b"]                         # [E,T,D]
+    return jnp.where(legal > 0, score, -1e9)
+
+
+def rnn_loss(psi, batch, fmask, n_devices):
+    feats, tmask, legal, action, adv = batch
+    logits = rnn_logits(psi, feats, tmask, legal, fmask, n_devices)
+    E, T, D = logits.shape
+    flat = logits.reshape(E * T, D)
+    return _reinforce_loss(
+        flat, legal.reshape(E * T, D), action.reshape(E * T),
+        jnp.repeat(adv, T), tmask.reshape(E * T))
+
+
+def rnn_train_step(psi, m, v, t, lr, feats, tmask, legal, action, adv,
+                   fmask, n_devices):
+    batch = (feats, tmask, legal, action, adv)
+    loss, grads = jax.value_and_grad(rnn_loss)(psi, batch, fmask, n_devices)
+    psi2, m2, v2 = adam_update(None, psi, m, v, t, lr, grads)
+    return psi2, m2, v2, jnp.reshape(loss, (1,))

@@ -1,0 +1,72 @@
+"""Flat-parameter plumbing shared by every AOT artifact.
+
+All learnable parameters of a network are packed into ONE flat f32 vector
+(and matching flat Adam ``m``/``v`` vectors). The rust coordinator then
+threads a fixed, tiny literal arity through every PJRT call instead of
+dozens of tensors, and can (re)initialize parameters itself: the manifest
+records each segment's (offset, length, init bound) so rust draws
+uniform(-bound, +bound) exactly like PyTorch's default Linear init, which
+is what the paper uses (section B.1).
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec:
+    """Ordered list of named tensors living inside one flat vector."""
+
+    def __init__(self):
+        self.entries = []  # (name, shape, offset, length, init_bound)
+        self.total = 0
+
+    def add(self, name, shape, fan_in=None):
+        length = int(np.prod(shape))
+        # PyTorch nn.Linear default: U(-1/sqrt(fan_in), 1/sqrt(fan_in))
+        # for both weight and bias.
+        bound = 1.0 / math.sqrt(fan_in) if fan_in else 0.0
+        self.entries.append((name, tuple(shape), self.total, length, bound))
+        self.total += length
+        return self
+
+    def linear(self, name, n_in, n_out):
+        """Register a dense layer's weight [n_in, n_out] and bias [n_out]."""
+        self.add(f"{name}.w", (n_in, n_out), fan_in=n_in)
+        self.add(f"{name}.b", (n_out,), fan_in=n_in)
+        return self
+
+    def unflatten(self, theta):
+        """Slice the flat vector into a {name: tensor} dict (in-graph)."""
+        out = {}
+        for name, shape, off, length, _ in self.entries:
+            out[name] = jnp.reshape(theta[off : off + length], shape)
+        return out
+
+    def init(self, seed):
+        """Host-side init (used for artifact freezing + python tests)."""
+        rng = np.random.default_rng(seed)
+        theta = np.zeros((self.total,), dtype=np.float32)
+        for _, _, off, length, bound in self.entries:
+            theta[off : off + length] = rng.uniform(-bound, bound, length)
+        return jnp.asarray(theta)
+
+    def manifest_lines(self, net):
+        """``segment <net> <name> <offset> <len> <bound>`` manifest rows."""
+        lines = [f"params {net} {self.total}"]
+        for name, _, off, length, bound in self.entries:
+            lines.append(f"segment {net} {name} {off} {length} {bound:.8f}")
+        return lines
+
+
+def adam_update(spec_total, theta, m, v, t, lr, grads, eps=1e-8, b1=0.9, b2=0.999):
+    """One Adam step over flat vectors. ``t`` is the 1-step count AFTER this
+    update (f32[1]); ``lr`` is the already-decayed learning rate (f32[1])."""
+    del spec_total
+    m2 = b1 * m + (1.0 - b1) * grads
+    v2 = b2 * v + (1.0 - b2) * grads * grads
+    mhat = m2 / (1.0 - b1 ** t[0])
+    vhat = v2 / (1.0 - b2 ** t[0])
+    theta2 = theta - lr[0] * mhat / (jnp.sqrt(vhat) + eps)
+    return theta2, m2, v2

@@ -1,0 +1,92 @@
+"""AOT pipeline tests: HLO-text lowering round-trips, manifest grammar,
+and parameter-spec bookkeeping."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.params import ParamSpec, adam_update
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_to_hlo_text_basic():
+    f = lambda x: (x * 2.0 + 1.0,)
+    text = aot.to_hlo_text(f, aot.s((3,)))
+    assert "HloModule" in text
+    assert "f32[3]" in text
+
+
+def test_to_hlo_text_cost_forward_has_all_params():
+    P = model.cost_spec().total
+    import functools
+    fn = functools.partial(model.cost_forward)
+    text = aot.to_hlo_text(
+        fn, aot.s((P,)), aot.s((2, 4, 8, model.F)), aot.s((2, 4, 8)),
+        aot.s((2, 4)), aot.s((model.F,)))
+    # all five inputs must survive lowering as entry parameters (the rust
+    # runtime passes literals positionally)
+    assert text.count("parameter(") >= 5
+    assert f"f32[{P}]" in text
+
+
+def test_param_spec_offsets_contiguous():
+    spec = model.cost_spec()
+    off = 0
+    for name, shape, o, length, bound in spec.entries:
+        assert o == off, name
+        assert length == int(np.prod(shape))
+        off += length
+    assert off == spec.total
+
+
+def test_param_spec_init_bounds():
+    spec = model.policy_spec()
+    theta = np.asarray(spec.init(0))
+    for name, _, off, length, bound in spec.entries:
+        seg = theta[off : off + length]
+        assert np.all(np.abs(seg) <= bound + 1e-7), name
+
+
+def test_adam_update_moves_toward_gradient():
+    theta = jnp.zeros((4,))
+    g = jnp.asarray([1.0, -1.0, 2.0, 0.0])
+    t2, m2, v2 = adam_update(None, theta, theta, theta, jnp.asarray([1.0]),
+                             jnp.asarray([0.1]), g)
+    assert float(t2[0]) < 0 and float(t2[1]) > 0 and float(t2[3]) == 0.0
+    assert m2.shape == v2.shape == theta.shape
+
+
+def test_manifest_lines_grammar():
+    spec = ParamSpec().linear("l1", 3, 5)
+    lines = spec.manifest_lines("net")
+    assert lines[0] == "params net 20"
+    assert lines[1].startswith("segment net l1.w 0 15 ")
+    assert lines[2].startswith("segment net l1.b 15 5 ")
+
+
+def test_emitted_manifest_consistent_with_artifacts(tmp_path=None):
+    """If artifacts were built (make artifacts), the manifest must point at
+    existing files and declare the networks rust expects."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = os.path.join(art, "manifest.txt")
+    if not os.path.exists(manifest):
+        import pytest
+        pytest.skip("artifacts not built")
+    nets = set()
+    files = []
+    for line in open(manifest):
+        parts = line.split()
+        if not parts:
+            continue
+        if parts[0] == "params":
+            nets.add(parts[1])
+        elif parts[0] == "artifact":
+            files.append(parts[2])
+    for need in ("cost", "policy", "dlrm"):
+        assert need in nets, f"network {need} missing from manifest"
+    for fn in files:
+        assert os.path.exists(os.path.join(art, fn)), fn

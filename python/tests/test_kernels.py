@@ -1,0 +1,144 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes/dtypes with hypothesis. This is the core numeric signal
+for the AOT artifacts (the same kernel code lowers into them)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+# ----------------------------------------------------------------- linear
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 200),
+    i=st.integers(1, 40),
+    o=st.integers(1, 40),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_matches_ref(b, i, o, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w, bb = rand(rng, b, i), rand(rng, i, o), rand(rng, o)
+    got = kernels.linear(x, w, bb, relu=relu)
+    want = ref.linear_ref(x, w, bb, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_linear_blocks_divide_batch():
+    rng = np.random.default_rng(0)
+    x, w, b = rand(rng, 256, 8), rand(rng, 8, 4), rand(rng, 4)
+    got = kernels.linear(x, w, b, block_rows=128)
+    np.testing.assert_allclose(got, ref.linear_ref(x, w, b), rtol=1e-5, atol=1e-5)
+
+
+def test_linear_relu_clamps():
+    rng = np.random.default_rng(1)
+    x, w, b = rand(rng, 16, 8), rand(rng, 8, 4), rand(rng, 4)
+    got = kernels.linear(x, w, b, relu=True)
+    assert float(jnp.min(got)) >= 0.0
+
+
+# ------------------------------------------------------------- seg_reduce
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 10),
+    s=st.integers(1, 32),
+    l=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_device_sum_matches_ref(d, s, l, seed):
+    rng = np.random.default_rng(seed)
+    h = rand(rng, d, s, l)
+    mask = jnp.asarray((rng.random((d, s)) > 0.4).astype(np.float32))
+    got = kernels.device_sum(h, mask)
+    want = ref.device_sum_ref(h, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 16),
+    l=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_overall_max_matches_ref(d, l, seed):
+    rng = np.random.default_rng(seed)
+    h = rand(rng, d, l)
+    dmask = jnp.asarray((rng.random(d) > 0.3).astype(np.float32))
+    if float(jnp.sum(dmask)) == 0.0:
+        dmask = dmask.at[0].set(1.0)
+    got = kernels.overall_max(h, dmask)
+    want = ref.overall_max_ref(h, dmask)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_device_sum_ignores_masked_slots():
+    h = jnp.ones((1, 4, 3))
+    mask = jnp.asarray([[1.0, 0.0, 1.0, 0.0]])
+    got = kernels.device_sum(h, mask)
+    np.testing.assert_allclose(got, np.full((1, 3), 2.0))
+
+
+def test_overall_max_ignores_masked_devices():
+    h = jnp.asarray([[1.0, 5.0], [9.0, 0.5]])
+    got = kernels.overall_max(h, jnp.asarray([1.0, 0.0]))
+    np.testing.assert_allclose(got, [1.0, 5.0])
+
+
+# ---------------------------------------------------------- embedding bag
+
+@settings(max_examples=20, deadline=None)
+@given(
+    v=st.integers(2, 500),
+    e=st.integers(1, 32),
+    b=st.integers(1, 64),
+    p=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_embedding_bag_matches_ref(v, e, b, p, seed):
+    rng = np.random.default_rng(seed)
+    table = rand(rng, v, e)
+    idx = jnp.asarray(rng.integers(0, v, (b, p)).astype(np.int32))
+    # random padding pattern via 0/1 weights
+    w = jnp.asarray((rng.random((b, p)) > 0.3).astype(np.float32))
+    got = kernels.embedding_bag(table, idx, w)
+    want = ref.embedding_bag_ref(table, idx, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_bag_zero_weights_zero_output():
+    rng = np.random.default_rng(2)
+    table = rand(rng, 10, 4)
+    idx = jnp.zeros((3, 5), jnp.int32)
+    got = kernels.embedding_bag(table, idx, jnp.zeros((3, 5)))
+    np.testing.assert_allclose(got, np.zeros((3, 4)))
+
+
+def test_embedding_bag_weighted_pooling():
+    table = jnp.asarray([[1.0, 2.0], [10.0, 20.0]])
+    idx = jnp.asarray([[0, 1]], jnp.int32)
+    w = jnp.asarray([[0.5, 2.0]])
+    got = kernels.embedding_bag(table, idx, w)
+    np.testing.assert_allclose(got, [[0.5 + 20.0, 1.0 + 40.0]])
+
+
+def test_embedding_bag_under_jit():
+    rng = np.random.default_rng(3)
+    table = rand(rng, 50, 8)
+    idx = jnp.asarray(rng.integers(0, 50, (16, 4)).astype(np.int32))
+    w = jnp.ones((16, 4))
+    got = jax.jit(kernels.embedding_bag)(table, idx, w)
+    np.testing.assert_allclose(got, ref.embedding_bag_ref(table, idx, w), rtol=1e-5)

@@ -1,0 +1,256 @@
+"""Layer-2 model tests: shapes, masking/generalization invariants,
+pallas/jnp path parity, optimizer behaviour, and DLRM learning signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import dlrm, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+F = model.F
+
+
+def rnd(seed, *shape):
+    return jnp.asarray(np.random.default_rng(seed).random(shape).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def theta():
+    return model.cost_spec().init(0)
+
+
+@pytest.fixture(scope="module")
+def phi():
+    return model.policy_spec().init(1)
+
+
+ONES_F = jnp.ones((F,), jnp.float32)
+
+
+def state(seed, e=2, d=4, s=8, frac=0.5):
+    rng = np.random.default_rng(seed)
+    feats = jnp.asarray(rng.random((e, d, s, F)).astype(np.float32))
+    mask = jnp.asarray((rng.random((e, d, s)) < frac).astype(np.float32))
+    dmask = jnp.ones((e, d), jnp.float32)
+    return feats, mask, dmask
+
+
+# ------------------------------------------------------------ cost network
+
+def test_cost_forward_shapes(theta):
+    feats, mask, dmask = state(0)
+    q, c = model.cost_forward(theta, feats, mask, dmask, ONES_F)
+    assert q.shape == (2, 4, 3) and c.shape == (2,)
+
+
+def test_cost_pallas_parity(theta):
+    feats, mask, dmask = state(1)
+    q1, c1 = model.cost_forward(theta, feats, mask, dmask, ONES_F)
+    q2, c2 = model.cost_forward(theta, feats, mask, dmask, ONES_F, use_pallas=True)
+    np.testing.assert_allclose(q1, q2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-5)
+
+
+def test_cost_masked_devices_output_zero_q(theta):
+    feats, mask, _ = state(2)
+    dmask = jnp.asarray([[1.0, 1.0, 0.0, 0.0]] * 2)
+    q, _ = model.cost_forward(theta, feats, mask, dmask, ONES_F)
+    np.testing.assert_allclose(q[:, 2:, :], np.zeros((2, 2, 3)))
+
+
+def test_cost_generalizes_padding_invariance(theta):
+    """A state padded with extra empty slots/devices must predict the same
+    q for real devices — the paper's variable-size generalization."""
+    feats, mask, dmask = state(3, e=1, d=2, s=4)
+    q_small, c_small = model.cost_forward(theta, feats, mask, dmask, ONES_F)
+    # embed into d=4, s=8 padding
+    feats_big = jnp.zeros((1, 4, 8, F)).at[:, :2, :4, :].set(feats)
+    mask_big = jnp.zeros((1, 4, 8)).at[:, :2, :4].set(mask)
+    dmask_big = jnp.zeros((1, 4)).at[:, :2].set(1.0)
+    q_big, _ = model.cost_forward(theta, feats_big, mask_big, dmask_big, ONES_F)
+    np.testing.assert_allclose(q_small[0], q_big[0, :2, :], rtol=1e-4, atol=1e-5)
+
+
+def test_cost_fmask_removes_feature_influence(theta):
+    feats, mask, dmask = state(4)
+    fmask = ONES_F.at[0].set(0.0)
+    q1, _ = model.cost_forward(theta, feats, mask, dmask, fmask)
+    feats2 = feats.at[..., 0].set(99.0)  # perturb the masked feature
+    q2, _ = model.cost_forward(theta, feats2, mask, dmask, fmask)
+    np.testing.assert_allclose(q1, q2, rtol=1e-5, atol=1e-6)
+
+
+def test_cost_train_step_reduces_loss(theta):
+    feats, mask, dmask = state(5, e=8)
+    q_tgt = rnd(6, 8, 4, 3)
+    c_tgt = rnd(7, 8)
+    t = theta
+    m = jnp.zeros_like(t)
+    v = jnp.zeros_like(t)
+    losses = []
+    for i in range(25):
+        t, m, v, loss = model.cost_train_step(
+            t, m, v, jnp.asarray([float(i + 1)]), jnp.asarray([5e-3]),
+            feats, mask, dmask, q_tgt, c_tgt, ONES_F)
+        losses.append(float(loss[0]))
+    assert losses[-1] < losses[0] * 0.7, losses[:3] + losses[-3:]
+
+
+@settings(max_examples=10, deadline=None)
+@given(tr=st.sampled_from(["sum", "mean", "max"]), dr=st.sampled_from(["max", "sum", "mean"]))
+def test_reduction_variants_shapes(tr, dr):
+    theta = model.cost_spec().init(0)
+    feats, mask, dmask = state(8)
+    q, c = model.cost_forward(theta, feats, mask, dmask, ONES_F, table_red=tr, dev_red=dr)
+    assert q.shape == (2, 4, 3) and c.shape == (2,)
+    assert np.isfinite(np.asarray(q)).all() and np.isfinite(np.asarray(c)).all()
+
+
+def test_table_cost_matches_singleton_device(theta):
+    """Single-table cost head == cost_forward on a device with 1 table."""
+    feats = rnd(9, 3, F)
+    singles = model.table_cost_forward(theta, feats, ONES_F)
+    big = jnp.zeros((1, 4, 8, F)).at[0, 0, 0].set(feats[0])
+    mask = jnp.zeros((1, 4, 8)).at[0, 0, 0].set(1.0)
+    dmask = jnp.zeros((1, 4)).at[0, 0].set(1.0)
+    q, _ = model.cost_forward(theta, big, mask, dmask, ONES_F)
+    np.testing.assert_allclose(float(singles[0]), float(jnp.sum(q[0, 0])), rtol=1e-4)
+
+
+# ---------------------------------------------------------- policy network
+
+def test_policy_logits_mask_illegal(phi):
+    feats, mask, _ = state(10)
+    q = rnd(11, 2, 4, 3)
+    cur = rnd(12, 2, F)
+    legal = jnp.asarray([[1.0, 0.0, 1.0, 1.0], [1.0, 1.0, 0.0, 1.0]])
+    logits = model.policy_logits(phi, feats, mask, q, cur, legal, ONES_F, jnp.ones((3,)))
+    assert float(logits[0, 1]) < -1e8
+    assert float(logits[1, 2]) < -1e8
+    assert np.isfinite(np.asarray(logits)[0, 0])
+
+
+def test_policy_depends_on_current_table(phi):
+    feats, mask, _ = state(13)
+    q = rnd(14, 2, 4, 3)
+    legal = jnp.ones((2, 4))
+    l1 = model.policy_logits(phi, feats, mask, q, rnd(15, 2, F), legal, ONES_F, jnp.ones((3,)))
+    l2 = model.policy_logits(phi, feats, mask, q, rnd(16, 2, F), legal, ONES_F, jnp.ones((3,)))
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-6
+
+
+def test_policy_qscale_zero_removes_cost_influence(phi):
+    feats, mask, _ = state(17)
+    cur = rnd(18, 2, F)
+    legal = jnp.ones((2, 4))
+    z = jnp.zeros((3,))
+    l1 = model.policy_logits(phi, feats, mask, rnd(19, 2, 4, 3), cur, legal, ONES_F, z)
+    l2 = model.policy_logits(phi, feats, mask, rnd(20, 2, 4, 3), cur, legal, ONES_F, z)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+def test_policy_train_improves_selected_action_prob(phi):
+    """REINFORCE with positive advantage on one action raises its prob."""
+    feats, mask, _ = state(21, e=4)
+    q = jnp.zeros((4, 4, 3))
+    cur = rnd(22, 4, F)
+    legal = jnp.ones((4, 4))
+    action = jnp.asarray([1, 1, 1, 1], jnp.int32)
+    adv = jnp.ones((4,))
+    smask = jnp.ones((4,))
+    p = phi
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    def prob_of_1(pp):
+        lg = model.policy_logits(pp, feats, mask, q, cur, legal, ONES_F, jnp.ones((3,)))
+        return float(jax.nn.softmax(lg, axis=-1)[0, 1])
+    before = prob_of_1(p)
+    for i in range(20):
+        p, m, v, _ = model.policy_train_step(
+            p, m, v, jnp.asarray([float(i + 1)]), jnp.asarray([5e-3]),
+            feats, mask, q, cur, legal, action, adv, smask, ONES_F, jnp.ones((3,)))
+    assert prob_of_1(p) > before
+
+
+def test_mdp_step_fused_matches_separate(theta, phi):
+    feats, mask, dmask = state(23)
+    cur = rnd(24, 2, F)
+    legal = jnp.ones((2, 4))
+    qs = jnp.ones((3,))
+    lg, q, c = model.mdp_step(theta, phi, feats, mask, dmask, cur, legal, ONES_F, qs,
+                              use_pallas=False)
+    q2, c2 = model.cost_forward(theta, feats, mask, dmask, ONES_F)
+    lg2 = model.policy_logits(phi, feats, mask, q2, cur, legal, ONES_F, qs)
+    np.testing.assert_allclose(q, q2, rtol=1e-6)
+    np.testing.assert_allclose(c, c2, rtol=1e-6)
+    np.testing.assert_allclose(lg, lg2, rtol=1e-6)
+
+
+# ------------------------------------------------------------ RNN baseline
+
+def test_rnn_logits_shape_and_mask():
+    psi = model.rnn_spec(4).init(2)
+    feats = rnd(25, 2, 6, F)
+    tmask = jnp.ones((2, 6))
+    legal = jnp.ones((2, 6, 4)).at[0, 0, 2].set(0.0)
+    lg = model.rnn_logits(psi, feats, tmask, legal, ONES_F, 4)
+    assert lg.shape == (2, 6, 4)
+    assert float(lg[0, 0, 2]) < -1e8
+
+
+def test_rnn_is_sequential_not_pointwise():
+    """Changing an early table's features must affect later steps' logits
+    (the GRU carries state)."""
+    psi = model.rnn_spec(2).init(3)
+    feats = rnd(26, 1, 5, F)
+    tmask = jnp.ones((1, 5))
+    legal = jnp.ones((1, 5, 2))
+    lg1 = model.rnn_logits(psi, feats, tmask, legal, ONES_F, 2)
+    feats2 = feats.at[0, 0].set(feats[0, 0] + 1.0)
+    lg2 = model.rnn_logits(psi, feats2, tmask, legal, ONES_F, 2)
+    assert float(jnp.max(jnp.abs(lg1[0, 3:] - lg2[0, 3:]))) > 1e-7
+
+
+def test_rnn_train_step_runs():
+    psi = model.rnn_spec(4).init(4)
+    feats = rnd(27, 2, 6, F)
+    out = model.rnn_train_step(
+        psi, psi * 0, psi * 0, jnp.ones((1,)), jnp.asarray([5e-4]),
+        feats, jnp.ones((2, 6)), jnp.ones((2, 6, 4)),
+        jnp.zeros((2, 6), jnp.int32), jnp.asarray([0.5, -0.5]), ONES_F, 4)
+    assert out[0].shape == psi.shape
+    assert np.isfinite(float(out[3][0]))
+
+
+# -------------------------------------------------------------------- DLRM
+
+def test_dlrm_learns_separable_labels():
+    hs = dlrm.dlrm_hash_sizes(4)
+    spec = dlrm.dlrm_spec(hs)
+    theta = spec.init(5)
+    rng = np.random.default_rng(6)
+    b = 64
+    dense = jnp.asarray(rng.random((b, dlrm.N_DENSE)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, min(hs), (b, 4, dlrm.POOL)).astype(np.int32))
+    w = jnp.ones((b, 4, dlrm.POOL))
+    labels = jnp.asarray((np.asarray(dense[:, 0]) > 0.5).astype(np.float32))
+    t, m, v = theta, theta * 0, theta * 0
+    losses = []
+    for i in range(30):
+        t, m, v, loss = dlrm.dlrm_train_step(
+            t, m, v, jnp.asarray([float(i + 1)]), jnp.asarray([1e-2]),
+            dense, idx, w, labels, hs)
+        losses.append(float(loss[0]))
+    assert losses[-1] < losses[0] * 0.8, (losses[0], losses[-1])
+
+
+def test_dlrm_param_count_reported():
+    hs = dlrm.dlrm_hash_sizes()
+    total = dlrm.dlrm_spec(hs).total
+    emb = sum(hs) * dlrm.EMB_DIM
+    assert total > emb  # MLPs on top of the tables
+    assert emb / total > 0.8  # embeddings dominate, as in real DLRM

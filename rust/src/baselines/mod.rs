@@ -1,0 +1,187 @@
+//! Placement baselines (paper section D.1): random, and the four greedy
+//! human-expert strategies used in production workflows. Each expert
+//! assigns every table an estimated cost, sorts descending, and places
+//! each table on the device with the lowest cost sum so far, subject to
+//! the memory constraint.
+
+use crate::sim::Simulator;
+use crate::tables::{Dataset, Table, Task};
+use crate::util::Rng;
+
+/// The cost function a greedy expert balances.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Expert {
+    /// Table size (bytes): balances memory, correlates with dim x hash.
+    Size,
+    /// Embedding dimension: the theoretical communication workload.
+    Dim,
+    /// dim x pooling: the lookup computation workload.
+    Lookup,
+    /// dim x pooling x size: the most comprehensive hand-built estimate.
+    SizeLookup,
+}
+
+pub const ALL_EXPERTS: [Expert; 4] =
+    [Expert::Size, Expert::Dim, Expert::Lookup, Expert::SizeLookup];
+
+impl Expert {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Expert::Size => "size-based",
+            Expert::Dim => "dim-based",
+            Expert::Lookup => "lookup-based",
+            Expert::SizeLookup => "size-lookup-based",
+        }
+    }
+
+    fn cost(&self, t: &Table) -> f64 {
+        let size = t.size_gb() as f64;
+        let dim = t.dim as f64;
+        let pool = t.pooling as f64;
+        match self {
+            Expert::Size => size,
+            Expert::Dim => dim,
+            Expert::Lookup => dim * pool,
+            Expert::SizeLookup => dim * pool * size,
+        }
+    }
+}
+
+/// Uniform-random legal placement.
+pub fn random_placement(ds: &Dataset, task: &Task, sim: &Simulator, rng: &mut Rng) -> Vec<usize> {
+    let mut groups: Vec<Vec<&Table>> = vec![vec![]; task.n_devices];
+    task.table_ids
+        .iter()
+        .map(|&tid| {
+            let t = &ds.tables[tid];
+            // rejection-sample a device that fits (falls back to least loaded)
+            for _ in 0..8 {
+                let d = rng.below(task.n_devices);
+                if sim.fits(&groups[d], t) {
+                    groups[d].push(t);
+                    return d;
+                }
+            }
+            let d = (0..task.n_devices)
+                .min_by(|&a, &b| {
+                    Simulator::mem_gb(&groups[a]).partial_cmp(&Simulator::mem_gb(&groups[b])).unwrap()
+                })
+                .unwrap();
+            groups[d].push(t);
+            d
+        })
+        .collect()
+}
+
+/// Greedy balancing placement for one expert cost function.
+pub fn greedy_placement(ds: &Dataset, task: &Task, sim: &Simulator, expert: Expert) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..task.n_tables()).collect();
+    let costs: Vec<f64> =
+        task.table_ids.iter().map(|&tid| expert.cost(&ds.tables[tid])).collect();
+    order.sort_by(|&a, &b| costs[b].partial_cmp(&costs[a]).unwrap());
+
+    let mut placement = vec![usize::MAX; task.n_tables()];
+    let mut load = vec![0.0f64; task.n_devices];
+    let mut groups: Vec<Vec<&Table>> = vec![vec![]; task.n_devices];
+    for &i in &order {
+        let t = &ds.tables[task.table_ids[i]];
+        // lowest-load device that satisfies memory; fall back to lowest-load
+        let mut best: Option<usize> = None;
+        for d in 0..task.n_devices {
+            if sim.fits(&groups[d], t) && best.map_or(true, |b| load[d] < load[b]) {
+                best = Some(d);
+            }
+        }
+        let d = best.unwrap_or_else(|| {
+            (0..task.n_devices)
+                .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+                .unwrap()
+        });
+        placement[i] = d;
+        load[d] += costs[i];
+        groups[d].push(t);
+    }
+    placement
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimConfig;
+    use crate::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools};
+
+    fn setup() -> (Dataset, Task, Simulator) {
+        let ds = gen_dlrm(856, 0);
+        let (pool, _) = split_pools(&ds, 1);
+        let task = sample_tasks(&pool, 40, 4, 1, 3).remove(0);
+        (ds, task, Simulator::new(SimConfig::default()))
+    }
+
+    #[test]
+    fn greedy_balances_loads() {
+        let (ds, task, sim) = setup();
+        for e in ALL_EXPERTS {
+            let p = greedy_placement(&ds, &task, &sim, e);
+            assert!(p.iter().all(|&d| d < task.n_devices));
+            // per-device table counts are not wildly skewed
+            let mut counts = vec![0usize; task.n_devices];
+            for &d in &p {
+                counts[d] += 1;
+            }
+            assert!(counts.iter().all(|&c| c >= 2), "{:?} counts {counts:?}", e);
+        }
+    }
+
+    #[test]
+    fn experts_beat_random_on_average() {
+        let (ds, task, sim) = setup();
+        let mut rng = Rng::new(11);
+        let rand_costs: Vec<f64> = (0..20)
+            .map(|_| sim.evaluate(&ds, &task, &random_placement(&ds, &task, &sim, &mut rng)).latency)
+            .collect();
+        let rand_mean = crate::util::mean(&rand_costs);
+        let lookup = sim
+            .evaluate(&ds, &task, &greedy_placement(&ds, &task, &sim, Expert::Lookup))
+            .latency;
+        assert!(
+            lookup < rand_mean,
+            "lookup-based {lookup} should beat random mean {rand_mean}"
+        );
+    }
+
+    #[test]
+    fn dim_based_balances_dims_exactly_on_uniform_dims() {
+        let (ds, task, sim) = setup();
+        let p = greedy_placement(&ds, &task, &sim, Expert::Dim);
+        let eval = sim.evaluate(&ds, &task, &p);
+        let dims: Vec<f64> = eval.devices.iter().map(|t| t.dim_sum).collect();
+        let max = dims.iter().cloned().fold(0.0, f64::max);
+        let min = dims.iter().cloned().fold(f64::MAX, f64::min);
+        // all DLRM dims are 16, 40 tables over 4 devices -> exactly 10 each
+        assert!(max - min <= 16.0, "dims {dims:?}");
+    }
+
+    #[test]
+    fn works_on_prod_dataset() {
+        let ds = gen_prod(856, 0);
+        let (pool, _) = split_pools(&ds, 1);
+        let task = sample_tasks(&pool, 40, 4, 1, 3).remove(0);
+        let sim = Simulator::new(SimConfig::v100());
+        for e in ALL_EXPERTS {
+            let p = greedy_placement(&ds, &task, &sim, e);
+            let eval = sim.evaluate(&ds, &task, &p);
+            assert!(eval.latency > 0.0);
+        }
+    }
+
+    #[test]
+    fn random_respects_memory_mostly() {
+        let (ds, task, sim) = setup();
+        let mut rng = Rng::new(5);
+        let p = random_placement(&ds, &task, &sim, &mut rng);
+        let eval = sim.evaluate(&ds, &task, &p);
+        for d in &eval.devices {
+            assert!(d.mem_gb <= sim.cfg.mem_cap_gb as f64 * 1.5);
+        }
+    }
+}

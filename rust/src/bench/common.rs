@@ -1,0 +1,163 @@
+//! Shared experiment plumbing: suite construction (dataset + disjoint
+//! train/test task pools + simulator), agent training, evaluation rows,
+//! and CSV/console output helpers.
+
+use anyhow::Result;
+use std::io::Write;
+use std::path::PathBuf;
+
+use crate::baselines::{greedy_placement, random_placement, Expert, ALL_EXPERTS};
+use crate::coordinator::{DreamShard, TrainCfg};
+use crate::runtime::Runtime;
+use crate::sim::{SimConfig, Simulator};
+use crate::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools, Dataset, Task};
+use crate::util::{mean_std, Rng};
+
+/// Experiment context: runtime + output directory + effort knobs.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub out_dir: PathBuf,
+    /// Reduced task counts / training budget (see EXPERIMENTS.md).
+    pub fast: bool,
+    pub seeds: usize,
+}
+
+impl Ctx {
+    pub fn new(fast: bool, seeds: usize) -> Result<Self> {
+        let rt = Runtime::open_default()?;
+        let out_dir = PathBuf::from(
+            std::env::var("DREAMSHARD_OUT").unwrap_or_else(|_| "bench_out".into()),
+        );
+        std::fs::create_dir_all(&out_dir)?;
+        Ok(Ctx { rt, out_dir, fast, seeds })
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        if self.fast {
+            10
+        } else {
+            50
+        }
+    }
+
+    pub fn train_cfg(&self) -> TrainCfg {
+        if self.fast {
+            TrainCfg::fast()
+        } else {
+            TrainCfg::default()
+        }
+    }
+
+    /// Write an experiment's rendered output both to stdout and a file.
+    pub fn emit(&self, name: &str, body: &str) -> Result<()> {
+        println!("{body}");
+        let path = self.out_dir.join(format!("{name}.txt"));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(body.as_bytes())?;
+        eprintln!("[saved {}]", path.display());
+        Ok(())
+    }
+}
+
+/// One benchmark suite: `dataset-n_tables (n_devices)`.
+pub struct Suite {
+    pub name: String,
+    pub ds: Dataset,
+    pub train: Vec<Task>,
+    pub test: Vec<Task>,
+    pub sim: Simulator,
+}
+
+/// Which dataset a suite draws from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Which {
+    Dlrm,
+    Prod,
+}
+
+pub fn make_suite(which: Which, n_tables: usize, n_devices: usize, n_tasks: usize, seed: u64) -> Suite {
+    let (ds, sim_cfg, tag) = match which {
+        Which::Dlrm => (gen_dlrm(856, 42), SimConfig::default(), "DLRM"),
+        Which::Prod => (gen_prod(856, 42), SimConfig::v100(), "Prod"),
+    };
+    let (pool_tr, pool_te) = split_pools(&ds, 1000 + seed);
+    let train = sample_tasks(&pool_tr, n_tables, n_devices, n_tasks, 2000 + seed);
+    let test = sample_tasks(&pool_te, n_tables, n_devices, n_tasks, 3000 + seed);
+    Suite {
+        name: format!("{tag}-{n_tables} ({n_devices})"),
+        ds,
+        train,
+        test,
+        sim: Simulator::new(sim_cfg),
+    }
+}
+
+/// (mean, std) latency of random placement over tasks (20 draws each).
+pub fn eval_random(suite: &Suite, tasks: &[Task], seed: u64) -> (f64, f64) {
+    let mut rng = Rng::new(seed).fork(0xBAD);
+    let costs: Vec<f64> = tasks
+        .iter()
+        .flat_map(|t| {
+            (0..5).map(|_| {
+                let p = random_placement(&suite.ds, t, &suite.sim, &mut rng);
+                suite.sim.evaluate(&suite.ds, t, &p).latency
+            }).collect::<Vec<_>>()
+        })
+        .collect();
+    mean_std(&costs)
+}
+
+/// (mean, std) latency of one greedy expert over tasks.
+pub fn eval_expert(suite: &Suite, tasks: &[Task], e: Expert) -> (f64, f64) {
+    let costs: Vec<f64> = tasks
+        .iter()
+        .map(|t| {
+            let p = greedy_placement(&suite.ds, t, &suite.sim, e);
+            suite.sim.evaluate(&suite.ds, t, &p).latency
+        })
+        .collect();
+    mean_std(&costs)
+}
+
+/// Best expert's mean latency (the paper's "best baseline" column).
+pub fn best_expert(suite: &Suite, tasks: &[Task]) -> (Expert, f64) {
+    ALL_EXPERTS
+        .into_iter()
+        .map(|e| (e, eval_expert(suite, tasks, e).0))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+}
+
+/// Train one DreamShard agent on a suite (one seed).
+pub fn train_agent(ctx: &Ctx, suite: &Suite, cfg: TrainCfg, seed: u64) -> Result<DreamShard> {
+    let mut rng = Rng::new(10_000 + seed);
+    let mut agent = DreamShard::new(&ctx.rt, suite.train[0].n_devices, cfg, &mut rng)?;
+    agent.train(&ctx.rt, &suite.sim, &suite.ds, &suite.train, &mut rng)?;
+    Ok(agent)
+}
+
+/// (mean, std) latency of an agent's argmax placements over tasks.
+pub fn eval_agent(ctx: &Ctx, suite: &Suite, agent: &DreamShard, tasks: &[Task]) -> Result<(f64, f64)> {
+    let mut costs = vec![];
+    for t in tasks {
+        let p = agent.place(&ctx.rt, &suite.sim, &suite.ds, t)?;
+        costs.push(suite.sim.evaluate(&suite.ds, t, &p).latency);
+    }
+    Ok(mean_std(&costs))
+}
+
+/// Train `seeds` agents and return per-seed mean test/train latencies.
+pub fn seeded_agent_eval(
+    ctx: &Ctx,
+    suite: &Suite,
+    cfg: &TrainCfg,
+) -> Result<(Vec<f64>, Vec<f64>)> {
+    let mut train_means = vec![];
+    let mut test_means = vec![];
+    for seed in 0..ctx.seeds as u64 {
+        let agent = train_agent(ctx, suite, cfg.clone(), seed)?;
+        train_means.push(eval_agent(ctx, suite, &agent, &suite.train)?.0);
+        test_means.push(eval_agent(ctx, suite, &agent, &suite.test)?.0);
+    }
+    Ok((train_means, test_means))
+}

@@ -1,0 +1,139 @@
+//! Offline cost-network fitting protocol shared by Table 12, Fig. 7 and
+//! Figs. 13-14: collect a pool of (state, measured cost) samples from
+//! random placements, train a cost network supervised, report held-out
+//! MSE (sum of cost-feature MSE and overall-cost MSE, as in Eq. 1).
+
+use anyhow::Result;
+
+use super::common::{Ctx, Suite};
+use crate::baselines::random_placement;
+use crate::coordinator::{CostNet, CostSample, ReplayBuffer, Variant};
+use crate::mdp::{heuristic_order, PlacementState};
+use crate::runtime::TensorF32;
+use crate::tables::NUM_FEATURES;
+use crate::util::Rng;
+
+/// Generate `n` cost samples from random placements (with prefix states),
+/// split 80/20 into train/test. Padded to the standard trainable variant
+/// shape (the smallest D >= the suite's device count, S = 48).
+pub fn collect_cost_dataset(
+    suite: &Suite,
+    n: usize,
+    seed: u64,
+) -> Result<(Vec<CostSample>, Vec<CostSample>)> {
+    let mut rng = Rng::new(seed).fork(0xC057);
+    let var_d = suite.train[0].n_devices;
+    // padded dims must match the artifact variant used by fit_cost_net
+    let (d, s) = (var_d.next_power_of_two().max(2), 48);
+    assert!(d <= 8, "offline fitting only lowered for the trainable variants");
+    let mut samples = vec![];
+    let fractions = [0.25f32, 0.5, 0.75, 1.0];
+    'outer: loop {
+        let task = &suite.train[rng.below(suite.train.len())];
+        let placement = random_placement(&suite.ds, task, &suite.sim, &mut rng);
+        let order = heuristic_order(&suite.ds, task);
+        for &frac in &fractions {
+            if samples.len() >= n {
+                break 'outer;
+            }
+            let keep = ((task.n_tables() as f32 * frac).round() as usize).max(1);
+            let mut st = PlacementState::new(&suite.ds, task, order.clone(), s);
+            for _ in 0..keep {
+                let idx = st.current();
+                st.apply(placement[idx]);
+            }
+            let eval = st.evaluate(&suite.sim);
+            let mut feats = TensorF32::zeros(&[1, d, s, NUM_FEATURES]);
+            let mut mask = TensorF32::zeros(&[1, d, s]);
+            let mut dmask = TensorF32::zeros(&[1, d]);
+            st.fill_feats(0, d, s, &mut feats, &mut mask, &mut dmask);
+            let mut q = vec![0.0f32; d * 3];
+            for (dev, qd) in eval.q.iter().enumerate() {
+                q[dev * 3..dev * 3 + 3].copy_from_slice(qd);
+            }
+            samples.push(CostSample {
+                feats: feats.data,
+                mask: mask.data,
+                dmask: dmask.data,
+                q,
+                cost: eval.latency as f32,
+            });
+        }
+    }
+    let n_test = samples.len() / 5;
+    let test = samples.split_off(samples.len() - n_test);
+    Ok((samples, test))
+}
+
+/// Supervised-train a cost network for `steps` Adam updates.
+pub fn fit_cost_net(
+    ctx: &Ctx,
+    suite: &Suite,
+    train_set: &[CostSample],
+    steps: usize,
+    fmask: &[f32],
+    seed: u64,
+) -> Result<CostNet> {
+    fit_cost_net_red(ctx, suite, train_set, steps, fmask, seed, None)
+}
+
+/// Same, with an explicit reduction variant (Figs. 13-14 ablation).
+pub fn fit_cost_net_red(
+    ctx: &Ctx,
+    suite: &Suite,
+    train_set: &[CostSample],
+    steps: usize,
+    fmask: &[f32],
+    seed: u64,
+    reduction: Option<(String, String)>,
+) -> Result<CostNet> {
+    let var = Variant::for_devices(&ctx.rt, suite.train[0].n_devices)?;
+    let mut rng = Rng::new(60_000 + seed);
+    let mut net = CostNet::new(&ctx.rt, &mut rng)?;
+    net.fmask = fmask.to_vec();
+    net.reduction = reduction;
+    let mut buf = ReplayBuffer::new(train_set.len().max(1));
+    for s in train_set {
+        buf.push(s.clone());
+    }
+    for _ in 0..steps {
+        let (feats, mask, dmask, q, c) = buf.sample_batch(var.b_cost, var.d, var.s, &mut rng);
+        net.train_batch(&ctx.rt, &var, &feats, &mask, &dmask, &q, &c, 5e-4)?;
+    }
+    Ok(net)
+}
+
+/// Held-out MSE (Eq. 1: cost-feature MSE + overall-cost MSE).
+pub fn test_mse(ctx: &Ctx, suite: &Suite, net: &CostNet, test_set: &[CostSample]) -> Result<f64> {
+    let var = Variant::for_devices(&ctx.rt, suite.train[0].n_devices)?;
+    let (e, d, s) = (var.e, var.d, var.s);
+    let f = NUM_FEATURES;
+    let mut se_q = 0.0f64;
+    let mut n_q = 0.0f64;
+    let mut se_c = 0.0f64;
+    for chunk in test_set.chunks(e) {
+        let mut feats = TensorF32::zeros(&[e, d, s, f]);
+        let mut mask = TensorF32::zeros(&[e, d, s]);
+        let mut dmask = TensorF32::zeros(&[e, d]);
+        for (i, sm) in chunk.iter().enumerate() {
+            feats.set_row(&[i, 0, 0, 0], &sm.feats);
+            mask.set_row(&[i, 0, 0], &sm.mask);
+            dmask.set_row(&[i, 0], &sm.dmask);
+        }
+        let preds = net.predict_tensors(&ctx.rt, &var, &feats, &mask, &dmask, chunk.len())?;
+        for (i, sm) in chunk.iter().enumerate() {
+            for dev in 0..d {
+                if sm.dmask[dev] > 0.0 {
+                    for k in 0..3 {
+                        let diff = (preds[i].q[dev][k] - sm.q[dev * 3 + k]) as f64;
+                        se_q += diff * diff;
+                        n_q += 1.0;
+                    }
+                }
+            }
+            let dc = (preds[i].cost - sm.cost) as f64;
+            se_c += dc * dc;
+        }
+    }
+    Ok(se_q / n_q.max(1.0) + se_c / test_set.len().max(1) as f64)
+}

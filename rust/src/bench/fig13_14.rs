@@ -1,0 +1,55 @@
+//! Figs. 13-14: reduction ablation for the cost network — compare
+//! sum/mean/max reductions for table representations (Fig. 13) and
+//! max/sum/mean for device representations (Fig. 14) by held-out MSE at
+//! several training-set sizes, using the offline fitting protocol.
+
+use anyhow::Result;
+
+use super::common::{make_suite, Ctx, Which};
+use super::costfit::{collect_cost_dataset, fit_cost_net_red, test_mse};
+use crate::tables::NUM_FEATURES;
+use crate::util::table::TextTable;
+
+pub fn fig13_14(ctx: &Ctx) -> Result<()> {
+    let suite = make_suite(Which::Dlrm, 50, 4, ctx.n_tasks(), 7);
+    let pool = if ctx.fast { 1000 } else { 4000 };
+    eprintln!("[fig13_14] collecting {pool} samples ...");
+    let (train_all, test_set) = collect_cost_dataset(&suite, pool, 41)?;
+    let sizes: &[usize] = if ctx.fast { &[100, 400, 800] } else { &[100, 400, 1000, 3000] };
+    let steps = if ctx.fast { 350 } else { 1200 };
+    let fmask = vec![1.0f32; NUM_FEATURES];
+    // (label, table_red, dev_red); None = the shipped sum+max network
+    let combos: &[(&str, Option<(&str, &str)>)] = &[
+        ("sum-table / max-dev (DreamShard)", None),
+        ("max-table / max-dev", Some(("max", "max"))),
+        ("mean-table / max-dev", Some(("mean", "max"))),
+        ("sum-table / sum-dev", Some(("sum", "sum"))),
+        ("sum-table / mean-dev", Some(("sum", "mean"))),
+    ];
+    let mut header = vec!["reduction".to_string()];
+    header.extend(sizes.iter().map(|s| format!("MSE@{s}")));
+    let mut tbl = TextTable::new(header);
+    for (label, red) in combos {
+        let mut row = vec![label.to_string()];
+        for &n in sizes {
+            let n = n.min(train_all.len());
+            let net = fit_cost_net_red(
+                ctx,
+                &suite,
+                &train_all[..n],
+                steps,
+                &fmask,
+                51,
+                red.map(|(a, b)| (a.to_string(), b.to_string())),
+            )?;
+            let mse = test_mse(ctx, &suite, &net, &test_set)?;
+            row.push(format!("{mse:.3}"));
+        }
+        eprintln!("[fig13_14] {label}: {row:?}");
+        tbl.row(row);
+    }
+    ctx.emit("fig13_14", &format!(
+        "fig13_14: cost-network held-out MSE by reduction choice (DLRM-50 (4))\n{}",
+        tbl.render()
+    ))
+}

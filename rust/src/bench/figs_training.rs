@@ -1,0 +1,152 @@
+//! Training-dynamics experiments:
+//! Fig. 5 / 19 / 20 — performance vs iterations and wall-clock;
+//! Fig. 6 / 21 / 22 — N_RL and N_cost hyperparameter sweeps;
+//! Fig. 7 — cost-net accuracy vs data size, and resulting policy quality;
+//! Fig. 8 — estimated vs real MDP (training curves, hardware budget,
+//!          inference time vs number of tables).
+
+use anyhow::Result;
+use std::time::Instant;
+
+use super::common::{eval_agent, make_suite, train_agent, Ctx, Which};
+use super::costfit::{collect_cost_dataset, fit_cost_net, test_mse};
+use crate::coordinator::{DreamShard, TrainCfg};
+use crate::tables::NUM_FEATURES;
+use crate::util::table::TextTable;
+use crate::util::Rng;
+
+/// Fig. 5: test-task cost after each training iteration + wall time.
+pub fn fig5(ctx: &Ctx) -> Result<()> {
+    let suite = make_suite(Which::Dlrm, 50, 4, ctx.n_tasks(), 7);
+    let cfg = ctx.train_cfg();
+    let iters = cfg.n_iterations.max(8);
+    let mut rng = Rng::new(10_000);
+    let mut agent = DreamShard::new(&ctx.rt, 4, TrainCfg { n_iterations: iters, ..cfg }, &mut rng)?;
+    let mut out = String::from("fig5: DLRM-50 (4) — test cost vs training iteration\niter\ttest_ms\twall_s\n");
+    let t0 = Instant::now();
+    let eval0 = eval_agent(ctx, &suite, &agent, &suite.test)?.0;
+    out.push_str(&format!("0\t{eval0:.2}\t0.0\n"));
+    for it in 0..iters {
+        agent.train_iteration(&ctx.rt, &suite.sim, &suite.ds, &suite.train, it, false, &mut rng)?;
+        let m = eval_agent(ctx, &suite, &agent, &suite.test)?.0;
+        out.push_str(&format!("{}\t{m:.2}\t{:.1}\n", it + 1, t0.elapsed().as_secs_f64()));
+        eprintln!("[fig5] iter {} -> {m:.2} ms", it + 1);
+    }
+    ctx.emit("fig5", &out)
+}
+
+/// Fig. 6: sweep N_RL (left) and N_cost (right) on DLRM-50 (4).
+pub fn fig6(ctx: &Ctx) -> Result<()> {
+    let suite = make_suite(Which::Dlrm, 50, 4, ctx.n_tasks(), 7);
+    let base = ctx.train_cfg();
+    let n_rls: &[usize] = if ctx.fast { &[1, 4, 10] } else { &[1, 2, 5, 10, 20, 40] };
+    let n_costs: &[usize] = if ctx.fast { &[10, 60, 150] } else { &[10, 30, 100, 300, 600] };
+    let mut tbl = TextTable::new(vec!["knob", "value", "test_ms"]);
+    for &n_rl in n_rls {
+        let cfg = TrainCfg { n_rl, ..base.clone() };
+        let agent = train_agent(ctx, &suite, cfg, 1)?;
+        let m = eval_agent(ctx, &suite, &agent, &suite.test)?.0;
+        tbl.row(vec!["N_RL".into(), n_rl.to_string(), format!("{m:.2}")]);
+        eprintln!("[fig6] N_RL={n_rl} -> {m:.2}");
+    }
+    for &n_cost in n_costs {
+        let cfg = TrainCfg { n_cost, ..base.clone() };
+        let agent = train_agent(ctx, &suite, cfg, 1)?;
+        let m = eval_agent(ctx, &suite, &agent, &suite.test)?.0;
+        tbl.row(vec!["N_cost".into(), n_cost.to_string(), format!("{m:.2}")]);
+        eprintln!("[fig6] N_cost={n_cost} -> {m:.2}");
+    }
+    ctx.emit("fig6", &format!("fig6: hyperparameter impact on DLRM-50 (4)\n{}", tbl.render()))
+}
+
+/// Fig. 7: cost-net MSE vs number of training samples, and the quality of
+/// a policy trained against each (frozen) cost net.
+pub fn fig7(ctx: &Ctx) -> Result<()> {
+    let suite = make_suite(Which::Dlrm, 50, 4, ctx.n_tasks(), 7);
+    let pool = if ctx.fast { 1200 } else { 4000 };
+    eprintln!("[fig7] collecting {pool} samples ...");
+    let (train_all, test_set) = collect_cost_dataset(&suite, pool, 21)?;
+    let sizes: &[usize] = if ctx.fast { &[20, 100, 400, 900] } else { &[20, 50, 100, 400, 1000, 3000] };
+    let fmask = vec![1.0f32; NUM_FEATURES];
+    let steps = if ctx.fast { 400 } else { 1500 };
+    let mut tbl = TextTable::new(vec!["n_train", "cost MSE", "policy test_ms"]);
+    for &n in sizes {
+        let n = n.min(train_all.len());
+        let net = fit_cost_net(ctx, &suite, &train_all[..n], steps, &fmask, 31)?;
+        let mse = test_mse(ctx, &suite, &net, &test_set)?;
+        // train a policy against the frozen cost net (no cost updates)
+        let mut rng = Rng::new(40_000);
+        let cfg = TrainCfg { n_cost: 0, n_collect: 1, ..ctx.train_cfg() };
+        let mut agent = DreamShard::new(&ctx.rt, 4, cfg, &mut rng)?;
+        agent.cost = net;
+        agent.train(&ctx.rt, &suite.sim, &suite.ds, &suite.train, &mut rng)?;
+        let m = eval_agent(ctx, &suite, &agent, &suite.test)?.0;
+        tbl.row(vec![n.to_string(), format!("{mse:.3}"), format!("{m:.2}")]);
+        eprintln!("[fig7] n={n}: MSE {mse:.3}, policy {m:.2} ms");
+    }
+    ctx.emit("fig7", &format!(
+        "fig7: cost-net accuracy vs data size, and downstream policy quality (DLRM-50 (4))\n{}",
+        tbl.render()
+    ))
+}
+
+/// Fig. 8: training with the estimated MDP vs directly on the simulated
+/// hardware (states+rewards from execution), plus inference latency vs
+/// number of tables.
+pub fn fig8(ctx: &Ctx) -> Result<()> {
+    let suite = make_suite(Which::Dlrm, 50, 4, ctx.n_tasks(), 7);
+    let cfg = ctx.train_cfg();
+    let iters = cfg.n_iterations;
+    let mut out = String::from(
+        "fig8 (left): test cost per iteration — estimated MDP vs real execution\n\
+         Hardware budget counts simulated-GPU benchmark runs (PARAM protocol:\n\
+         each measured placement state ~= 1.5 s of GPU time, section B.4.2).\n\
+         iter\test_mdp_ms\test_wall_s\test_hw_runs\treal_mdp_ms\treal_wall_s\treal_hw_runs\n",
+    );
+    let mut rows = vec![];
+    for real in [false, true] {
+        let mut rng = Rng::new(10_000);
+        let mut agent = DreamShard::new(&ctx.rt, 4, cfg.clone(), &mut rng)?;
+        let t0 = Instant::now();
+        let mut series = vec![];
+        for it in 0..iters {
+            agent.train_iteration(&ctx.rt, &suite.sim, &suite.ds, &suite.train, it, real, &mut rng)?;
+            let m = eval_agent(ctx, &suite, &agent, &suite.test)?.0;
+            // hardware runs: data collection always hits the hardware;
+            // the real-MDP arm additionally measures every step + reward
+            let per_iter_hw = if real {
+                cfg.n_collect * cfg.prefix_fractions.len()
+                    + cfg.n_rl * cfg.n_episode * (50 + 1)
+            } else {
+                cfg.n_collect * cfg.prefix_fractions.len()
+            };
+            series.push((m, t0.elapsed().as_secs_f64(), per_iter_hw * (it + 1)));
+            eprintln!("[fig8] real={real} iter {}: {m:.2} ms", it + 1);
+        }
+        rows.push(series);
+    }
+    for it in 0..iters {
+        let (em, ew, eh) = rows[0][it];
+        let (rm, rw, rh) = rows[1][it];
+        out.push_str(&format!(
+            "{}\t{em:.2}\t{ew:.1}\t{eh}\t{rm:.2}\t{rw:.1}\t{rh}\n",
+            it + 1
+        ));
+    }
+    // right panel: inference time vs number of tables (argmax placement)
+    out.push_str("\nfig8 (right): inference wall time vs number of tables\nn_tables\tplace_ms\n");
+    let agent = train_agent(ctx, &suite, ctx.train_cfg(), 0)?;
+    for &n in &[10usize, 25, 50, 100, 150, 200] {
+        let s2 = make_suite(Which::Dlrm, n, 4, 2, 9);
+        let t0 = Instant::now();
+        let mut reps = 0;
+        for task in &s2.test {
+            agent.place(&ctx.rt, &s2.sim, &s2.ds, task)?;
+            reps += 1;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        out.push_str(&format!("{n}\t{ms:.1}\n"));
+        eprintln!("[fig8] inference n={n}: {ms:.1} ms");
+    }
+    ctx.emit("fig8", &out)
+}

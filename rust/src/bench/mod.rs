@@ -1,0 +1,59 @@
+//! Experiment harness: every table and figure of the paper's evaluation
+//! maps to a subcommand here (see DESIGN.md's experiment index).
+//!
+//! Invoke via the CLI: `dreamshard repro <id> [--fast] [--seeds N]`, or
+//! `dreamshard repro all` for the whole battery.
+
+pub mod common;
+pub mod costfit;
+pub mod fig13_14;
+pub mod figs_training;
+pub mod simfigs;
+pub mod table1;
+pub mod table13;
+pub mod table2;
+pub mod table3;
+
+use anyhow::{bail, Result};
+use common::Ctx;
+
+/// All experiment ids, in a sensible execution order (cheap ones first).
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "table4", "fig10", "fig11", "fig12", "fig15_18", // simulator analyses (fast)
+    "fig1", "fig5", "fig8", // headline dynamics
+    "table1", "table13", // headline sweeps
+    "table12", "fig13_14", "fig7", "fig6", // cost-net studies
+    "table2", "table3", "table8_10", "table6", "table7", // remaining sweeps
+];
+
+pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
+    match id {
+        "table1" => table1::table1(ctx),
+        "table2" => table2::table2(ctx),
+        "table3" | "table11" => table3::table3(ctx),
+        "table4" => simfigs::table4(ctx),
+        "table6" => table1::table6(ctx),
+        "table7" => table1::table7(ctx),
+        "table8_10" => table2::table8_10(ctx),
+        "table12" => table3::table12(ctx),
+        "table13" => table13::table13(ctx),
+        "fig1" => simfigs::fig1(ctx),
+        "fig5" => figs_training::fig5(ctx),
+        "fig6" => figs_training::fig6(ctx),
+        "fig7" => figs_training::fig7(ctx),
+        "fig8" => figs_training::fig8(ctx),
+        "fig10" => simfigs::fig10(ctx),
+        "fig11" => simfigs::fig11(ctx),
+        "fig12" => simfigs::fig12(ctx),
+        "fig13_14" => fig13_14::fig13_14(ctx),
+        "fig15_18" => simfigs::fig15_18(ctx),
+        "all" => {
+            for id in ALL_EXPERIMENTS {
+                eprintln!("==== {id} ====");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment `{other}`; known: {ALL_EXPERIMENTS:?} or `all`"),
+    }
+}

@@ -1,0 +1,213 @@
+//! Simulator-characterization experiments: Table 4 (comm vs imbalance),
+//! Fig. 10 (kernel time vs hash x dim), Fig. 11 (vs pooling x access
+//! ratio), Fig. 12 (fusion speedup scatter), Figs. 15-18 (dataset
+//! statistics), and Fig. 1 / Figs. 23-28 (placement traces).
+
+use anyhow::Result;
+
+use super::common::{make_suite, Ctx, Which};
+use crate::baselines::{greedy_placement, random_placement, ALL_EXPERTS};
+use crate::sim::{CommModel, KernelModel, SimConfig, Simulator};
+use crate::tables::{gen_dlrm, Table, NUM_BINS};
+use crate::util::table::TextTable;
+use crate::util::Rng;
+
+pub fn table4(ctx: &Ctx) -> Result<()> {
+    let comm = CommModel::new(65_536);
+    let rows: &[(&str, [f64; 4])] = &[
+        ("Perfectly balanced", [256.0, 256.0, 256.0, 256.0]),
+        ("Slightly imbalanced", [192.0, 256.0, 320.0, 384.0]),
+        ("Slightly imbalanced", [192.0, 192.0, 320.0, 320.0]),
+        ("Slightly imbalanced", [128.0, 192.0, 320.0, 384.0]),
+        ("Slightly imbalanced", [128.0, 128.0, 384.0, 384.0]),
+        ("Very imbalanced", [64.0, 128.0, 384.0, 448.0]),
+        ("Very imbalanced", [64.0, 64.0, 448.0, 448.0]),
+        ("Very imbalanced", [64.0, 64.0, 320.0, 576.0]),
+        ("Very imbalanced", [64.0, 64.0, 64.0, 832.0]),
+    ];
+    let mut tbl = TextTable::new(vec![
+        "Category", "Dims", "GPU1", "GPU2", "GPU3", "GPU4", "Max cost",
+    ]);
+    for (cat, dims) in rows {
+        let t = comm.all_to_all_ms(dims);
+        let max = t.iter().cloned().fold(0.0, f64::max);
+        tbl.row(vec![
+            cat.to_string(),
+            format!("{:?}", dims.map(|d| d as i64)),
+            format!("{:.2}", t[0]),
+            format!("{:.2}", t[1]),
+            format!("{:.2}", t[2]),
+            format!("{:.2}", t[3]),
+            format!("{max:.2}"),
+        ]);
+    }
+    ctx.emit("table4", &format!(
+        "table4: all-to-all time (ms) vs dimension imbalance, 4 GPUs, batch 65536\n{}",
+        tbl.render()
+    ))
+}
+
+fn probe_table(dim: u32, hash: u64, pooling: f32, heat_bin: usize) -> Table {
+    let mut bins = [0.0f32; NUM_BINS];
+    bins[heat_bin] = 1.0;
+    Table { dim, hash_size: hash, pooling, bins }
+}
+
+pub fn fig10(ctx: &Ctx) -> Result<()> {
+    let k = KernelModel::new(65_536);
+    let hashes: Vec<u64> = (0..6).map(|i| 200_000u64 << i).collect();
+    let dims: Vec<u32> = (2..=10).map(|p| 1u32 << p).collect();
+    let mut out = String::from("fig10: single-table kernel time (fwd+bwd, ms) heatmap\nhash\\dim");
+    for d in &dims {
+        out.push_str(&format!("\t{d}"));
+    }
+    out.push('\n');
+    for &h in &hashes {
+        out.push_str(&format!("{h}"));
+        for &d in &dims {
+            let t = probe_table(d, h, 32.0, 2);
+            out.push_str(&format!("\t{:.2}", k.fwd_ms(&t) + k.bwd_ms(&t)));
+        }
+        out.push('\n');
+    }
+    ctx.emit("fig10", &out)
+}
+
+pub fn fig11(ctx: &Ctx) -> Result<()> {
+    let k = KernelModel::new(65_536);
+    let pools: Vec<f32> = (0..=8).map(|p| (1u32 << p) as f32).collect();
+    // access "heat" stands in for the paper's accessed-indices ratio:
+    // hotter distribution == smaller effective accessed set
+    let heats: Vec<usize> = vec![0, 4, 8, 12, 16];
+    let mut out =
+        String::from("fig11: single-table kernel time (ms) vs pooling factor x access heat\nheat_bin\\pool");
+    for p in &pools {
+        out.push_str(&format!("\t{p}"));
+    }
+    out.push('\n');
+    for &hb in &heats {
+        out.push_str(&format!("bin{hb}"));
+        for &p in &pools {
+            let t = probe_table(32, 1_000_000, p, hb);
+            out.push_str(&format!("\t{:.2}", k.fwd_ms(&t) + k.bwd_ms(&t)));
+        }
+        out.push('\n');
+    }
+    ctx.emit("fig11", &out)
+}
+
+pub fn fig12(ctx: &Ctx) -> Result<()> {
+    let k = KernelModel::new(65_536);
+    let ds = gen_dlrm(856, 42);
+    let mut rng = Rng::new(12);
+    let mut out = String::from("fig12: multi-table fused cost vs sum of single-table costs (10 tables/sample)\nsum_single_ms\tfused_ms\tspeedup\n");
+    let mut speedups = vec![];
+    for _ in 0..50 {
+        let ids = rng.sample_indices(ds.len(), 10);
+        let tables: Vec<&Table> = ids.iter().map(|&i| &ds.tables[i]).collect();
+        let sum: f64 = tables.iter().map(|t| k.fwd_ms(t) + k.bwd_ms(t)).sum();
+        let (f, b) = k.device_ms(&tables);
+        let fused = f + b;
+        speedups.push(sum / fused);
+        out.push_str(&format!("{sum:.2}\t{fused:.2}\t{:.2}\n", sum / fused));
+    }
+    let (m, s) = crate::util::mean_std(&speedups);
+    let lo = speedups.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = speedups.iter().cloned().fold(0.0, f64::max);
+    out.push_str(&format!("speedup mean {m:.2} ± {s:.2}, range [{lo:.2}, {hi:.2}] (paper: 1x-3x)\n"));
+    ctx.emit("fig12", &out)
+}
+
+pub fn fig15_18(ctx: &Ctx) -> Result<()> {
+    let ds = gen_dlrm(856, 42);
+    let mut out = String::new();
+    // Fig 15: hash-size histogram (log10 bins)
+    let mut hist = [0usize; 8];
+    for t in &ds.tables {
+        let b = ((t.hash_size as f64).log10().floor() as usize).clamp(3, 7) - 3;
+        hist[b] += 1;
+    }
+    out.push_str("fig15: hash-size distribution (log10 bins 1e3..1e7)\n");
+    for (i, c) in hist.iter().take(5).enumerate() {
+        out.push_str(&format!("  1e{}..1e{}: {c}\n", i + 3, i + 4));
+    }
+    // Fig 16: pooling-factor histogram
+    let edges = [2.0f32, 5.0, 10.0, 25.0, 50.0, 100.0, 200.1];
+    let mut ph = vec![0usize; edges.len()];
+    for t in &ds.tables {
+        let b = edges.iter().position(|&e| t.pooling < e).unwrap_or(edges.len() - 1);
+        ph[b] += 1;
+    }
+    out.push_str("fig16: pooling-factor distribution (power law; paper avg 15)\n");
+    let mut lo = 0.0f32;
+    for (i, c) in ph.iter().enumerate() {
+        out.push_str(&format!("  [{lo:.0},{:.0}): {c}\n", edges[i]));
+        lo = edges[i];
+    }
+    let avg_pool: f64 = ds.tables.iter().map(|t| t.pooling as f64).sum::<f64>() / ds.len() as f64;
+    out.push_str(&format!("  mean pooling factor: {avg_pool:.1}\n"));
+    // Fig 17: hash size vs pooling correlation
+    let xs: Vec<f64> = ds.tables.iter().map(|t| (t.hash_size as f64).log10()).collect();
+    let ys: Vec<f64> = ds.tables.iter().map(|t| (t.pooling as f64).ln()).collect();
+    let (mx, sx) = crate::util::mean_std(&xs);
+    let (my, sy) = crate::util::mean_std(&ys);
+    let corr: f64 = xs
+        .iter()
+        .zip(ys.iter())
+        .map(|(x, y)| (x - mx) * (y - my))
+        .sum::<f64>()
+        / (xs.len() as f64 * sx * sy);
+    out.push_str(&format!(
+        "fig17: corr(log hash, log pooling) = {corr:.3} (paper: no clear relationship)\n"
+    ));
+    // Fig 18: index access-frequency distribution (aggregate bins)
+    let mut agg = [0.0f32; NUM_BINS];
+    for t in &ds.tables {
+        for (i, &b) in t.bins.iter().enumerate() {
+            agg[i] += b;
+        }
+    }
+    out.push_str("fig18: aggregate access-frequency bin mass (bin k ~ 2^k accesses)\n  ");
+    for (i, a) in agg.iter().enumerate() {
+        out.push_str(&format!("b{i}:{:.1} ", a / ds.len() as f32 * 100.0));
+    }
+    out.push('\n');
+    ctx.emit("fig15_18", &out)
+}
+
+/// Fig. 1 + Figs. 23-28: trace visualization of random vs best expert vs
+/// DreamShard on DLRM-50 (4) tasks.
+pub fn fig1(ctx: &Ctx) -> Result<()> {
+    let suite = make_suite(Which::Dlrm, 50, 4, ctx.n_tasks(), 7);
+    eprintln!("[fig1] training DreamShard on DLRM-50 (4) ...");
+    let agent = super::common::train_agent(ctx, &suite, ctx.train_cfg(), 0)?;
+    let mut out = String::new();
+    let mut rng = Rng::new(123);
+    for (case, task) in suite.test.iter().take(3).enumerate() {
+        out.push_str(&format!("=== case {case} ===\n"));
+        let p_rand = random_placement(&suite.ds, task, &suite.sim, &mut rng);
+        let e_rand = suite.sim.evaluate(&suite.ds, task, &p_rand);
+        out.push_str(&suite.sim.render_trace(&e_rand, "random"));
+        let (best_e, _) = ALL_EXPERTS
+            .into_iter()
+            .map(|e| {
+                let p = greedy_placement(&suite.ds, task, &suite.sim, e);
+                (e, suite.sim.evaluate(&suite.ds, task, &p).latency)
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let p_exp = greedy_placement(&suite.ds, task, &suite.sim, best_e);
+        let e_exp = suite.sim.evaluate(&suite.ds, task, &p_exp);
+        out.push_str(&suite.sim.render_trace(&e_exp, best_e.name()));
+        let p_ds = agent.place(&ctx.rt, &suite.sim, &suite.ds, task)?;
+        let e_ds = suite.sim.evaluate(&suite.ds, task, &p_ds);
+        out.push_str(&suite.sim.render_trace(&e_ds, "DreamShard"));
+        out.push('\n');
+    }
+    ctx.emit("fig1", &out)
+}
+
+/// Sanity helper used by tests: the simulator under the default config.
+pub fn default_sim() -> Simulator {
+    Simulator::new(SimConfig::default())
+}

@@ -1,0 +1,148 @@
+//! Tables 1, 6, 7: overall cost comparison (ms + speedup over random) of
+//! random / four greedy experts / RNN-based RL / DreamShard, on train and
+//! test tasks, across dataset x table-count x device-count configs.
+
+use anyhow::Result;
+
+use super::common::{
+    best_expert, eval_agent, eval_expert, eval_random, make_suite, seeded_agent_eval, train_agent,
+    Ctx, Suite, Which,
+};
+use crate::baselines::ALL_EXPERTS;
+use crate::coordinator::RnnBaseline;
+use crate::util::table::{ms_pm, speedup_vs, TextTable};
+use crate::util::{mean_std, Rng};
+
+pub const TABLE1_CONFIGS: &[(Which, usize, usize)] = &[
+    (Which::Dlrm, 20, 4),
+    (Which::Dlrm, 40, 4),
+    (Which::Dlrm, 60, 4),
+    (Which::Dlrm, 80, 4),
+    (Which::Dlrm, 100, 4),
+    (Which::Dlrm, 40, 8),
+    (Which::Dlrm, 80, 8),
+    (Which::Dlrm, 120, 8),
+    (Which::Dlrm, 160, 8),
+    (Which::Dlrm, 200, 8),
+    (Which::Prod, 20, 2),
+    (Which::Prod, 40, 4),
+    (Which::Prod, 80, 8),
+];
+
+pub const TABLE6_CONFIGS: &[(Which, usize, usize)] = &[
+    (Which::Dlrm, 10, 4),
+    (Which::Dlrm, 30, 4),
+    (Which::Dlrm, 50, 4),
+    (Which::Dlrm, 70, 4),
+    (Which::Dlrm, 90, 4),
+];
+
+pub const TABLE7_CONFIGS: &[(Which, usize, usize)] = &[
+    (Which::Dlrm, 10, 2),
+    (Which::Dlrm, 20, 2),
+    (Which::Dlrm, 30, 2),
+    (Which::Dlrm, 40, 2),
+    (Which::Dlrm, 50, 2),
+];
+
+/// Train + evaluate the RNN baseline; per-seed mean costs on train/test.
+fn rnn_eval(ctx: &Ctx, suite: &Suite) -> Result<(Vec<f64>, Vec<f64>)> {
+    let updates = ctx.train_cfg().n_iterations * ctx.train_cfg().n_rl;
+    let mut tr = vec![];
+    let mut te = vec![];
+    for seed in 0..ctx.seeds as u64 {
+        let mut rng = Rng::new(77_000 + seed);
+        let mut rnn = RnnBaseline::new(&ctx.rt, suite.train[0].n_devices, &mut rng)?;
+        rnn.train(&ctx.rt, &suite.sim, &suite.ds, &suite.train, updates, &mut rng)?;
+        for (tasks, out) in [(&suite.train, &mut tr), (&suite.test, &mut te)] {
+            let costs: Vec<f64> = tasks
+                .iter()
+                .map(|t| {
+                    let p = rnn.place(&ctx.rt, &suite.sim, &suite.ds, t)?;
+                    Ok(suite.sim.evaluate(&suite.ds, t, &p).latency)
+                })
+                .collect::<Result<_>>()?;
+            out.push(crate::util::mean(&costs));
+        }
+    }
+    Ok((tr, te))
+}
+
+pub fn run_configs(ctx: &Ctx, name: &str, configs: &[(Which, usize, usize)]) -> Result<()> {
+    // optional row cap for time-boxed runs: DREAMSHARD_MAX_CONFIGS=N
+    let cap: usize = std::env::var("DREAMSHARD_MAX_CONFIGS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(usize::MAX);
+    let configs = &configs[..configs.len().min(cap)];
+    let mut tbl = TextTable::new(vec![
+        "Task", "Split", "Random", "Size", "Dim", "Lookup", "Size-lookup", "RNN", "DreamShard",
+    ]);
+    for &(which, n_tables, n_devices) in configs {
+        let suite = make_suite(which, n_tables, n_devices, ctx.n_tasks(), 7);
+        eprintln!("[{name}] {} ...", suite.name);
+        let (agent_tr, agent_te) = seeded_agent_eval(ctx, &suite, &ctx.train_cfg())?;
+        let rnn_rows = rnn_eval(ctx, &suite);
+        let (rnn_tr, rnn_te) = match rnn_rows {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("  (RNN baseline unavailable: {e})");
+                (vec![], vec![])
+            }
+        };
+        for (split, tasks, agent_runs, rnn_runs) in [
+            ("Train", &suite.train, &agent_tr, &rnn_tr),
+            ("Test", &suite.test, &agent_te, &rnn_te),
+        ] {
+            let (r_m, r_s) = eval_random(&suite, tasks, 3);
+            let expert_cells: Vec<String> = ALL_EXPERTS
+                .iter()
+                .map(|&e| {
+                    let (m, s) = eval_expert(&suite, tasks, e);
+                    format!("{} ({})", ms_pm(m, s), speedup_vs(r_m, m))
+                })
+                .collect();
+            let (a_m, a_s) = mean_std(agent_runs);
+            let rnn_cell = if rnn_runs.is_empty() {
+                "-".to_string()
+            } else {
+                let (m, s) = mean_std(rnn_runs);
+                format!("{} ({})", ms_pm(m, s), speedup_vs(r_m, m))
+            };
+            tbl.row(vec![
+                suite.name.clone(),
+                split.to_string(),
+                ms_pm(r_m, r_s),
+                expert_cells[0].clone(),
+                expert_cells[1].clone(),
+                expert_cells[2].clone(),
+                expert_cells[3].clone(),
+                rnn_cell,
+                format!("{} ({})", ms_pm(a_m, a_s), speedup_vs(r_m, a_m)),
+            ]);
+        }
+    }
+    ctx.emit(name, &format!("{name}: overall cost (ms) and speedup over random\n{}", tbl.render()))
+}
+
+pub fn table1(ctx: &Ctx) -> Result<()> {
+    run_configs(ctx, "table1", TABLE1_CONFIGS)
+}
+
+pub fn table6(ctx: &Ctx) -> Result<()> {
+    run_configs(ctx, "table6", TABLE6_CONFIGS)
+}
+
+pub fn table7(ctx: &Ctx) -> Result<()> {
+    run_configs(ctx, "table7", TABLE7_CONFIGS)
+}
+
+/// Shared helper for other experiments: one trained agent + its headline
+/// numbers on a single suite.
+pub fn quick_headline(ctx: &Ctx, which: Which, n_tables: usize, n_devices: usize) -> Result<(Suite, crate::coordinator::DreamShard, f64, f64)> {
+    let suite = make_suite(which, n_tables, n_devices, ctx.n_tasks(), 7);
+    let agent = train_agent(ctx, &suite, ctx.train_cfg(), 0)?;
+    let (test_m, _) = eval_agent(ctx, &suite, &agent, &suite.test)?;
+    let (_, be) = best_expert(&suite, &suite.test);
+    Ok((suite, agent, test_m, be))
+}

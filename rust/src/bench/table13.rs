@@ -1,0 +1,84 @@
+//! Table 13: ultra-scale scalability test — ~1,000 diverse-dim tables
+//! placed on a 128-device cluster. The agent is trained at Prod-80 (8)
+//! and applied unchanged through the inference-only `d128s16` artifact
+//! variant (this *is* the paper's generalization claim at cluster scale).
+//! Training throughput improvement is derived from the embedding-cost
+//! share of the step (48% compute / 65% comm, section 1).
+
+use anyhow::Result;
+
+use super::common::{make_suite, train_agent, Ctx, Which};
+use crate::baselines::{greedy_placement, random_placement, ALL_EXPERTS};
+use crate::coordinator::Variant;
+use crate::sim::{SimConfig, Simulator};
+use crate::tables::{gen_prod, sample_tasks, split_pools};
+use crate::util::table::TextTable;
+use crate::util::Rng;
+
+/// Embedding cost -> end-to-end training-throughput improvement: the
+/// embedding stage overlaps the dense stage but dominates it (section
+/// A.1), so the step time is ~ embedding cost + non-overlapped overhead
+/// (data loading, optimizer, sync) which we put at 35% of the random
+/// placement's embedding cost.
+fn throughput_gain(rand_ms: f64, ms: f64) -> f64 {
+    let overhead = 0.35 * rand_ms;
+    (rand_ms + overhead) / (ms + overhead) - 1.0
+}
+
+pub fn table13(ctx: &Ctx) -> Result<()> {
+    // train at Prod-80 (8)
+    let train_suite = make_suite(Which::Prod, 80, 8, ctx.n_tasks(), 7);
+    eprintln!("[table13] training on Prod-80 (8) ...");
+    let agent = train_agent(ctx, &train_suite, ctx.train_cfg(), 0)?;
+
+    // the production-scale workload: ~1000 tables, 128 devices
+    let ds = gen_prod(1024, 77);
+    let (pool, _) = split_pools(&ds, 5);
+    let n_tables = 960.min(pool.len());
+    let task = sample_tasks(&pool, n_tables, 128, 1, 6).remove(0);
+    let sim = Simulator::new(SimConfig { mem_cap_gb: 40.0, ..SimConfig::v100() });
+
+    let total_size: f64 = task.table_ids.iter().map(|&i| ds.tables[i].size_gb() as f64).sum();
+    eprintln!("[table13] {} tables, {:.1} TB of embedding weights, 128 devices", n_tables, total_size * 3.0 / 1024.0);
+
+    let mut tbl = TextTable::new(vec!["Sharding Algorithm", "Embedding cost (ms)", "Throughput improvement"]);
+    let mut rng = Rng::new(99);
+    let rand_ms = {
+        let costs: Vec<f64> = (0..3)
+            .map(|_| {
+                let p = random_placement(&ds, &task, &sim, &mut rng);
+                sim.evaluate(&ds, &task, &p).latency
+            })
+            .collect();
+        crate::util::mean(&costs)
+    };
+    tbl.row(vec!["Random".into(), format!("{rand_ms:.1}"), "0.0%".into()]);
+    for e in ALL_EXPERTS {
+        let p = greedy_placement(&ds, &task, &sim, e);
+        let ms = sim.evaluate(&ds, &task, &p).latency;
+        tbl.row(vec![
+            e.name().into(),
+            format!("{ms:.1} ({:+.1}%)", (rand_ms / ms - 1.0) * 100.0),
+            format!("{:+.1}%", throughput_gain(rand_ms, ms) * 100.0),
+        ]);
+    }
+    // DreamShard through the ultra variant
+    let var = Variant::for_devices(&ctx.rt, 128)?;
+    let t0 = std::time::Instant::now();
+    let ep = agent
+        .run_episodes_var(&ctx.rt, &sim, &ds, &task, 1, false, false, &mut rng, &var, false)?
+        .remove(0);
+    let plan_s = t0.elapsed().as_secs_f64();
+    let ms = sim.evaluate(&ds, &task, &ep.placement).latency;
+    tbl.row(vec![
+        "DreamShard".into(),
+        format!("{ms:.1} ({:+.1}%)", (rand_ms / ms - 1.0) * 100.0),
+        format!("{:+.1}%", throughput_gain(rand_ms, ms) * 100.0),
+    ]);
+    ctx.emit("table13", &format!(
+        "table13: ultra-scale test — {n_tables} tables ({:.1} TB with optimizer state) on 128 devices\n\
+         DreamShard planning time: {plan_s:.1} s (trained at 8 devices, applied at 128 unchanged)\n{}",
+        total_size * 3.0 / 1024.0,
+        tbl.render()
+    ))
+}

@@ -1,0 +1,119 @@
+//! Table 2 + Tables 8-10: generalization — apply a DreamShard model
+//! trained on a *source* task configuration to a *target* configuration
+//! with a different number of tables and/or devices, with no fine-tuning,
+//! and compare against a model trained directly on the target.
+
+use anyhow::Result;
+
+use super::common::{eval_agent, make_suite, train_agent, Ctx, Suite, Which};
+use crate::coordinator::{DreamShard, Variant};
+use crate::util::table::{ms_pm, TextTable};
+
+/// Evaluate `agent` (trained elsewhere) on `suite`'s test tasks, running
+/// inference through the variant that fits the suite's device count.
+fn transfer_eval(ctx: &Ctx, agent: &DreamShard, suite: &Suite) -> Result<f64> {
+    let var = Variant::for_devices(&ctx.rt, suite.test[0].n_devices)?;
+    let mut costs = vec![];
+    for task in &suite.test {
+        let mut rng = crate::util::Rng::new(0);
+        let ep = agent
+            .run_episodes_var(&ctx.rt, &suite.sim, &suite.ds, task, 1, false, false, &mut rng, &var, false)?
+            .remove(0);
+        costs.push(suite.sim.evaluate(&suite.ds, task, &ep.placement).latency);
+    }
+    Ok(crate::util::mean(&costs))
+}
+
+pub fn table2(ctx: &Ctx) -> Result<()> {
+    // (source, target) pairs from Table 2: table-count transfer (top),
+    // device-count transfer (bottom)
+    let pairs: &[((usize, usize), (usize, usize))] = &[
+        ((20, 4), (100, 4)),
+        ((20, 4), (80, 4)),
+        ((100, 4), (40, 4)),
+        ((100, 4), (20, 4)),
+        ((20, 4), (20, 2)),
+        ((40, 4), (40, 2)),
+        ((20, 2), (20, 4)),
+        ((40, 2), (40, 4)),
+    ];
+    let mut tbl = TextTable::new(vec![
+        "Source -> Target", "Random", "Trained-on-target", "Transferred (no fine-tune)",
+    ]);
+    // cache agents per source config
+    let mut agents: std::collections::HashMap<(usize, usize), DreamShard> = Default::default();
+    for &((s_t, s_d), (t_t, t_d)) in pairs {
+        let src_suite = make_suite(Which::Dlrm, s_t, s_d, ctx.n_tasks(), 7);
+        let tgt_suite = make_suite(Which::Dlrm, t_t, t_d, ctx.n_tasks(), 7);
+        eprintln!("[table2] DLRM-{s_t} ({s_d}) -> DLRM-{t_t} ({t_d}) ...");
+        if !agents.contains_key(&(s_t, s_d)) {
+            agents.insert((s_t, s_d), train_agent(ctx, &src_suite, ctx.train_cfg(), 0)?);
+        }
+        if !agents.contains_key(&(t_t, t_d)) {
+            agents.insert((t_t, t_d), train_agent(ctx, &tgt_suite, ctx.train_cfg(), 0)?);
+        }
+        let transferred = transfer_eval(ctx, &agents[&(s_t, s_d)], &tgt_suite)?;
+        let on_target = eval_agent(ctx, &tgt_suite, &agents[&(t_t, t_d)], &tgt_suite.test)?.0;
+        let (rand_m, rand_s) = super::common::eval_random(&tgt_suite, &tgt_suite.test, 3);
+        tbl.row(vec![
+            format!("DLRM-{s_t} ({s_d}) -> DLRM-{t_t} ({t_d})"),
+            ms_pm(rand_m, rand_s),
+            format!("{on_target:.1}"),
+            format!("{transferred:.1}"),
+        ]);
+    }
+    ctx.emit("table2", &format!(
+        "table2: generalization across numbers of tables and devices (test-task ms)\n{}",
+        tbl.render()
+    ))
+}
+
+/// Tables 8-10: full source x target generalization matrices.
+pub fn table8_10(ctx: &Ctx) -> Result<()> {
+    let mut out = String::new();
+    // Table 8: table-count matrix at 4 devices
+    let sizes4 = if ctx.fast { vec![20, 40, 60] } else { vec![20, 40, 60, 80, 100] };
+    out.push_str(&matrix(ctx, "Table 8 (tables x tables, 4 GPUs)", &sizes4, 4, &sizes4, 4)?);
+    // Table 9: 4 -> 2 GPUs
+    let sizes_s = if ctx.fast { vec![10, 30] } else { vec![10, 20, 30, 40, 50] };
+    out.push_str(&matrix(ctx, "Table 9 (4 GPUs -> 2 GPUs)", &sizes_s, 4, &sizes_s, 2)?);
+    // Table 10: 2 -> 4 GPUs
+    out.push_str(&matrix(ctx, "Table 10 (2 GPUs -> 4 GPUs)", &sizes_s, 2, &sizes_s, 4)?);
+    ctx.emit("table8_10", &out)
+}
+
+fn matrix(
+    ctx: &Ctx,
+    title: &str,
+    src_sizes: &[usize],
+    src_d: usize,
+    tgt_sizes: &[usize],
+    tgt_d: usize,
+) -> Result<String> {
+    let mut header = vec!["Source \\ Target".to_string()];
+    header.extend(tgt_sizes.iter().map(|t| format!("DLRM-{t} ({tgt_d})")));
+    let mut tbl = TextTable::new(header);
+    let mut agents = vec![];
+    for &s in src_sizes {
+        let suite = make_suite(Which::Dlrm, s, src_d, ctx.n_tasks(), 7);
+        eprintln!("[{title}] training source DLRM-{s} ({src_d}) ...");
+        agents.push(train_agent(ctx, &suite, ctx.train_cfg(), 0)?);
+    }
+    let tgt_suites: Vec<Suite> =
+        tgt_sizes.iter().map(|&t| make_suite(Which::Dlrm, t, tgt_d, ctx.n_tasks(), 7)).collect();
+    for (i, &s) in src_sizes.iter().enumerate() {
+        let mut row = vec![format!("DLRM-{s} ({src_d})")];
+        for suite in &tgt_suites {
+            row.push(format!("{:.1}", transfer_eval(ctx, &agents[i], suite)?));
+        }
+        tbl.row(row);
+    }
+    // reference row: trained directly on each target
+    let mut row = vec!["trained-on-target".to_string()];
+    for suite in &tgt_suites {
+        let agent = train_agent(ctx, suite, ctx.train_cfg(), 0)?;
+        row.push(format!("{:.1}", eval_agent(ctx, suite, &agent, &suite.test)?.0));
+    }
+    tbl.row(row);
+    Ok(format!("{title}\n{}\n", tbl.render()))
+}

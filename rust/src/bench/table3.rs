@@ -1,0 +1,125 @@
+//! Table 3 / Table 11: ablation study — drop each table-feature group
+//! from the state (via the artifacts' fmask input), and drop the cost
+//! features from the policy state (qscale = 0).
+//!
+//! Table 12: cost-network test MSE with each feature removed (Prod data,
+//! offline supervised protocol).
+
+use anyhow::Result;
+
+use super::common::{make_suite, Ctx, Which};
+use super::costfit::{collect_cost_dataset, fit_cost_net, test_mse};
+use crate::coordinator::{DreamShard, TrainCfg};
+use crate::tables::NUM_FEATURES;
+use crate::util::table::TextTable;
+use crate::util::{mean_std, Rng};
+
+/// Feature-group -> fmask column ranges (see Table::features layout).
+pub const ABLATIONS: &[(&str, std::ops::Range<usize>)] = &[
+    ("w/o dim", 0..1),
+    ("w/o hash size", 1..2),
+    ("w/o pooling factor", 2..3),
+    ("w/o table size", 3..4),
+    ("w/o distribution", 4..NUM_FEATURES),
+];
+
+fn train_ablated(
+    ctx: &Ctx,
+    suite: &super::common::Suite,
+    cfg: &TrainCfg,
+    fmask_zero: Option<&std::ops::Range<usize>>,
+    no_cost_feats: bool,
+    seed: u64,
+) -> Result<DreamShard> {
+    let mut rng = Rng::new(50_000 + seed);
+    let mut agent = DreamShard::new(&ctx.rt, suite.train[0].n_devices, cfg.clone(), &mut rng)?;
+    if let Some(range) = fmask_zero {
+        for i in range.clone() {
+            agent.cost.fmask[i] = 0.0;
+            agent.policy.fmask[i] = 0.0;
+        }
+    }
+    if no_cost_feats {
+        agent.policy.qscale = vec![0.0; 3];
+    }
+    agent.train(&ctx.rt, &suite.sim, &suite.ds, &suite.train, &mut rng)?;
+    Ok(agent)
+}
+
+pub fn table3(ctx: &Ctx) -> Result<()> {
+    let configs: &[(usize, usize)] =
+        if ctx.fast { &[(50, 4)] } else { &[(20, 4), (50, 4), (80, 4)] };
+    let mut tbl = TextTable::new(vec![
+        "Task", "Split", "w/o dim", "w/o hash", "w/o pooling", "w/o size", "w/o dist",
+        "w/o cost", "DreamShard",
+    ]);
+    for &(n_tables, n_devices) in configs {
+        let suite = make_suite(Which::Dlrm, n_tables, n_devices, ctx.n_tasks(), 7);
+        eprintln!("[table3] {} ...", suite.name);
+        let mut cols: Vec<(Vec<f64>, Vec<f64>)> = vec![];
+        for (name, range) in ABLATIONS {
+            eprintln!("  {name}");
+            let mut tr = vec![];
+            let mut te = vec![];
+            for seed in 0..ctx.seeds as u64 {
+                let agent = train_ablated(ctx, &suite, &ctx.train_cfg(), Some(range), false, seed)?;
+                tr.push(super::common::eval_agent(ctx, &suite, &agent, &suite.train)?.0);
+                te.push(super::common::eval_agent(ctx, &suite, &agent, &suite.test)?.0);
+            }
+            cols.push((tr, te));
+        }
+        for (name, no_cost) in [("w/o cost", true), ("full", false)] {
+            eprintln!("  {name}");
+            let mut tr = vec![];
+            let mut te = vec![];
+            for seed in 0..ctx.seeds as u64 {
+                let agent = train_ablated(ctx, &suite, &ctx.train_cfg(), None, no_cost, seed)?;
+                tr.push(super::common::eval_agent(ctx, &suite, &agent, &suite.train)?.0);
+                te.push(super::common::eval_agent(ctx, &suite, &agent, &suite.test)?.0);
+            }
+            cols.push((tr, te));
+        }
+        for (split, pick) in [("Train", 0usize), ("Test", 1usize)] {
+            let mut row = vec![suite.name.clone(), split.to_string()];
+            for (tr, te) in &cols {
+                let (m, s) = mean_std(if pick == 0 { tr } else { te });
+                row.push(format!("{m:.1}±{s:.1}"));
+            }
+            tbl.row(row);
+        }
+    }
+    ctx.emit("table3", &format!(
+        "table3/11: ablations (overall cost ms; last column = full DreamShard)\n{}",
+        tbl.render()
+    ))
+}
+
+/// Table 12: cost-network test MSE per removed feature, on Prod tables.
+pub fn table12(ctx: &Ctx) -> Result<()> {
+    let suite = make_suite(Which::Prod, 40, 4, ctx.n_tasks(), 7);
+    let n_data = if ctx.fast { 400 } else { 2000 };
+    eprintln!("[table12] collecting {n_data} cost samples ...");
+    let (train_set, test_set) = collect_cost_dataset(&suite, n_data, 11)?;
+    let mut tbl = TextTable::new(vec!["Features", "Testing MSE"]);
+    let steps = if ctx.fast { 400 } else { 2000 };
+    let mut rows: Vec<(&str, Option<std::ops::Range<usize>>)> = vec![("All features", None)];
+    for (name, r) in ABLATIONS {
+        rows.push((name, Some(r.clone())));
+    }
+    for (name, range) in rows {
+        let mut fmask = vec![1.0f32; NUM_FEATURES];
+        if let Some(r) = &range {
+            for i in r.clone() {
+                fmask[i] = 0.0;
+            }
+        }
+        let net = fit_cost_net(ctx, &suite, &train_set, steps, &fmask, 21)?;
+        let mse = test_mse(ctx, &suite, &net, &test_set)?;
+        tbl.row(vec![name.to_string(), format!("{mse:.3}")]);
+        eprintln!("  {name}: {mse:.3}");
+    }
+    ctx.emit("table12", &format!(
+        "table12: cost-network testing MSE with individual features removed (Prod-40 (4))\n{}",
+        tbl.render()
+    ))
+}

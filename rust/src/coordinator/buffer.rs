@@ -1,0 +1,121 @@
+//! Replay buffer of cost data collected from the (simulated) hardware
+//! (Algorithm 1, line 7). Each sample is one evaluated placement state:
+//! the padded per-device table features plus the measured per-device cost
+//! features and overall latency.
+
+use crate::runtime::TensorF32;
+use crate::tables::NUM_FEATURES;
+use crate::util::Rng;
+
+/// One measured (state, cost) pair, padded to a variant's (D, S).
+#[derive(Clone, Debug)]
+pub struct CostSample {
+    /// [D*S*F]
+    pub feats: Vec<f32>,
+    /// [D*S]
+    pub mask: Vec<f32>,
+    /// [D]
+    pub dmask: Vec<f32>,
+    /// [D*3] measured cost features (fwd comp, bwd comp, bwd comm), ms.
+    pub q: Vec<f32>,
+    /// Measured overall latency, ms.
+    pub cost: f32,
+}
+
+/// FIFO-capped replay buffer.
+pub struct ReplayBuffer {
+    pub samples: Vec<CostSample>,
+    pub capacity: usize,
+    next: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> Self {
+        ReplayBuffer { samples: Vec::new(), capacity, next: 0 }
+    }
+
+    pub fn push(&mut self, s: CostSample) {
+        if self.samples.len() < self.capacity {
+            self.samples.push(s);
+        } else {
+            self.samples[self.next] = s;
+            self.next = (self.next + 1) % self.capacity;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Build a padded training batch of `b` samples (with replacement).
+    /// Returns (feats [B,D,S,F], mask [B,D,S], dmask [B,D], q [B,D,3], c [B]).
+    pub fn sample_batch(
+        &self,
+        b: usize,
+        d: usize,
+        s: usize,
+        rng: &mut Rng,
+    ) -> (TensorF32, TensorF32, TensorF32, TensorF32, TensorF32) {
+        assert!(!self.is_empty(), "sampling from empty buffer");
+        let f = NUM_FEATURES;
+        let mut feats = TensorF32::zeros(&[b, d, s, f]);
+        let mut mask = TensorF32::zeros(&[b, d, s]);
+        let mut dmask = TensorF32::zeros(&[b, d]);
+        let mut q = TensorF32::zeros(&[b, d, 3]);
+        let mut c = TensorF32::zeros(&[b]);
+        for i in 0..b {
+            let sm = &self.samples[rng.below(self.samples.len())];
+            feats.set_row(&[i, 0, 0, 0], &sm.feats);
+            mask.set_row(&[i, 0, 0], &sm.mask);
+            dmask.set_row(&[i, 0], &sm.dmask);
+            q.set_row(&[i, 0, 0], &sm.q);
+            c.data[i] = sm.cost;
+        }
+        (feats, mask, dmask, q, c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(v: f32, d: usize, s: usize) -> CostSample {
+        CostSample {
+            feats: vec![v; d * s * NUM_FEATURES],
+            mask: vec![1.0; d * s],
+            dmask: vec![1.0; d],
+            q: vec![v; d * 3],
+            cost: v,
+        }
+    }
+
+    #[test]
+    fn fifo_eviction() {
+        let mut b = ReplayBuffer::new(3);
+        for i in 0..5 {
+            b.push(sample(i as f32, 2, 4));
+        }
+        assert_eq!(b.len(), 3);
+        let costs: Vec<f32> = b.samples.iter().map(|s| s.cost).collect();
+        // 0 and 1 evicted
+        assert!(!costs.contains(&0.0) && !costs.contains(&1.0));
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut b = ReplayBuffer::new(10);
+        b.push(sample(2.5, 4, 8));
+        let mut rng = Rng::new(0);
+        let (feats, mask, dmask, q, c) = b.sample_batch(6, 4, 8, &mut rng);
+        assert_eq!(feats.dims, vec![6, 4, 8, NUM_FEATURES as i64]);
+        assert_eq!(mask.dims, vec![6, 4, 8]);
+        assert_eq!(dmask.dims, vec![6, 4]);
+        assert_eq!(q.dims, vec![6, 4, 3]);
+        assert_eq!(c.dims, vec![6]);
+        assert!(c.data.iter().all(|&x| x == 2.5));
+    }
+}

@@ -1,0 +1,168 @@
+//! The cost-network wrapper: owns the flat parameter/optimizer vectors
+//! and drives the `cost_fwd` / `cost_train` / `table_cost` artifacts.
+
+use anyhow::{anyhow, Result};
+
+use super::variant::Variant;
+use crate::mdp::PlacementState;
+use crate::runtime::{to_f32_vec, Runtime, TensorF32};
+use crate::tables::NUM_FEATURES;
+use crate::util::Rng;
+
+/// Cost-network state: parameters + Adam moments + ablation masks.
+#[derive(Clone)]
+pub struct CostNet {
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t_step: f32,
+    /// Feature mask (21): zeroed columns implement the Table-3 ablations.
+    pub fmask: Vec<f32>,
+    /// Artifact name prefix override for reduction-ablation variants
+    /// (Figures 13-14), e.g. `Some(("mean", "max"))`.
+    pub reduction: Option<(String, String)>,
+}
+
+/// Prediction for one state: per-device cost features + overall cost (ms).
+#[derive(Clone, Debug)]
+pub struct CostPrediction {
+    pub q: Vec<[f32; 3]>,
+    pub cost: f32,
+}
+
+impl CostNet {
+    pub fn new(rt: &Runtime, rng: &mut Rng) -> Result<Self> {
+        let theta = rt.init_params("cost", rng)?;
+        let n = theta.len();
+        Ok(CostNet {
+            theta,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t_step: 0.0,
+            fmask: vec![1.0; NUM_FEATURES],
+            reduction: None,
+        })
+    }
+
+    fn fwd_name(&self, var: &Variant) -> String {
+        match &self.reduction {
+            None => var.cost_fwd.clone(),
+            Some((tr, dr)) => format!("cost_fwd_red_{tr}_{dr}_d{}s{}", var.d, var.s),
+        }
+    }
+
+    fn train_name(&self, var: &Variant) -> Result<String> {
+        match &self.reduction {
+            None => var
+                .cost_train
+                .clone()
+                .ok_or_else(|| anyhow!("variant d{} has no cost_train artifact", var.d)),
+            Some((tr, dr)) => Ok(format!("cost_train_red_{tr}_{dr}_d{}s{}", var.d, var.s)),
+        }
+    }
+
+    /// Predict cost features + overall cost for up to `var.e` states.
+    pub fn predict_states(
+        &self,
+        rt: &Runtime,
+        var: &Variant,
+        states: &[&PlacementState],
+    ) -> Result<Vec<CostPrediction>> {
+        assert!(states.len() <= var.e, "{} states > {} lanes", states.len(), var.e);
+        let (e, d, s) = (var.e, var.d, var.s);
+        let mut feats = TensorF32::zeros(&[e, d, s, NUM_FEATURES]);
+        let mut mask = TensorF32::zeros(&[e, d, s]);
+        let mut dmask = TensorF32::zeros(&[e, d]);
+        for (lane, st) in states.iter().enumerate() {
+            st.fill_feats(lane, d, s, &mut feats, &mut mask, &mut dmask);
+        }
+        self.predict_tensors(rt, var, &feats, &mask, &dmask, states.len())
+    }
+
+    /// Predict from pre-built padded tensors (first `n` lanes meaningful).
+    pub fn predict_tensors(
+        &self,
+        rt: &Runtime,
+        var: &Variant,
+        feats: &TensorF32,
+        mask: &TensorF32,
+        dmask: &TensorF32,
+        n: usize,
+    ) -> Result<Vec<CostPrediction>> {
+        let (e, d) = (var.e, var.d);
+        let theta = TensorF32::from_vec(self.theta.clone(), &[self.theta.len()]);
+        let fmask = TensorF32::from_vec(self.fmask.clone(), &[NUM_FEATURES]);
+        let out = rt.run(&self.fwd_name(var), &[
+            theta.literal(),
+            feats.literal(),
+            mask.literal(),
+            dmask.literal(),
+            fmask.literal(),
+        ])?;
+        let q = to_f32_vec(&out[0], e * d * 3)?;
+        let cost = to_f32_vec(&out[1], e)?;
+        Ok((0..n)
+            .map(|lane| {
+                let qd = (0..d)
+                    .map(|dev| {
+                        let base = (lane * d + dev) * 3;
+                        [q[base], q[base + 1], q[base + 2]]
+                    })
+                    .collect();
+                CostPrediction { q: qd, cost: cost[lane] }
+            })
+            .collect())
+    }
+
+    /// Predicted single-table total costs (for episode ordering, §B.4.2).
+    pub fn predict_table_costs(&self, rt: &Runtime, feats: &[[f32; NUM_FEATURES]]) -> Result<Vec<f32>> {
+        let n_cap = rt.manifest.artifact_meta("table_cost", "N").unwrap_or(256) as usize;
+        let mut out = Vec::with_capacity(feats.len());
+        let theta = TensorF32::from_vec(self.theta.clone(), &[self.theta.len()]);
+        let fmask = TensorF32::from_vec(self.fmask.clone(), &[NUM_FEATURES]);
+        for chunk in feats.chunks(n_cap) {
+            let mut t = TensorF32::zeros(&[n_cap, NUM_FEATURES]);
+            for (i, f) in chunk.iter().enumerate() {
+                t.set_row(&[i, 0], f);
+            }
+            let res = rt.run("table_cost", &[theta.literal(), t.literal(), fmask.literal()])?;
+            let v = to_f32_vec(&res[0], n_cap)?;
+            out.extend_from_slice(&v[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    /// One Adam/MSE update on a padded batch. Returns the loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_batch(
+        &mut self,
+        rt: &Runtime,
+        var: &Variant,
+        feats: &TensorF32,
+        mask: &TensorF32,
+        dmask: &TensorF32,
+        q_tgt: &TensorF32,
+        c_tgt: &TensorF32,
+        lr: f32,
+    ) -> Result<f32> {
+        self.t_step += 1.0;
+        let n = self.theta.len();
+        let out = rt.run(&self.train_name(var)?, &[
+            TensorF32::from_vec(std::mem::take(&mut self.theta), &[n]).literal(),
+            TensorF32::from_vec(std::mem::take(&mut self.m), &[n]).literal(),
+            TensorF32::from_vec(std::mem::take(&mut self.v), &[n]).literal(),
+            TensorF32::scalar1(self.t_step).literal(),
+            TensorF32::scalar1(lr).literal(),
+            feats.literal(),
+            mask.literal(),
+            dmask.literal(),
+            q_tgt.literal(),
+            c_tgt.literal(),
+            TensorF32::from_vec(self.fmask.clone(), &[NUM_FEATURES]).literal(),
+        ])?;
+        self.theta = to_f32_vec(&out[0], n)?;
+        self.m = to_f32_vec(&out[1], n)?;
+        self.v = to_f32_vec(&out[2], n)?;
+        Ok(to_f32_vec(&out[3], 1)?[0])
+    }
+}

@@ -1,0 +1,17 @@
+//! Layer-3 coordination: the DreamShard agent (cost network + policy
+//! network + Algorithm-1 trainer), the replay buffer, artifact-variant
+//! selection, and the RNN baseline.
+
+mod buffer;
+mod costnet;
+mod policy;
+mod rnn;
+mod trainer;
+mod variant;
+
+pub use buffer::{CostSample, ReplayBuffer};
+pub use costnet::{CostNet, CostPrediction};
+pub use policy::{select_action, PolicyNet, StepRec};
+pub use rnn::RnnBaseline;
+pub use trainer::{evaluate_policy, DreamShard, Episode, IterStat, TrainCfg};
+pub use variant::Variant;

@@ -1,0 +1,207 @@
+//! The policy-network wrapper: owns the flat parameter/optimizer vectors
+//! and drives `policy_fwd` / `policy_train_*`. Softmax + action sampling
+//! happen here in rust (the artifact returns masked logits).
+
+use anyhow::Result;
+
+use super::variant::Variant;
+use crate::runtime::{to_f32_vec, Runtime, TensorF32, TensorI32};
+use crate::tables::NUM_FEATURES;
+use crate::util::Rng;
+
+/// One recorded MDP step, padded to a variant's (D, S).
+#[derive(Clone, Debug)]
+pub struct StepRec {
+    /// [D*S*F] padded state features.
+    pub feats: Vec<f32>,
+    /// [D*S] slot mask.
+    pub mask: Vec<f32>,
+    /// [D*3] estimated cost features.
+    pub q: Vec<f32>,
+    /// [F] current-table features.
+    pub cur: Vec<f32>,
+    /// [D] legal-action mask.
+    pub legal: Vec<f32>,
+    pub action: usize,
+}
+
+/// Policy-network state.
+#[derive(Clone)]
+pub struct PolicyNet {
+    pub phi: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t_step: f32,
+    pub fmask: Vec<f32>,
+    /// Cost-feature scale (3): zeroed for the "w/o cost" ablation.
+    pub qscale: Vec<f32>,
+}
+
+impl PolicyNet {
+    pub fn new(rt: &Runtime, rng: &mut Rng) -> Result<Self> {
+        let phi = rt.init_params("policy", rng)?;
+        let n = phi.len();
+        Ok(PolicyNet {
+            phi,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t_step: 0.0,
+            fmask: vec![1.0; NUM_FEATURES],
+            qscale: vec![1.0; 3],
+        })
+    }
+
+    /// Logits for up to `var.e` lanes from pre-built padded tensors.
+    #[allow(clippy::too_many_arguments)]
+    pub fn logits(
+        &self,
+        rt: &Runtime,
+        var: &Variant,
+        feats: &TensorF32,
+        mask: &TensorF32,
+        q: &TensorF32,
+        cur: &TensorF32,
+        legal: &TensorF32,
+        n: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (e, d) = (var.e, var.d);
+        let out = rt.run(&var.policy_fwd, &[
+            TensorF32::from_vec(self.phi.clone(), &[self.phi.len()]).literal(),
+            feats.literal(),
+            mask.literal(),
+            q.literal(),
+            cur.literal(),
+            legal.literal(),
+            TensorF32::from_vec(self.fmask.clone(), &[NUM_FEATURES]).literal(),
+            TensorF32::from_vec(self.qscale.clone(), &[3]).literal(),
+        ])?;
+        let flat = to_f32_vec(&out[0], e * d)?;
+        Ok((0..n).map(|lane| flat[lane * d..(lane + 1) * d].to_vec()).collect())
+    }
+
+    /// REINFORCE update over recorded steps (chunked to artifact capacity).
+    /// `adv[i]` is the baseline-subtracted return of step i's episode.
+    pub fn train_steps(
+        &mut self,
+        rt: &Runtime,
+        var: &Variant,
+        steps: &[StepRec],
+        adv: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        assert_eq!(steps.len(), adv.len());
+        let (d, s) = (var.d, var.s);
+        let f = NUM_FEATURES;
+        let mut last_loss = 0.0;
+        let cap = var.policy_train_for(steps.len()).expect("no policy_train artifact").0;
+        for (chunk, adv_chunk) in steps.chunks(cap).zip(adv.chunks(cap)) {
+            let (b, name) = var.policy_train_for(chunk.len()).unwrap().clone();
+            let mut feats = TensorF32::zeros(&[b, d, s, f]);
+            let mut mask = TensorF32::zeros(&[b, d, s]);
+            let mut q = TensorF32::zeros(&[b, d, 3]);
+            let mut cur = TensorF32::zeros(&[b, f]);
+            let mut legal = TensorF32::zeros(&[b, d]);
+            let mut action = TensorI32::zeros(&[b]);
+            let mut advt = TensorF32::zeros(&[b]);
+            let mut smask = TensorF32::zeros(&[b]);
+            for (i, st) in chunk.iter().enumerate() {
+                feats.set_row(&[i, 0, 0, 0], &st.feats);
+                mask.set_row(&[i, 0, 0], &st.mask);
+                q.set_row(&[i, 0, 0], &st.q);
+                cur.set_row(&[i, 0], &st.cur);
+                legal.set_row(&[i, 0], &st.legal);
+                action.data[i] = st.action as i32;
+                advt.data[i] = adv_chunk[i];
+                smask.data[i] = 1.0;
+            }
+            self.t_step += 1.0;
+            let n = self.phi.len();
+            let out = rt.run(&name, &[
+                TensorF32::from_vec(std::mem::take(&mut self.phi), &[n]).literal(),
+                TensorF32::from_vec(std::mem::take(&mut self.m), &[n]).literal(),
+                TensorF32::from_vec(std::mem::take(&mut self.v), &[n]).literal(),
+                TensorF32::scalar1(self.t_step).literal(),
+                TensorF32::scalar1(lr).literal(),
+                feats.literal(),
+                mask.literal(),
+                q.literal(),
+                cur.literal(),
+                legal.literal(),
+                action.literal(),
+                advt.literal(),
+                smask.literal(),
+                TensorF32::from_vec(self.fmask.clone(), &[NUM_FEATURES]).literal(),
+                TensorF32::from_vec(self.qscale.clone(), &[3]).literal(),
+            ])?;
+            self.phi = to_f32_vec(&out[0], n)?;
+            self.m = to_f32_vec(&out[1], n)?;
+            self.v = to_f32_vec(&out[2], n)?;
+            last_loss = to_f32_vec(&out[3], 1)?[0];
+        }
+        Ok(last_loss)
+    }
+}
+
+/// Sample an index from masked logits (softmax) or take the argmax.
+pub fn select_action(logits: &[f32], legal: &[bool], sample: bool, rng: &mut Rng) -> usize {
+    debug_assert_eq!(logits.len() >= legal.len(), true);
+    let max = logits
+        .iter()
+        .zip(legal.iter())
+        .filter(|(_, &l)| l)
+        .map(|(&x, _)| x)
+        .fold(f32::NEG_INFINITY, f32::max);
+    if !sample {
+        return logits
+            .iter()
+            .take(legal.len())
+            .enumerate()
+            .filter(|&(i, _)| legal[i])
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+    }
+    let probs: Vec<f32> = logits
+        .iter()
+        .take(legal.len())
+        .enumerate()
+        .map(|(i, &x)| if legal[i] { (x - max).exp() } else { 0.0 })
+        .collect();
+    rng.weighted(&probs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_respects_legality() {
+        let logits = vec![5.0, 9.0, 1.0];
+        let legal = vec![true, false, true];
+        let mut rng = Rng::new(0);
+        assert_eq!(select_action(&logits, &legal, false, &mut rng), 0);
+    }
+
+    #[test]
+    fn sampling_never_picks_illegal() {
+        let logits = vec![0.0, 100.0, 0.0];
+        let legal = vec![true, false, true];
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let a = select_action(&logits, &legal, true, &mut rng);
+            assert_ne!(a, 1);
+        }
+    }
+
+    #[test]
+    fn sampling_follows_probabilities() {
+        let logits = vec![0.0, 3.0];
+        let legal = vec![true, true];
+        let mut rng = Rng::new(2);
+        let picks1 = (0..2000)
+            .filter(|_| select_action(&logits, &legal, true, &mut rng) == 1)
+            .count();
+        // softmax(0,3) ~ (0.047, 0.953)
+        assert!(picks1 > 1800, "{picks1}");
+    }
+}

@@ -1,0 +1,185 @@
+//! RNN-based RL baseline (Mirhoseini et al. 2017, adapted per paper
+//! section D.2): a GRU + content-attention controller over the table
+//! sequence, trained by the SAME REINFORCE loss but — like the original —
+//! with **no cost network**: rewards come from real (simulated) execution,
+//! which is what makes it slow and unstable on harder tasks (Table 1).
+
+use anyhow::Result;
+
+use crate::mdp::{heuristic_order, PlacementState};
+use crate::runtime::{to_f32_vec, Runtime, TensorF32, TensorI32};
+use crate::sim::Simulator;
+use crate::tables::{Dataset, Task, NUM_FEATURES};
+use crate::util::Rng;
+
+/// RNN controller state for a fixed device count `D`.
+pub struct RnnBaseline {
+    pub psi: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t_step: f32,
+    pub d: usize,
+    pub t_cap: usize,
+    pub e_fwd: usize,
+    pub e_train: usize,
+    pub lr: f32,
+}
+
+impl RnnBaseline {
+    pub fn new(rt: &Runtime, n_devices: usize, rng: &mut Rng) -> Result<Self> {
+        // RNN artifacts exist for exact device counts only (the paper notes
+        // the architecture cannot generalize across device counts).
+        let d = [2usize, 4, 8]
+            .into_iter()
+            .find(|&d| d == n_devices)
+            .ok_or_else(|| anyhow::anyhow!("no RNN artifact for {n_devices} devices"))?;
+        let psi = rt.init_params(&format!("rnn_d{d}"), rng)?;
+        let n = psi.len();
+        let t_cap = rt.manifest.consts.get("T_RNN").copied().unwrap_or(256) as usize;
+        let e_fwd = rt.manifest.consts.get("E_FWD").copied().unwrap_or(16) as usize;
+        let e_train = rt.manifest.consts.get("E_RNN").copied().unwrap_or(10) as usize;
+        Ok(RnnBaseline {
+            psi,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t_step: 0.0,
+            d,
+            t_cap,
+            e_fwd,
+            e_train,
+            lr: 5e-4,
+        })
+    }
+
+    fn fill_feats(&self, ds: &Dataset, task: &Task, order: &[usize], lane: usize,
+                  feats: &mut TensorF32, tmask: &mut TensorF32) {
+        for (t, &i) in order.iter().enumerate().take(self.t_cap) {
+            feats.set_row(&[lane, t, 0], &ds.tables[task.table_ids[i]].features());
+            tmask.set(&[lane, t], 1.0);
+        }
+    }
+
+    /// Per-step logits for up to `e_fwd` lockstep lanes (one forward pass
+    /// covers the whole sequence; legality is applied at sampling time and
+    /// the recorded masks are replayed in training).
+    fn logits(&self, rt: &Runtime, feats: &TensorF32, tmask: &TensorF32) -> Result<Vec<f32>> {
+        let legal = TensorF32::ones(&[self.e_fwd, self.t_cap, self.d]);
+        let out = rt.run(&format!("rnn_fwd_d{}", self.d), &[
+            TensorF32::from_vec(self.psi.clone(), &[self.psi.len()]).literal(),
+            feats.literal(),
+            tmask.literal(),
+            legal.literal(),
+            TensorF32::ones(&[NUM_FEATURES]).literal(),
+        ])?;
+        to_f32_vec(&out[0], self.e_fwd * self.t_cap * self.d)
+    }
+
+    /// Run `n` episodes; returns (placements, real costs, recorded masks
+    /// and actions for training).
+    #[allow(clippy::type_complexity)]
+    fn episodes(
+        &self,
+        rt: &Runtime,
+        sim: &Simulator,
+        ds: &Dataset,
+        task: &Task,
+        n: usize,
+        sample: bool,
+        rng: &mut Rng,
+    ) -> Result<(Vec<Vec<usize>>, Vec<f64>, TensorF32, TensorI32, TensorF32, TensorF32)> {
+        let order = heuristic_order(ds, task);
+        let m = task.n_tables().min(self.t_cap);
+        let mut feats = TensorF32::zeros(&[self.e_fwd, self.t_cap, NUM_FEATURES]);
+        let mut tmask = TensorF32::zeros(&[self.e_fwd, self.t_cap]);
+        for lane in 0..n {
+            self.fill_feats(ds, task, &order, lane, &mut feats, &mut tmask);
+        }
+        let logits = self.logits(rt, &feats, &tmask)?;
+
+        let mut legal_rec = TensorF32::zeros(&[self.e_train, self.t_cap, self.d]);
+        let mut actions = TensorI32::zeros(&[self.e_train, self.t_cap]);
+        let mut placements = vec![];
+        let mut costs = vec![];
+        for lane in 0..n {
+            let mut st = PlacementState::new(ds, task, order.clone(), usize::MAX);
+            for t in 0..m {
+                let lg = st.legal(sim);
+                let base = (lane * self.t_cap + t) * self.d;
+                let step_logits = &logits[base..base + self.d];
+                let a = super::policy::select_action(step_logits, &lg, sample, rng);
+                if lane < self.e_train {
+                    for (dev, &ok) in lg.iter().enumerate() {
+                        legal_rec.set(&[lane, t, dev], if ok { 1.0 } else { 0.0 });
+                    }
+                    actions.data[(lane * self.t_cap) + t] = a as i32;
+                }
+                st.apply(a);
+            }
+            costs.push(st.evaluate(sim).latency);
+            placements.push(st.placement);
+        }
+        Ok((placements, costs, feats, actions, legal_rec, tmask))
+    }
+
+    /// REINFORCE training directly on simulator rewards.
+    pub fn train(
+        &mut self,
+        rt: &Runtime,
+        sim: &Simulator,
+        ds: &Dataset,
+        tasks: &[Task],
+        n_updates: usize,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        for _ in 0..n_updates {
+            let task = &tasks[rng.below(tasks.len())];
+            let n = self.e_train;
+            let (_p, costs, feats, actions, legal, tmask) =
+                self.episodes(rt, sim, ds, task, n, true, rng)?;
+            let returns: Vec<f32> = costs.iter().map(|&c| -(c as f32)).collect();
+            let baseline = returns.iter().sum::<f32>() / returns.len() as f32;
+            let mut adv = TensorF32::zeros(&[self.e_train]);
+            for (i, &r) in returns.iter().enumerate() {
+                adv.data[i] = r - baseline;
+            }
+            // train feats/tmask are the first e_train lanes of the fwd batch
+            let mut tf = TensorF32::zeros(&[self.e_train, self.t_cap, NUM_FEATURES]);
+            let mut tm = TensorF32::zeros(&[self.e_train, self.t_cap]);
+            let lane_f = self.t_cap * NUM_FEATURES;
+            tf.data.copy_from_slice(&feats.data[..self.e_train * lane_f]);
+            tm.data.copy_from_slice(&tmask.data[..self.e_train * self.t_cap]);
+            self.t_step += 1.0;
+            let np = self.psi.len();
+            let out = rt.run(&format!("rnn_train_d{}", self.d), &[
+                TensorF32::from_vec(std::mem::take(&mut self.psi), &[np]).literal(),
+                TensorF32::from_vec(std::mem::take(&mut self.m), &[np]).literal(),
+                TensorF32::from_vec(std::mem::take(&mut self.v), &[np]).literal(),
+                TensorF32::scalar1(self.t_step).literal(),
+                TensorF32::scalar1(self.lr).literal(),
+                tf.literal(),
+                tm.literal(),
+                legal.literal(),
+                actions.literal(),
+                adv.literal(),
+                TensorF32::ones(&[NUM_FEATURES]).literal(),
+            ])?;
+            self.psi = to_f32_vec(&out[0], np)?;
+            self.m = to_f32_vec(&out[1], np)?;
+            self.v = to_f32_vec(&out[2], np)?;
+        }
+        Ok(())
+    }
+
+    /// Greedy (argmax) placement.
+    pub fn place(
+        &self,
+        rt: &Runtime,
+        sim: &Simulator,
+        ds: &Dataset,
+        task: &Task,
+    ) -> Result<Vec<usize>> {
+        let mut rng = Rng::new(0);
+        let (mut p, _c, ..) = self.episodes(rt, sim, ds, task, 1, false, &mut rng)?;
+        Ok(p.remove(0))
+    }
+}

@@ -1,0 +1,422 @@
+//! DreamShard training (Algorithm 1) and inference (Algorithm 2).
+//!
+//! Each iteration: (1) collect cost data by evaluating policy-generated
+//! placements on the simulated cluster, (2) update the cost network on
+//! the replay buffer (MSE, Eq. 1), (3) update the policy by REINFORCE
+//! against the **estimated** MDP — states and rewards from the cost
+//! network, zero simulator/hardware calls (Eq. 2).
+
+use anyhow::Result;
+use std::time::Instant;
+
+use super::buffer::{CostSample, ReplayBuffer};
+use super::costnet::CostNet;
+use super::policy::{select_action, PolicyNet, StepRec};
+use super::variant::Variant;
+use crate::mdp::PlacementState;
+use crate::runtime::{Runtime, TensorF32};
+use crate::sim::Simulator;
+use crate::tables::{Dataset, Task, NUM_FEATURES};
+use crate::util::Rng;
+
+/// Training hyperparameters (paper defaults, section B.5).
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub n_iterations: usize,
+    pub n_collect: usize,
+    pub n_cost: usize,
+    pub n_batch: usize,
+    pub n_rl: usize,
+    pub n_episode: usize,
+    pub lr: f32,
+    /// Placement prefixes additionally evaluated per collected placement
+    /// (enriches the buffer with partial states at negligible cost).
+    pub prefix_fractions: Vec<f32>,
+    pub buffer_capacity: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            n_iterations: 10,
+            n_collect: 10,
+            n_cost: 300,
+            n_batch: 64,
+            n_rl: 10,
+            n_episode: 10,
+            lr: 5e-4,
+            prefix_fractions: vec![0.25, 0.5, 0.75, 1.0],
+            buffer_capacity: 4096,
+        }
+    }
+}
+
+impl TrainCfg {
+    /// Reduced budget used by the wide bench sweeps (documented in
+    /// EXPERIMENTS.md; Figs. 5/21/22 show returns saturate well before
+    /// the paper's full budget).
+    pub fn fast() -> Self {
+        TrainCfg { n_iterations: 6, n_cost: 120, n_rl: 8, ..Default::default() }
+    }
+}
+
+/// Per-iteration training statistics.
+#[derive(Clone, Debug)]
+pub struct IterStat {
+    pub iter: usize,
+    pub collected_mean_cost: f64,
+    pub cost_loss: f32,
+    pub policy_loss: f32,
+    pub wall_s: f64,
+}
+
+/// A generated episode.
+#[derive(Clone, Debug)]
+pub struct Episode {
+    pub placement: Vec<usize>,
+    pub steps: Vec<StepRec>,
+    /// Estimated (cost-network) overall cost of the final state, ms.
+    pub est_cost: f32,
+}
+
+/// The trained placement agent.
+pub struct DreamShard {
+    pub cost: CostNet,
+    pub policy: PolicyNet,
+    pub var: Variant,
+    pub cfg: TrainCfg,
+    pub buffer: ReplayBuffer,
+    pub log: Vec<IterStat>,
+    /// Total parameter updates done / planned (for linear lr decay).
+    updates_done: usize,
+    updates_total: usize,
+}
+
+impl DreamShard {
+    pub fn new(rt: &Runtime, n_devices: usize, cfg: TrainCfg, rng: &mut Rng) -> Result<Self> {
+        let var = Variant::for_devices(rt, n_devices)?;
+        let cost = CostNet::new(rt, &mut rng.fork(1))?;
+        let policy = PolicyNet::new(rt, &mut rng.fork(2))?;
+        let buffer = ReplayBuffer::new(cfg.buffer_capacity);
+        let updates_total = cfg.n_iterations * (cfg.n_cost + cfg.n_rl);
+        Ok(DreamShard {
+            cost,
+            policy,
+            var,
+            cfg,
+            buffer,
+            log: vec![],
+            updates_done: 0,
+            updates_total,
+        })
+    }
+
+    /// Linearly-decayed learning rate (paper: linear schedule to zero).
+    fn lr_now(&self) -> f32 {
+        let frac = 1.0 - self.updates_done as f32 / self.updates_total.max(1) as f32;
+        self.cfg.lr * frac.max(0.05)
+    }
+
+    /// Sort a task's tables descending by predicted single-table cost.
+    pub fn order_tables(&self, rt: &Runtime, ds: &Dataset, task: &Task) -> Result<Vec<usize>> {
+        let feats: Vec<[f32; NUM_FEATURES]> =
+            task.table_ids.iter().map(|&tid| ds.tables[tid].features()).collect();
+        let costs = self.cost.predict_table_costs(rt, &feats)?;
+        let mut order: Vec<usize> = (0..task.n_tables()).collect();
+        order.sort_by(|&a, &b| costs[b].partial_cmp(&costs[a]).unwrap());
+        Ok(order)
+    }
+
+    /// Run `n` episodes in lockstep lanes against the **estimated** MDP.
+    /// The simulator is used only for the memory-legality test, never for
+    /// costs. Returns episodes with recorded steps if `record` is set.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_episodes(
+        &self,
+        rt: &Runtime,
+        sim: &Simulator,
+        ds: &Dataset,
+        task: &Task,
+        n: usize,
+        sample: bool,
+        record: bool,
+        rng: &mut Rng,
+    ) -> Result<Vec<Episode>> {
+        self.run_episodes_var(rt, sim, ds, task, n, sample, record, rng, &self.var, false)
+    }
+
+    /// `run_episodes` with an explicit artifact variant (e.g. the ultra
+    /// D=128 variant for Table 13) and an optional **real-MDP** mode in
+    /// which cost features and the reward come from the simulator instead
+    /// of the cost network (Fig. 8's w/o-estimation arm).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_episodes_var(
+        &self,
+        rt: &Runtime,
+        sim: &Simulator,
+        ds: &Dataset,
+        task: &Task,
+        n: usize,
+        sample: bool,
+        record: bool,
+        rng: &mut Rng,
+        var: &Variant,
+        real_mdp: bool,
+    ) -> Result<Vec<Episode>> {
+        // fused-step artifact sized to the episode count: E=1 for greedy
+        // inference, E=16 for lockstep training episodes (§Perf)
+        let fused = (!real_mdp).then(|| var.mdp_step_for(n).cloned()).flatten();
+        let e = fused.as_ref().map(|(e, _)| *e).unwrap_or(var.e);
+        let (d, s) = (var.d, var.s);
+        let n = n.min(e);
+        let order = self.order_tables(rt, ds, task)?;
+        let mut states: Vec<PlacementState> =
+            (0..n).map(|_| PlacementState::new(ds, task, order.clone(), s)).collect();
+        let mut episodes: Vec<Episode> = (0..n)
+            .map(|_| Episode { placement: vec![], steps: vec![], est_cost: 0.0 })
+            .collect();
+        let f = NUM_FEATURES;
+        let m = task.n_tables();
+
+        for _t in 0..m {
+            let mut feats = TensorF32::zeros(&[e, d, s, f]);
+            let mut mask = TensorF32::zeros(&[e, d, s]);
+            let mut dmask = TensorF32::zeros(&[e, d]);
+            for (lane, st) in states.iter().enumerate() {
+                st.fill_feats(lane, d, s, &mut feats, &mut mask, &mut dmask);
+            }
+            let mut cur = TensorF32::zeros(&[e, f]);
+            let mut legal_t = TensorF32::zeros(&[e, d]);
+            let mut legal: Vec<Vec<bool>> = Vec::with_capacity(n);
+            for (lane, st) in states.iter().enumerate() {
+                cur.set_row(&[lane, 0], &st.current_features());
+                let lg = st.legal(sim);
+                for (dev, &ok) in lg.iter().enumerate() {
+                    legal_t.set(&[lane, dev], if ok { 1.0 } else { 0.0 });
+                }
+                legal.push(lg);
+            }
+            // cost features for the augmented state + policy logits: one
+            // fused PJRT call on the estimated MDP; separate calls with
+            // simulator-measured q on the real MDP (Fig. 8 arm)
+            let mut q = TensorF32::zeros(&[e, d, 3]);
+            let logits = if let Some((_, step_name)) = &fused {
+                let out = rt.run(step_name, &[
+                    TensorF32::from_vec(self.cost.theta.clone(), &[self.cost.theta.len()])
+                        .literal(),
+                    TensorF32::from_vec(self.policy.phi.clone(), &[self.policy.phi.len()])
+                        .literal(),
+                    feats.literal(),
+                    mask.literal(),
+                    dmask.literal(),
+                    cur.literal(),
+                    legal_t.literal(),
+                    TensorF32::from_vec(self.cost.fmask.clone(), &[f]).literal(),
+                    TensorF32::from_vec(self.policy.qscale.clone(), &[3]).literal(),
+                ])?;
+                let logits_flat = crate::runtime::to_f32_vec(&out[0], e * d)?;
+                q.data = crate::runtime::to_f32_vec(&out[1], e * d * 3)?;
+                (0..n).map(|lane| logits_flat[lane * d..(lane + 1) * d].to_vec()).collect()
+            } else {
+                for (lane, st) in states.iter().enumerate() {
+                    let eval = st.evaluate(sim);
+                    for (dev, qd) in eval.q.iter().enumerate() {
+                        q.set_row(&[lane, dev, 0], qd);
+                    }
+                }
+                self.policy.logits(rt, var, &feats, &mask, &q, &cur, &legal_t, n)?
+            };
+            for lane in 0..n {
+                let a = select_action(&logits[lane], &legal[lane], sample, rng);
+                if record {
+                    let base_f = lane * d * s * f;
+                    let base_m = lane * d * s;
+                    let base_q = lane * d * 3;
+                    episodes[lane].steps.push(StepRec {
+                        feats: feats.data[base_f..base_f + d * s * f].to_vec(),
+                        mask: mask.data[base_m..base_m + d * s].to_vec(),
+                        q: q.data[base_q..base_q + d * 3].to_vec(),
+                        cur: states[lane].current_features().to_vec(),
+                        legal: legal[lane].iter().map(|&b| if b { 1.0 } else { 0.0 }).collect(),
+                        action: a,
+                    });
+                }
+                states[lane].apply(a);
+            }
+        }
+
+        // final-state cost = episode reward (negated): estimated or real
+        if real_mdp {
+            for (lane, ep) in episodes.iter_mut().enumerate() {
+                ep.placement = states[lane].placement.clone();
+                ep.est_cost = states[lane].evaluate(sim).latency as f32;
+            }
+        } else {
+            let refs: Vec<&PlacementState> = states.iter().collect();
+            let finals = self.cost.predict_states(rt, var, &refs)?;
+            for (lane, ep) in episodes.iter_mut().enumerate() {
+                ep.placement = states[lane].placement.clone();
+                ep.est_cost = finals[lane].cost;
+            }
+        }
+        Ok(episodes)
+    }
+
+    /// Evaluate a placement on the simulator and add its (prefix) states
+    /// to the replay buffer.
+    fn collect_into_buffer(
+        &mut self,
+        ds: &Dataset,
+        task: &Task,
+        order: &[usize],
+        placement: &[usize],
+        sim: &Simulator,
+    ) -> f64 {
+        let (d, s) = (self.var.d, self.var.s);
+        let f = NUM_FEATURES;
+        let mut final_cost = 0.0;
+        for &frac in &self.cfg.prefix_fractions.clone() {
+            let keep = ((task.n_tables() as f32 * frac).round() as usize).max(1);
+            let mut st = PlacementState::new(ds, task, order.to_vec(), s);
+            for _ in 0..keep.min(order.len()) {
+                let idx = st.current();
+                st.apply(placement[idx]);
+            }
+            let eval = st.evaluate(sim);
+            let mut feats = TensorF32::zeros(&[1, d, s, f]);
+            let mut mask = TensorF32::zeros(&[1, d, s]);
+            let mut dmask = TensorF32::zeros(&[1, d]);
+            st.fill_feats(0, d, s, &mut feats, &mut mask, &mut dmask);
+            let mut q = vec![0.0f32; d * 3];
+            for (dev, qd) in eval.q.iter().enumerate() {
+                q[dev * 3..dev * 3 + 3].copy_from_slice(qd);
+            }
+            self.buffer.push(CostSample {
+                feats: feats.data,
+                mask: mask.data,
+                dmask: dmask.data,
+                q,
+                cost: eval.latency as f32,
+            });
+            if frac >= 1.0 {
+                final_cost = eval.latency;
+            }
+        }
+        final_cost
+    }
+
+    /// Algorithm 1: full training loop over the given training tasks.
+    pub fn train(
+        &mut self,
+        rt: &Runtime,
+        sim: &Simulator,
+        ds: &Dataset,
+        tasks: &[Task],
+        rng: &mut Rng,
+    ) -> Result<()> {
+        for iter in 0..self.cfg.n_iterations {
+            self.train_iteration(rt, sim, ds, tasks, iter, false, rng)?;
+        }
+        Ok(())
+    }
+
+    /// One Algorithm-1 iteration (exposed for the per-iteration learning
+    /// curves of Figs. 5/8). `real_mdp` switches the policy-update stage
+    /// to simulator-backed states/rewards (the w/o-estimation arm).
+    pub fn train_iteration(
+        &mut self,
+        rt: &Runtime,
+        sim: &Simulator,
+        ds: &Dataset,
+        tasks: &[Task],
+        iter: usize,
+        real_mdp: bool,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        {
+            let t0 = Instant::now();
+            // (1) data collection on the simulated cluster
+            let mut collected = vec![];
+            for _ in 0..self.cfg.n_collect {
+                let task = &tasks[rng.below(tasks.len())];
+                let ep = self
+                    .run_episodes(rt, sim, ds, task, 1, true, false, rng)?
+                    .remove(0);
+                let order = self.order_tables(rt, ds, task)?;
+                let cost = self.collect_into_buffer(ds, task, &order, &ep.placement, sim);
+                collected.push(cost);
+            }
+            // (2) cost-network updates (no simulator)
+            let mut cost_loss = 0.0;
+            for _ in 0..self.cfg.n_cost {
+                let lr = self.lr_now();
+                let (feats, mask, dmask, q, c) =
+                    self.buffer.sample_batch(self.cfg.n_batch, self.var.d, self.var.s, rng);
+                cost_loss =
+                    self.cost.train_batch(rt, &self.var, &feats, &mask, &dmask, &q, &c, lr)?;
+                self.updates_done += 1;
+            }
+            // (3) policy updates against the estimated MDP (no simulator)
+            let mut policy_loss = 0.0;
+            for _ in 0..self.cfg.n_rl {
+                let task = &tasks[rng.below(tasks.len())];
+                let var = self.var.clone();
+                let eps = self.run_episodes_var(
+                    rt, sim, ds, task, self.cfg.n_episode, true, true, rng, &var, real_mdp,
+                )?;
+                let returns: Vec<f32> = eps.iter().map(|e| -e.est_cost).collect();
+                let baseline: f32 = returns.iter().sum::<f32>() / returns.len() as f32;
+                let mut steps = vec![];
+                let mut adv = vec![];
+                for (ep, &ret) in eps.iter().zip(returns.iter()) {
+                    for st in &ep.steps {
+                        steps.push(st.clone());
+                        adv.push(ret - baseline);
+                    }
+                }
+                let lr = self.lr_now();
+                policy_loss = self.policy.train_steps(rt, &self.var, &steps, &adv, lr)?;
+                self.updates_done += 1;
+            }
+            self.log.push(IterStat {
+                iter,
+                collected_mean_cost: crate::util::mean(&collected),
+                cost_loss,
+                policy_loss,
+                wall_s: t0.elapsed().as_secs_f64(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Algorithm 2: place a task greedily (argmax), no simulator costs.
+    pub fn place(
+        &self,
+        rt: &Runtime,
+        sim: &Simulator,
+        ds: &Dataset,
+        task: &Task,
+    ) -> Result<Vec<usize>> {
+        let mut rng = Rng::new(0); // unused by argmax
+        let ep = self
+            .run_episodes(rt, sim, ds, task, 1, false, false, &mut rng)?
+            .remove(0);
+        Ok(ep.placement)
+    }
+}
+
+/// Mean simulated latency of a policy's argmax placements over tasks.
+pub fn evaluate_policy(
+    agent: &DreamShard,
+    rt: &Runtime,
+    sim: &Simulator,
+    ds: &Dataset,
+    tasks: &[Task],
+) -> Result<f64> {
+    let mut costs = vec![];
+    for task in tasks {
+        let p = agent.place(rt, sim, ds, task)?;
+        costs.push(sim.evaluate(ds, task, &p).latency);
+    }
+    Ok(crate::util::mean(&costs))
+}

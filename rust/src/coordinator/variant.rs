@@ -1,0 +1,136 @@
+//! Artifact-variant selection: the AOT artifacts are lowered for a small
+//! set of (device-count D, slots-per-device S) shapes; a task with `n`
+//! devices runs on the smallest variant with D >= n (extra devices are
+//! masked out — that masking is exactly what makes the networks
+//! generalize across device counts).
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Runtime;
+
+/// Resolved artifact names + baked dims for one (D, S) variant.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub d: usize,
+    pub s: usize,
+    /// Episode-batch lanes of the forward artifacts.
+    pub e: usize,
+    pub cost_fwd: String,
+    pub policy_fwd: String,
+    pub cost_train: Option<String>,
+    /// (step capacity B, artifact) sorted ascending by B.
+    pub policy_train: Vec<(usize, String)>,
+    /// Cost-train batch size.
+    pub b_cost: usize,
+    /// Fused per-step artifacts: (lane count E, name), ascending by E.
+    pub mdp_step: Vec<(usize, String)>,
+}
+
+impl Variant {
+    /// Pick the smallest lowered variant that fits `n_devices`.
+    pub fn for_devices(rt: &Runtime, n_devices: usize) -> Result<Variant> {
+        let mut candidates: Vec<(usize, usize)> = rt
+            .manifest
+            .artifacts
+            .keys()
+            .filter_map(|k| {
+                let rest = k.strip_prefix("cost_fwd_d")?;
+                let (d, s) = rest.split_once('s')?;
+                Some((d.parse().ok()?, s.parse().ok()?))
+            })
+            .collect();
+        candidates.sort();
+        let (d, s) = candidates
+            .into_iter()
+            .find(|&(d, _)| d >= n_devices)
+            .ok_or_else(|| anyhow!("no artifact variant for {n_devices} devices"))?;
+        Self::exact(rt, d, s)
+    }
+
+    /// Use an exact (D, S) variant.
+    pub fn exact(rt: &Runtime, d: usize, s: usize) -> Result<Variant> {
+        let cost_fwd = format!("cost_fwd_d{d}s{s}");
+        let policy_fwd = format!("policy_fwd_d{d}s{s}");
+        if !rt.manifest.artifacts.contains_key(&cost_fwd) {
+            return Err(anyhow!("artifact {cost_fwd} missing"));
+        }
+        let e = rt.manifest.artifact_meta(&cost_fwd, "E").unwrap_or(16) as usize;
+        let cost_train_name = format!("cost_train_d{d}s{s}");
+        let cost_train = rt
+            .manifest
+            .artifacts
+            .contains_key(&cost_train_name)
+            .then_some(cost_train_name.clone());
+        let b_cost = rt.manifest.artifact_meta(&cost_train_name, "B").unwrap_or(64) as usize;
+        let mut policy_train: Vec<(usize, String)> = rt
+            .manifest
+            .artifacts
+            .keys()
+            .filter_map(|k| {
+                let rest = k.strip_prefix(&format!("policy_train_d{d}s{s}_b"))?;
+                Some((rest.parse().ok()?, k.clone()))
+            })
+            .collect();
+        policy_train.sort();
+        let mut mdp_step: Vec<(usize, String)> = rt
+            .manifest
+            .artifacts
+            .keys()
+            .filter_map(|k| {
+                let rest = k.strip_prefix(&format!("mdp_step_d{d}s{s}_e"))?;
+                Some((rest.parse().ok()?, k.clone()))
+            })
+            .collect();
+        mdp_step.sort();
+        Ok(Variant { d, s, e, cost_fwd, policy_fwd, cost_train, policy_train, b_cost, mdp_step })
+    }
+
+    /// Smallest fused-step artifact with at least `lanes` lanes.
+    pub fn mdp_step_for(&self, lanes: usize) -> Option<&(usize, String)> {
+        self.mdp_step.iter().find(|(e, _)| *e >= lanes).or(self.mdp_step.last())
+    }
+
+    /// Smallest policy-train artifact whose step capacity fits `rows`.
+    pub fn policy_train_for(&self, rows: usize) -> Option<&(usize, String)> {
+        self.policy_train.iter().find(|(b, _)| *b >= rows).or(self.policy_train.last())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.txt").exists().then(|| Runtime::open(dir).unwrap())
+    }
+
+    #[test]
+    fn selects_smallest_fitting() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(Variant::for_devices(&rt, 2).unwrap().d, 2);
+        assert_eq!(Variant::for_devices(&rt, 3).unwrap().d, 4);
+        assert_eq!(Variant::for_devices(&rt, 4).unwrap().d, 4);
+        assert_eq!(Variant::for_devices(&rt, 8).unwrap().d, 8);
+        assert_eq!(Variant::for_devices(&rt, 100).unwrap().d, 128);
+        assert!(Variant::for_devices(&rt, 1000).is_err());
+    }
+
+    #[test]
+    fn ultra_variant_is_inference_only() {
+        let Some(rt) = runtime() else { return };
+        let v = Variant::for_devices(&rt, 128).unwrap();
+        assert!(v.cost_train.is_none());
+        assert!(v.policy_train.is_empty());
+    }
+
+    #[test]
+    fn policy_train_capacity_selection() {
+        let Some(rt) = runtime() else { return };
+        let v = Variant::for_devices(&rt, 4).unwrap();
+        assert_eq!(v.policy_train_for(100).unwrap().0, 512);
+        assert_eq!(v.policy_train_for(513).unwrap().0, 2048);
+        // oversized falls back to the largest (caller chunks)
+        assert_eq!(v.policy_train_for(10_000).unwrap().0, 2048);
+    }
+}

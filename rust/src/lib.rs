@@ -1,0 +1,25 @@
+//! # DreamShard
+//!
+//! Reproduction of *DreamShard: Generalizable Embedding Table Placement
+//! for Recommender Systems* (Zha et al., NeurIPS 2022) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: datasets, the simulated
+//!   GPU cluster substrate, the placement MDP, the Algorithm-1 trainer,
+//!   greedy expert baselines, and the experiment harness.
+//! * **Layer 2** (`python/compile/model.py`) — cost / policy / RNN / DLRM
+//!   networks in JAX, AOT-lowered to HLO text.
+//! * **Layer 1** (`python/compile/kernels/`) — Pallas kernels for the
+//!   embedding-bag hot spot and the sum/max reductions.
+//!
+//! Python never runs at placement time: `runtime` loads the HLO artifacts
+//! via the PJRT C API and the rust coordinator drives them.
+
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod mdp;
+pub mod runtime;
+pub mod sim;
+pub mod tables;
+pub mod util;

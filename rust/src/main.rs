@@ -1,0 +1,129 @@
+//! DreamShard CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   repro <id|all> [--fast] [--seeds N]   regenerate a paper table/figure
+//!   train [--tables N] [--devices D] ...  train an agent and report costs
+//!   place [--tables N] [--devices D]      plan one placement and print it
+//!   info                                  show artifact/manifest summary
+//!
+//! (dependency-light by design: flags are parsed by hand, no clap)
+
+use anyhow::{bail, Context, Result};
+
+use dreamshard::bench::{self, common::Ctx};
+use dreamshard::coordinator::{DreamShard, TrainCfg};
+use dreamshard::runtime::Runtime;
+use dreamshard::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools};
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::util::Rng;
+
+struct Flags {
+    positional: Vec<String>,
+    named: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+fn parse_flags(args: &[String]) -> Flags {
+    let mut f = Flags {
+        positional: vec![],
+        named: Default::default(),
+        switches: Default::default(),
+    };
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                f.named.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                f.switches.insert(name.to_string());
+                i += 1;
+            }
+        } else {
+            f.positional.push(a.clone());
+            i += 1;
+        }
+    }
+    f
+}
+
+impl Flags {
+    fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.named.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn has(&self, name: &str) -> bool {
+        self.switches.contains(name) || self.named.contains_key(name)
+    }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().cloned() else {
+        eprintln!("usage: dreamshard <repro|train|place|info> [...]");
+        std::process::exit(2);
+    };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "repro" => {
+            let id = flags
+                .positional
+                .first()
+                .cloned()
+                .context("usage: dreamshard repro <id|all> [--fast] [--seeds N]")?;
+            let fast = flags.has("fast");
+            let seeds = flags.get_usize("seeds", if fast { 2 } else { 3 });
+            let ctx = Ctx::new(fast, seeds)?;
+            bench::run(&id, &ctx)
+        }
+        "train" | "place" => {
+            let n_tables = flags.get_usize("tables", 50);
+            let n_devices = flags.get_usize("devices", 4);
+            let prod = flags.has("prod");
+            let rt = Runtime::open_default()?;
+            let (ds, sim) = if prod {
+                (gen_prod(856, 42), Simulator::new(SimConfig::v100()))
+            } else {
+                (gen_dlrm(856, 42), Simulator::new(SimConfig::default()))
+            };
+            let (pool_tr, pool_te) = split_pools(&ds, 1007);
+            let train = sample_tasks(&pool_tr, n_tables, n_devices, 20, 2007);
+            let test = sample_tasks(&pool_te, n_tables, n_devices, 10, 3007);
+            let cfg = if flags.has("fast") { TrainCfg::fast() } else { TrainCfg::default() };
+            let mut rng = Rng::new(flags.get_usize("seed", 0) as u64);
+            let mut agent = DreamShard::new(&rt, n_devices, cfg, &mut rng)?;
+            eprintln!("training on {} tasks of {} tables x {} devices ...", train.len(), n_tables, n_devices);
+            agent.train(&rt, &sim, &ds, &train, &mut rng)?;
+            for st in &agent.log {
+                eprintln!(
+                    "  iter {}: collected {:.1} ms, cost-loss {:.3}, policy-loss {:.4} ({:.1}s)",
+                    st.iter, st.collected_mean_cost, st.cost_loss, st.policy_loss, st.wall_s
+                );
+            }
+            let task = &test[0];
+            let p = agent.place(&rt, &sim, &ds, task)?;
+            let eval = sim.evaluate(&ds, task, &p);
+            if cmd == "place" {
+                println!("placement: {p:?}");
+            }
+            println!("{}", sim.render_trace(&eval, "DreamShard placement on first test task"));
+            let mean = dreamshard::coordinator::evaluate_policy(&agent, &rt, &sim, &ds, &test)?;
+            println!("mean test cost over {} tasks: {mean:.2} ms", test.len());
+            Ok(())
+        }
+        "info" => {
+            let rt = Runtime::open_default()?;
+            println!("artifacts: {}", rt.manifest.artifacts.len());
+            let mut names: Vec<&String> = rt.manifest.artifacts.keys().collect();
+            names.sort();
+            for n in names {
+                println!("  {n}");
+            }
+            for (net, info) in &rt.manifest.params {
+                println!("network {net}: {} params in {} segments", info.total, info.segments.len());
+            }
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`"),
+    }
+}

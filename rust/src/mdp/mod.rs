@@ -1,0 +1,212 @@
+//! The placement MDP (paper section 3.1): tables are placed one-by-one;
+//! the state is the per-device table sets (augmented with cost features),
+//! the action is a device id, the final reward is the negative overall
+//! cost. Legal actions enforce the memory cap and the padded slot count.
+//!
+//! The same state machine backs both MDP flavours: the **estimated** MDP
+//! (cost features + reward from the cost network — no simulator calls)
+//! and the **real** MDP (simulator-backed, used for data collection, the
+//! RNN baseline, and the Fig. 8 with/without-estimation comparison).
+
+use crate::sim::Simulator;
+use crate::tables::{Dataset, Task, NUM_FEATURES};
+
+/// One in-flight placement episode.
+#[derive(Clone, Debug)]
+pub struct PlacementState<'a> {
+    pub ds: &'a Dataset,
+    pub task: &'a Task,
+    /// Order in which tables are placed: indices into `task.table_ids`,
+    /// sorted descending by (predicted) single-table cost (section B.4.2).
+    pub order: Vec<usize>,
+    /// Per-device lists of already-placed indices (into `task.table_ids`).
+    pub groups: Vec<Vec<usize>>,
+    /// `placement[i]` = device of `task.table_ids[i]` (usize::MAX = unplaced).
+    pub placement: Vec<usize>,
+    pub step: usize,
+    /// Max tables per device (the AOT slot count `S`).
+    pub max_slots: usize,
+}
+
+impl<'a> PlacementState<'a> {
+    pub fn new(ds: &'a Dataset, task: &'a Task, order: Vec<usize>, max_slots: usize) -> Self {
+        assert_eq!(order.len(), task.n_tables());
+        PlacementState {
+            ds,
+            task,
+            order,
+            groups: vec![vec![]; task.n_devices],
+            placement: vec![usize::MAX; task.n_tables()],
+            step: 0,
+            max_slots,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.step >= self.order.len()
+    }
+
+    /// Index (into `task.table_ids`) of the table being placed now.
+    pub fn current(&self) -> usize {
+        self.order[self.step]
+    }
+
+    /// Legal-action mask over devices: memory cap + free slot.
+    pub fn legal(&self, sim: &Simulator) -> Vec<bool> {
+        let t = &self.ds.tables[self.task.table_ids[self.current()]];
+        (0..self.task.n_devices)
+            .map(|d| {
+                if self.groups[d].len() >= self.max_slots {
+                    return false;
+                }
+                let tables: Vec<&crate::tables::Table> = self.groups[d]
+                    .iter()
+                    .map(|&i| &self.ds.tables[self.task.table_ids[i]])
+                    .collect();
+                sim.fits(&tables, t)
+            })
+            .collect()
+    }
+
+    /// Apply an action (device id) for the current table.
+    pub fn apply(&mut self, device: usize) {
+        assert!(!self.done());
+        assert!(device < self.task.n_devices);
+        let idx = self.current();
+        self.groups[device].push(idx);
+        self.placement[idx] = device;
+        self.step += 1;
+    }
+
+    /// Fill one lane of a padded `[E, D, S, F]` feature batch (plus its
+    /// `[E, D, S]` mask and `[E, D]` device mask) with this state.
+    /// `d_cap`/`s_cap` are the artifact's baked dims (>= task dims).
+    pub fn fill_feats(
+        &self,
+        lane: usize,
+        d_cap: usize,
+        s_cap: usize,
+        feats: &mut crate::runtime::TensorF32,
+        mask: &mut crate::runtime::TensorF32,
+        dmask: &mut crate::runtime::TensorF32,
+    ) {
+        assert!(self.task.n_devices <= d_cap);
+        for d in 0..self.task.n_devices {
+            dmask.set(&[lane, d], 1.0);
+            for (s, &i) in self.groups[d].iter().enumerate().take(s_cap) {
+                let f = self.ds.tables[self.task.table_ids[i]].features();
+                feats.set_row(&[lane, d, s, 0], &f);
+                mask.set(&[lane, d, s], 1.0);
+            }
+        }
+    }
+
+    /// Features of the table currently being placed.
+    pub fn current_features(&self) -> [f32; NUM_FEATURES] {
+        self.ds.tables[self.task.table_ids[self.current()]].features()
+    }
+
+    /// Real (simulator) evaluation of the current partial placement.
+    pub fn evaluate(&self, sim: &Simulator) -> crate::sim::Evaluation {
+        sim.evaluate(self.ds, self.task, &self.placement)
+    }
+}
+
+/// Default placement order when no cost network is available: descending
+/// dim x pooling (the lookup-workload heuristic).
+pub fn heuristic_order(ds: &Dataset, task: &Task) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..task.n_tables()).collect();
+    let key = |i: &usize| {
+        let t = &ds.tables[task.table_ids[*i]];
+        t.dim as f64 * t.pooling as f64
+    };
+    order.sort_by(|a, b| key(b).partial_cmp(&key(a)).unwrap());
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::TensorF32;
+    use crate::sim::{SimConfig, Simulator};
+    use crate::tables::{gen_dlrm, sample_tasks, split_pools};
+
+    fn setup() -> (Dataset, Task, Simulator) {
+        let ds = gen_dlrm(856, 0);
+        let (pool, _) = split_pools(&ds, 1);
+        let task = sample_tasks(&pool, 20, 4, 1, 2).remove(0);
+        (ds, task, Simulator::new(SimConfig::default()))
+    }
+
+    #[test]
+    fn episode_runs_to_completion() {
+        let (ds, task, sim) = setup();
+        let order = heuristic_order(&ds, &task);
+        let mut st = PlacementState::new(&ds, &task, order, 48);
+        let mut step = 0;
+        while !st.done() {
+            let legal = st.legal(&sim);
+            let d = legal.iter().position(|&l| l).expect("some legal action");
+            st.apply(d);
+            step += 1;
+        }
+        assert_eq!(step, 20);
+        assert!(st.placement.iter().all(|&p| p != usize::MAX));
+        let eval = st.evaluate(&sim);
+        assert!(eval.latency > 0.0);
+    }
+
+    #[test]
+    fn slot_cap_limits_actions() {
+        let (ds, task, sim) = setup();
+        let order = heuristic_order(&ds, &task);
+        let mut st = PlacementState::new(&ds, &task, order, 3);
+        // stuff device 0 with 3 tables -> no longer legal
+        for _ in 0..3 {
+            st.apply(0);
+        }
+        let legal = st.legal(&sim);
+        assert!(!legal[0]);
+        assert!(legal[1]);
+    }
+
+    #[test]
+    fn heuristic_order_is_descending() {
+        let (ds, task, _) = setup();
+        let order = heuristic_order(&ds, &task);
+        let cost = |i: usize| {
+            let t = &ds.tables[task.table_ids[i]];
+            t.dim as f64 * t.pooling as f64
+        };
+        for w in order.windows(2) {
+            assert!(cost(w[0]) >= cost(w[1]));
+        }
+    }
+
+    #[test]
+    fn fill_feats_pads_correctly() {
+        let (ds, task, _) = setup();
+        let order = heuristic_order(&ds, &task);
+        let mut st = PlacementState::new(&ds, &task, order, 48);
+        st.apply(1);
+        st.apply(1);
+        st.apply(0);
+        let (e, d_cap, s_cap) = (2, 8, 48);
+        let mut feats = TensorF32::zeros(&[e, d_cap, s_cap, NUM_FEATURES]);
+        let mut mask = TensorF32::zeros(&[e, d_cap, s_cap]);
+        let mut dmask = TensorF32::zeros(&[e, d_cap]);
+        st.fill_feats(1, d_cap, s_cap, &mut feats, &mut mask, &mut dmask);
+        // lane 0 untouched
+        assert_eq!(mask.get(&[0, 1, 0]), 0.0);
+        // lane 1: device 1 has 2 tables, device 0 has 1
+        assert_eq!(mask.get(&[1, 1, 0]), 1.0);
+        assert_eq!(mask.get(&[1, 1, 1]), 1.0);
+        assert_eq!(mask.get(&[1, 1, 2]), 0.0);
+        assert_eq!(mask.get(&[1, 0, 0]), 1.0);
+        // devices beyond the task are masked out
+        assert_eq!(dmask.get(&[1, 4]), 0.0);
+        assert_eq!(dmask.get(&[1, 0]), 1.0);
+        // features actually written
+        assert!(feats.get(&[1, 1, 0, 0]) > 0.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Parser for the whitespace-separated `manifest.txt` emitted by
+//! `python -m compile.aot` (see that module's docstring for the grammar).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One named parameter slice inside a network's flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct Segment {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+    /// Uniform init bound (PyTorch Linear default: 1/sqrt(fan_in)).
+    pub bound: f32,
+}
+
+/// Flat-parameter layout of one network.
+#[derive(Clone, Debug, Default)]
+pub struct ParamInfo {
+    pub total: usize,
+    pub segments: Vec<Segment>,
+}
+
+/// One lowered HLO artifact and its baked shape metadata.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub file: String,
+    pub meta: HashMap<String, String>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub consts: HashMap<String, i64>,
+    pub params: HashMap<String, ParamInfo>,
+    pub artifacts: HashMap<String, Artifact>,
+    pub dlrm_hash: Vec<u64>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let kind = it.next().unwrap();
+            let ctx = || format!("manifest line {}: {line}", lineno + 1);
+            match kind {
+                "const" => {
+                    let k = it.next().ok_or_else(|| anyhow!(ctx()))?;
+                    let v: i64 = it.next().ok_or_else(|| anyhow!(ctx()))?.parse().with_context(ctx)?;
+                    m.consts.insert(k.to_string(), v);
+                }
+                "params" => {
+                    let net = it.next().ok_or_else(|| anyhow!(ctx()))?;
+                    let total: usize =
+                        it.next().ok_or_else(|| anyhow!(ctx()))?.parse().with_context(ctx)?;
+                    m.params.entry(net.to_string()).or_default().total = total;
+                }
+                "segment" => {
+                    let net = it.next().ok_or_else(|| anyhow!(ctx()))?.to_string();
+                    let name = it.next().ok_or_else(|| anyhow!(ctx()))?.to_string();
+                    let offset: usize =
+                        it.next().ok_or_else(|| anyhow!(ctx()))?.parse().with_context(ctx)?;
+                    let len: usize =
+                        it.next().ok_or_else(|| anyhow!(ctx()))?.parse().with_context(ctx)?;
+                    let bound: f32 =
+                        it.next().ok_or_else(|| anyhow!(ctx()))?.parse().with_context(ctx)?;
+                    m.params
+                        .entry(net)
+                        .or_default()
+                        .segments
+                        .push(Segment { name, offset, len, bound });
+                }
+                "dlrm_hash" => {
+                    m.dlrm_hash = it.map(|v| v.parse().unwrap_or(0)).collect();
+                }
+                "artifact" => {
+                    let name = it.next().ok_or_else(|| anyhow!(ctx()))?.to_string();
+                    let file = it.next().ok_or_else(|| anyhow!(ctx()))?.to_string();
+                    let mut meta = HashMap::new();
+                    for kv in it {
+                        if let Some((k, v)) = kv.split_once('=') {
+                            meta.insert(k.to_string(), v.to_string());
+                        }
+                    }
+                    m.artifacts.insert(name, Artifact { file, meta });
+                }
+                other => bail!("unknown manifest record `{other}` at line {}", lineno + 1),
+            }
+        }
+        if m.artifacts.is_empty() {
+            bail!("manifest contains no artifacts");
+        }
+        Ok(m)
+    }
+
+    pub fn parse_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    /// Integer metadata of an artifact (e.g. the baked `D`, `S`, `B`).
+    pub fn artifact_meta(&self, artifact: &str, key: &str) -> Option<i64> {
+        self.artifacts.get(artifact)?.meta.get(key)?.parse().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+const F 21
+params cost 100
+segment cost tbl1.w 0 80 0.21821789
+segment cost tbl1.b 80 20 0.21821789
+dlrm_hash 1000 2000
+artifact cost_fwd_d4s48 cost_fwd_d4s48.hlo.txt E=16 D=4 S=48
+";
+
+    #[test]
+    fn parses_all_records() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.consts["F"], 21);
+        assert_eq!(m.params["cost"].total, 100);
+        assert_eq!(m.params["cost"].segments.len(), 2);
+        assert_eq!(m.params["cost"].segments[1].offset, 80);
+        assert_eq!(m.dlrm_hash, vec![1000, 2000]);
+        assert_eq!(m.artifact_meta("cost_fwd_d4s48", "D"), Some(4));
+        assert_eq!(m.artifacts["cost_fwd_d4s48"].file, "cost_fwd_d4s48.hlo.txt");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line here\n").is_err());
+        assert!(Manifest::parse("const F 21\n").is_err(), "no artifacts");
+    }
+
+    #[test]
+    fn segments_cover_total() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let info = &m.params["cost"];
+        let covered: usize = info.segments.iter().map(|s| s.len).sum();
+        assert_eq!(covered, info.total);
+    }
+}

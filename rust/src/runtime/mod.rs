@@ -1,0 +1,156 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! `make artifacts` (python, build-time only) writes `artifacts/*.hlo.txt`
+//! plus `manifest.txt`; this module parses the manifest, lazily compiles
+//! each artifact on the PJRT CPU client on first use, and provides typed
+//! tensor packing helpers. HLO *text* is the interchange format — the
+//! crate's xla_extension 0.5.1 rejects jax>=0.5 serialized protos
+//! (64-bit instruction ids), while the text parser reassigns ids.
+
+mod manifest;
+mod tensor;
+
+pub use manifest::{Artifact, Manifest, Segment};
+pub use tensor::{to_f32_vec, TensorF32, TensorI32};
+
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::Rng;
+
+/// Lazily-compiling executor over an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory produced by `make artifacts`.
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::parse_file(&dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("DREAMSHARD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(dir)
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let art = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let rc = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Execute an artifact: literals in, tuple-decomposed literals out
+    /// (everything is lowered with `return_tuple=True`).
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let out = exe.execute::<xla::Literal>(inputs).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Initialize a flat parameter vector for a registered network,
+    /// drawing each segment uniform(-bound, bound) (PyTorch Linear init).
+    pub fn init_params(&self, net: &str, rng: &mut Rng) -> Result<Vec<f32>> {
+        let info = self
+            .manifest
+            .params
+            .get(net)
+            .ok_or_else(|| anyhow!("network {net} not in manifest"))?;
+        let mut theta = vec![0.0f32; info.total];
+        for seg in &info.segments {
+            for x in &mut theta[seg.offset..seg.offset + seg.len] {
+                *x = (rng.uniform(-seg.bound as f64, seg.bound as f64)) as f32;
+            }
+        }
+        Ok(theta)
+    }
+
+    /// Number of artifacts compiled so far (for tests/metrics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            Some(Runtime::open(dir).expect("open runtime"))
+        } else {
+            None // artifacts not built; skip (CI runs `make artifacts` first)
+        }
+    }
+
+    #[test]
+    fn manifest_has_core_artifacts() {
+        let Some(rt) = runtime() else { return };
+        for name in ["cost_fwd_d4s48", "policy_fwd_d4s48", "cost_train_d4s48", "table_cost"] {
+            assert!(rt.manifest.artifacts.contains_key(name), "missing {name}");
+        }
+        assert!(rt.manifest.params.contains_key("cost"));
+        assert!(rt.manifest.params.contains_key("policy"));
+    }
+
+    #[test]
+    fn init_params_within_bounds() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Rng::new(0);
+        let theta = rt.init_params("cost", &mut rng).unwrap();
+        let info = &rt.manifest.params["cost"];
+        assert_eq!(theta.len(), info.total);
+        for seg in &info.segments {
+            for &x in &theta[seg.offset..seg.offset + seg.len] {
+                assert!(x.abs() <= seg.bound + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn executes_table_cost() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Rng::new(0);
+        let theta = rt.init_params("cost", &mut rng).unwrap();
+        let n = rt.manifest.artifact_meta("table_cost", "N").unwrap() as usize;
+        let f = rt.manifest.consts["F"] as usize;
+        let feats = TensorF32::zeros(&[n, f]);
+        let fmask = TensorF32::ones(&[f]);
+        let out = rt
+            .run("table_cost", &[
+                TensorF32::from_vec(theta, &[rt.manifest.params["cost"].total]).literal(),
+                feats.literal(),
+                fmask.literal(),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let v = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(v.len(), n);
+    }
+}

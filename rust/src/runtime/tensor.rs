@@ -1,0 +1,127 @@
+//! Dense host tensors + literal packing for the PJRT boundary.
+//!
+//! These are deliberately minimal: row-major `Vec<T>` with shape, plus
+//! indexed writes used by the coordinator when building padded batches.
+
+use anyhow::{anyhow, Result};
+
+/// Row-major f32 tensor.
+#[derive(Clone, Debug)]
+pub struct TensorF32 {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        TensorF32 { dims: dims.iter().map(|&d| d as i64).collect(), data: vec![0.0; n] }
+    }
+
+    pub fn ones(dims: &[usize]) -> Self {
+        let mut t = Self::zeros(dims);
+        t.data.fill(1.0);
+        t
+    }
+
+    pub fn from_vec(data: Vec<f32>, dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        assert_eq!(data.len(), n, "shape/data mismatch");
+        TensorF32 { dims: dims.iter().map(|&d| d as i64).collect(), data }
+    }
+
+    pub fn scalar1(x: f32) -> Self {
+        Self::from_vec(vec![x], &[1])
+    }
+
+    /// Flat index of a multi-index (row-major).
+    pub fn flat(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.dims.len());
+        let mut off = 0usize;
+        for (i, &ix) in idx.iter().enumerate() {
+            debug_assert!((ix as i64) < self.dims[i], "index {ix} >= dim {}", self.dims[i]);
+            off = off * self.dims[i] as usize + ix;
+        }
+        off
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let off = self.flat(idx);
+        self.data[off] = v;
+    }
+
+    pub fn get(&self, idx: &[usize]) -> f32 {
+        self.data[self.flat(idx)]
+    }
+
+    /// Copy a contiguous row of values starting at a multi-index.
+    pub fn set_row(&mut self, idx: &[usize], vals: &[f32]) {
+        let off = self.flat(idx);
+        self.data[off..off + vals.len()].copy_from_slice(vals);
+    }
+
+    pub fn literal(&self) -> xla::Literal {
+        xla::Literal::vec1(&self.data).reshape(&self.dims).expect("reshape literal")
+    }
+}
+
+/// Row-major i32 tensor.
+#[derive(Clone, Debug)]
+pub struct TensorI32 {
+    pub dims: Vec<i64>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        TensorI32 { dims: dims.iter().map(|&d| d as i64).collect(), data: vec![0; n] }
+    }
+
+    pub fn from_vec(data: Vec<i32>, dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        assert_eq!(data.len(), n, "shape/data mismatch");
+        TensorI32 { dims: dims.iter().map(|&d| d as i64).collect(), data }
+    }
+
+    pub fn literal(&self) -> xla::Literal {
+        xla::Literal::vec1(&self.data).reshape(&self.dims).expect("reshape literal")
+    }
+}
+
+/// Extract a literal into a f32 vec, with shape check against `expect_len`.
+pub fn to_f32_vec(lit: &xla::Literal, expect_len: usize) -> Result<Vec<f32>> {
+    let v = lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32: {e:?}"))?;
+    if v.len() != expect_len {
+        return Err(anyhow!("literal has {} elements, expected {expect_len}", v.len()));
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let mut t = TensorF32::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 3], 7.0);
+        assert_eq!(t.data[1 * 12 + 2 * 4 + 3], 7.0);
+        assert_eq!(t.get(&[1, 2, 3]), 7.0);
+        t.set_row(&[0, 1, 0], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.get(&[0, 1, 2]), 3.0);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = TensorF32::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let lit = t.literal();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), t.data);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        TensorF32::from_vec(vec![1.0], &[2, 2]);
+    }
+}

@@ -1,0 +1,218 @@
+//! Embedding-kernel time model: single-table costs and multi-table fusion.
+//!
+//! Shapes are taken from the paper's measurements on 2080Ti + FBGEMM:
+//! Fig. 10 (kernel time vs hash size x dim), Fig. 11 (vs pooling factor x
+//! access sparsity), Fig. 12 (fusion speedup 1-3x, not linear in the sum
+//! of single-table costs). Constants are calibrated so task costs land in
+//! the paper's millisecond ranges; the *shape* is what matters — the cost
+//! network has to learn it from samples, exactly as on real hardware.
+
+use crate::tables::Table;
+
+/// Single-table and fused multi-table kernel-time model.
+#[derive(Clone, Debug)]
+pub struct KernelModel {
+    /// Global batch size.
+    pub batch: usize,
+}
+
+impl KernelModel {
+    pub fn new(batch: usize) -> Self {
+        KernelModel { batch }
+    }
+
+    /// Cache efficiency factor in (0, 1]: fraction of the nominal memory
+    /// traffic actually paid after L1/L2 caching. Small working sets and
+    /// hot access distributions are cheaper (Fig. 10 hash-size effect +
+    /// Fig. 11 access-ratio effect).
+    fn cache_factor(&self, t: &Table) -> f64 {
+        let reuse = t.reuse_factor() as f64; // share of traffic on hot rows
+        // working set the cold traffic walks over, in cache-size units
+        // (~6 MB L2 on a 2080Ti)
+        let row_bytes = t.dim as f64 * 2.0;
+        let ws = (t.hash_size as f64 * row_bytes) / 6e6;
+        // cold traffic pays more as the working set overflows cache
+        let cold_penalty = 0.35 + 0.65 * (1.0 - (-ws / 8.0).exp());
+        let hot_cost = 0.25; // hot rows mostly hit cache
+        reuse * hot_cost + (1.0 - reuse) * cold_penalty
+    }
+
+    /// Single-table forward-computation time (ms): gather + pooled sum of
+    /// `batch * pooling` rows of `dim` halfs, modulated by caching, plus a
+    /// kernel-launch floor. Non-linear in every feature on purpose.
+    pub fn fwd_ms(&self, t: &Table) -> f64 {
+        let pool = t.pooling.max(0.2) as f64;
+        let dim = t.dim as f64;
+        let traffic = self.batch as f64 * pool.powf(0.82) * dim.powf(0.92) * 2.0;
+        // random-gather effective bandwidth: a few % of the 2080Ti's
+        // 616 GB/s — scattered rows defeat coalescing (why embedding
+        // lookup dominates, §1)
+        let eff_bw = 5.5e9;
+        0.06 + 1e3 * traffic * self.cache_factor(t) / eff_bw
+    }
+
+    /// Single-table backward-computation time (ms): gradient scatter-add +
+    /// optimizer update touches rows twice and is atomics-bound, so it is
+    /// systematically more expensive than the forward and *more* sensitive
+    /// to pooling (the paper's traces show bwd comp > fwd comp).
+    pub fn bwd_ms(&self, t: &Table) -> f64 {
+        let pool = t.pooling.max(0.2) as f64;
+        let dim = t.dim as f64;
+        let traffic = self.batch as f64 * pool.powf(0.88) * dim.powf(0.9) * 2.0 * 1.8;
+        let eff_bw = 5.5e9;
+        0.08 + 1e3 * traffic * (0.2 + 0.8 * self.cache_factor(t)) / eff_bw
+    }
+
+    /// Marginal-cost floor for fused execution, in (0, 1): the fraction of
+    /// its standalone cost a deeply-fused table still pays. Lower floor =
+    /// more fusion benefit. Mix-dependent (Fig. 12's point): homogeneous
+    /// dims vectorize together better, and small-pooling tables gain most
+    /// from amortized launches.
+    fn fusion_floor(&self, tables: &[&Table]) -> f64 {
+        let n = tables.len() as f64;
+        let mean_dim: f64 = tables.iter().map(|t| t.dim as f64).sum::<f64>() / n;
+        let var_dim: f64 = tables
+            .iter()
+            .map(|t| {
+                let d = t.dim as f64 / mean_dim - 1.0;
+                d * d
+            })
+            .sum::<f64>()
+            / n;
+        let homo = (-var_dim * 4.0).exp(); // 1 = perfectly homogeneous
+        let mean_pool: f64 = tables.iter().map(|t| t.pooling as f64).sum::<f64>() / n;
+        let pool_gain = (-mean_pool / 24.0).exp(); // small poolings fuse best
+        0.55 - 0.08 * homo - 0.05 * pool_gain // in [0.42, 0.55]
+    }
+
+    /// Fused forward/backward computation time for one device (ms).
+    ///
+    /// Rank-weighted marginal costs: tables are sorted by standalone cost
+    /// descending; the largest pays its full cost (fusion cannot beat the
+    /// op's own memory traffic) and each further table pays
+    /// `floor + (1-floor) * 0.75^rank` of its standalone cost. This keeps
+    /// the fused total below the unfused sum with a data-dependent 1-3x
+    /// speedup (Fig. 12) while staying (softly) monotone in added work.
+    pub fn device_ms(&self, tables: &[&Table]) -> (f64, f64) {
+        if tables.is_empty() {
+            return (0.0, 0.0);
+        }
+        let floor = self.fusion_floor(tables);
+        let mut costs: Vec<(f64, f64)> =
+            tables.iter().map(|t| (self.fwd_ms(t), self.bwd_ms(t))).collect();
+        costs.sort_by(|a, b| (b.0 + b.1).partial_cmp(&(a.0 + a.1)).unwrap());
+        let mut fwd = 0.0;
+        let mut bwd = 0.0;
+        let mut decay = 1.0; // 0.75^rank
+        for (f, b) in costs {
+            let w = floor + (1.0 - floor) * decay;
+            fwd += f * w;
+            bwd += b * w;
+            decay *= 0.75;
+        }
+        (fwd, bwd)
+    }
+
+    /// Realized fusion speedup: unfused sum / fused time (1x for a single
+    /// table, saturating below ~2.4x; within Fig. 12's 1-3x band).
+    pub fn fusion_speedup(&self, tables: &[&Table]) -> f64 {
+        if tables.len() <= 1 {
+            return 1.0;
+        }
+        let sum: f64 = tables.iter().map(|t| self.fwd_ms(t) + self.bwd_ms(t)).sum();
+        let (f, b) = self.device_ms(tables);
+        sum / (f + b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::{gen_dlrm, NUM_BINS};
+
+    fn table(dim: u32, hash: u64, pool: f32) -> Table {
+        let mut bins = [0.0; NUM_BINS];
+        bins[2] = 1.0;
+        Table { dim, hash_size: hash, pooling: pool, bins }
+    }
+
+    #[test]
+    fn fwd_monotone_in_dim_and_pooling() {
+        let k = KernelModel::new(65_536);
+        // Fig. 10: higher dim -> higher time
+        assert!(k.fwd_ms(&table(64, 1 << 20, 32.0)) > k.fwd_ms(&table(8, 1 << 20, 32.0)));
+        // Fig. 11: higher pooling -> higher time
+        assert!(k.fwd_ms(&table(32, 1 << 20, 128.0)) > k.fwd_ms(&table(32, 1 << 20, 2.0)));
+    }
+
+    #[test]
+    fn hash_size_moderate_effect() {
+        let k = KernelModel::new(65_536);
+        let small = k.fwd_ms(&table(32, 200_000, 32.0));
+        let large = k.fwd_ms(&table(32, 20_000_000, 32.0));
+        assert!(large > small, "bigger hash -> less caching -> slower");
+        assert!(large / small < 3.5, "hash effect is moderate (Fig. 10)");
+    }
+
+    #[test]
+    fn hot_distribution_is_cheaper() {
+        let k = KernelModel::new(65_536);
+        let mut hot = table(32, 1 << 21, 32.0);
+        hot.bins = [0.0; NUM_BINS];
+        hot.bins[NUM_BINS - 1] = 1.0;
+        let mut cold = table(32, 1 << 21, 32.0);
+        cold.bins = [0.0; NUM_BINS];
+        cold.bins[0] = 1.0;
+        assert!(k.fwd_ms(&hot) < k.fwd_ms(&cold), "Fig. 11 access-ratio effect");
+    }
+
+    #[test]
+    fn bwd_exceeds_fwd() {
+        let k = KernelModel::new(65_536);
+        let t = table(16, 1 << 20, 10.0);
+        assert!(k.bwd_ms(&t) > k.fwd_ms(&t));
+    }
+
+    #[test]
+    fn fusion_speedup_in_paper_range() {
+        let k = KernelModel::new(65_536);
+        let d = gen_dlrm(856, 3);
+        let mut rng = crate::util::Rng::new(9);
+        for _ in 0..50 {
+            let ids = rng.sample_indices(d.len(), 10);
+            let tables: Vec<&Table> = ids.iter().map(|&i| &d.tables[i]).collect();
+            let s = k.fusion_speedup(&tables);
+            assert!((1.0..=3.0).contains(&s), "speedup {s} outside the 1-3x range");
+        }
+        // single table: no fusion
+        assert_eq!(k.fusion_speedup(&[&d.tables[0]]), 1.0);
+    }
+
+    #[test]
+    fn fusion_grows_with_count() {
+        let k = KernelModel::new(65_536);
+        let d = gen_dlrm(64, 3);
+        let few: Vec<&Table> = d.tables[..2].iter().collect();
+        let many: Vec<&Table> = d.tables[..20].iter().collect();
+        assert!(k.fusion_speedup(&many) > k.fusion_speedup(&few));
+    }
+
+    #[test]
+    fn fused_cost_below_sum_and_nonlinear() {
+        // Fig. 12: fused < sum of singles, ratio data-dependent
+        let k = KernelModel::new(65_536);
+        let d = gen_dlrm(856, 3);
+        let mut rng = crate::util::Rng::new(10);
+        let mut ratios = vec![];
+        for _ in 0..30 {
+            let ids = rng.sample_indices(d.len(), 10);
+            let tables: Vec<&Table> = ids.iter().map(|&i| &d.tables[i]).collect();
+            let sum: f64 = tables.iter().map(|t| k.fwd_ms(t) + k.bwd_ms(t)).sum();
+            let (f, b) = k.device_ms(&tables);
+            assert!(f + b < sum);
+            ratios.push(sum / (f + b));
+        }
+        let (_, spread) = crate::util::mean_std(&ratios);
+        assert!(spread > 0.005, "speedup must be mix-dependent, spread {spread}");
+    }
+}

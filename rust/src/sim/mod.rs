@@ -1,0 +1,57 @@
+//! GPU execution simulator — the substrate standing in for the paper's
+//! 2080Ti/V100 testbed + FBGEMM fused embedding ops (see DESIGN.md
+//! §Substitutions).
+//!
+//! The simulator exposes exactly what real hardware exposed to DreamShard:
+//! given a placement, per-device **forward computation**, **backward
+//! computation** and **backward communication** times plus the overall
+//! step latency. Its cost surface deliberately reproduces the paper's
+//! measured phenomena, and its functional form is *never* shown to the
+//! learner (the cost network only sees (features, measured cost) samples):
+//!
+//! * non-linear single-table kernel time in dim / hash size / pooling /
+//!   access distribution, with cache effects (Appendix A.3.1, Figs 10-11);
+//! * data-dependent multi-table fusion speedup of 1-3x over the sum of
+//!   single-table costs (Appendix A.3.2, Fig 12);
+//! * all-to-all communication that degrades with dimension imbalance
+//!   (Appendix A.3.3, Table 4);
+//! * forward-communication idle-time coupling: a device that finishes
+//!   forward compute early waits for the slowest device (Appendix A.4);
+//! * deterministic per-measurement noise (the paper's PARAM-bench median
+//!   latency has low but non-zero variance).
+
+mod kernel;
+mod comm;
+mod eval;
+
+pub use comm::CommModel;
+pub use eval::{DeviceTrace, Evaluation, Simulator};
+pub use kernel::KernelModel;
+
+/// Simulator configuration. Defaults are calibrated so DLRM-50 (4) random
+/// placements land near the paper's ~50 ms (Table 6) — see EXPERIMENTS.md.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Global batch size (the paper fixes 65,536).
+    pub batch: usize,
+    /// Per-device memory capacity in GB (11 GB ~ 2080Ti for DLRM runs,
+    /// 32 GB ~ V100 for Prod runs).
+    pub mem_cap_gb: f32,
+    /// Relative measurement noise (std of a multiplicative factor).
+    pub noise: f32,
+    /// Seed for the measurement-noise stream.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { batch: 65_536, mem_cap_gb: 11.0, noise: 0.01, seed: 0 }
+    }
+}
+
+impl SimConfig {
+    /// V100-like config used for Prod tasks (larger tables fit).
+    pub fn v100() -> Self {
+        SimConfig { mem_cap_gb: 32.0, ..Default::default() }
+    }
+}

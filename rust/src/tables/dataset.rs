@@ -1,0 +1,141 @@
+//! Synthetic dataset generators mirroring the paper's two benchmarks
+//! (section C + Figures 15-18):
+//!
+//! * **DLRM** — 856 tables, fixed dim 16, hash sizes log-normal around
+//!   1e6 (tail to 1e7), power-law pooling factors (most < 5, tail to
+//!   ~200), diverse access-frequency histograms.
+//! * **Prod** — same scale but *diverse dimensions* 4..768 and larger
+//!   tables, the property the paper says makes Prod harder (dimension
+//!   imbalance hurts communication).
+
+use super::features::{Table, NUM_BINS};
+use crate::util::Rng;
+
+/// A named set of embedding tables.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub tables: Vec<Table>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tables.is_empty()
+    }
+}
+
+/// Draw an access-frequency histogram. `heat` in [0,1] shifts mass toward
+/// hot bins (frequently re-accessed indices), mimicking the long-tailed
+/// production reuse patterns of Figure 18.
+fn gen_bins(rng: &mut Rng, heat: f64) -> [f32; NUM_BINS] {
+    let mut bins = [0.0f32; NUM_BINS];
+    // geometric-ish decay away from a heat-dependent center
+    let center = heat * (NUM_BINS - 1) as f64 * 0.7;
+    let width = 1.5 + 3.0 * rng.f64();
+    let mut total = 0.0f32;
+    for (k, b) in bins.iter_mut().enumerate() {
+        let d = (k as f64 - center) / width;
+        let w = (-0.5 * d * d).exp() * (0.05 + rng.f64());
+        *b = w as f32;
+        total += *b;
+    }
+    for b in bins.iter_mut() {
+        *b /= total;
+    }
+    bins
+}
+
+/// Power-law pooling factor: most tables small, a few up to ~200
+/// (Fig. 16; the DLRM dataset's average pooling factor is 15, Table 5).
+fn gen_pooling(rng: &mut Rng) -> f32 {
+    let p = rng.pareto(2.0, 1.05);
+    (p.min(200.0)) as f32
+}
+
+/// DLRM synthetic dataset (open-source dlrm_datasets counterpart).
+pub fn gen_dlrm(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed).fork(0xD1A3);
+    let tables = (0..n)
+        .map(|_| {
+            // hash sizes: log-normal centered ~1e6, clipped to [1e3, 2e7]
+            let hash = rng.lognormal10(5.9, 0.55).clamp(1e3, 2e7) as u64;
+            let heat = rng.f64() * rng.f64(); // mostly cold, some hot
+            Table {
+                dim: 16, // the public DLRM dataset fixes dim=16 (§C.3)
+                hash_size: hash,
+                pooling: gen_pooling(&mut rng),
+                bins: gen_bins(&mut rng, heat),
+            }
+        })
+        .collect();
+    Dataset { name: format!("dlrm{n}"), tables }
+}
+
+/// Prod-like dataset: diverse dims 4..768 (the paper's key difference).
+pub fn gen_prod(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed).fork(0x940D);
+    let dims = [4u32, 8, 16, 32, 48, 64, 96, 128, 192, 256, 384, 512, 768];
+    // skew toward mid dims but keep the extremes present
+    let dim_w = [4.0f32, 6.0, 10.0, 12.0, 8.0, 10.0, 6.0, 6.0, 3.0, 3.0, 1.5, 1.0, 0.5];
+    let tables = (0..n)
+        .map(|_| {
+            let dim = dims[rng.weighted(&dim_w)];
+            let hash = rng.lognormal10(6.1, 0.6).clamp(1e3, 4e7) as u64;
+            let heat = rng.f64();
+            Table {
+                dim,
+                hash_size: hash,
+                pooling: gen_pooling(&mut rng),
+                bins: gen_bins(&mut rng, heat),
+            }
+        })
+        .collect();
+    Dataset { name: format!("prod{n}"), tables }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dlrm_shape() {
+        let d = gen_dlrm(856, 0);
+        assert_eq!(d.len(), 856);
+        assert!(d.tables.iter().all(|t| t.dim == 16));
+        assert!(d.tables.iter().all(|t| (1_000..=20_000_000).contains(&(t.hash_size as i64))));
+        // power-law pooling: majority small, tail exists (Fig. 16)
+        let small = d.tables.iter().filter(|t| t.pooling < 5.0).count();
+        let big = d.tables.iter().filter(|t| t.pooling > 50.0).count();
+        assert!(small > d.len() / 2, "small poolings {small}");
+        assert!(big > 0);
+    }
+
+    #[test]
+    fn prod_dims_diverse() {
+        let d = gen_prod(856, 0);
+        let mut dims: Vec<u32> = d.tables.iter().map(|t| t.dim).collect();
+        dims.sort_unstable();
+        dims.dedup();
+        assert!(dims.len() >= 8, "expected many distinct dims, got {dims:?}");
+        assert!(dims.contains(&4) && *dims.last().unwrap() >= 512);
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(gen_dlrm(32, 5).tables, gen_dlrm(32, 5).tables);
+        assert_ne!(gen_dlrm(32, 5).tables, gen_dlrm(32, 6).tables);
+    }
+
+    #[test]
+    fn bins_are_distributions() {
+        for t in gen_dlrm(64, 1).tables {
+            let s: f32 = t.bins.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4);
+            assert!(t.bins.iter().all(|&b| b >= 0.0));
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Table features (paper section A.2): dimension, hash size, pooling
+//! factor, table size, and a 17-bin index-access-frequency distribution.
+
+/// Number of access-frequency histogram bins: (0,1], (1,2], (2,4], ...,
+/// (32768, inf) — powers of two over a 65,536-index batch (section A.2).
+pub const NUM_BINS: usize = 17;
+
+/// Total feature dimension fed to the networks: 4 scalars + 17 bins.
+pub const NUM_FEATURES: usize = 4 + NUM_BINS;
+
+/// One embedding table and its lookup statistics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Table {
+    /// Embedding vector dimension (number of columns).
+    pub dim: u32,
+    /// Number of rows (vocabulary / hash size).
+    pub hash_size: u64,
+    /// Mean pooling factor: indices fetched per sample.
+    pub pooling: f32,
+    /// Normalized access-frequency distribution over `NUM_BINS` bins;
+    /// sums to 1. Higher-index bins = hotter (more reusable) indices.
+    pub bins: [f32; NUM_BINS],
+}
+
+impl Table {
+    /// Memory footprint in GB (fp16 rows, as in the paper's setup §B.5).
+    pub fn size_gb(&self) -> f32 {
+        (self.hash_size as f64 * self.dim as f64 * 2.0 / 1e9) as f32
+    }
+
+    /// Expected reuse factor in [0, 1]: how much of the lookup traffic
+    /// hits frequently-accessed (cacheable) rows. Derived from the bin
+    /// histogram: bin k holds indices accessed ~2^(k-1) times, so the
+    /// traffic share of bin k is proportional to `bins[k] * 2^(k-1)`.
+    pub fn reuse_factor(&self) -> f32 {
+        let mut traffic = 0.0f64;
+        let mut hot = 0.0f64;
+        for (k, &b) in self.bins.iter().enumerate() {
+            let freq = 2f64.powi(k as i32);
+            let t = b as f64 * freq;
+            traffic += t;
+            // indices accessed >= 16 times in a batch are effectively
+            // cache-resident for the rest of the batch
+            if k >= 5 {
+                hot += t;
+            }
+        }
+        if traffic <= 0.0 {
+            0.0
+        } else {
+            (hot / traffic) as f32
+        }
+    }
+
+    /// The normalized 21-feature vector consumed by the cost and policy
+    /// networks. Scalars are log/linearly squashed to O(1) ranges so one
+    /// network serves tables spanning 4..768 dims and 1e3..1e7 rows:
+    ///   f0 = dim/64, f1 = log10(hash)/7, f2 = log2(1+pooling)/8,
+    ///   f3 = size_gb, f4.. = bins (already a distribution).
+    pub fn features(&self) -> [f32; NUM_FEATURES] {
+        let mut f = [0.0f32; NUM_FEATURES];
+        f[0] = self.dim as f32 / 64.0;
+        f[1] = ((self.hash_size.max(1)) as f32).log10() / 7.0;
+        f[2] = (1.0 + self.pooling).log2() / 8.0;
+        f[3] = self.size_gb();
+        f[4..4 + NUM_BINS].copy_from_slice(&self.bins);
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Table {
+        let mut bins = [0.0; NUM_BINS];
+        bins[0] = 0.5;
+        bins[8] = 0.5;
+        Table { dim: 16, hash_size: 1_000_000, pooling: 15.0, bins }
+    }
+
+    #[test]
+    fn size_gb() {
+        // 1e6 rows * 16 dims * 2 bytes = 32 MB
+        assert!((t().size_gb() - 0.032).abs() < 1e-6);
+    }
+
+    #[test]
+    fn features_normalized() {
+        let f = t().features();
+        assert!((f[0] - 0.25).abs() < 1e-6);
+        assert!((f[1] - 6.0 / 7.0).abs() < 1e-6);
+        assert!(f[2] > 0.0 && f[2] < 1.0);
+        let bin_sum: f32 = f[4..].iter().sum();
+        assert!((bin_sum - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn reuse_monotone_in_hotness() {
+        let mut cold = t();
+        cold.bins = [0.0; NUM_BINS];
+        cold.bins[0] = 1.0;
+        let mut hot = t();
+        hot.bins = [0.0; NUM_BINS];
+        hot.bins[NUM_BINS - 1] = 1.0;
+        assert!(cold.reuse_factor() < 0.01);
+        assert!(hot.reuse_factor() > 0.99);
+        assert!(t().reuse_factor() > cold.reuse_factor());
+    }
+}

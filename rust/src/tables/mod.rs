@@ -1,0 +1,11 @@
+//! Embedding tables, their 21 features (paper section A.2), the synthetic
+//! DLRM / Prod datasets (section C), and placement-task sampling
+//! (section E: disjoint train/test table pools, random table subsets).
+
+mod dataset;
+mod features;
+mod task;
+
+pub use dataset::{gen_dlrm, gen_prod, Dataset};
+pub use features::{Table, NUM_BINS, NUM_FEATURES};
+pub use task::{sample_tasks, split_pools, Task, TaskSet};

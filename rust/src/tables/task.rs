@@ -1,0 +1,102 @@
+//! Placement tasks (paper section 2 + E): a task is a set of tables plus a
+//! device count. Train/test tasks are drawn from *disjoint* table pools so
+//! every test table is unseen (the GETP generalizability requirement).
+
+use super::dataset::Dataset;
+use crate::util::Rng;
+
+/// One placement task `T_i = (E_i, D_i)`: indices into a dataset plus the
+/// number of identical devices.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub table_ids: Vec<usize>,
+    pub n_devices: usize,
+}
+
+impl Task {
+    pub fn n_tables(&self) -> usize {
+        self.table_ids.len()
+    }
+}
+
+/// A train/test suite in the paper's `dataset-num_tables (num_devices)`
+/// naming, e.g. DLRM-50 (4).
+#[derive(Clone, Debug)]
+pub struct TaskSet {
+    pub name: String,
+    pub train: Vec<Task>,
+    pub test: Vec<Task>,
+}
+
+/// Split all table ids in half into disjoint train/test pools (section E).
+pub fn split_pools(dataset: &Dataset, seed: u64) -> (Vec<usize>, Vec<usize>) {
+    let mut ids: Vec<usize> = (0..dataset.len()).collect();
+    let mut rng = Rng::new(seed).fork(0x9001);
+    rng.shuffle(&mut ids);
+    let half = ids.len() / 2;
+    let test = ids.split_off(half);
+    (ids, test)
+}
+
+/// Sample `n_tasks` tasks of `n_tables` tables each from a pool.
+pub fn sample_tasks(
+    pool: &[usize],
+    n_tables: usize,
+    n_devices: usize,
+    n_tasks: usize,
+    seed: u64,
+) -> Vec<Task> {
+    assert!(n_tables <= pool.len(), "pool of {} too small for {} tables", pool.len(), n_tables);
+    let mut rng = Rng::new(seed).fork(0x7A5C);
+    (0..n_tasks)
+        .map(|_| {
+            let picks = rng.sample_indices(pool.len(), n_tables);
+            Task { table_ids: picks.into_iter().map(|i| pool[i]).collect(), n_devices }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::gen_dlrm;
+
+    #[test]
+    fn pools_disjoint_and_cover() {
+        let d = gen_dlrm(100, 0);
+        let (tr, te) = split_pools(&d, 1);
+        assert_eq!(tr.len(), 50);
+        assert_eq!(te.len(), 50);
+        let mut all: Vec<usize> = tr.iter().chain(te.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tasks_sample_from_pool_without_dup() {
+        let d = gen_dlrm(100, 0);
+        let (tr, _) = split_pools(&d, 1);
+        let tasks = sample_tasks(&tr, 20, 4, 10, 2);
+        assert_eq!(tasks.len(), 10);
+        for t in &tasks {
+            assert_eq!(t.n_tables(), 20);
+            assert_eq!(t.n_devices, 4);
+            let mut ids = t.table_ids.clone();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), 20, "duplicate table in task");
+            assert!(ids.iter().all(|i| tr.contains(i)));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let d = gen_dlrm(100, 0);
+        let (tr, _) = split_pools(&d, 1);
+        let a = sample_tasks(&tr, 10, 2, 5, 7);
+        let b = sample_tasks(&tr, 10, 2, 5, 7);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.table_ids, y.table_ids);
+        }
+    }
+}

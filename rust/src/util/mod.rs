@@ -1,0 +1,11 @@
+//! Small self-contained utilities: deterministic RNG, stats, text tables.
+//!
+//! The build is fully offline with a minimal dependency closure, so the
+//! RNG (SplitMix64) and helpers live here instead of pulling `rand`.
+
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;
+pub use stats::{mean, mean_std};

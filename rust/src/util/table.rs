@@ -1,0 +1,78 @@
+//! Minimal fixed-width text-table printer for the bench harness, so the
+//! reproduced paper tables read like the originals on a terminal.
+
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        TextTable { header: header.into_iter().map(Into::into).collect(), rows: vec![] }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        self.rows.push(cells.into_iter().map(Into::into).collect());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                let w = widths.get(i).copied().unwrap_or(c.len());
+                line.push_str(&format!("{:<w$}  ", c, w = w));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// `12.3±0.4 (+19.0%)` formatting used throughout the paper's tables.
+pub fn ms_pm(mean: f64, std: f64) -> String {
+    format!("{mean:.1}±{std:.1}")
+}
+
+pub fn speedup_vs(random: f64, x: f64) -> String {
+    if x <= 0.0 {
+        return "-".into();
+    }
+    format!("{:+.1}%", (random - x) / x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders() {
+        let mut t = TextTable::new(vec!["a", "bb"]);
+        t.row(vec!["1", "2"]);
+        let s = t.render();
+        assert!(s.contains("a"));
+        assert!(s.contains("bb"));
+        assert!(s.lines().count() == 3);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(ms_pm(12.34, 0.41), "12.3±0.4");
+        assert_eq!(speedup_vs(24.0, 20.0), "+20.0%");
+    }
+}

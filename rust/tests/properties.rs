@@ -1,0 +1,159 @@
+//! Property-based invariant tests (seeded randomized sweeps — the offline
+//! dependency closure has no proptest, so each property draws many random
+//! cases from a deterministic RNG and asserts the invariant on every one).
+
+use dreamshard::baselines::{greedy_placement, random_placement, ALL_EXPERTS};
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools, NUM_FEATURES};
+use dreamshard::util::Rng;
+
+const CASES: usize = 40;
+
+#[test]
+fn prop_placements_complete_and_legal() {
+    let ds = gen_dlrm(856, 1);
+    let (pool, _) = split_pools(&ds, 2);
+    let sim = Simulator::new(SimConfig::default());
+    let mut rng = Rng::new(3);
+    for case in 0..CASES {
+        let n_tables = 5 + rng.below(80);
+        let n_dev = [2, 4, 8][rng.below(3)];
+        let task = sample_tasks(&pool, n_tables, n_dev, 1, 100 + case as u64).remove(0);
+        for e in ALL_EXPERTS {
+            let p = greedy_placement(&ds, &task, &sim, e);
+            assert_eq!(p.len(), n_tables);
+            assert!(p.iter().all(|&d| d < n_dev), "{e:?} produced illegal device");
+        }
+        let p = random_placement(&ds, &task, &sim, &mut rng);
+        assert!(p.iter().all(|&d| d < n_dev));
+    }
+}
+
+#[test]
+fn prop_latency_is_sum_of_phase_maxima() {
+    let ds = gen_dlrm(856, 1);
+    let (pool, _) = split_pools(&ds, 2);
+    let sim = Simulator::new(SimConfig::default());
+    let mut rng = Rng::new(4);
+    for case in 0..CASES {
+        let task = sample_tasks(&pool, 10 + rng.below(60), 4, 1, 200 + case as u64).remove(0);
+        let p = random_placement(&ds, &task, &sim, &mut rng);
+        let eval = sim.evaluate(&ds, &task, &p);
+        let phase = |f: fn(&dreamshard::sim::DeviceTrace) -> f64| {
+            eval.devices.iter().map(f).fold(0.0, f64::max)
+        };
+        let expect = phase(|t| t.fwd_comp)
+            + phase(|t| t.fwd_comm)
+            + phase(|t| t.bwd_comm)
+            + phase(|t| t.bwd_comp);
+        assert!((eval.latency - expect).abs() < 1e-9);
+        assert!(eval.latency.is_finite() && eval.latency > 0.0);
+    }
+}
+
+#[test]
+fn prop_adding_a_table_roughly_monotone() {
+    // Strict monotonicity is deliberately NOT an invariant: the fusion
+    // speedup is mix-dependent (Fig. 12), and on real FBGEMM adding a
+    // table can shift the fused op into a better-vectorized regime. We
+    // assert soft monotonicity (no >15% drop) plus strict monotonicity of
+    // the unfused sum.
+    let ds = gen_dlrm(400, 5);
+    let k = &Simulator::new(SimConfig::default()).kernel;
+    let mut rng = Rng::new(6);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(12);
+        let ids = rng.sample_indices(ds.len(), n + 1);
+        let base: Vec<_> = ids[..n].iter().map(|&i| &ds.tables[i]).collect();
+        let mut bigger = base.clone();
+        bigger.push(&ds.tables[ids[n]]);
+        let (f1, b1) = k.device_ms(&base);
+        let (f2, b2) = k.device_ms(&bigger);
+        assert!(f2 >= f1 * 0.85, "fwd dropped too much: {f1} -> {f2}");
+        assert!(b2 >= b1 * 0.85, "bwd dropped too much: {b1} -> {b2}");
+        let sum1: f64 = base.iter().map(|t| k.fwd_ms(t)).sum();
+        let sum2: f64 = bigger.iter().map(|t| k.fwd_ms(t)).sum();
+        assert!(sum2 > sum1, "unfused sum must strictly grow");
+    }
+}
+
+#[test]
+fn prop_features_finite_and_bounded() {
+    type Gen = fn(usize, u64) -> dreamshard::tables::Dataset;
+    for (seed, gen) in [(7u64, gen_dlrm as Gen), (8, gen_prod as Gen)] {
+        let ds = gen(856, seed);
+        for t in &ds.tables {
+            let f = t.features();
+            assert_eq!(f.len(), NUM_FEATURES);
+            for (i, &x) in f.iter().enumerate() {
+                assert!(x.is_finite() && (-1.0..=60.0).contains(&x), "feature {i} = {x}");
+            }
+            let reuse = t.reuse_factor();
+            assert!((0.0..=1.0).contains(&reuse));
+        }
+    }
+}
+
+#[test]
+fn prop_train_test_pools_never_leak() {
+    for seed in 0..20u64 {
+        let ds = gen_dlrm(300, seed);
+        let (tr, te) = split_pools(&ds, seed * 13 + 1);
+        let tr_set: std::collections::HashSet<_> = tr.iter().collect();
+        let tasks = sample_tasks(&te, 20, 4, 5, seed * 7 + 2);
+        for task in tasks {
+            assert!(task.table_ids.iter().all(|id| !tr_set.contains(id)), "test task uses train table");
+        }
+    }
+}
+
+#[test]
+fn prop_comm_monotone_in_added_volume() {
+    let sim = Simulator::new(SimConfig::default());
+    let mut rng = Rng::new(9);
+    for _ in 0..CASES {
+        let d = 2 + rng.below(7);
+        let mut dims: Vec<f64> = (0..d).map(|_| 16.0 + rng.below(512) as f64).collect();
+        let base: f64 = sim.comm.all_to_all_ms(&dims).iter().cloned().fold(0.0, f64::max);
+        let i = rng.below(d);
+        dims[i] += 64.0;
+        let more: f64 = sim.comm.all_to_all_ms(&dims).iter().cloned().fold(0.0, f64::max);
+        assert!(more >= base * 0.999, "adding volume reduced max comm: {base} -> {more}");
+    }
+}
+
+#[test]
+fn prop_expert_greedy_balances_its_own_cost_metric() {
+    // The invariant of greedy load balancing: max load <= min load + the
+    // largest single item (classic LPT bound witness).
+    let ds = gen_prod(856, 3);
+    let (pool, _) = split_pools(&ds, 4);
+    let sim = Simulator::new(SimConfig::v100());
+    let mut rng = Rng::new(10);
+    for case in 0..CASES {
+        let task = sample_tasks(&pool, 20 + rng.below(40), 4, 1, 300 + case as u64).remove(0);
+        for e in ALL_EXPERTS {
+            let p = greedy_placement(&ds, &task, &sim, e);
+            let cost = |tid: usize| {
+                let t = &ds.tables[task.table_ids[tid]];
+                match e {
+                    dreamshard::baselines::Expert::Size => t.size_gb() as f64,
+                    dreamshard::baselines::Expert::Dim => t.dim as f64,
+                    dreamshard::baselines::Expert::Lookup => t.dim as f64 * t.pooling as f64,
+                    dreamshard::baselines::Expert::SizeLookup => {
+                        t.dim as f64 * t.pooling as f64 * t.size_gb() as f64
+                    }
+                }
+            };
+            let mut loads = vec![0.0f64; task.n_devices];
+            let mut max_item = 0.0f64;
+            for (i, &d) in p.iter().enumerate() {
+                loads[d] += cost(i);
+                max_item = max_item.max(cost(i));
+            }
+            let max = loads.iter().cloned().fold(0.0, f64::max);
+            let min = loads.iter().cloned().fold(f64::MAX, f64::min);
+            assert!(max <= min + max_item + 1e-9, "{e:?}: loads {loads:?} item {max_item}");
+        }
+    }
+}

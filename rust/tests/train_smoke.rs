@@ -1,0 +1,86 @@
+//! End-to-end integration: train DreamShard for a couple of iterations on
+//! tiny tasks through the real PJRT artifacts, then check that inference
+//! produces legal placements and that learning actually moves the needle
+//! versus an untrained policy.
+
+use dreamshard::coordinator::{evaluate_policy, DreamShard, RnnBaseline, TrainCfg};
+use dreamshard::runtime::Runtime;
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
+use dreamshard::util::Rng;
+
+fn runtime() -> Runtime {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::open(dir).expect("artifacts missing — run `make artifacts` first")
+}
+
+#[test]
+fn trains_and_places() {
+    let rt = runtime();
+    let ds = gen_dlrm(120, 0);
+    let (pool_tr, pool_te) = split_pools(&ds, 1);
+    let train = sample_tasks(&pool_tr, 10, 4, 4, 2);
+    let test = sample_tasks(&pool_te, 10, 4, 4, 3);
+    let sim = Simulator::new(SimConfig::default());
+    let cfg = TrainCfg {
+        n_iterations: 2,
+        n_collect: 4,
+        n_cost: 30,
+        n_rl: 3,
+        n_episode: 6,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(7);
+    let mut agent = DreamShard::new(&rt, 4, cfg, &mut rng).unwrap();
+
+    let before = evaluate_policy(&agent, &rt, &sim, &ds, &test).unwrap();
+    agent.train(&rt, &sim, &ds, &train, &mut rng).unwrap();
+    let after = evaluate_policy(&agent, &rt, &sim, &ds, &test).unwrap();
+
+    assert_eq!(agent.log.len(), 2);
+    assert!(agent.buffer.len() >= 16, "buffer got {} samples", agent.buffer.len());
+    // placements are legal device ids and complete
+    let p = agent.place(&rt, &sim, &ds, &test[0]).unwrap();
+    assert_eq!(p.len(), 10);
+    assert!(p.iter().all(|&d| d < 4));
+    // training should not make things dramatically worse; usually better
+    assert!(
+        after < before * 1.15,
+        "after-training cost {after:.2} way above untrained {before:.2}"
+    );
+    println!("untrained {before:.2} ms -> trained {after:.2} ms");
+}
+
+#[test]
+fn rnn_baseline_runs() {
+    let rt = runtime();
+    let ds = gen_dlrm(80, 1);
+    let (pool, _) = split_pools(&ds, 1);
+    let tasks = sample_tasks(&pool, 8, 4, 2, 5);
+    let sim = Simulator::new(SimConfig::default());
+    let mut rng = Rng::new(9);
+    let mut rnn = RnnBaseline::new(&rt, 4, &mut rng).unwrap();
+    rnn.train(&rt, &sim, &ds, &tasks, 2, &mut rng).unwrap();
+    let p = rnn.place(&rt, &sim, &ds, &tasks[0]).unwrap();
+    assert_eq!(p.len(), 8);
+    assert!(p.iter().all(|&d| d < 4));
+}
+
+#[test]
+fn generalizes_across_device_counts() {
+    // The paper's headline generalization: a policy trained at one device
+    // count runs unchanged at another (smaller) count via masking.
+    let rt = runtime();
+    let ds = gen_dlrm(80, 2);
+    let (pool, _) = split_pools(&ds, 1);
+    let sim = Simulator::new(SimConfig::default());
+    let mut rng = Rng::new(11);
+    let agent = DreamShard::new(&rt, 8, TrainCfg::default(), &mut rng).unwrap();
+    // untrained is fine here: we only check the mechanics of D-masking
+    let task2 = sample_tasks(&pool, 6, 2, 1, 4).remove(0);
+    let task8 = sample_tasks(&pool, 12, 8, 1, 5).remove(0);
+    for task in [&task2, &task8] {
+        let p = agent.place(&rt, &sim, &ds, task).unwrap();
+        assert!(p.iter().all(|&d| d < task.n_devices), "{p:?}");
+    }
+}
