@@ -19,7 +19,7 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
 }
 
 fn main() {
-    let rt = Runtime::open_default().expect("artifacts");
+    let rt = Runtime::open_default().expect("runtime");
     let mut rng = Rng::new(0);
     let var = Variant::for_devices(&rt, 4).unwrap();
     let cost = CostNet::new(&rt, &mut rng).unwrap();

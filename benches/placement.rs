@@ -8,7 +8,7 @@ use dreamshard::util::Rng;
 use std::time::Instant;
 
 fn main() {
-    let rt = Runtime::open_default().expect("artifacts missing — run `make artifacts`");
+    let rt = Runtime::open_default().expect("runtime");
     let mut rng = Rng::new(0);
     for (n, d) in [(10usize, 4usize), (50, 4), (100, 4), (200, 8)] {
         let suite = make_suite(Which::Dlrm, n, d, 2, 7);

@@ -2,9 +2,9 @@
 //! production-like tables onto 128 devices through the inference-only
 //! ultra artifact — the paper's Table-13 scenario as a library call.
 //!
-//!     make artifacts && cargo run --release --example cluster_plan
+//!     cargo run --release --example cluster_plan
 
-use anyhow::Result;
+use dreamshard::Result;
 
 use dreamshard::baselines::{greedy_placement, Expert};
 use dreamshard::coordinator::{DreamShard, TrainCfg, Variant};

@@ -11,7 +11,7 @@
 //!
 //!     make artifacts && cargo run --release --example dlrm_e2e
 
-use anyhow::Result;
+use dreamshard::Result;
 use std::io::Write;
 
 use dreamshard::baselines::{greedy_placement, random_placement, Expert};
@@ -84,7 +84,10 @@ fn dlrm_as_task(hash: &[u64]) -> (Dataset, Task) {
 fn main() -> Result<()> {
     let rt = Runtime::open_default()?;
     let hash = rt.manifest.dlrm_hash.clone();
-    anyhow::ensure!(!hash.is_empty(), "dlrm artifacts missing — run `make artifacts`");
+    dreamshard::ensure!(
+        !hash.is_empty(),
+        "the DLRM end-to-end example needs the XLA backend: run `make artifacts` and build with --features xla"
+    );
     let b = rt.manifest.consts["DLRM_B"] as usize;
     let nd = rt.manifest.consts["DLRM_NDENSE"] as usize;
     let pool = rt.manifest.consts["DLRM_POOL"] as usize;
@@ -129,15 +132,15 @@ fn main() -> Result<()> {
     for step in 0..steps {
         let (dense, idx, w, labels) = gen.next();
         let out = rt.run("dlrm_train", &[
-            TensorF32::from_vec(std::mem::take(&mut theta), &[n_params]).literal(),
-            TensorF32::from_vec(std::mem::take(&mut m), &[n_params]).literal(),
-            TensorF32::from_vec(std::mem::take(&mut v), &[n_params]).literal(),
-            TensorF32::scalar1((step + 1) as f32).literal(),
-            TensorF32::scalar1(2e-3).literal(),
-            dense.literal(),
-            idx.literal(),
-            w.literal(),
-            labels.literal(),
+            TensorF32::from_vec(std::mem::take(&mut theta), &[n_params]).into_value(),
+            TensorF32::from_vec(std::mem::take(&mut m), &[n_params]).into_value(),
+            TensorF32::from_vec(std::mem::take(&mut v), &[n_params]).into_value(),
+            TensorF32::scalar1((step + 1) as f32).into_value(),
+            TensorF32::scalar1(2e-3).into_value(),
+            dense.value(),
+            idx.value(),
+            w.value(),
+            labels.value(),
         ])?;
         theta = to_f32_vec(&out[0], n_params)?;
         m = to_f32_vec(&out[1], n_params)?;
@@ -155,7 +158,7 @@ fn main() -> Result<()> {
     let head: f32 = curve[..20.min(curve.len())].iter().sum::<f32>() / 20.0_f32.min(curve.len() as f32);
     let tail: f32 = curve[curve.len().saturating_sub(20)..].iter().sum::<f32>() / 20.0_f32.min(curve.len() as f32);
     println!("loss: first-20 avg {head:.4} -> last-20 avg {tail:.4}");
-    anyhow::ensure!(tail < head, "DLRM loss did not decrease");
+    dreamshard::ensure!(tail < head, "DLRM loss did not decrease");
 
     std::fs::create_dir_all("bench_out")?;
     let mut f = std::fs::File::create("bench_out/dlrm_e2e_loss.csv")?;

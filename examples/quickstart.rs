@@ -1,7 +1,10 @@
 //! Quickstart: train DreamShard on small DLRM tasks, place a task with
 //! unseen tables, and compare against the expert baselines.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!
+//! Runs on the pure-Rust reference backend by default; `make artifacts`
+//! plus `--features xla` switches to the PJRT/XLA backend.
 
 use dreamshard::baselines::{greedy_placement, random_placement, ALL_EXPERTS};
 use dreamshard::coordinator::{DreamShard, TrainCfg};
@@ -10,8 +13,8 @@ use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
 use dreamshard::util::Rng;
 
-fn main() -> anyhow::Result<()> {
-    // 1. open the AOT artifacts (python ran once at build time, never again)
+fn main() -> dreamshard::Result<()> {
+    // 1. open the runtime (reference backend unless XLA artifacts exist)
     let rt = Runtime::open_default()?;
 
     // 2. a synthetic DLRM table pool and disjoint train/test tasks

@@ -2,7 +2,7 @@
 //! train/test task pools + simulator), agent training, evaluation rows,
 //! and CSV/console output helpers.
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::io::Write;
 use std::path::PathBuf;
 
@@ -124,7 +124,7 @@ pub fn best_expert(suite: &Suite, tasks: &[Task]) -> (Expert, f64) {
     ALL_EXPERTS
         .into_iter()
         .map(|e| (e, eval_expert(suite, tasks, e).0))
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
         .unwrap()
 }
 

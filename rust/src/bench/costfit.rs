@@ -3,7 +3,7 @@
 //! random placements, train a cost network supervised, report held-out
 //! MSE (sum of cost-feature MSE and overall-cost MSE, as in Eq. 1).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::common::{Ctx, Suite};
 use crate::baselines::random_placement;
@@ -46,7 +46,7 @@ pub fn collect_cost_dataset(
             let mut feats = TensorF32::zeros(&[1, d, s, NUM_FEATURES]);
             let mut mask = TensorF32::zeros(&[1, d, s]);
             let mut dmask = TensorF32::zeros(&[1, d]);
-            st.fill_feats(0, d, s, &mut feats, &mut mask, &mut dmask);
+            st.fill_feats(0, d, s, &mut feats, &mut mask, &mut dmask)?;
             let mut q = vec![0.0f32; d * 3];
             for (dev, qd) in eval.q.iter().enumerate() {
                 q[dev * 3..dev * 3 + 3].copy_from_slice(qd);

@@ -3,7 +3,7 @@
 //! max/sum/mean for device representations (Fig. 14) by held-out MSE at
 //! several training-set sizes, using the offline fitting protocol.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::common::{make_suite, Ctx, Which};
 use super::costfit::{collect_cost_dataset, fit_cost_net_red, test_mse};

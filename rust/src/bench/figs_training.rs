@@ -5,7 +5,7 @@
 //! Fig. 8 — estimated vs real MDP (training curves, hardware budget,
 //!          inference time vs number of tables).
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::time::Instant;
 
 use super::common::{eval_agent, make_suite, train_agent, Ctx, Which};

@@ -14,7 +14,8 @@ pub mod table13;
 pub mod table2;
 pub mod table3;
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 use common::Ctx;
 
 /// All experiment ids, in a sensible execution order (cheap ones first).

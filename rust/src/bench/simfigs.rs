@@ -3,7 +3,7 @@
 //! ratio), Fig. 12 (fusion speedup scatter), Figs. 15-18 (dataset
 //! statistics), and Fig. 1 / Figs. 23-28 (placement traces).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::common::{make_suite, Ctx, Which};
 use crate::baselines::{greedy_placement, random_placement, ALL_EXPERTS};

@@ -2,7 +2,7 @@
 //! random / four greedy experts / RNN-based RL / DreamShard, on train and
 //! test tasks, across dataset x table-count x device-count configs.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::common::{
     best_expert, eval_agent, eval_expert, eval_random, make_suite, seeded_agent_eval, train_agent,

@@ -5,7 +5,7 @@
 //! Training throughput improvement is derived from the embedding-cost
 //! share of the step (48% compute / 65% comm, section 1).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::common::{make_suite, train_agent, Ctx, Which};
 use crate::baselines::{greedy_placement, random_placement, ALL_EXPERTS};

@@ -3,7 +3,7 @@
 //! with a different number of tables and/or devices, with no fine-tuning,
 //! and compare against a model trained directly on the target.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::common::{eval_agent, make_suite, train_agent, Ctx, Suite, Which};
 use crate::coordinator::{DreamShard, Variant};

@@ -5,7 +5,7 @@
 //! Table 12: cost-network test MSE with each feature removed (Prod data,
 //! offline supervised protocol).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::common::{make_suite, Ctx, Which};
 use super::costfit::{collect_cost_dataset, fit_cost_net, test_mse};

@@ -1,12 +1,12 @@
 //! The cost-network wrapper: owns the flat parameter/optimizer vectors
 //! and drives the `cost_fwd` / `cost_train` / `table_cost` artifacts.
 
-use anyhow::{anyhow, Result};
-
 use super::variant::Variant;
+use crate::err;
 use crate::mdp::PlacementState;
 use crate::runtime::{to_f32_vec, Runtime, TensorF32};
 use crate::tables::NUM_FEATURES;
+use crate::util::error::Result;
 use crate::util::Rng;
 
 /// Cost-network state: parameters + Adam moments + ablation masks.
@@ -56,7 +56,7 @@ impl CostNet {
             None => var
                 .cost_train
                 .clone()
-                .ok_or_else(|| anyhow!("variant d{} has no cost_train artifact", var.d)),
+                .ok_or_else(|| err!("variant d{} has no cost_train artifact", var.d)),
             Some((tr, dr)) => Ok(format!("cost_train_red_{tr}_{dr}_d{}s{}", var.d, var.s)),
         }
     }
@@ -74,7 +74,7 @@ impl CostNet {
         let mut mask = TensorF32::zeros(&[e, d, s]);
         let mut dmask = TensorF32::zeros(&[e, d]);
         for (lane, st) in states.iter().enumerate() {
-            st.fill_feats(lane, d, s, &mut feats, &mut mask, &mut dmask);
+            st.fill_feats(lane, d, s, &mut feats, &mut mask, &mut dmask)?;
         }
         self.predict_tensors(rt, var, &feats, &mask, &dmask, states.len())
     }
@@ -93,11 +93,11 @@ impl CostNet {
         let theta = TensorF32::from_vec(self.theta.clone(), &[self.theta.len()]);
         let fmask = TensorF32::from_vec(self.fmask.clone(), &[NUM_FEATURES]);
         let out = rt.run(&self.fwd_name(var), &[
-            theta.literal(),
-            feats.literal(),
-            mask.literal(),
-            dmask.literal(),
-            fmask.literal(),
+            theta.value(),
+            feats.value(),
+            mask.value(),
+            dmask.value(),
+            fmask.value(),
         ])?;
         let q = to_f32_vec(&out[0], e * d * 3)?;
         let cost = to_f32_vec(&out[1], e)?;
@@ -125,7 +125,7 @@ impl CostNet {
             for (i, f) in chunk.iter().enumerate() {
                 t.set_row(&[i, 0], f);
             }
-            let res = rt.run("table_cost", &[theta.literal(), t.literal(), fmask.literal()])?;
+            let res = rt.run("table_cost", &[theta.value(), t.value(), fmask.value()])?;
             let v = to_f32_vec(&res[0], n_cap)?;
             out.extend_from_slice(&v[..chunk.len()]);
         }
@@ -148,17 +148,17 @@ impl CostNet {
         self.t_step += 1.0;
         let n = self.theta.len();
         let out = rt.run(&self.train_name(var)?, &[
-            TensorF32::from_vec(std::mem::take(&mut self.theta), &[n]).literal(),
-            TensorF32::from_vec(std::mem::take(&mut self.m), &[n]).literal(),
-            TensorF32::from_vec(std::mem::take(&mut self.v), &[n]).literal(),
-            TensorF32::scalar1(self.t_step).literal(),
-            TensorF32::scalar1(lr).literal(),
-            feats.literal(),
-            mask.literal(),
-            dmask.literal(),
-            q_tgt.literal(),
-            c_tgt.literal(),
-            TensorF32::from_vec(self.fmask.clone(), &[NUM_FEATURES]).literal(),
+            TensorF32::from_vec(std::mem::take(&mut self.theta), &[n]).into_value(),
+            TensorF32::from_vec(std::mem::take(&mut self.m), &[n]).into_value(),
+            TensorF32::from_vec(std::mem::take(&mut self.v), &[n]).into_value(),
+            TensorF32::scalar1(self.t_step).into_value(),
+            TensorF32::scalar1(lr).into_value(),
+            feats.value(),
+            mask.value(),
+            dmask.value(),
+            q_tgt.value(),
+            c_tgt.value(),
+            TensorF32::from_vec(self.fmask.clone(), &[NUM_FEATURES]).into_value(),
         ])?;
         self.theta = to_f32_vec(&out[0], n)?;
         self.m = to_f32_vec(&out[1], n)?;

@@ -2,11 +2,10 @@
 //! and drives `policy_fwd` / `policy_train_*`. Softmax + action sampling
 //! happen here in rust (the artifact returns masked logits).
 
-use anyhow::Result;
-
 use super::variant::Variant;
 use crate::runtime::{to_f32_vec, Runtime, TensorF32, TensorI32};
 use crate::tables::NUM_FEATURES;
+use crate::util::error::Result;
 use crate::util::Rng;
 
 /// One recorded MDP step, padded to a variant's (D, S).
@@ -66,14 +65,14 @@ impl PolicyNet {
     ) -> Result<Vec<Vec<f32>>> {
         let (e, d) = (var.e, var.d);
         let out = rt.run(&var.policy_fwd, &[
-            TensorF32::from_vec(self.phi.clone(), &[self.phi.len()]).literal(),
-            feats.literal(),
-            mask.literal(),
-            q.literal(),
-            cur.literal(),
-            legal.literal(),
-            TensorF32::from_vec(self.fmask.clone(), &[NUM_FEATURES]).literal(),
-            TensorF32::from_vec(self.qscale.clone(), &[3]).literal(),
+            TensorF32::from_vec(self.phi.clone(), &[self.phi.len()]).into_value(),
+            feats.value(),
+            mask.value(),
+            q.value(),
+            cur.value(),
+            legal.value(),
+            TensorF32::from_vec(self.fmask.clone(), &[NUM_FEATURES]).into_value(),
+            TensorF32::from_vec(self.qscale.clone(), &[3]).into_value(),
         ])?;
         let flat = to_f32_vec(&out[0], e * d)?;
         Ok((0..n).map(|lane| flat[lane * d..(lane + 1) * d].to_vec()).collect())
@@ -117,21 +116,21 @@ impl PolicyNet {
             self.t_step += 1.0;
             let n = self.phi.len();
             let out = rt.run(&name, &[
-                TensorF32::from_vec(std::mem::take(&mut self.phi), &[n]).literal(),
-                TensorF32::from_vec(std::mem::take(&mut self.m), &[n]).literal(),
-                TensorF32::from_vec(std::mem::take(&mut self.v), &[n]).literal(),
-                TensorF32::scalar1(self.t_step).literal(),
-                TensorF32::scalar1(lr).literal(),
-                feats.literal(),
-                mask.literal(),
-                q.literal(),
-                cur.literal(),
-                legal.literal(),
-                action.literal(),
-                advt.literal(),
-                smask.literal(),
-                TensorF32::from_vec(self.fmask.clone(), &[NUM_FEATURES]).literal(),
-                TensorF32::from_vec(self.qscale.clone(), &[3]).literal(),
+                TensorF32::from_vec(std::mem::take(&mut self.phi), &[n]).into_value(),
+                TensorF32::from_vec(std::mem::take(&mut self.m), &[n]).into_value(),
+                TensorF32::from_vec(std::mem::take(&mut self.v), &[n]).into_value(),
+                TensorF32::scalar1(self.t_step).into_value(),
+                TensorF32::scalar1(lr).into_value(),
+                feats.value(),
+                mask.value(),
+                q.value(),
+                cur.value(),
+                legal.value(),
+                action.value(),
+                advt.value(),
+                smask.value(),
+                TensorF32::from_vec(self.fmask.clone(), &[NUM_FEATURES]).into_value(),
+                TensorF32::from_vec(self.qscale.clone(), &[3]).into_value(),
             ])?;
             self.phi = to_f32_vec(&out[0], n)?;
             self.m = to_f32_vec(&out[1], n)?;
@@ -152,12 +151,13 @@ pub fn select_action(logits: &[f32], legal: &[bool], sample: bool, rng: &mut Rng
         .map(|(&x, _)| x)
         .fold(f32::NEG_INFINITY, f32::max);
     if !sample {
+        // total_cmp: NaN logits (a diverged network) must not panic here
         return logits
             .iter()
             .take(legal.len())
             .enumerate()
             .filter(|&(i, _)| legal[i])
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap_or(0);
     }

@@ -4,12 +4,12 @@
 //! with **no cost network**: rewards come from real (simulated) execution,
 //! which is what makes it slow and unstable on harder tasks (Table 1).
 
-use anyhow::Result;
-
+use crate::err;
 use crate::mdp::{heuristic_order, PlacementState};
 use crate::runtime::{to_f32_vec, Runtime, TensorF32, TensorI32};
 use crate::sim::Simulator;
 use crate::tables::{Dataset, Task, NUM_FEATURES};
+use crate::util::error::{Context, Result};
 use crate::util::Rng;
 
 /// RNN controller state for a fixed device count `D`.
@@ -32,7 +32,7 @@ impl RnnBaseline {
         let d = [2usize, 4, 8]
             .into_iter()
             .find(|&d| d == n_devices)
-            .ok_or_else(|| anyhow::anyhow!("no RNN artifact for {n_devices} devices"))?;
+            .ok_or_else(|| err!("no RNN artifact for {n_devices} devices"))?;
         let psi = rt.init_params(&format!("rnn_d{d}"), rng)?;
         let n = psi.len();
         let t_cap = rt.manifest.consts.get("T_RNN").copied().unwrap_or(256) as usize;
@@ -65,11 +65,11 @@ impl RnnBaseline {
     fn logits(&self, rt: &Runtime, feats: &TensorF32, tmask: &TensorF32) -> Result<Vec<f32>> {
         let legal = TensorF32::ones(&[self.e_fwd, self.t_cap, self.d]);
         let out = rt.run(&format!("rnn_fwd_d{}", self.d), &[
-            TensorF32::from_vec(self.psi.clone(), &[self.psi.len()]).literal(),
-            feats.literal(),
-            tmask.literal(),
-            legal.literal(),
-            TensorF32::ones(&[NUM_FEATURES]).literal(),
+            TensorF32::from_vec(self.psi.clone(), &[self.psi.len()]).into_value(),
+            feats.value(),
+            tmask.value(),
+            legal.value(),
+            TensorF32::ones(&[NUM_FEATURES]).value(),
         ])?;
         to_f32_vec(&out[0], self.e_fwd * self.t_cap * self.d)
     }
@@ -106,7 +106,14 @@ impl RnnBaseline {
                 let lg = st.legal(sim);
                 let base = (lane * self.t_cap + t) * self.d;
                 let step_logits = &logits[base..base + self.d];
-                let a = super::policy::select_action(step_logits, &lg, sample, rng);
+                // dead end (memory cap + slot cap exhausted everywhere):
+                // fall back to the least-loaded device with a free slot
+                let a = if lg.iter().any(|&ok| ok) {
+                    super::policy::select_action(step_logits, &lg, sample, rng)
+                } else {
+                    st.fallback_device()
+                        .with_context(|| format!("no device can take table {t}"))?
+                };
                 if lane < self.e_train {
                     for (dev, &ok) in lg.iter().enumerate() {
                         legal_rec.set(&[lane, t, dev], if ok { 1.0 } else { 0.0 });
@@ -151,17 +158,17 @@ impl RnnBaseline {
             self.t_step += 1.0;
             let np = self.psi.len();
             let out = rt.run(&format!("rnn_train_d{}", self.d), &[
-                TensorF32::from_vec(std::mem::take(&mut self.psi), &[np]).literal(),
-                TensorF32::from_vec(std::mem::take(&mut self.m), &[np]).literal(),
-                TensorF32::from_vec(std::mem::take(&mut self.v), &[np]).literal(),
-                TensorF32::scalar1(self.t_step).literal(),
-                TensorF32::scalar1(self.lr).literal(),
-                tf.literal(),
-                tm.literal(),
-                legal.literal(),
-                actions.literal(),
-                adv.literal(),
-                TensorF32::ones(&[NUM_FEATURES]).literal(),
+                TensorF32::from_vec(std::mem::take(&mut self.psi), &[np]).into_value(),
+                TensorF32::from_vec(std::mem::take(&mut self.m), &[np]).into_value(),
+                TensorF32::from_vec(std::mem::take(&mut self.v), &[np]).into_value(),
+                TensorF32::scalar1(self.t_step).into_value(),
+                TensorF32::scalar1(self.lr).into_value(),
+                tf.value(),
+                tm.value(),
+                legal.value(),
+                actions.value(),
+                adv.value(),
+                TensorF32::ones(&[NUM_FEATURES]).value(),
             ])?;
             self.psi = to_f32_vec(&out[0], np)?;
             self.m = to_f32_vec(&out[1], np)?;

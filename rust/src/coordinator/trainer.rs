@@ -6,7 +6,6 @@
 //! against the **estimated** MDP — states and rewards from the cost
 //! network, zero simulator/hardware calls (Eq. 2).
 
-use anyhow::Result;
 use std::time::Instant;
 
 use super::buffer::{CostSample, ReplayBuffer};
@@ -17,6 +16,7 @@ use crate::mdp::PlacementState;
 use crate::runtime::{Runtime, TensorF32};
 use crate::sim::Simulator;
 use crate::tables::{Dataset, Task, NUM_FEATURES};
+use crate::util::error::{Context, Result};
 use crate::util::Rng;
 
 /// Training hyperparameters (paper defaults, section B.5).
@@ -123,7 +123,8 @@ impl DreamShard {
             task.table_ids.iter().map(|&tid| ds.tables[tid].features()).collect();
         let costs = self.cost.predict_table_costs(rt, &feats)?;
         let mut order: Vec<usize> = (0..task.n_tables()).collect();
-        order.sort_by(|&a, &b| costs[b].partial_cmp(&costs[a]).unwrap());
+        // total_cmp: an early (or diverged) cost net may emit NaN
+        order.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]));
         Ok(order)
     }
 
@@ -183,7 +184,7 @@ impl DreamShard {
             let mut mask = TensorF32::zeros(&[e, d, s]);
             let mut dmask = TensorF32::zeros(&[e, d]);
             for (lane, st) in states.iter().enumerate() {
-                st.fill_feats(lane, d, s, &mut feats, &mut mask, &mut dmask);
+                st.fill_feats(lane, d, s, &mut feats, &mut mask, &mut dmask)?;
             }
             let mut cur = TensorF32::zeros(&[e, f]);
             let mut legal_t = TensorF32::zeros(&[e, d]);
@@ -203,16 +204,16 @@ impl DreamShard {
             let logits = if let Some((_, step_name)) = &fused {
                 let out = rt.run(step_name, &[
                     TensorF32::from_vec(self.cost.theta.clone(), &[self.cost.theta.len()])
-                        .literal(),
+                        .into_value(),
                     TensorF32::from_vec(self.policy.phi.clone(), &[self.policy.phi.len()])
-                        .literal(),
-                    feats.literal(),
-                    mask.literal(),
-                    dmask.literal(),
-                    cur.literal(),
-                    legal_t.literal(),
-                    TensorF32::from_vec(self.cost.fmask.clone(), &[f]).literal(),
-                    TensorF32::from_vec(self.policy.qscale.clone(), &[3]).literal(),
+                        .into_value(),
+                    feats.value(),
+                    mask.value(),
+                    dmask.value(),
+                    cur.value(),
+                    legal_t.value(),
+                    TensorF32::from_vec(self.cost.fmask.clone(), &[f]).into_value(),
+                    TensorF32::from_vec(self.policy.qscale.clone(), &[3]).into_value(),
                 ])?;
                 let logits_flat = crate::runtime::to_f32_vec(&out[0], e * d)?;
                 q.data = crate::runtime::to_f32_vec(&out[1], e * d * 3)?;
@@ -227,8 +228,18 @@ impl DreamShard {
                 self.policy.logits(rt, var, &feats, &mask, &q, &cur, &legal_t, n)?
             };
             for lane in 0..n {
-                let a = select_action(&logits[lane], &legal[lane], sample, rng);
-                if record {
+                // dead end (memory cap + slot cap exhausted everywhere):
+                // fall back to the least-loaded device with a free slot,
+                // and skip recording — the step carries no decision
+                let any_legal = legal[lane].iter().any(|&ok| ok);
+                let a = if any_legal {
+                    select_action(&logits[lane], &legal[lane], sample, rng)
+                } else {
+                    states[lane]
+                        .fallback_device()
+                        .with_context(|| format!("lane {lane}: no device can take the table"))?
+                };
+                if record && any_legal {
                     let base_f = lane * d * s * f;
                     let base_m = lane * d * s;
                     let base_q = lane * d * 3;
@@ -271,7 +282,7 @@ impl DreamShard {
         order: &[usize],
         placement: &[usize],
         sim: &Simulator,
-    ) -> f64 {
+    ) -> Result<f64> {
         let (d, s) = (self.var.d, self.var.s);
         let f = NUM_FEATURES;
         let mut final_cost = 0.0;
@@ -286,7 +297,7 @@ impl DreamShard {
             let mut feats = TensorF32::zeros(&[1, d, s, f]);
             let mut mask = TensorF32::zeros(&[1, d, s]);
             let mut dmask = TensorF32::zeros(&[1, d]);
-            st.fill_feats(0, d, s, &mut feats, &mut mask, &mut dmask);
+            st.fill_feats(0, d, s, &mut feats, &mut mask, &mut dmask)?;
             let mut q = vec![0.0f32; d * 3];
             for (dev, qd) in eval.q.iter().enumerate() {
                 q[dev * 3..dev * 3 + 3].copy_from_slice(qd);
@@ -302,7 +313,7 @@ impl DreamShard {
                 final_cost = eval.latency;
             }
         }
-        final_cost
+        Ok(final_cost)
     }
 
     /// Algorithm 1: full training loop over the given training tasks.
@@ -343,7 +354,7 @@ impl DreamShard {
                     .run_episodes(rt, sim, ds, task, 1, true, false, rng)?
                     .remove(0);
                 let order = self.order_tables(rt, ds, task)?;
-                let cost = self.collect_into_buffer(ds, task, &order, &ep.placement, sim);
+                let cost = self.collect_into_buffer(ds, task, &order, &ep.placement, sim)?;
                 collected.push(cost);
             }
             // (2) cost-network updates (no simulator)

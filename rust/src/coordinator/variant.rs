@@ -4,9 +4,9 @@
 //! masked out — that masking is exactly what makes the networks
 //! generalize across device counts).
 
-use anyhow::{anyhow, Result};
-
+use crate::err;
 use crate::runtime::Runtime;
+use crate::util::error::Result;
 
 /// Resolved artifact names + baked dims for one (D, S) variant.
 #[derive(Clone, Debug)]
@@ -43,7 +43,7 @@ impl Variant {
         let (d, s) = candidates
             .into_iter()
             .find(|&(d, _)| d >= n_devices)
-            .ok_or_else(|| anyhow!("no artifact variant for {n_devices} devices"))?;
+            .ok_or_else(|| err!("no artifact variant for {n_devices} devices"))?;
         Self::exact(rt, d, s)
     }
 
@@ -52,7 +52,7 @@ impl Variant {
         let cost_fwd = format!("cost_fwd_d{d}s{s}");
         let policy_fwd = format!("policy_fwd_d{d}s{s}");
         if !rt.manifest.artifacts.contains_key(&cost_fwd) {
-            return Err(anyhow!("artifact {cost_fwd} missing"));
+            return Err(err!("artifact {cost_fwd} missing"));
         }
         let e = rt.manifest.artifact_meta(&cost_fwd, "E").unwrap_or(16) as usize;
         let cost_train_name = format!("cost_train_d{d}s{s}");
@@ -100,14 +100,11 @@ impl Variant {
 mod tests {
     use super::*;
 
-    fn runtime() -> Option<Runtime> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        dir.join("manifest.txt").exists().then(|| Runtime::open(dir).unwrap())
-    }
-
+    // the reference backend serves the same variant grid the AOT
+    // artifacts bake, so these run without `make artifacts`
     #[test]
     fn selects_smallest_fitting() {
-        let Some(rt) = runtime() else { return };
+        let rt = Runtime::reference();
         assert_eq!(Variant::for_devices(&rt, 2).unwrap().d, 2);
         assert_eq!(Variant::for_devices(&rt, 3).unwrap().d, 4);
         assert_eq!(Variant::for_devices(&rt, 4).unwrap().d, 4);
@@ -118,7 +115,7 @@ mod tests {
 
     #[test]
     fn ultra_variant_is_inference_only() {
-        let Some(rt) = runtime() else { return };
+        let rt = Runtime::reference();
         let v = Variant::for_devices(&rt, 128).unwrap();
         assert!(v.cost_train.is_none());
         assert!(v.policy_train.is_empty());
@@ -126,11 +123,21 @@ mod tests {
 
     #[test]
     fn policy_train_capacity_selection() {
-        let Some(rt) = runtime() else { return };
+        let rt = Runtime::reference();
         let v = Variant::for_devices(&rt, 4).unwrap();
         assert_eq!(v.policy_train_for(100).unwrap().0, 512);
         assert_eq!(v.policy_train_for(513).unwrap().0, 2048);
         // oversized falls back to the largest (caller chunks)
         assert_eq!(v.policy_train_for(10_000).unwrap().0, 2048);
+    }
+
+    #[test]
+    fn fused_step_selection() {
+        let rt = Runtime::reference();
+        let v = Variant::for_devices(&rt, 4).unwrap();
+        assert_eq!(v.mdp_step_for(1).unwrap().0, 1);
+        assert_eq!(v.mdp_step_for(10).unwrap().0, 16);
+        // oversized falls back to the largest (caller clamps lanes)
+        assert_eq!(v.mdp_step_for(64).unwrap().0, 16);
     }
 }

@@ -12,8 +12,24 @@
 //! * **Layer 1** (`python/compile/kernels/`) — Pallas kernels for the
 //!   embedding-bag hot spot and the sum/max reductions.
 //!
-//! Python never runs at placement time: `runtime` loads the HLO artifacts
-//! via the PJRT C API and the rust coordinator drives them.
+//! Python never runs at placement time: the coordinator drives the
+//! networks through the [`runtime::Backend`] seam, which has two
+//! implementations:
+//!
+//! * [`runtime::ReferenceBackend`] (**default**) — a pure-Rust,
+//!   dependency-free evaluator of the cost / policy / RNN networks
+//!   (forward *and* backward passes, mirroring `python/compile/model.py`
+//!   to the operation). `cargo build && cargo test` work from a bare
+//!   toolchain: no `make artifacts`, no native libraries.
+//! * `XlaBackend` (`--features xla`) — loads the `make artifacts` HLO
+//!   text via the PJRT C API and JIT-compiles it. Requires a real xla-rs
+//!   checkout in place of the in-tree `xla-stub` crate plus its native
+//!   `libxla_extension`; `make artifacts` is only ever needed for this
+//!   backend (and for the DLRM end-to-end example, whose embedding-bag
+//!   training step is XLA-only).
+//!
+//! [`runtime::Runtime::open_default`] picks the backend: artifacts present
+//! *and* the `xla` feature enabled → XLA; otherwise the reference backend.
 
 pub mod baselines;
 pub mod bench;
@@ -23,3 +39,5 @@ pub mod runtime;
 pub mod sim;
 pub mod tables;
 pub mod util;
+
+pub use util::error::{Context, Error, Result};

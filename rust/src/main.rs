@@ -8,7 +8,7 @@
 //!
 //! (dependency-light by design: flags are parsed by hand, no clap)
 
-use anyhow::{bail, Context, Result};
+use dreamshard::{bail, Context, Result};
 
 use dreamshard::bench::{self, common::Ctx};
 use dreamshard::coordinator::{DreamShard, TrainCfg};
@@ -113,6 +113,7 @@ fn main() -> Result<()> {
         }
         "info" => {
             let rt = Runtime::open_default()?;
+            println!("backend: {}", rt.backend_name());
             println!("artifacts: {}", rt.manifest.artifacts.len());
             let mut names: Vec<&String> = rt.manifest.artifacts.keys().collect();
             names.sort();

@@ -8,8 +8,10 @@
 //! and the **real** MDP (simulator-backed, used for data collection, the
 //! RNN baseline, and the Fig. 8 with/without-estimation comparison).
 
+use crate::bail;
 use crate::sim::Simulator;
 use crate::tables::{Dataset, Task, NUM_FEATURES};
+use crate::util::error::Result;
 
 /// One in-flight placement episode.
 #[derive(Clone, Debug)]
@@ -51,6 +53,31 @@ impl<'a> PlacementState<'a> {
         self.order[self.step]
     }
 
+    /// Whether any device can legally take the current table. `legal()`
+    /// can be all-false (memory cap + slot cap): callers must either
+    /// check this or use [`PlacementState::fallback_device`].
+    pub fn any_legal(&self, sim: &Simulator) -> bool {
+        self.legal(sim).iter().any(|&ok| ok)
+    }
+
+    /// Dead-end fallback: the least-loaded (by memory) device that still
+    /// has a free slot, ignoring the memory cap — the resulting placement
+    /// may then exceed the cap, which the caller surfaces via the
+    /// simulator's memory accounting. `None` only when every device's
+    /// slots are full (no placement of this episode can be completed).
+    pub fn fallback_device(&self) -> Option<usize> {
+        let mem = |dev: usize| -> f64 {
+            let tables: Vec<&crate::tables::Table> = self.groups[dev]
+                .iter()
+                .map(|&i| &self.ds.tables[self.task.table_ids[i]])
+                .collect();
+            Simulator::mem_gb(&tables)
+        };
+        (0..self.task.n_devices)
+            .filter(|&d| self.groups[d].len() < self.max_slots)
+            .min_by(|&a, &b| mem(a).total_cmp(&mem(b)))
+    }
+
     /// Legal-action mask over devices: memory cap + free slot.
     pub fn legal(&self, sim: &Simulator) -> Vec<bool> {
         let t = &self.ds.tables[self.task.table_ids[self.current()]];
@@ -81,6 +108,10 @@ impl<'a> PlacementState<'a> {
     /// Fill one lane of a padded `[E, D, S, F]` feature batch (plus its
     /// `[E, D, S]` mask and `[E, D]` device mask) with this state.
     /// `d_cap`/`s_cap` are the artifact's baked dims (>= task dims).
+    ///
+    /// A device group larger than `s_cap` would silently produce wrong
+    /// features, so it is a debug assertion and a (propagated) error in
+    /// release builds — never a truncation.
     pub fn fill_feats(
         &self,
         lane: usize,
@@ -89,16 +120,29 @@ impl<'a> PlacementState<'a> {
         feats: &mut crate::runtime::TensorF32,
         mask: &mut crate::runtime::TensorF32,
         dmask: &mut crate::runtime::TensorF32,
-    ) {
+    ) -> Result<()> {
         assert!(self.task.n_devices <= d_cap);
         for d in 0..self.task.n_devices {
+            debug_assert!(
+                self.groups[d].len() <= s_cap,
+                "device {d} holds {} tables > slot cap {s_cap}",
+                self.groups[d].len()
+            );
+            if self.groups[d].len() > s_cap {
+                bail!(
+                    "device {d} holds {} tables, exceeding the slot cap {s_cap} \
+                     (placement built against a larger variant?)",
+                    self.groups[d].len()
+                );
+            }
             dmask.set(&[lane, d], 1.0);
-            for (s, &i) in self.groups[d].iter().enumerate().take(s_cap) {
+            for (s, &i) in self.groups[d].iter().enumerate() {
                 let f = self.ds.tables[self.task.table_ids[i]].features();
                 feats.set_row(&[lane, d, s, 0], &f);
                 mask.set(&[lane, d, s], 1.0);
             }
         }
+        Ok(())
     }
 
     /// Features of the table currently being placed.
@@ -120,7 +164,9 @@ pub fn heuristic_order(ds: &Dataset, task: &Task) -> Vec<usize> {
         let t = &ds.tables[task.table_ids[*i]];
         t.dim as f64 * t.pooling as f64
     };
-    order.sort_by(|a, b| key(b).partial_cmp(&key(a)).unwrap());
+    // total_cmp: a NaN feature (corrupt input table) must not panic the
+    // sort — NaNs order deterministically, the rest exactly as before
+    order.sort_by(|a, b| key(b).total_cmp(&key(a)));
     order
 }
 
@@ -171,6 +217,63 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(debug_assertions, should_panic)]
+    fn fill_feats_rejects_slot_overflow() {
+        let (ds, task, _) = setup();
+        let order = heuristic_order(&ds, &task);
+        let mut st = PlacementState::new(&ds, &task, order, 48);
+        for _ in 0..4 {
+            st.apply(0); // 4 tables on device 0
+        }
+        let mut feats = TensorF32::zeros(&[1, 4, 2, NUM_FEATURES]);
+        let mut mask = TensorF32::zeros(&[1, 4, 2]);
+        let mut dmask = TensorF32::zeros(&[1, 4]);
+        // s_cap = 2 < 4 held: debug builds assert, release builds error
+        let r = st.fill_feats(0, 4, 2, &mut feats, &mut mask, &mut dmask);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn dead_end_falls_back_to_least_loaded() {
+        let (ds, task, _) = setup();
+        // a memory cap so tiny that nothing is ever legal
+        let sim = Simulator::new(SimConfig { mem_cap_gb: 1e-6, ..SimConfig::default() });
+        let order = heuristic_order(&ds, &task);
+        let mut st = PlacementState::new(&ds, &task, order, 48);
+        let mut steps = 0;
+        while !st.done() {
+            assert!(!st.any_legal(&sim), "cap must forbid everything");
+            let d = st.fallback_device().expect("slots are plentiful");
+            st.apply(d);
+            steps += 1;
+        }
+        assert_eq!(steps, 20);
+        assert!(st.placement.iter().all(|&p| p != usize::MAX));
+        // slot-cap exhaustion is the only None case
+        let mut tiny = PlacementState::new(&ds, &task, heuristic_order(&ds, &task), 5);
+        for _ in 0..20 {
+            match tiny.fallback_device() {
+                Some(d) => tiny.apply(d),
+                None => break,
+            }
+        }
+        assert!(tiny.fallback_device().is_none(), "4 devices x 5 slots = 20 all full");
+        // and the fallback spread the load while slots lasted
+        assert!(tiny.groups.iter().all(|g| g.len() == 5));
+    }
+
+    #[test]
+    fn heuristic_order_survives_nan_features() {
+        let (mut ds, task, _) = setup();
+        let id = task.table_ids[3];
+        ds.tables[id].pooling = f32::NAN;
+        let order = heuristic_order(&ds, &task);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..20).collect::<Vec<_>>(), "still a permutation");
+    }
+
+    #[test]
     fn heuristic_order_is_descending() {
         let (ds, task, _) = setup();
         let order = heuristic_order(&ds, &task);
@@ -195,7 +298,7 @@ mod tests {
         let mut feats = TensorF32::zeros(&[e, d_cap, s_cap, NUM_FEATURES]);
         let mut mask = TensorF32::zeros(&[e, d_cap, s_cap]);
         let mut dmask = TensorF32::zeros(&[e, d_cap]);
-        st.fill_feats(1, d_cap, s_cap, &mut feats, &mut mask, &mut dmask);
+        st.fill_feats(1, d_cap, s_cap, &mut feats, &mut mask, &mut dmask).unwrap();
         // lane 0 untouched
         assert_eq!(mask.get(&[0, 1, 0]), 0.0);
         // lane 1: device 1 has 2 tables, device 0 has 1

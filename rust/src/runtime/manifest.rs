@@ -1,9 +1,11 @@
 //! Parser for the whitespace-separated `manifest.txt` emitted by
 //! `python -m compile.aot` (see that module's docstring for the grammar).
 
-use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
+
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
 
 /// One named parameter slice inside a network's flat parameter vector.
 #[derive(Clone, Debug)]
@@ -51,25 +53,25 @@ impl Manifest {
             let ctx = || format!("manifest line {}: {line}", lineno + 1);
             match kind {
                 "const" => {
-                    let k = it.next().ok_or_else(|| anyhow!(ctx()))?;
-                    let v: i64 = it.next().ok_or_else(|| anyhow!(ctx()))?.parse().with_context(ctx)?;
+                    let k = it.next().ok_or_else(|| err!(ctx()))?;
+                    let v: i64 = it.next().ok_or_else(|| err!(ctx()))?.parse().with_context(ctx)?;
                     m.consts.insert(k.to_string(), v);
                 }
                 "params" => {
-                    let net = it.next().ok_or_else(|| anyhow!(ctx()))?;
+                    let net = it.next().ok_or_else(|| err!(ctx()))?;
                     let total: usize =
-                        it.next().ok_or_else(|| anyhow!(ctx()))?.parse().with_context(ctx)?;
+                        it.next().ok_or_else(|| err!(ctx()))?.parse().with_context(ctx)?;
                     m.params.entry(net.to_string()).or_default().total = total;
                 }
                 "segment" => {
-                    let net = it.next().ok_or_else(|| anyhow!(ctx()))?.to_string();
-                    let name = it.next().ok_or_else(|| anyhow!(ctx()))?.to_string();
+                    let net = it.next().ok_or_else(|| err!(ctx()))?.to_string();
+                    let name = it.next().ok_or_else(|| err!(ctx()))?.to_string();
                     let offset: usize =
-                        it.next().ok_or_else(|| anyhow!(ctx()))?.parse().with_context(ctx)?;
+                        it.next().ok_or_else(|| err!(ctx()))?.parse().with_context(ctx)?;
                     let len: usize =
-                        it.next().ok_or_else(|| anyhow!(ctx()))?.parse().with_context(ctx)?;
+                        it.next().ok_or_else(|| err!(ctx()))?.parse().with_context(ctx)?;
                     let bound: f32 =
-                        it.next().ok_or_else(|| anyhow!(ctx()))?.parse().with_context(ctx)?;
+                        it.next().ok_or_else(|| err!(ctx()))?.parse().with_context(ctx)?;
                     m.params
                         .entry(net)
                         .or_default()
@@ -80,8 +82,8 @@ impl Manifest {
                     m.dlrm_hash = it.map(|v| v.parse().unwrap_or(0)).collect();
                 }
                 "artifact" => {
-                    let name = it.next().ok_or_else(|| anyhow!(ctx()))?.to_string();
-                    let file = it.next().ok_or_else(|| anyhow!(ctx()))?.to_string();
+                    let name = it.next().ok_or_else(|| err!(ctx()))?.to_string();
+                    let file = it.next().ok_or_else(|| err!(ctx()))?.to_string();
                     let mut meta = HashMap::new();
                     for kv in it {
                         if let Some((k, v)) = kv.split_once('=') {

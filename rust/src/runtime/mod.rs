@@ -1,76 +1,121 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! Network-execution runtime behind a pluggable [`Backend`] seam.
 //!
-//! `make artifacts` (python, build-time only) writes `artifacts/*.hlo.txt`
-//! plus `manifest.txt`; this module parses the manifest, lazily compiles
-//! each artifact on the PJRT CPU client on first use, and provides typed
-//! tensor packing helpers. HLO *text* is the interchange format — the
-//! crate's xla_extension 0.5.1 rejects jax>=0.5 serialized protos
-//! (64-bit instruction ids), while the text parser reassigns ids.
+//! The coordinator only ever calls `Runtime::run(artifact_name, inputs)`
+//! with host [`Value`] tensors; what executes underneath is a backend:
+//!
+//! * [`ReferenceBackend`] (default, always available) — pure-Rust
+//!   forward/backward evaluation of the cost / policy / RNN networks,
+//!   mirroring `python/compile/model.py`. It synthesizes its own
+//!   [`Manifest`] (same parameter layouts and artifact-variant grid that
+//!   `make artifacts` bakes), so no `artifacts/` directory is needed.
+//! * `XlaBackend` (`--features xla`) — parses `artifacts/manifest.txt`
+//!   produced by `make artifacts`, lazily JIT-compiles each HLO-text
+//!   artifact on the PJRT CPU client, and executes it. HLO *text* is the
+//!   interchange format — xla_extension 0.5.1 rejects jax>=0.5 serialized
+//!   protos (64-bit instruction ids), while the text parser reassigns ids.
+//!
+//! The artifact *names* (`cost_fwd_d4s48`, `policy_train_d4s48_b512`, ...)
+//! are the contract both backends implement; the manifest carries their
+//! baked shape metadata either way.
 
 mod manifest;
+#[cfg(feature = "xla")]
+mod pjrt;
+pub mod reference;
 mod tensor;
 
-pub use manifest::{Artifact, Manifest, Segment};
-pub use tensor::{to_f32_vec, TensorF32, TensorI32};
+pub use manifest::{Artifact, Manifest, ParamInfo, Segment};
+#[cfg(feature = "xla")]
+pub use pjrt::XlaBackend;
+pub use reference::ReferenceBackend;
+pub use tensor::{to_f32_vec, TensorF32, TensorI32, Value};
 
-use anyhow::{anyhow, Context, Result};
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
+use crate::util::error::Result;
 use crate::util::Rng;
+use crate::{bail, err};
 
-/// Lazily-compiling executor over an artifact directory.
+/// One network-execution engine. `execute` runs an artifact by manifest
+/// name: values in, tuple-decomposed values out (everything is lowered
+/// with `return_tuple=True`, and the reference backend matches that
+/// calling convention).
+///
+/// Output contract: element order and total length are guaranteed;
+/// output `dims()` are advisory only (the XLA backend returns flattened
+/// rank-1 values, the reference backend returns shaped ones). Consume
+/// outputs through [`to_f32_vec`]-style length-checked extraction.
+pub trait Backend {
+    /// Short human-readable backend name (for logs / `dreamshard info`).
+    fn name(&self) -> &'static str;
+
+    /// Execute an artifact.
+    fn execute(&self, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>>;
+}
+
+/// Executor facade over a [`Backend`] + its [`Manifest`].
 pub struct Runtime {
-    client: xla::PjRtClient,
     pub manifest: Manifest,
-    dir: PathBuf,
-    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    backend: Box<dyn Backend>,
 }
 
 impl Runtime {
-    /// Open an artifact directory produced by `make artifacts`.
+    /// The pure-Rust reference backend (no artifacts, no native code).
+    pub fn reference() -> Self {
+        Runtime {
+            manifest: reference::reference_manifest(),
+            backend: Box::new(ReferenceBackend::new()),
+        }
+    }
+
+    /// Open an artifact directory produced by `make artifacts` on the XLA
+    /// backend. Requires `--features xla` (and a real xla-rs in place of
+    /// the in-tree stub).
+    #[cfg(feature = "xla")]
     pub fn open<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        use crate::util::error::Context;
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::parse_file(&dir.join("manifest.txt"))
             .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime { client, manifest, dir, cache: RefCell::new(HashMap::new()) })
+        let backend = XlaBackend::new(dir, &manifest)?;
+        Ok(Runtime { manifest, backend: Box::new(backend) })
     }
 
-    /// Default artifact location relative to the repo root.
+    /// Without the `xla` feature there is nothing to open: artifacts are
+    /// an XLA-backend concept. Kept so callers get a useful error instead
+    /// of a compile break when the feature is off.
+    #[cfg(not(feature = "xla"))]
+    pub fn open<P: AsRef<Path>>(_dir: P) -> Result<Self> {
+        bail!(
+            "this build has no XLA backend (rebuild with `--features xla`); \
+             use Runtime::reference() / open_default() instead"
+        )
+    }
+
+    /// Default runtime: the XLA backend when it is compiled in *and* its
+    /// artifacts exist (`DREAMSHARD_ARTIFACTS`, default `artifacts/`),
+    /// otherwise the reference backend.
     pub fn open_default() -> Result<Self> {
         let dir = std::env::var("DREAMSHARD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Self::open(dir)
-    }
-
-    /// Compile (or fetch from cache) an artifact by manifest name.
-    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
+        if cfg!(feature = "xla") && Path::new(&dir).join("manifest.txt").exists() {
+            return Self::open(dir);
         }
-        let art = self
-            .manifest
-            .artifacts
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
-        let path = self.dir.join(&art.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        let rc = std::rc::Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
-        Ok(rc)
+        Ok(Self::reference())
     }
 
-    /// Execute an artifact: literals in, tuple-decomposed literals out
-    /// (everything is lowered with `return_tuple=True`).
-    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.executable(name)?;
-        let out = exe.execute::<xla::Literal>(inputs).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    /// Which backend this runtime executes on.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Execute an artifact by manifest name.
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        if !self.manifest.artifacts.contains_key(name) {
+            bail!("artifact {name} not in manifest");
+        }
+        self.backend
+            .execute(name, inputs)
+            .map_err(|e| e.wrap(format!("executing {name} on {}", self.backend.name())))
     }
 
     /// Initialize a flat parameter vector for a registered network,
@@ -80,7 +125,7 @@ impl Runtime {
             .manifest
             .params
             .get(net)
-            .ok_or_else(|| anyhow!("network {net} not in manifest"))?;
+            .ok_or_else(|| err!("network {net} not in manifest"))?;
         let mut theta = vec![0.0f32; info.total];
         for seg in &info.segments {
             for x in &mut theta[seg.offset..seg.offset + seg.len] {
@@ -89,39 +134,26 @@ impl Runtime {
         }
         Ok(theta)
     }
-
-    /// Number of artifacts compiled so far (for tests/metrics).
-    pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn runtime() -> Option<Runtime> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if dir.join("manifest.txt").exists() {
-            Some(Runtime::open(dir).expect("open runtime"))
-        } else {
-            None // artifacts not built; skip (CI runs `make artifacts` first)
-        }
-    }
-
     #[test]
-    fn manifest_has_core_artifacts() {
-        let Some(rt) = runtime() else { return };
+    fn reference_manifest_has_core_artifacts() {
+        let rt = Runtime::reference();
         for name in ["cost_fwd_d4s48", "policy_fwd_d4s48", "cost_train_d4s48", "table_cost"] {
             assert!(rt.manifest.artifacts.contains_key(name), "missing {name}");
         }
         assert!(rt.manifest.params.contains_key("cost"));
         assert!(rt.manifest.params.contains_key("policy"));
+        assert_eq!(rt.backend_name(), "reference");
     }
 
     #[test]
     fn init_params_within_bounds() {
-        let Some(rt) = runtime() else { return };
+        let rt = Runtime::reference();
         let mut rng = Rng::new(0);
         let theta = rt.init_params("cost", &mut rng).unwrap();
         let info = &rt.manifest.params["cost"];
@@ -135,7 +167,7 @@ mod tests {
 
     #[test]
     fn executes_table_cost() {
-        let Some(rt) = runtime() else { return };
+        let rt = Runtime::reference();
         let mut rng = Rng::new(0);
         let theta = rt.init_params("cost", &mut rng).unwrap();
         let n = rt.manifest.artifact_meta("table_cost", "N").unwrap() as usize;
@@ -144,13 +176,19 @@ mod tests {
         let fmask = TensorF32::ones(&[f]);
         let out = rt
             .run("table_cost", &[
-                TensorF32::from_vec(theta, &[rt.manifest.params["cost"].total]).literal(),
-                feats.literal(),
-                fmask.literal(),
+                TensorF32::from_vec(theta, &[rt.manifest.params["cost"].total]).value(),
+                feats.value(),
+                fmask.value(),
             ])
             .unwrap();
         assert_eq!(out.len(), 1);
-        let v = out[0].to_vec::<f32>().unwrap();
-        assert_eq!(v.len(), n);
+        let v = to_f32_vec(&out[0], n).unwrap();
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn unknown_artifact_is_an_error() {
+        let rt = Runtime::reference();
+        assert!(rt.run("no_such_artifact", &[]).is_err());
     }
 }

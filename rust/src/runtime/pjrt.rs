@@ -1,0 +1,93 @@
+//! PJRT/XLA backend (`--features xla`): load AOT HLO-text artifacts
+//! written by `make artifacts` and execute them through xla-rs.
+//!
+//! This module is the only place in the crate that mentions `xla::*`. The
+//! workspace ships a compile-only `xla-stub` crate in its place so the
+//! feature type-checks offline; constructing the backend against the stub
+//! fails with a pointer at the real dependency.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use super::manifest::Manifest;
+use super::tensor::{TensorF32, TensorI32, Value};
+use super::Backend;
+use crate::err;
+use crate::util::error::Result;
+
+/// Lazily-compiling PJRT executor over an artifact directory.
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    /// artifact name -> HLO text file (from the manifest).
+    files: HashMap<String, String>,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaBackend {
+    pub fn new(dir: PathBuf, manifest: &Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("pjrt cpu client: {e:?}"))?;
+        let files = manifest
+            .artifacts
+            .iter()
+            .map(|(name, art)| (name.clone(), art.file.clone()))
+            .collect();
+        Ok(XlaBackend { client, dir, files, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let file = self.files.get(name).ok_or_else(|| err!("artifact {name} not in manifest"))?;
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| err!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| err!("compile {name}: {e:?}"))?;
+        let rc = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Number of artifacts compiled so far (for tests/metrics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+fn to_literal(v: &Value) -> Result<xla::Literal> {
+    let (lit, dims) = match v {
+        Value::F32(TensorF32 { dims, data }) => (xla::Literal::vec1(data), dims),
+        Value::I32(TensorI32 { dims, data }) => (xla::Literal::vec1(data), dims),
+    };
+    lit.reshape(dims).map_err(|e| err!("reshape literal to {dims:?}: {e:?}"))
+}
+
+/// All artifact outputs are f32 in this crate's lowering.
+fn from_literal(lit: &xla::Literal) -> Result<Value> {
+    let data = lit.to_vec::<f32>().map_err(|e| err!("literal to f32: {e:?}"))?;
+    let n = data.len();
+    Ok(Value::F32(TensorF32::from_vec(data, &[n])))
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    /// Execute an artifact: literals in, tuple-decomposed literals out
+    /// (everything is lowered with `return_tuple=True`).
+    fn execute(&self, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let exe = self.executable(artifact)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let out = exe.execute(&literals).map_err(|e| err!("execute {artifact}: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| err!("fetch {artifact}: {e:?}"))?;
+        let tuple = lit.to_tuple().map_err(|e| err!("untuple {artifact}: {e:?}"))?;
+        tuple.iter().map(from_literal).collect()
+    }
+}

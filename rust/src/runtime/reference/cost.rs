@@ -1,0 +1,278 @@
+//! Reference cost network (model.py `cost_forward` / `table_cost_forward`
+//! / `cost_train_step`): shared table-MLP over the padded `[E, D, S, F]`
+//! feature batch, masked table/device reductions, three per-device cost
+//! heads + one overall head, and the Eq.-1 MSE training step.
+
+use super::math::{
+    masked_reduce, masked_reduce_bwd, mlp2_bwd, mlp2_fwd, Mlp2Cache, Red, RedCache,
+};
+use super::spec::{cost_spec, Spec, F, L};
+
+/// Forward outputs: per-device cost features and overall cost.
+pub struct CostOut {
+    /// [e*d*3] (fwd comp, bwd comp, bwd comm), dmask-gated.
+    pub q: Vec<f32>,
+    /// [e] overall step cost.
+    pub cost: Vec<f32>,
+}
+
+struct Caches {
+    tbl: Mlp2Cache,
+    red1: RedCache,
+    heads: Vec<Mlp2Cache>,
+    red2: RedCache,
+    ovr: Mlp2Cache,
+}
+
+const HEADS: [&str; 3] = ["fwd", "bwd", "comm"];
+
+fn x_masked(feats: &[f32], fmask: &[f32], rows: usize) -> Vec<f32> {
+    let mut x = vec![0.0f32; rows * F];
+    for r in 0..rows {
+        for (i, &fm) in fmask.iter().enumerate() {
+            x[r * F + i] = feats[r * F + i] * fm;
+        }
+    }
+    x
+}
+
+#[allow(clippy::too_many_arguments)]
+fn forward_inner(
+    spec: &Spec,
+    theta: &[f32],
+    feats: &[f32],
+    mask: &[f32],
+    dmask: &[f32],
+    fmask: &[f32],
+    e: usize,
+    d: usize,
+    s: usize,
+    tr: Red,
+    dr: Red,
+) -> (CostOut, Caches) {
+    let rows = e * d * s;
+    let x = x_masked(feats, fmask, rows);
+    let (h, tbl) = mlp2_fwd(theta, spec.lin("tbl1"), spec.lin("tbl2"), x, rows);
+    let (hdev, red1) = masked_reduce(&h, mask, e * d, s, L, tr);
+    let mut q = vec![0.0f32; e * d * 3];
+    let mut heads = Vec::with_capacity(3);
+    for (k, head) in HEADS.iter().enumerate() {
+        let (qh, cache) = mlp2_fwd(
+            theta,
+            spec.lin(&format!("{head}1")),
+            spec.lin(&format!("{head}2")),
+            hdev.clone(),
+            e * d,
+        );
+        for ed in 0..e * d {
+            q[ed * 3 + k] = qh[ed] * dmask[ed];
+        }
+        heads.push(cache);
+    }
+    let (hall, red2) = masked_reduce(&hdev, dmask, e, d, L, dr);
+    let (cost, ovr) = mlp2_fwd(theta, spec.lin("ovr1"), spec.lin("ovr2"), hall, e);
+    (CostOut { q, cost }, Caches { tbl, red1, heads, red2, ovr })
+}
+
+/// Forward pass over `e` lanes.
+#[allow(clippy::too_many_arguments)]
+pub fn cost_forward(
+    theta: &[f32],
+    feats: &[f32],
+    mask: &[f32],
+    dmask: &[f32],
+    fmask: &[f32],
+    e: usize,
+    d: usize,
+    s: usize,
+    tr: Red,
+    dr: Red,
+) -> CostOut {
+    let spec = cost_spec();
+    forward_inner(&spec, theta, feats, mask, dmask, fmask, e, d, s, tr, dr).0
+}
+
+/// Eq.-1 loss (cost-feature MSE + overall-cost MSE) and its full
+/// parameter gradient.
+#[allow(clippy::too_many_arguments)]
+pub fn cost_loss_grad(
+    theta: &[f32],
+    feats: &[f32],
+    mask: &[f32],
+    dmask: &[f32],
+    q_tgt: &[f32],
+    c_tgt: &[f32],
+    fmask: &[f32],
+    e: usize,
+    d: usize,
+    s: usize,
+    tr: Red,
+    dr: Red,
+) -> (f32, Vec<f32>) {
+    let spec = cost_spec();
+    let (out, caches) = forward_inner(&spec, theta, feats, mask, dmask, fmask, e, d, s, tr, dr);
+    let dn: f32 = dmask.iter().sum::<f32>().max(1.0);
+
+    let mut loss = 0.0f32;
+    // dq for the dmask-gated q (dmask is 0/1, so gating twice is exact)
+    let mut dq = vec![0.0f32; e * d * 3];
+    for ed in 0..e * d {
+        for k in 0..3 {
+            let diff = out.q[ed * 3 + k] - q_tgt[ed * 3 + k];
+            loss += diff * diff * dmask[ed] / (dn * 3.0);
+            dq[ed * 3 + k] = 2.0 * diff * dmask[ed] / (dn * 3.0);
+        }
+    }
+    let mut dc = vec![0.0f32; e];
+    for lane in 0..e {
+        let diff = out.cost[lane] - c_tgt[lane];
+        loss += diff * diff / e as f32;
+        dc[lane] = 2.0 * diff / e as f32;
+    }
+
+    let mut grad = vec![0.0f32; spec.total];
+    // overall head -> hall -> hdev
+    let dhall = mlp2_bwd(theta, &mut grad, spec.lin("ovr1"), spec.lin("ovr2"), &caches.ovr, &dc, true);
+    let mut dhdev = masked_reduce_bwd(&dhall, dmask, e, d, L, dr, &caches.red2);
+    // three per-device heads -> hdev
+    for (k, head) in HEADS.iter().enumerate() {
+        let mut dy = vec![0.0f32; e * d];
+        for ed in 0..e * d {
+            dy[ed] = dq[ed * 3 + k] * dmask[ed];
+        }
+        let dh = mlp2_bwd(
+            theta,
+            &mut grad,
+            spec.lin(&format!("{head}1")),
+            spec.lin(&format!("{head}2")),
+            &caches.heads[k],
+            &dy,
+            true,
+        );
+        for (a, b) in dhdev.iter_mut().zip(dh.iter()) {
+            *a += b;
+        }
+    }
+    // table reduction -> shared table MLP
+    let dh = masked_reduce_bwd(&dhdev, mask, e * d, s, L, tr, &caches.red1);
+    mlp2_bwd(theta, &mut grad, spec.lin("tbl1"), spec.lin("tbl2"), &caches.tbl, &dh, false);
+    (loss, grad)
+}
+
+/// Predicted single-table total cost (sum of the three heads) for each of
+/// `n` feature rows (model.py `table_cost_forward`).
+pub fn table_cost_forward(theta: &[f32], feats: &[f32], fmask: &[f32], n: usize) -> Vec<f32> {
+    let spec = cost_spec();
+    let x = x_masked(feats, fmask, n);
+    let (h, _) = mlp2_fwd(theta, spec.lin("tbl1"), spec.lin("tbl2"), x, n);
+    let mut total = vec![0.0f32; n];
+    for head in HEADS {
+        let (qh, _) = mlp2_fwd(
+            theta,
+            spec.lin(&format!("{head}1")),
+            spec.lin(&format!("{head}2")),
+            h.clone(),
+            n,
+        );
+        for (t, &v) in total.iter_mut().zip(qh.iter()) {
+            *t += v;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::reference::math::tests::{fd_check, rand_vec};
+    use crate::util::Rng;
+
+    fn tiny_inputs(
+        rng: &mut Rng,
+        e: usize,
+        d: usize,
+        s: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let feats: Vec<f32> = rand_vec(e * d * s * F, 1.0, rng).iter().map(|v| v.abs()).collect();
+        let mut mask = vec![0.0f32; e * d * s];
+        let mut dmask = vec![0.0f32; e * d];
+        for lane in 0..e {
+            for dev in 0..d {
+                dmask[lane * d + dev] = 1.0;
+                // one device left empty in lane 0 to hit the empty-group path
+                let fill = if lane == 0 && dev == d - 1 { 0 } else { 1 + (dev % s.max(1)) };
+                for slot in 0..fill.min(s) {
+                    mask[(lane * d + dev) * s + slot] = 1.0;
+                }
+            }
+        }
+        let fmask = vec![1.0f32; F];
+        let q_tgt = rand_vec(e * d * 3, 1.0, rng);
+        let c_tgt = rand_vec(e, 1.0, rng);
+        (feats, mask, dmask, fmask, q_tgt, c_tgt)
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let mut rng = Rng::new(11);
+        let spec = cost_spec();
+        let theta = rand_vec(spec.total, 0.1, &mut rng);
+        let (e, d, s) = (2usize, 2usize, 3usize);
+        let (feats, mask, dmask, fmask, _, _) = tiny_inputs(&mut rng, e, d, s);
+        let out = cost_forward(&theta, &feats, &mask, &dmask, &fmask, e, d, s, Red::Sum, Red::Max);
+        assert_eq!(out.q.len(), e * d * 3);
+        assert_eq!(out.cost.len(), e);
+        assert!(out.q.iter().chain(out.cost.iter()).all(|v| v.is_finite()));
+        // deterministic
+        let out2 = cost_forward(&theta, &feats, &mask, &dmask, &fmask, e, d, s, Red::Sum, Red::Max);
+        assert_eq!(out.q, out2.q);
+        assert_eq!(out.cost, out2.cost);
+    }
+
+    #[test]
+    fn zeroed_fmask_column_ignores_feature() {
+        let mut rng = Rng::new(12);
+        let spec = cost_spec();
+        let theta = rand_vec(spec.total, 0.1, &mut rng);
+        let (e, d, s) = (1usize, 2usize, 2usize);
+        let (mut feats, mask, dmask, mut fmask, _, _) = tiny_inputs(&mut rng, e, d, s);
+        fmask[0] = 0.0;
+        let a = cost_forward(&theta, &feats, &mask, &dmask, &fmask, e, d, s, Red::Sum, Red::Max);
+        for r in 0..e * d * s {
+            feats[r * F] = 123.0; // masked column: must not matter
+        }
+        let b = cost_forward(&theta, &feats, &mask, &dmask, &fmask, e, d, s, Red::Sum, Red::Max);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.q, b.q);
+    }
+
+    #[test]
+    fn cost_gradcheck_all_reductions() {
+        let mut rng = Rng::new(13);
+        let spec = cost_spec();
+        let theta = rand_vec(spec.total, 0.15, &mut rng);
+        let (e, d, s) = (2usize, 2usize, 3usize);
+        let (feats, mask, dmask, fmask, q_tgt, c_tgt) = tiny_inputs(&mut rng, e, d, s);
+        for (tr, dr) in [(Red::Sum, Red::Max), (Red::Mean, Red::Sum), (Red::Max, Red::Mean)] {
+            let loss = |th: &[f32]| -> f32 {
+                cost_loss_grad(th, &feats, &mask, &dmask, &q_tgt, &c_tgt, &fmask, e, d, s, tr, dr).0
+            };
+            let (_, grad) = cost_loss_grad(
+                &theta, &feats, &mask, &dmask, &q_tgt, &c_tgt, &fmask, e, d, s, tr, dr,
+            );
+            fd_check(loss, &theta, &grad, 25, 77 + tr as u64 * 3 + dr as u64);
+        }
+    }
+
+    #[test]
+    fn table_cost_is_sum_of_heads() {
+        let mut rng = Rng::new(14);
+        let spec = cost_spec();
+        let theta = rand_vec(spec.total, 0.1, &mut rng);
+        let feats = rand_vec(3 * F, 1.0, &mut rng);
+        let fmask = vec![1.0f32; F];
+        let t = table_cost_forward(&theta, &feats, &fmask, 3);
+        assert_eq!(t.len(), 3);
+        assert!(t.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,523 @@
+//! Numeric core of the reference backend: dense layers, masked
+//! reductions, the REINFORCE loss, and Adam — forward *and* backward,
+//! mirroring `python/compile/model.py` + `kernels/ref.py` semantics.
+//!
+//! Everything operates on flat `&[f32]` buffers with explicit dims (the
+//! same row-major layout the tensors use), and every backward helper
+//! *accumulates* into a caller-owned flat gradient vector so shared
+//! layers (e.g. the table MLP used by two input paths) compose naturally.
+
+use super::spec::Lin;
+use crate::err;
+use crate::util::error::Result;
+
+// ---------------------------------------------------------------------
+// dense layers
+// ---------------------------------------------------------------------
+
+/// `y = x @ w + b` (+ optional ReLU). x: [rows, n_in] -> [rows, n_out].
+pub fn linear_fwd(theta: &[f32], l: Lin, x: &[f32], rows: usize, relu: bool) -> Vec<f32> {
+    let (k, m) = (l.n_in, l.n_out);
+    debug_assert_eq!(x.len(), rows * k);
+    let w = &theta[l.w..l.w + k * m];
+    let b = &theta[l.b..l.b + m];
+    let mut y = vec![0.0f32; rows * m];
+    for r in 0..rows {
+        let yr = &mut y[r * m..(r + 1) * m];
+        yr.copy_from_slice(b);
+        let xr = &x[r * k..(r + 1) * k];
+        for (i, &xi) in xr.iter().enumerate() {
+            if xi != 0.0 {
+                let wr = &w[i * m..(i + 1) * m];
+                for (yj, &wj) in yr.iter_mut().zip(wr.iter()) {
+                    *yj += xi * wj;
+                }
+            }
+        }
+        if relu {
+            for yj in yr.iter_mut() {
+                if *yj < 0.0 {
+                    *yj = 0.0;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Backward of [`linear_fwd`] (callers gate `dy` for ReLU themselves).
+/// Accumulates dW/db into `grad`; returns dx when `want_dx`.
+pub fn linear_bwd(
+    theta: &[f32],
+    grad: &mut [f32],
+    l: Lin,
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    want_dx: bool,
+) -> Vec<f32> {
+    let (k, m) = (l.n_in, l.n_out);
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(dy.len(), rows * m);
+    // dW[i,j] += sum_r x[r,i] dy[r,j]; db[j] += sum_r dy[r,j]
+    for r in 0..rows {
+        let xr = &x[r * k..(r + 1) * k];
+        let dyr = &dy[r * m..(r + 1) * m];
+        for (gb, &d) in grad[l.b..l.b + m].iter_mut().zip(dyr.iter()) {
+            *gb += d;
+        }
+        for (i, &xi) in xr.iter().enumerate() {
+            if xi != 0.0 {
+                let gw = &mut grad[l.w + i * m..l.w + (i + 1) * m];
+                for (g, &d) in gw.iter_mut().zip(dyr.iter()) {
+                    *g += xi * d;
+                }
+            }
+        }
+    }
+    if !want_dx {
+        return Vec::new();
+    }
+    // dx[r,i] = sum_j dy[r,j] w[i,j]  (both slices contiguous)
+    let w = &theta[l.w..l.w + k * m];
+    let mut dx = vec![0.0f32; rows * k];
+    for r in 0..rows {
+        let dyr = &dy[r * m..(r + 1) * m];
+        let dxr = &mut dx[r * k..(r + 1) * k];
+        for (i, dxi) in dxr.iter_mut().enumerate() {
+            let wr = &w[i * m..(i + 1) * m];
+            let mut acc = 0.0f32;
+            for (&d, &wj) in dyr.iter().zip(wr.iter()) {
+                acc += d * wj;
+            }
+            *dxi = acc;
+        }
+    }
+    dx
+}
+
+/// Cached activations of a two-layer MLP (ReLU hidden), for backward.
+pub struct Mlp2Cache {
+    /// Input rows [rows, l1.n_in].
+    pub x: Vec<f32>,
+    /// Post-ReLU hidden rows [rows, l1.n_out].
+    pub h: Vec<f32>,
+    pub rows: usize,
+}
+
+/// Two-layer MLP with ReLU hidden, over `rows` rows of `x` (consumed).
+pub fn mlp2_fwd(theta: &[f32], l1: Lin, l2: Lin, x: Vec<f32>, rows: usize) -> (Vec<f32>, Mlp2Cache) {
+    let h = linear_fwd(theta, l1, &x, rows, true);
+    let y = linear_fwd(theta, l2, &h, rows, false);
+    (y, Mlp2Cache { x, h, rows })
+}
+
+/// Backward of [`mlp2_fwd`]. Accumulates parameter grads; returns dx
+/// when `want_dx`.
+pub fn mlp2_bwd(
+    theta: &[f32],
+    grad: &mut [f32],
+    l1: Lin,
+    l2: Lin,
+    cache: &Mlp2Cache,
+    dy: &[f32],
+    want_dx: bool,
+) -> Vec<f32> {
+    let mut dh = linear_bwd(theta, grad, l2, &cache.h, dy, cache.rows, true);
+    for (d, &h) in dh.iter_mut().zip(cache.h.iter()) {
+        if h <= 0.0 {
+            *d = 0.0;
+        }
+    }
+    linear_bwd(theta, grad, l1, &cache.x, &dh, cache.rows, want_dx)
+}
+
+// ---------------------------------------------------------------------
+// masked reductions (model.py `_device_reduce` / `_overall_reduce`)
+// ---------------------------------------------------------------------
+
+/// Reduction flavor over the masked item axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Red {
+    Sum,
+    Mean,
+    Max,
+}
+
+pub fn parse_red(s: &str) -> Result<Red> {
+    match s {
+        "sum" => Ok(Red::Sum),
+        "mean" => Ok(Red::Mean),
+        "max" => Ok(Red::Max),
+        other => Err(err!("unknown reduction `{other}`")),
+    }
+}
+
+/// Cache for [`masked_reduce`] backward.
+pub struct RedCache {
+    /// Masked item count per group [g].
+    pub count: Vec<f32>,
+    /// Winning item per (group, channel) for Max; `usize::MAX` = empty.
+    pub argmax: Vec<usize>,
+}
+
+/// Reduce `h` [g, n, l] over its item axis under `mask` [g, n] -> [g, l].
+/// Sum/mean as in jnp; max fills empty groups with 0 (model.py's
+/// `where(count > 0, max, 0)` guard).
+pub fn masked_reduce(
+    h: &[f32],
+    mask: &[f32],
+    g: usize,
+    n: usize,
+    l: usize,
+    red: Red,
+) -> (Vec<f32>, RedCache) {
+    debug_assert_eq!(h.len(), g * n * l);
+    debug_assert_eq!(mask.len(), g * n);
+    let mut out = vec![0.0f32; g * l];
+    let mut count = vec![0.0f32; g];
+    let mut argmax = Vec::new();
+    if red == Red::Max {
+        argmax = vec![usize::MAX; g * l];
+    }
+    for gi in 0..g {
+        let mrow = &mask[gi * n..(gi + 1) * n];
+        let c: f32 = mrow.iter().copied().filter(|&m| m > 0.0).sum();
+        count[gi] = c;
+        let orow = &mut out[gi * l..(gi + 1) * l];
+        match red {
+            Red::Sum | Red::Mean => {
+                for (i, &m) in mrow.iter().enumerate() {
+                    if m != 0.0 {
+                        let hrow = &h[(gi * n + i) * l..(gi * n + i + 1) * l];
+                        for (o, &hv) in orow.iter_mut().zip(hrow.iter()) {
+                            *o += m * hv;
+                        }
+                    }
+                }
+                if red == Red::Mean {
+                    let denom = c.max(1.0);
+                    for o in orow.iter_mut() {
+                        *o /= denom;
+                    }
+                }
+            }
+            Red::Max => {
+                if c > 0.0 {
+                    let arow = &mut argmax[gi * l..(gi + 1) * l];
+                    orow.fill(f32::NEG_INFINITY);
+                    for (i, &m) in mrow.iter().enumerate() {
+                        if m > 0.0 {
+                            let hrow = &h[(gi * n + i) * l..(gi * n + i + 1) * l];
+                            for ((o, a), &hv) in orow.iter_mut().zip(arow.iter_mut()).zip(hrow) {
+                                if *a == usize::MAX || hv > *o {
+                                    *o = hv;
+                                    *a = i;
+                                }
+                            }
+                        }
+                    }
+                }
+                // empty groups stay 0 (guard)
+            }
+        }
+    }
+    (out, RedCache { count, argmax })
+}
+
+/// Backward of [`masked_reduce`]: dout [g, l] -> dh [g, n, l].
+pub fn masked_reduce_bwd(
+    dout: &[f32],
+    mask: &[f32],
+    g: usize,
+    n: usize,
+    l: usize,
+    red: Red,
+    cache: &RedCache,
+) -> Vec<f32> {
+    let mut dh = vec![0.0f32; g * n * l];
+    for gi in 0..g {
+        let drow = &dout[gi * l..(gi + 1) * l];
+        match red {
+            Red::Sum | Red::Mean => {
+                let scale = if red == Red::Mean { 1.0 / cache.count[gi].max(1.0) } else { 1.0 };
+                for i in 0..n {
+                    let m = mask[gi * n + i];
+                    if m != 0.0 {
+                        let hrow = &mut dh[(gi * n + i) * l..(gi * n + i + 1) * l];
+                        for (d, &dv) in hrow.iter_mut().zip(drow.iter()) {
+                            *d = m * scale * dv;
+                        }
+                    }
+                }
+            }
+            Red::Max => {
+                let arow = &cache.argmax[gi * l..(gi + 1) * l];
+                for (ch, (&a, &dv)) in arow.iter().zip(drow.iter()).enumerate() {
+                    if a != usize::MAX {
+                        dh[(gi * n + a) * l + ch] = dv;
+                    }
+                }
+            }
+        }
+    }
+    dh
+}
+
+// ---------------------------------------------------------------------
+// REINFORCE loss (model.py `_reinforce_loss`)
+// ---------------------------------------------------------------------
+
+/// Loss + dloss/dlogits for REINFORCE with entropy bonus (Eq. 2).
+///
+/// logits/legal: [rows, d]; action/adv/smask: [rows]. Gradient is zeroed
+/// where `legal <= 0` (in the model the -1e9 fill blocks it anyway).
+pub fn reinforce_loss_grad(
+    logits: &[f32],
+    legal: &[f32],
+    action: &[i32],
+    adv: &[f32],
+    smask: &[f32],
+    rows: usize,
+    d: usize,
+    entropy_w: f32,
+) -> (f32, Vec<f32>) {
+    let n: f32 = smask.iter().sum::<f32>().max(1.0);
+    let mut loss = 0.0f32;
+    let mut dlogits = vec![0.0f32; rows * d];
+    let mut p = vec![0.0f32; d];
+    let mut lp = vec![0.0f32; d];
+    for r in 0..rows {
+        let sm = smask[r];
+        if sm == 0.0 {
+            continue;
+        }
+        let z = &logits[r * d..(r + 1) * d];
+        let lg = &legal[r * d..(r + 1) * d];
+        // an all-illegal row is a recorded dead-end fallback: it carried
+        // no decision, so it contributes neither loss nor gradient (the
+        // jax model never sees such rows — they predate its loss)
+        if lg.iter().all(|&l| l <= 0.0) {
+            continue;
+        }
+        let zmax = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for j in 0..d {
+            p[j] = (z[j] - zmax).exp();
+            sum += p[j];
+        }
+        let lse = zmax + sum.ln();
+        for j in 0..d {
+            lp[j] = z[j] - lse;
+            p[j] /= sum;
+        }
+        let a = (action[r] as usize).min(d - 1);
+        // ent restricted to legal entries, as in the model
+        let mut ent = 0.0f32;
+        let mut s1 = 0.0f32; // sum_legal p*lp
+        let mut s2 = 0.0f32; // sum_legal p
+        for j in 0..d {
+            if lg[j] > 0.0 {
+                ent -= p[j] * lp[j];
+                s1 += p[j] * lp[j];
+                s2 += p[j];
+            }
+        }
+        loss -= sm * (lp[a] * adv[r] + entropy_w * ent) / n;
+        for j in 0..d {
+            if lg[j] <= 0.0 {
+                continue; // where() blocks the gradient
+            }
+            let dlp_a = if j == a { 1.0 - p[j] } else { -p[j] };
+            // d ent / d z_j = -p_j (lp_j + 1) + p_j (s1 + s2)
+            let dent = -p[j] * (lp[j] + 1.0) + p[j] * (s1 + s2);
+            dlogits[r * d + j] = -(sm / n) * (adv[r] * dlp_a + entropy_w * dent);
+        }
+    }
+    (loss, dlogits)
+}
+
+// ---------------------------------------------------------------------
+// Adam (params.py `adam_update`)
+// ---------------------------------------------------------------------
+
+/// One Adam step over flat vectors; `t` is the 1-based step count AFTER
+/// this update, `lr` the already-decayed learning rate.
+pub fn adam(theta: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], t: f32, lr: f32) {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let c1 = 1.0 - B1.powf(t);
+    let c2 = 1.0 - B2.powf(t);
+    for i in 0..theta.len() {
+        m[i] = B1 * m[i] + (1.0 - B1) * g[i];
+        v[i] = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+        let mhat = m[i] / c1;
+        let vhat = v[i] / c2;
+        theta[i] -= lr * mhat / (vhat.sqrt() + EPS);
+    }
+}
+
+// ---------------------------------------------------------------------
+// tests (finite-difference gradient checks)
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Central finite-difference check of `analytic` against `f` at
+    /// `theta`, probing `probes` random coordinates.
+    pub fn fd_check<F: FnMut(&[f32]) -> f32>(
+        mut f: F,
+        theta: &[f32],
+        analytic: &[f32],
+        probes: usize,
+        seed: u64,
+    ) {
+        let mut rng = Rng::new(seed);
+        let mut th = theta.to_vec();
+        for _ in 0..probes {
+            let i = rng.below(th.len());
+            let eps = 3e-3f32;
+            let orig = th[i];
+            th[i] = orig + eps;
+            let up = f(&th);
+            th[i] = orig - eps;
+            let down = f(&th);
+            th[i] = orig;
+            let fd = (up - down) / (2.0 * eps);
+            let an = analytic[i];
+            let tol = 2e-3 + 0.05 * an.abs().max(fd.abs());
+            assert!(
+                (fd - an).abs() <= tol,
+                "grad mismatch at {i}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    pub fn rand_vec(n: usize, scale: f32, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| (rng.f32() - 0.5) * 2.0 * scale).collect()
+    }
+
+    #[test]
+    fn linear_matches_by_hand() {
+        // theta = [w(2x2), b(2)]
+        let theta = vec![1.0, 2.0, 3.0, 4.0, 0.5, -0.5];
+        let l = Lin { w: 0, b: 4, n_in: 2, n_out: 2 };
+        let y = linear_fwd(&theta, l, &[1.0, 1.0], 1, false);
+        assert_eq!(y, vec![1.0 + 3.0 + 0.5, 2.0 + 4.0 - 0.5]);
+        let yr = linear_fwd(&theta, l, &[-1.0, 0.0], 1, true);
+        assert_eq!(yr, vec![0.0, 0.0]); // relu clamps -0.5 and -2.5... both negative
+    }
+
+    #[test]
+    fn mlp2_gradcheck() {
+        let mut rng = Rng::new(1);
+        let l1 = Lin { w: 0, b: 12, n_in: 3, n_out: 4 };
+        let l2 = Lin { w: 16, b: 24, n_in: 4, n_out: 2 };
+        let total = 26;
+        let theta = rand_vec(total, 0.5, &mut rng);
+        let x = rand_vec(6, 1.0, &mut rng); // 2 rows
+        // loss = sum(y^2)/2 so dy = y
+        let loss = |th: &[f32]| -> f32 {
+            let (y, _) = mlp2_fwd(th, l1, l2, x.clone(), 2);
+            y.iter().map(|v| v * v).sum::<f32>() / 2.0
+        };
+        let (y, cache) = mlp2_fwd(&theta, l1, l2, x.clone(), 2);
+        let mut grad = vec![0.0f32; total];
+        mlp2_bwd(&theta, &mut grad, l1, l2, &cache, &y, false);
+        fd_check(loss, &theta, &grad, 20, 7);
+    }
+
+    #[test]
+    fn mlp2_input_grad() {
+        let mut rng = Rng::new(2);
+        let l1 = Lin { w: 0, b: 12, n_in: 3, n_out: 4 };
+        let l2 = Lin { w: 16, b: 24, n_in: 4, n_out: 2 };
+        let theta = rand_vec(26, 0.5, &mut rng);
+        let x = rand_vec(3, 1.0, &mut rng);
+        let loss = |xv: &[f32]| -> f32 {
+            let (y, _) = mlp2_fwd(&theta, l1, l2, xv.to_vec(), 1);
+            y.iter().map(|v| v * v).sum::<f32>() / 2.0
+        };
+        let (y, cache) = mlp2_fwd(&theta, l1, l2, x.clone(), 1);
+        let mut grad = vec![0.0f32; 26];
+        let dx = mlp2_bwd(&theta, &mut grad, l1, l2, &cache, &y, true);
+        fd_check(loss, &x, &dx, 3, 8);
+    }
+
+    #[test]
+    fn reduce_flavors() {
+        // g=1, n=3, l=2; mask drops item 1
+        let h = vec![1.0, 10.0, 5.0, 50.0, 3.0, -2.0];
+        let mask = vec![1.0, 0.0, 1.0];
+        let (s, _) = masked_reduce(&h, &mask, 1, 3, 2, Red::Sum);
+        assert_eq!(s, vec![4.0, 8.0]);
+        let (m, _) = masked_reduce(&h, &mask, 1, 3, 2, Red::Mean);
+        assert_eq!(m, vec![2.0, 4.0]);
+        let (x, c) = masked_reduce(&h, &mask, 1, 3, 2, Red::Max);
+        assert_eq!(x, vec![3.0, 10.0]);
+        assert_eq!(&c.argmax, &[2, 0]);
+        // empty group -> zeros
+        let (x0, _) = masked_reduce(&h, &[0.0, 0.0, 0.0], 1, 3, 2, Red::Max);
+        assert_eq!(x0, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn reduce_gradcheck() {
+        let mut rng = Rng::new(3);
+        let (g, n, l) = (2usize, 3usize, 2usize);
+        let h = rand_vec(g * n * l, 1.0, &mut rng);
+        let mask = vec![1.0, 1.0, 0.0, 1.0, 0.0, 1.0];
+        for red in [Red::Sum, Red::Mean, Red::Max] {
+            let loss = |hv: &[f32]| -> f32 {
+                let (o, _) = masked_reduce(hv, &mask, g, n, l, red);
+                o.iter().map(|v| v * v).sum::<f32>() / 2.0
+            };
+            let (o, cache) = masked_reduce(&h, &mask, g, n, l, red);
+            let dh = masked_reduce_bwd(&o, &mask, g, n, l, red, &cache);
+            fd_check(loss, &h, &dh, 12, 40 + red as u64);
+        }
+    }
+
+    #[test]
+    fn reinforce_gradcheck() {
+        let mut rng = Rng::new(4);
+        let (rows, d) = (3usize, 4usize);
+        let logits = rand_vec(rows * d, 2.0, &mut rng);
+        let mut legal = vec![1.0f32; rows * d];
+        legal[1] = 0.0; // one illegal action in row 0
+        let action = vec![0i32, 2, 3];
+        let adv = vec![0.7f32, -1.2, 0.4];
+        let smask = vec![1.0f32, 1.0, 0.0];
+        // mask logits like the model does before the loss
+        let masked = |z: &[f32]| -> Vec<f32> {
+            z.iter()
+                .enumerate()
+                .map(|(i, &v)| if legal[i] > 0.0 { v } else { -1e9 })
+                .collect()
+        };
+        let loss = |z: &[f32]| -> f32 {
+            reinforce_loss_grad(&masked(z), &legal, &action, &adv, &smask, rows, d, 0.001).0
+        };
+        let (_, dz) =
+            reinforce_loss_grad(&masked(&logits), &legal, &action, &adv, &smask, rows, d, 0.001);
+        fd_check(loss, &logits, &dz, 12, 9);
+        // masked-out row contributes nothing
+        assert!(dz[2 * d..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn adam_step_matches_reference() {
+        // one step from zero moments: mhat = g, vhat = g^2 -> step ~ lr*sign(g)
+        let mut theta = vec![1.0f32, -1.0];
+        let mut m = vec![0.0f32; 2];
+        let mut v = vec![0.0f32; 2];
+        adam(&mut theta, &mut m, &mut v, &[0.5, -0.25], 1.0, 0.1);
+        assert!((theta[0] - (1.0 - 0.1)).abs() < 1e-4, "{}", theta[0]);
+        assert!((theta[1] - (-1.0 + 0.1)).abs() < 1e-4, "{}", theta[1]);
+        assert!((m[0] - 0.05).abs() < 1e-7);
+    }
+}

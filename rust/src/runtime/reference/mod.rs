@@ -1,0 +1,506 @@
+//! Pure-Rust reference backend: evaluates every artifact the coordinator
+//! uses — cost / policy / RNN forward passes, their Adam training steps,
+//! and the fused MDP step — natively, mirroring `python/compile/model.py`
+//! to the operation. No artifacts directory, no native libraries.
+//!
+//! The backend synthesizes its own [`Manifest`]
+//! ([`reference_manifest`]): the same flat-parameter layouts
+//! (`spec`), the same artifact-name grid the AOT pipeline bakes
+//! (`cost_fwd_d4s48`, `policy_train_d4s48_b512`, ...), and the same shape
+//! metadata. Because execution here is shape-polymorphic (dims are read
+//! from the inputs), the baked `E`/`S`/`B` capacities only drive the
+//! coordinator's padding; padded lanes/rows are trimmed before compute,
+//! so e.g. a 60-step REINFORCE update pays for 60 rows, not 512.
+//!
+//! The XLA-only `dlrm_train` artifact (embedding-bag training of the
+//! DLRM example) is intentionally *not* implemented: it needs the Pallas
+//! kernels and is the one workload that genuinely requires
+//! `make artifacts` + `--features xla`.
+
+mod cost;
+mod math;
+mod policy;
+mod rnn;
+mod spec;
+
+use std::collections::HashMap;
+
+use super::manifest::{Artifact, Manifest};
+use super::tensor::{TensorF32, TensorI32, Value};
+use super::Backend;
+use crate::bail;
+use crate::util::error::{Context, Result};
+
+pub use math::Red;
+
+/// The dependency-free reference backend (stateless).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReferenceBackend;
+
+impl ReferenceBackend {
+    pub fn new() -> Self {
+        ReferenceBackend
+    }
+}
+
+// ---------------------------------------------------------------------
+// manifest
+// ---------------------------------------------------------------------
+
+/// (D, S, trainable, lanes) variant grid — matches what `make artifacts`
+/// lowers: three trainable variants plus the inference-only ultra one.
+const VARIANTS: [(usize, usize, bool, usize); 4] =
+    [(2, 48, true, 16), (4, 48, true, 16), (8, 48, true, 16), (128, 16, false, 4)];
+
+fn artifact(meta: &[(&str, String)]) -> Artifact {
+    Artifact {
+        file: "<builtin>".to_string(),
+        meta: meta.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+    }
+}
+
+/// The manifest the reference backend serves (no files behind it).
+pub fn reference_manifest() -> Manifest {
+    let mut m = Manifest::default();
+    for (k, v) in [("F", spec::F as i64), ("T_RNN", 256), ("E_FWD", 16), ("E_RNN", 10)] {
+        m.consts.insert(k.to_string(), v);
+    }
+    m.params.insert("cost".into(), spec::cost_spec().param_info());
+    m.params.insert("policy".into(), spec::policy_spec().param_info());
+    for d in [2usize, 4, 8] {
+        m.params.insert(format!("rnn_d{d}"), spec::rnn_spec(d).param_info());
+    }
+    let mut add = |name: String, meta: &[(&str, String)]| {
+        m.artifacts.insert(name, artifact(meta));
+    };
+    for (d, s, trainable, e) in VARIANTS {
+        let dims =
+            [("E", e.to_string()), ("D", d.to_string()), ("S", s.to_string())];
+        add(format!("cost_fwd_d{d}s{s}"), &dims);
+        add(format!("policy_fwd_d{d}s{s}"), &dims);
+        add(format!("mdp_step_d{d}s{s}_e1"), &[("E", "1".into())]);
+        add(format!("mdp_step_d{d}s{s}_e16"), &[("E", "16".into())]);
+        if trainable {
+            add(format!("cost_train_d{d}s{s}"), &[("B", "64".into())]);
+            for b in [512usize, 2048] {
+                add(format!("policy_train_d{d}s{s}_b{b}"), &[("B", b.to_string())]);
+            }
+        }
+    }
+    // reduction-ablation variants (Figs. 13-14) on the standard 4-device shape
+    for tr in ["sum", "mean", "max"] {
+        for dr in ["sum", "mean", "max"] {
+            if (tr, dr) == ("sum", "max") {
+                continue; // that's the shipped default network
+            }
+            add(format!("cost_fwd_red_{tr}_{dr}_d4s48"), &[("E", "16".into())]);
+            add(format!("cost_train_red_{tr}_{dr}_d4s48"), &[("B", "64".into())]);
+        }
+    }
+    add("table_cost".to_string(), &[("N", "256".into())]);
+    for d in [2usize, 4, 8] {
+        add(format!("rnn_fwd_d{d}"), &[]);
+        add(format!("rnn_train_d{d}"), &[]);
+    }
+    m
+}
+
+// ---------------------------------------------------------------------
+// dispatch helpers
+// ---------------------------------------------------------------------
+
+fn f32_in<'a>(inputs: &'a [Value], i: usize, what: &str) -> Result<&'a TensorF32> {
+    inputs
+        .get(i)
+        .with_context(|| format!("missing input {i} ({what})"))?
+        .f32s()
+        .with_context(|| format!("input {i} ({what})"))
+}
+
+fn i32_in<'a>(inputs: &'a [Value], i: usize, what: &str) -> Result<&'a TensorI32> {
+    inputs
+        .get(i)
+        .with_context(|| format!("missing input {i} ({what})"))?
+        .i32s()
+        .with_context(|| format!("input {i} ({what})"))
+}
+
+fn scalar(inputs: &[Value], i: usize, what: &str) -> Result<f32> {
+    let t = f32_in(inputs, i, what)?;
+    t.data.first().copied().with_context(|| format!("input {i} ({what}) is empty"))
+}
+
+fn out_f32(data: Vec<f32>, dims: &[usize]) -> Value {
+    Value::F32(TensorF32::from_vec(data, dims))
+}
+
+fn out_scalar1(x: f32) -> Value {
+    Value::F32(TensorF32::scalar1(x))
+}
+
+/// Number of leading rows to keep: the last row (of `rows` rows of
+/// `stride` elements) containing any nonzero, plus one.
+fn active_rows(data: &[f32], rows: usize, stride: usize) -> usize {
+    for r in (0..rows).rev() {
+        if data[r * stride..(r + 1) * stride].iter().any(|&v| v != 0.0) {
+            return r + 1;
+        }
+    }
+    0
+}
+
+/// Dims of a rank-4 `[E, D, S, F]` tensor.
+fn dims4(t: &TensorF32, what: &str) -> Result<(usize, usize, usize, usize)> {
+    if t.dims.len() != 4 {
+        bail!("{what}: expected rank-4 tensor, got dims {:?}", t.dims);
+    }
+    Ok((t.dims[0] as usize, t.dims[1] as usize, t.dims[2] as usize, t.dims[3] as usize))
+}
+
+fn parse_red_pair(rest: &str) -> Result<(Red, Red)> {
+    let mut it = rest.split('_');
+    let tr = math::parse_red(it.next().unwrap_or(""))?;
+    let dr = math::parse_red(it.next().unwrap_or(""))?;
+    Ok((tr, dr))
+}
+
+// ---------------------------------------------------------------------
+// artifact implementations
+// ---------------------------------------------------------------------
+
+fn run_cost_fwd(inputs: &[Value], tr: Red, dr: Red) -> Result<Vec<Value>> {
+    let feats = f32_in(inputs, 1, "feats")?;
+    let mask = f32_in(inputs, 2, "mask")?;
+    let dmask = f32_in(inputs, 3, "dmask")?;
+    let fmask = f32_in(inputs, 4, "fmask")?;
+    let theta = f32_in(inputs, 0, "theta")?;
+    let (e, d, s, f) = dims4(feats, "cost_fwd feats")?;
+    if f != spec::F {
+        bail!("cost_fwd: feature dim {f} != {}", spec::F);
+    }
+    let e_eff = active_rows(&dmask.data, e, d);
+    let mut q = vec![0.0f32; e * d * 3];
+    let mut cost = vec![0.0f32; e];
+    if e_eff > 0 {
+        let out = cost::cost_forward(
+            &theta.data,
+            &feats.data[..e_eff * d * s * f],
+            &mask.data[..e_eff * d * s],
+            &dmask.data[..e_eff * d],
+            &fmask.data,
+            e_eff,
+            d,
+            s,
+            tr,
+            dr,
+        );
+        q[..e_eff * d * 3].copy_from_slice(&out.q);
+        cost[..e_eff].copy_from_slice(&out.cost);
+    }
+    Ok(vec![out_f32(q, &[e, d, 3]), out_f32(cost, &[e])])
+}
+
+fn run_cost_train(inputs: &[Value], tr: Red, dr: Red) -> Result<Vec<Value>> {
+    let t = scalar(inputs, 3, "t_step")?;
+    let lr = scalar(inputs, 4, "lr")?;
+    let feats = f32_in(inputs, 5, "feats")?;
+    let mask = f32_in(inputs, 6, "mask")?;
+    let dmask = f32_in(inputs, 7, "dmask")?;
+    let q_tgt = f32_in(inputs, 8, "q_tgt")?;
+    let c_tgt = f32_in(inputs, 9, "c_tgt")?;
+    let fmask = f32_in(inputs, 10, "fmask")?;
+    let (b, d, s, f) = dims4(feats, "cost_train feats")?;
+    if f != spec::F {
+        bail!("cost_train: feature dim {f} != {}", spec::F);
+    }
+    let mut theta = f32_in(inputs, 0, "theta")?.data.clone();
+    let mut m = f32_in(inputs, 1, "m")?.data.clone();
+    let mut v = f32_in(inputs, 2, "v")?.data.clone();
+    let (loss, grad) = cost::cost_loss_grad(
+        &theta, &feats.data, &mask.data, &dmask.data, &q_tgt.data, &c_tgt.data, &fmask.data, b,
+        d, s, tr, dr,
+    );
+    math::adam(&mut theta, &mut m, &mut v, &grad, t, lr);
+    let n = theta.len();
+    Ok(vec![
+        out_f32(theta, &[n]),
+        out_f32(m, &[n]),
+        out_f32(v, &[n]),
+        out_scalar1(loss),
+    ])
+}
+
+fn run_policy_fwd(inputs: &[Value]) -> Result<Vec<Value>> {
+    let phi = f32_in(inputs, 0, "phi")?;
+    let feats = f32_in(inputs, 1, "feats")?;
+    let mask = f32_in(inputs, 2, "mask")?;
+    let q = f32_in(inputs, 3, "q")?;
+    let cur = f32_in(inputs, 4, "cur")?;
+    let legal = f32_in(inputs, 5, "legal")?;
+    let fmask = f32_in(inputs, 6, "fmask")?;
+    let qscale = f32_in(inputs, 7, "qscale")?;
+    let (e, d, s, f) = dims4(feats, "policy_fwd feats")?;
+    if f != spec::F {
+        bail!("policy_fwd: feature dim {f} != {}", spec::F);
+    }
+    // no lane trimming here: unlike the fused mdp_step (which trims by
+    // dmask), this entry point has no reliable active-lane signal and is
+    // off the hot path (real-MDP arm + micro-benches only)
+    let logits = policy::policy_forward(
+        &phi.data, &feats.data, &mask.data, &q.data, &cur.data, &legal.data, &fmask.data,
+        &qscale.data, e, d, s,
+    );
+    Ok(vec![out_f32(logits, &[e, d])])
+}
+
+fn run_policy_train(inputs: &[Value]) -> Result<Vec<Value>> {
+    let t = scalar(inputs, 3, "t_step")?;
+    let lr = scalar(inputs, 4, "lr")?;
+    let feats = f32_in(inputs, 5, "feats")?;
+    let mask = f32_in(inputs, 6, "mask")?;
+    let q = f32_in(inputs, 7, "q")?;
+    let cur = f32_in(inputs, 8, "cur")?;
+    let legal = f32_in(inputs, 9, "legal")?;
+    let action = i32_in(inputs, 10, "action")?;
+    let adv = f32_in(inputs, 11, "adv")?;
+    let smask = f32_in(inputs, 12, "smask")?;
+    let fmask = f32_in(inputs, 13, "fmask")?;
+    let qscale = f32_in(inputs, 14, "qscale")?;
+    let (b, d, s, f) = dims4(feats, "policy_train feats")?;
+    if f != spec::F {
+        bail!("policy_train: feature dim {f} != {}", spec::F);
+    }
+    let mut phi = f32_in(inputs, 0, "phi")?.data.clone();
+    let mut m = f32_in(inputs, 1, "m")?.data.clone();
+    let mut v = f32_in(inputs, 2, "v")?.data.clone();
+    // padded rows have smask = 0 and contribute neither loss nor gradient
+    let b_eff = active_rows(&smask.data, b, 1);
+    let mut loss = 0.0;
+    if b_eff > 0 {
+        let (l, grad) = policy::policy_loss_grad(
+            &phi,
+            &feats.data[..b_eff * d * s * f],
+            &mask.data[..b_eff * d * s],
+            &q.data[..b_eff * d * 3],
+            &cur.data[..b_eff * f],
+            &legal.data[..b_eff * d],
+            &action.data[..b_eff],
+            &adv.data[..b_eff],
+            &smask.data[..b_eff],
+            &fmask.data,
+            &qscale.data,
+            b_eff,
+            d,
+            s,
+        );
+        loss = l;
+        math::adam(&mut phi, &mut m, &mut v, &grad, t, lr);
+    }
+    let n = phi.len();
+    Ok(vec![out_f32(phi, &[n]), out_f32(m, &[n]), out_f32(v, &[n]), out_scalar1(loss)])
+}
+
+fn run_mdp_step(inputs: &[Value]) -> Result<Vec<Value>> {
+    let theta = f32_in(inputs, 0, "theta")?;
+    let phi = f32_in(inputs, 1, "phi")?;
+    let feats = f32_in(inputs, 2, "feats")?;
+    let mask = f32_in(inputs, 3, "mask")?;
+    let dmask = f32_in(inputs, 4, "dmask")?;
+    let cur = f32_in(inputs, 5, "cur")?;
+    let legal = f32_in(inputs, 6, "legal")?;
+    let fmask = f32_in(inputs, 7, "fmask")?;
+    let qscale = f32_in(inputs, 8, "qscale")?;
+    let (e, d, s, f) = dims4(feats, "mdp_step feats")?;
+    if f != spec::F {
+        bail!("mdp_step: feature dim {f} != {}", spec::F);
+    }
+    let e_eff = active_rows(&dmask.data, e, d);
+    let mut logits = vec![0.0f32; e * d];
+    let mut q = vec![0.0f32; e * d * 3];
+    let mut cost = vec![0.0f32; e];
+    if e_eff > 0 {
+        let c = cost::cost_forward(
+            &theta.data,
+            &feats.data[..e_eff * d * s * f],
+            &mask.data[..e_eff * d * s],
+            &dmask.data[..e_eff * d],
+            &fmask.data,
+            e_eff,
+            d,
+            s,
+            Red::Sum,
+            Red::Max,
+        );
+        let lg = policy::policy_forward(
+            &phi.data,
+            &feats.data[..e_eff * d * s * f],
+            &mask.data[..e_eff * d * s],
+            &c.q,
+            &cur.data[..e_eff * f],
+            &legal.data[..e_eff * d],
+            &fmask.data,
+            &qscale.data,
+            e_eff,
+            d,
+            s,
+        );
+        logits[..e_eff * d].copy_from_slice(&lg);
+        q[..e_eff * d * 3].copy_from_slice(&c.q);
+        cost[..e_eff].copy_from_slice(&c.cost);
+    }
+    Ok(vec![out_f32(logits, &[e, d]), out_f32(q, &[e, d, 3]), out_f32(cost, &[e])])
+}
+
+fn run_table_cost(inputs: &[Value]) -> Result<Vec<Value>> {
+    let theta = f32_in(inputs, 0, "theta")?;
+    let feats = f32_in(inputs, 1, "feats")?;
+    let fmask = f32_in(inputs, 2, "fmask")?;
+    if feats.dims.len() != 2 {
+        bail!("table_cost: expected [N, F] feats, got {:?}", feats.dims);
+    }
+    let (n, f) = (feats.dims[0] as usize, feats.dims[1] as usize);
+    if f != spec::F {
+        bail!("table_cost: feature dim {f} != {}", spec::F);
+    }
+    let n_eff = active_rows(&feats.data, n, f);
+    let mut total = vec![0.0f32; n];
+    if n_eff > 0 {
+        let part =
+            cost::table_cost_forward(&theta.data, &feats.data[..n_eff * f], &fmask.data, n_eff);
+        total[..n_eff].copy_from_slice(&part);
+    }
+    Ok(vec![out_f32(total, &[n])])
+}
+
+fn run_rnn_fwd(inputs: &[Value]) -> Result<Vec<Value>> {
+    let psi = f32_in(inputs, 0, "psi")?;
+    let feats = f32_in(inputs, 1, "feats")?;
+    let tmask = f32_in(inputs, 2, "tmask")?;
+    let legal = f32_in(inputs, 3, "legal")?;
+    let fmask = f32_in(inputs, 4, "fmask")?;
+    if legal.dims.len() != 3 {
+        bail!("rnn_fwd: expected [E, T, D] legal, got {:?}", legal.dims);
+    }
+    let (e, t_cap, d) =
+        (legal.dims[0] as usize, legal.dims[1] as usize, legal.dims[2] as usize);
+    let logits =
+        rnn::rnn_forward(&psi.data, &feats.data, &tmask.data, &legal.data, &fmask.data, e, t_cap, d);
+    Ok(vec![out_f32(logits, &[e, t_cap, d])])
+}
+
+fn run_rnn_train(inputs: &[Value]) -> Result<Vec<Value>> {
+    let t = scalar(inputs, 3, "t_step")?;
+    let lr = scalar(inputs, 4, "lr")?;
+    let feats = f32_in(inputs, 5, "feats")?;
+    let tmask = f32_in(inputs, 6, "tmask")?;
+    let legal = f32_in(inputs, 7, "legal")?;
+    let action = i32_in(inputs, 8, "action")?;
+    let adv = f32_in(inputs, 9, "adv")?;
+    let fmask = f32_in(inputs, 10, "fmask")?;
+    if legal.dims.len() != 3 {
+        bail!("rnn_train: expected [E, T, D] legal, got {:?}", legal.dims);
+    }
+    let (e, t_cap, d) =
+        (legal.dims[0] as usize, legal.dims[1] as usize, legal.dims[2] as usize);
+    let mut psi = f32_in(inputs, 0, "psi")?.data.clone();
+    let mut m = f32_in(inputs, 1, "m")?.data.clone();
+    let mut v = f32_in(inputs, 2, "v")?.data.clone();
+    let (loss, grad) = rnn::rnn_loss_grad(
+        &psi,
+        &feats.data,
+        &tmask.data,
+        &legal.data,
+        &action.data,
+        &adv.data,
+        &fmask.data,
+        e,
+        t_cap,
+        d,
+    );
+    math::adam(&mut psi, &mut m, &mut v, &grad, t, lr);
+    let n = psi.len();
+    Ok(vec![out_f32(psi, &[n]), out_f32(m, &[n]), out_f32(v, &[n]), out_scalar1(loss)])
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn execute(&self, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        if artifact == "table_cost" {
+            return run_table_cost(inputs);
+        }
+        if let Some(rest) = artifact.strip_prefix("cost_fwd_red_") {
+            let (tr, dr) = parse_red_pair(rest)?;
+            return run_cost_fwd(inputs, tr, dr);
+        }
+        if let Some(rest) = artifact.strip_prefix("cost_train_red_") {
+            let (tr, dr) = parse_red_pair(rest)?;
+            return run_cost_train(inputs, tr, dr);
+        }
+        if artifact.starts_with("cost_fwd_d") {
+            return run_cost_fwd(inputs, Red::Sum, Red::Max);
+        }
+        if artifact.starts_with("cost_train_d") {
+            return run_cost_train(inputs, Red::Sum, Red::Max);
+        }
+        if artifact.starts_with("policy_fwd_d") {
+            return run_policy_fwd(inputs);
+        }
+        if artifact.starts_with("policy_train_d") {
+            return run_policy_train(inputs);
+        }
+        if artifact.starts_with("mdp_step_d") {
+            return run_mdp_step(inputs);
+        }
+        if artifact.starts_with("rnn_fwd_d") {
+            return run_rnn_fwd(inputs);
+        }
+        if artifact.starts_with("rnn_train_d") {
+            return run_rnn_train(inputs);
+        }
+        bail!(
+            "artifact {artifact} is not implemented by the reference backend \
+             (XLA-only; build with --features xla and run `make artifacts`)"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_grid_is_complete() {
+        let m = reference_manifest();
+        for (d, s, trainable, _) in VARIANTS {
+            assert!(m.artifacts.contains_key(&format!("cost_fwd_d{d}s{s}")));
+            assert!(m.artifacts.contains_key(&format!("policy_fwd_d{d}s{s}")));
+            assert!(m.artifacts.contains_key(&format!("mdp_step_d{d}s{s}_e16")));
+            assert_eq!(
+                m.artifacts.contains_key(&format!("cost_train_d{d}s{s}")),
+                trainable
+            );
+        }
+        assert!(m.artifacts.contains_key("cost_fwd_red_mean_max_d4s48"));
+        assert!(!m.artifacts.contains_key("cost_fwd_red_sum_max_d4s48"));
+        for d in [2, 4, 8] {
+            assert!(m.params.contains_key(&format!("rnn_d{d}")));
+            assert!(m.artifacts.contains_key(&format!("rnn_train_d{d}")));
+        }
+        // parameter layouts cover their totals contiguously
+        for info in m.params.values() {
+            let covered: usize = info.segments.iter().map(|s| s.len).sum();
+            assert_eq!(covered, info.total);
+        }
+    }
+
+    #[test]
+    fn active_rows_trims_trailing_zeros() {
+        let data = vec![1.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0];
+        assert_eq!(active_rows(&data, 4, 2), 2);
+        assert_eq!(active_rows(&[0.0; 6], 3, 2), 0);
+        assert_eq!(active_rows(&data, 2, 4), 1);
+    }
+}

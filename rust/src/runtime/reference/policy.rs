@@ -1,0 +1,217 @@
+//! Reference policy network (model.py `policy_logits` /
+//! `policy_train_step`): shared table-MLP device representations (sum
+//! reduction), a cost-feature MLP over the estimated-MDP `q`, the
+//! current-table representation, and a linear head over the
+//! concatenation — plus the REINFORCE training step (Eq. 2).
+
+use super::math::{
+    linear_bwd, linear_fwd, masked_reduce, masked_reduce_bwd, mlp2_bwd, mlp2_fwd,
+    reinforce_loss_grad, Mlp2Cache, Red, RedCache,
+};
+use super::spec::{policy_spec, Spec, ENTROPY_W, F, L};
+
+struct Caches {
+    tbl: Mlp2Cache,
+    red: RedCache,
+    cost: Mlp2Cache,
+    cur: Mlp2Cache,
+    /// Concatenated head input rows [e*d, 3L].
+    x: Vec<f32>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn forward_inner(
+    spec: &Spec,
+    phi: &[f32],
+    feats: &[f32],
+    mask: &[f32],
+    q: &[f32],
+    cur: &[f32],
+    legal: &[f32],
+    fmask: &[f32],
+    qscale: &[f32],
+    e: usize,
+    d: usize,
+    s: usize,
+) -> (Vec<f32>, Caches) {
+    let rows = e * d * s;
+    let mut x = vec![0.0f32; rows * F];
+    for r in 0..rows {
+        for (i, &fm) in fmask.iter().enumerate() {
+            x[r * F + i] = feats[r * F + i] * fm;
+        }
+    }
+    let (h, tbl) = mlp2_fwd(phi, spec.lin("tbl1"), spec.lin("tbl2"), x, rows);
+    let (hdev, red) = masked_reduce(&h, mask, e * d, s, L, Red::Sum);
+
+    let mut qx = vec![0.0f32; e * d * 3];
+    for ed in 0..e * d {
+        for k in 0..3 {
+            qx[ed * 3 + k] = q[ed * 3 + k] * qscale[k];
+        }
+    }
+    let (hq, cost) = mlp2_fwd(phi, spec.lin("cost1"), spec.lin("cost2"), qx, e * d);
+
+    let mut xc = vec![0.0f32; e * F];
+    for r in 0..e {
+        for (i, &fm) in fmask.iter().enumerate() {
+            xc[r * F + i] = cur[r * F + i] * fm;
+        }
+    }
+    let (hcur, curc) = mlp2_fwd(phi, spec.lin("tbl1"), spec.lin("tbl2"), xc, e);
+
+    // head input rows: [hdev[ed] ; hq[ed] ; hcur[e]] -> [e*d, 3L]
+    let mut xh = vec![0.0f32; e * d * 3 * L];
+    for lane in 0..e {
+        for dev in 0..d {
+            let ed = lane * d + dev;
+            let row = &mut xh[ed * 3 * L..(ed + 1) * 3 * L];
+            row[..L].copy_from_slice(&hdev[ed * L..(ed + 1) * L]);
+            row[L..2 * L].copy_from_slice(&hq[ed * L..(ed + 1) * L]);
+            row[2 * L..].copy_from_slice(&hcur[lane * L..(lane + 1) * L]);
+        }
+    }
+    let score = linear_fwd(phi, spec.lin("head"), &xh, e * d, false);
+    let mut logits = vec![0.0f32; e * d];
+    for ed in 0..e * d {
+        logits[ed] = if legal[ed] > 0.0 { score[ed] } else { -1e9 };
+    }
+    (logits, Caches { tbl, red, cost, cur: curc, x: xh })
+}
+
+/// Device logits for the table currently being placed ([e*d]).
+#[allow(clippy::too_many_arguments)]
+pub fn policy_forward(
+    phi: &[f32],
+    feats: &[f32],
+    mask: &[f32],
+    q: &[f32],
+    cur: &[f32],
+    legal: &[f32],
+    fmask: &[f32],
+    qscale: &[f32],
+    e: usize,
+    d: usize,
+    s: usize,
+) -> Vec<f32> {
+    let spec = policy_spec();
+    forward_inner(&spec, phi, feats, mask, q, cur, legal, fmask, qscale, e, d, s).0
+}
+
+/// REINFORCE loss and full parameter gradient over `b` recorded steps.
+#[allow(clippy::too_many_arguments)]
+pub fn policy_loss_grad(
+    phi: &[f32],
+    feats: &[f32],
+    mask: &[f32],
+    q: &[f32],
+    cur: &[f32],
+    legal: &[f32],
+    action: &[i32],
+    adv: &[f32],
+    smask: &[f32],
+    fmask: &[f32],
+    qscale: &[f32],
+    b: usize,
+    d: usize,
+    s: usize,
+) -> (f32, Vec<f32>) {
+    let spec = policy_spec();
+    let (logits, caches) =
+        forward_inner(&spec, phi, feats, mask, q, cur, legal, fmask, qscale, b, d, s);
+    let (loss, dlogits) =
+        reinforce_loss_grad(&logits, legal, action, adv, smask, b, d, ENTROPY_W);
+
+    let mut grad = vec![0.0f32; spec.total];
+    // linear head: dy [b*d, 1] -> dx [b*d, 3L]
+    let dx = linear_bwd(phi, &mut grad, spec.lin("head"), &caches.x, &dlogits, b * d, true);
+    let mut dhdev = vec![0.0f32; b * d * L];
+    let mut dhq = vec![0.0f32; b * d * L];
+    let mut dhcur = vec![0.0f32; b * L];
+    for lane in 0..b {
+        for dev in 0..d {
+            let ed = lane * d + dev;
+            let row = &dx[ed * 3 * L..(ed + 1) * 3 * L];
+            dhdev[ed * L..(ed + 1) * L].copy_from_slice(&row[..L]);
+            dhq[ed * L..(ed + 1) * L].copy_from_slice(&row[L..2 * L]);
+            for ch in 0..L {
+                dhcur[lane * L + ch] += row[2 * L + ch]; // broadcast over devices
+            }
+        }
+    }
+    mlp2_bwd(phi, &mut grad, spec.lin("cost1"), spec.lin("cost2"), &caches.cost, &dhq, false);
+    mlp2_bwd(phi, &mut grad, spec.lin("tbl1"), spec.lin("tbl2"), &caches.cur, &dhcur, false);
+    let dh = masked_reduce_bwd(&dhdev, mask, b * d, s, L, Red::Sum, &caches.red);
+    mlp2_bwd(phi, &mut grad, spec.lin("tbl1"), spec.lin("tbl2"), &caches.tbl, &dh, false);
+    (loss, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::reference::math::tests::{fd_check, rand_vec};
+    use crate::util::Rng;
+
+    #[allow(clippy::type_complexity)]
+    fn tiny(
+        rng: &mut Rng,
+        b: usize,
+        d: usize,
+        s: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let feats: Vec<f32> = rand_vec(b * d * s * F, 1.0, rng).iter().map(|v| v.abs()).collect();
+        let mut mask = vec![0.0f32; b * d * s];
+        for step in 0..b {
+            for dev in 0..d {
+                for slot in 0..=(dev % s.max(1)) {
+                    mask[(step * d + dev) * s + slot] = 1.0;
+                }
+            }
+        }
+        let q = rand_vec(b * d * 3, 1.0, rng);
+        let cur: Vec<f32> = rand_vec(b * F, 1.0, rng).iter().map(|v| v.abs()).collect();
+        let mut legal = vec![1.0f32; b * d];
+        legal[0] = 0.0; // one illegal device in step 0
+        let fmask = vec![1.0f32; F];
+        let qscale = vec![1.0f32; 3];
+        (feats, mask, q, cur, legal, fmask, qscale)
+    }
+
+    #[test]
+    fn logits_respect_legality() {
+        let mut rng = Rng::new(21);
+        let spec = policy_spec();
+        let phi = rand_vec(spec.total, 0.1, &mut rng);
+        let (b, d, s) = (2usize, 3usize, 2usize);
+        let (feats, mask, q, cur, legal, fmask, qscale) = tiny(&mut rng, b, d, s);
+        let logits =
+            policy_forward(&phi, &feats, &mask, &q, &cur, &legal, &fmask, &qscale, b, d, s);
+        assert_eq!(logits.len(), b * d);
+        assert_eq!(logits[0], -1e9);
+        assert!(logits[1].is_finite() && logits[1].abs() < 1e6);
+    }
+
+    #[test]
+    fn policy_gradcheck() {
+        let mut rng = Rng::new(22);
+        let spec = policy_spec();
+        let phi = rand_vec(spec.total, 0.15, &mut rng);
+        let (b, d, s) = (3usize, 2usize, 2usize);
+        let (feats, mask, q, cur, legal, fmask, qscale) = tiny(&mut rng, b, d, s);
+        let action = vec![1i32, 0, 1];
+        let adv = vec![0.8f32, -0.3, 1.1];
+        let smask = vec![1.0f32, 1.0, 0.0];
+        let loss = |ph: &[f32]| -> f32 {
+            policy_loss_grad(
+                ph, &feats, &mask, &q, &cur, &legal, &action, &adv, &smask, &fmask, &qscale, b,
+                d, s,
+            )
+            .0
+        };
+        let (_, grad) = policy_loss_grad(
+            &phi, &feats, &mask, &q, &cur, &legal, &action, &adv, &smask, &fmask, &qscale, b, d,
+            s,
+        );
+        fd_check(loss, &phi, &grad, 30, 88);
+    }
+}

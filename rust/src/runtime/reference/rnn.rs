@@ -1,0 +1,443 @@
+//! Reference RNN baseline controller (model.py `rnn_logits` /
+//! `rnn_train_step`): shared table-MLP representations, a GRU scanned
+//! over the table sequence, dot-product content attention over the
+//! sequence, a per-step device head — and full backpropagation through
+//! time for the REINFORCE update.
+
+use super::math::{
+    linear_bwd, linear_fwd, mlp2_bwd, mlp2_fwd, reinforce_loss_grad, Lin, Mlp2Cache,
+};
+use super::spec::{rnn_spec, Spec, ENTROPY_W, F, L};
+
+/// Per-step GRU activations kept for BPTT.
+struct GruStep {
+    /// Input rows x_t [e, L] (gathered table reps).
+    x: Vec<f32>,
+    /// Previous hidden state [e, L].
+    h_prev: Vec<f32>,
+    z: Vec<f32>,
+    r: Vec<f32>,
+    n: Vec<f32>,
+    /// r ⊙ h_prev (input of the hn linear) [e, L].
+    rh: Vec<f32>,
+}
+
+struct Caches {
+    tbl: Mlp2Cache,
+    steps: Vec<GruStep>,
+    /// Hidden states [e, t_eff, L].
+    hs: Vec<f32>,
+    /// Attention weights [e, t_eff, t_eff].
+    att: Vec<f32>,
+    /// Head input rows [hs ; ctx] [e * t_eff, 2L].
+    xcat: Vec<f32>,
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+fn gru_linear2(psi: &[f32], lx: Lin, lh: Lin, x: &[f32], h: &[f32], e: usize) -> Vec<f32> {
+    let mut a = linear_fwd(psi, lx, x, e, false);
+    let b = linear_fwd(psi, lh, h, e, false);
+    for (av, &bv) in a.iter_mut().zip(b.iter()) {
+        *av += bv;
+    }
+    a
+}
+
+/// Forward over `e` lanes and `t_eff` real steps. Returns the logits of
+/// the computed region [e, t_eff, d] plus everything backward needs.
+#[allow(clippy::too_many_arguments)]
+fn forward_inner(
+    spec: &Spec,
+    psi: &[f32],
+    feats: &[f32],
+    tmask: &[f32],
+    legal: &[f32],
+    fmask: &[f32],
+    e: usize,
+    t_cap: usize,
+    d: usize,
+    t_eff: usize,
+) -> (Vec<f32>, Caches) {
+    // table reps over the trimmed [e, t_eff, F] grid
+    let rows = e * t_eff;
+    let mut x = vec![0.0f32; rows * F];
+    for lane in 0..e {
+        for t in 0..t_eff {
+            let src = (lane * t_cap + t) * F;
+            let dst = (lane * t_eff + t) * F;
+            for (i, &fm) in fmask.iter().enumerate() {
+                x[dst + i] = feats[src + i] * fm;
+            }
+        }
+    }
+    let (reps, tbl) = mlp2_fwd(psi, spec.lin("tbl1"), spec.lin("tbl2"), x, rows);
+
+    // GRU scan
+    let (lxz, lhz) = (spec.lin("gru_xz"), spec.lin("gru_hz"));
+    let (lxr, lhr) = (spec.lin("gru_xr"), spec.lin("gru_hr"));
+    let (lxn, lhn) = (spec.lin("gru_xn"), spec.lin("gru_hn"));
+    let mut h = vec![0.0f32; e * L];
+    let mut steps = Vec::with_capacity(t_eff);
+    let mut hs = vec![0.0f32; e * t_eff * L];
+    for t in 0..t_eff {
+        let mut xt = vec![0.0f32; e * L];
+        for lane in 0..e {
+            let src = (lane * t_eff + t) * L;
+            xt[lane * L..(lane + 1) * L].copy_from_slice(&reps[src..src + L]);
+        }
+        let mut z = gru_linear2(psi, lxz, lhz, &xt, &h, e);
+        let mut r = gru_linear2(psi, lxr, lhr, &xt, &h, e);
+        for v in z.iter_mut() {
+            *v = sigmoid(*v);
+        }
+        for v in r.iter_mut() {
+            *v = sigmoid(*v);
+        }
+        let mut rh = vec![0.0f32; e * L];
+        for i in 0..e * L {
+            rh[i] = r[i] * h[i];
+        }
+        let mut n = gru_linear2(psi, lxn, lhn, &xt, &rh, e);
+        for v in n.iter_mut() {
+            *v = v.tanh();
+        }
+        let h_prev = h.clone();
+        for i in 0..e * L {
+            h[i] = (1.0 - z[i]) * h_prev[i] + z[i] * n[i];
+        }
+        for lane in 0..e {
+            let dst = (lane * t_eff + t) * L;
+            hs[dst..dst + L].copy_from_slice(&h[lane * L..(lane + 1) * L]);
+        }
+        steps.push(GruStep { x: xt, h_prev, z, r, n, rh });
+    }
+
+    // content attention per lane: softmax(hs hs^T / sqrt(L)) over keys
+    let scale = 1.0 / (L as f32).sqrt();
+    let mut att = vec![0.0f32; e * t_eff * t_eff];
+    let mut ctx = vec![0.0f32; e * t_eff * L];
+    for lane in 0..e {
+        for t in 0..t_eff {
+            let qrow = &hs[(lane * t_eff + t) * L..(lane * t_eff + t + 1) * L];
+            let arow = &mut att[(lane * t_eff + t) * t_eff..(lane * t_eff + t + 1) * t_eff];
+            let mut amax = f32::NEG_INFINITY;
+            for u in 0..t_eff {
+                let krow = &hs[(lane * t_eff + u) * L..(lane * t_eff + u + 1) * L];
+                let mut dot = 0.0f32;
+                for (a, b) in qrow.iter().zip(krow.iter()) {
+                    dot += a * b;
+                }
+                let v = if tmask[lane * t_cap + u] > 0.0 { dot * scale } else { -1e9 };
+                arow[u] = v;
+                amax = amax.max(v);
+            }
+            let mut sum = 0.0f32;
+            for v in arow.iter_mut() {
+                *v = (*v - amax).exp();
+                sum += *v;
+            }
+            for v in arow.iter_mut() {
+                *v /= sum;
+            }
+            let crow_off = (lane * t_eff + t) * L;
+            for u in 0..t_eff {
+                let w = arow[u];
+                if w != 0.0 {
+                    let krow = &hs[(lane * t_eff + u) * L..(lane * t_eff + u + 1) * L];
+                    for ch in 0..L {
+                        ctx[crow_off + ch] += w * krow[ch];
+                    }
+                }
+            }
+        }
+    }
+
+    // head over [hs ; ctx]
+    let mut xcat = vec![0.0f32; rows * 2 * L];
+    for rowi in 0..rows {
+        xcat[rowi * 2 * L..rowi * 2 * L + L].copy_from_slice(&hs[rowi * L..(rowi + 1) * L]);
+        xcat[rowi * 2 * L + L..(rowi + 1) * 2 * L]
+            .copy_from_slice(&ctx[rowi * L..(rowi + 1) * L]);
+    }
+    let score = linear_fwd(psi, spec.lin("head"), &xcat, rows, false);
+    let mut logits = vec![0.0f32; rows * d];
+    for lane in 0..e {
+        for t in 0..t_eff {
+            for j in 0..d {
+                let li = (lane * t_eff + t) * d + j;
+                logits[li] = if legal[(lane * t_cap + t) * d + j] > 0.0 {
+                    score[li]
+                } else {
+                    -1e9
+                };
+            }
+        }
+    }
+    (logits, Caches { tbl, steps, hs, att, xcat })
+}
+
+/// Effective sequence length: last step any lane still masks in, +1.
+pub fn effective_t(tmask: &[f32], e: usize, t_cap: usize) -> usize {
+    let mut t_eff = 0;
+    for lane in 0..e {
+        for t in (t_eff..t_cap).rev() {
+            if tmask[lane * t_cap + t] > 0.0 {
+                t_eff = t + 1;
+                break;
+            }
+        }
+    }
+    t_eff
+}
+
+/// Full-size per-step logits [e, t_cap, d] (entries beyond the effective
+/// sequence are 0 — callers never index them).
+pub fn rnn_forward(
+    psi: &[f32],
+    feats: &[f32],
+    tmask: &[f32],
+    legal: &[f32],
+    fmask: &[f32],
+    e: usize,
+    t_cap: usize,
+    d: usize,
+) -> Vec<f32> {
+    let spec = rnn_spec(d);
+    let t_eff = effective_t(tmask, e, t_cap);
+    let mut out = vec![0.0f32; e * t_cap * d];
+    if t_eff == 0 {
+        return out;
+    }
+    let (logits, _) = forward_inner(&spec, psi, feats, tmask, legal, fmask, e, t_cap, d, t_eff);
+    for lane in 0..e {
+        for t in 0..t_eff {
+            let src = (lane * t_eff + t) * d;
+            let dst = (lane * t_cap + t) * d;
+            out[dst..dst + d].copy_from_slice(&logits[src..src + d]);
+        }
+    }
+    out
+}
+
+/// REINFORCE loss over the whole sequence batch + full parameter
+/// gradient (BPTT through the GRU and the attention).
+#[allow(clippy::too_many_arguments)]
+pub fn rnn_loss_grad(
+    psi: &[f32],
+    feats: &[f32],
+    tmask: &[f32],
+    legal: &[f32],
+    action: &[i32],
+    adv: &[f32],
+    fmask: &[f32],
+    e: usize,
+    t_cap: usize,
+    d: usize,
+) -> (f32, Vec<f32>) {
+    let spec = rnn_spec(d);
+    let t_eff = effective_t(tmask, e, t_cap);
+    if t_eff == 0 {
+        return (0.0, vec![0.0f32; spec.total]);
+    }
+    let (logits, caches) =
+        forward_inner(&spec, psi, feats, tmask, legal, fmask, e, t_cap, d, t_eff);
+    let rows = e * t_eff;
+
+    // flatten the per-(lane, step) loss inputs to the trimmed region
+    let mut legal_f = vec![0.0f32; rows * d];
+    let mut action_f = vec![0i32; rows];
+    let mut adv_f = vec![0.0f32; rows];
+    let mut smask_f = vec![0.0f32; rows];
+    for lane in 0..e {
+        for t in 0..t_eff {
+            let rowi = lane * t_eff + t;
+            legal_f[rowi * d..(rowi + 1) * d]
+                .copy_from_slice(&legal[(lane * t_cap + t) * d..(lane * t_cap + t + 1) * d]);
+            action_f[rowi] = action[lane * t_cap + t];
+            adv_f[rowi] = adv[lane];
+            smask_f[rowi] = tmask[lane * t_cap + t];
+        }
+    }
+    let (loss, dlogits) =
+        reinforce_loss_grad(&logits, &legal_f, &action_f, &adv_f, &smask_f, rows, d, ENTROPY_W);
+
+    let mut grad = vec![0.0f32; spec.total];
+    // head -> [dhs ; dctx]
+    let dxcat = linear_bwd(psi, &mut grad, spec.lin("head"), &caches.xcat, &dlogits, rows, true);
+    let mut dhs = vec![0.0f32; rows * L];
+    let mut dctx = vec![0.0f32; rows * L];
+    for rowi in 0..rows {
+        dhs[rowi * L..(rowi + 1) * L].copy_from_slice(&dxcat[rowi * 2 * L..rowi * 2 * L + L]);
+        dctx[rowi * L..(rowi + 1) * L]
+            .copy_from_slice(&dxcat[rowi * 2 * L + L..(rowi + 1) * 2 * L]);
+    }
+
+    // attention backward: ctx = A hs, A = softmax(hs hs^T * scale, keys masked)
+    let scale = 1.0 / (L as f32).sqrt();
+    for lane in 0..e {
+        let base = lane * t_eff;
+        for t in 0..t_eff {
+            let arow = &caches.att[(base + t) * t_eff..(base + t + 1) * t_eff];
+            let dcrow = &dctx[(base + t) * L..(base + t + 1) * L];
+            // dA[t,u] = dctx[t] . hs[u]; dhs[u] += A[t,u] * dctx[t]
+            let mut da = vec![0.0f32; t_eff];
+            let mut dot_sum = 0.0f32; // sum_u A[t,u] dA[t,u]
+            for u in 0..t_eff {
+                let a = arow[u];
+                let krow = &caches.hs[(base + u) * L..(base + u + 1) * L];
+                let mut dot = 0.0f32;
+                for ch in 0..L {
+                    dot += dcrow[ch] * krow[ch];
+                }
+                da[u] = dot;
+                dot_sum += a * dot;
+                if a != 0.0 {
+                    let dk = &mut dhs[(base + u) * L..(base + u + 1) * L];
+                    for ch in 0..L {
+                        dk[ch] += a * dcrow[ch];
+                    }
+                }
+            }
+            // softmax backward, then the bilinear hs hs^T term
+            let qrow = &caches.hs[(base + t) * L..(base + t + 1) * L];
+            let mut dq = vec![0.0f32; L];
+            for u in 0..t_eff {
+                let datt = arow[u] * (da[u] - dot_sum);
+                if datt != 0.0 {
+                    let krow = &caches.hs[(base + u) * L..(base + u + 1) * L];
+                    let dk = &mut dhs[(base + u) * L..(base + u + 1) * L];
+                    for ch in 0..L {
+                        dq[ch] += datt * krow[ch] * scale;
+                        dk[ch] += datt * qrow[ch] * scale;
+                    }
+                }
+            }
+            let dqr = &mut dhs[(base + t) * L..(base + t + 1) * L];
+            for ch in 0..L {
+                dqr[ch] += dq[ch];
+            }
+        }
+    }
+
+    // BPTT through the GRU
+    let (lxz, lhz) = (spec.lin("gru_xz"), spec.lin("gru_hz"));
+    let (lxr, lhr) = (spec.lin("gru_xr"), spec.lin("gru_hr"));
+    let (lxn, lhn) = (spec.lin("gru_xn"), spec.lin("gru_hn"));
+    let mut dreps = vec![0.0f32; rows * L];
+    let mut carry = vec![0.0f32; e * L];
+    for t in (0..t_eff).rev() {
+        let st = &caches.steps[t];
+        // total gradient on h_t
+        let mut dht = carry.clone();
+        for lane in 0..e {
+            let src = (lane * t_eff + t) * L;
+            for ch in 0..L {
+                dht[lane * L + ch] += dhs[src + ch];
+            }
+        }
+        let el = e * L;
+        let mut dz = vec![0.0f32; el];
+        let mut dn = vec![0.0f32; el];
+        let mut new_carry = vec![0.0f32; el];
+        for i in 0..el {
+            dz[i] = dht[i] * (st.n[i] - st.h_prev[i]);
+            dn[i] = dht[i] * st.z[i];
+            new_carry[i] = dht[i] * (1.0 - st.z[i]);
+        }
+        // n = tanh(a_n)
+        let mut da_n = vec![0.0f32; el];
+        for i in 0..el {
+            da_n[i] = dn[i] * (1.0 - st.n[i] * st.n[i]);
+        }
+        let dxt_n = linear_bwd(psi, &mut grad, lxn, &st.x, &da_n, e, true);
+        let drh = linear_bwd(psi, &mut grad, lhn, &st.rh, &da_n, e, true);
+        let mut dr = vec![0.0f32; el];
+        for i in 0..el {
+            dr[i] = drh[i] * st.h_prev[i];
+            new_carry[i] += drh[i] * st.r[i];
+        }
+        // z = sigmoid(a_z), r = sigmoid(a_r)
+        let mut da_z = vec![0.0f32; el];
+        let mut da_r = vec![0.0f32; el];
+        for i in 0..el {
+            da_z[i] = dz[i] * st.z[i] * (1.0 - st.z[i]);
+            da_r[i] = dr[i] * st.r[i] * (1.0 - st.r[i]);
+        }
+        let dxt_z = linear_bwd(psi, &mut grad, lxz, &st.x, &da_z, e, true);
+        let dh_z = linear_bwd(psi, &mut grad, lhz, &st.h_prev, &da_z, e, true);
+        let dxt_r = linear_bwd(psi, &mut grad, lxr, &st.x, &da_r, e, true);
+        let dh_r = linear_bwd(psi, &mut grad, lhr, &st.h_prev, &da_r, e, true);
+        for i in 0..el {
+            new_carry[i] += dh_z[i] + dh_r[i];
+        }
+        carry = new_carry;
+        for lane in 0..e {
+            let dst = (lane * t_eff + t) * L;
+            for ch in 0..L {
+                dreps[dst + ch] += dxt_n[lane * L + ch] + dxt_z[lane * L + ch] + dxt_r[lane * L + ch];
+            }
+        }
+    }
+    mlp2_bwd(psi, &mut grad, spec.lin("tbl1"), spec.lin("tbl2"), &caches.tbl, &dreps, false);
+    (loss, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::reference::math::tests::{fd_check, rand_vec};
+    use crate::util::Rng;
+
+    #[test]
+    fn forward_trims_and_masks() {
+        let mut rng = Rng::new(31);
+        let d = 2;
+        let spec = rnn_spec(d);
+        let psi = rand_vec(spec.total, 0.1, &mut rng);
+        let (e, t_cap) = (2usize, 4usize);
+        let feats: Vec<f32> =
+            rand_vec(e * t_cap * F, 1.0, &mut rng).iter().map(|v| v.abs()).collect();
+        let mut tmask = vec![0.0f32; e * t_cap];
+        tmask[0] = 1.0;
+        tmask[1] = 1.0;
+        tmask[t_cap] = 1.0; // lane 1: one table
+        let legal = vec![1.0f32; e * t_cap * d];
+        let fmask = vec![1.0f32; F];
+        let logits = rnn_forward(&psi, &feats, &tmask, &legal, &fmask, e, t_cap, d);
+        assert_eq!(logits.len(), e * t_cap * d);
+        assert_eq!(effective_t(&tmask, e, t_cap), 2);
+        // steps beyond the effective length stay zero
+        assert!(logits[(2 * d)..(t_cap * d)].iter().all(|&v| v == 0.0));
+        assert!(logits[..2 * d].iter().all(|v| v.is_finite() && v.abs() < 1e6));
+        // deterministic
+        let logits2 = rnn_forward(&psi, &feats, &tmask, &legal, &fmask, e, t_cap, d);
+        assert_eq!(logits, logits2);
+    }
+
+    #[test]
+    fn rnn_gradcheck() {
+        let mut rng = Rng::new(32);
+        let d = 2;
+        let spec = rnn_spec(d);
+        let psi = rand_vec(spec.total, 0.15, &mut rng);
+        let (e, t_cap) = (2usize, 3usize);
+        let feats: Vec<f32> =
+            rand_vec(e * t_cap * F, 1.0, &mut rng).iter().map(|v| v.abs()).collect();
+        let mut tmask = vec![1.0f32; e * t_cap];
+        tmask[e * t_cap - 1] = 0.0; // ragged tail on the last lane
+        let mut legal = vec![1.0f32; e * t_cap * d];
+        legal[0] = 0.0;
+        let action = vec![1i32, 0, 1, 0, 1, 0];
+        let adv = vec![0.9f32, -0.6];
+        let fmask = vec![1.0f32; F];
+        let loss = |p: &[f32]| -> f32 {
+            rnn_loss_grad(p, &feats, &tmask, &legal, &action, &adv, &fmask, e, t_cap, d).0
+        };
+        let (_, grad) =
+            rnn_loss_grad(&psi, &feats, &tmask, &legal, &action, &adv, &fmask, e, t_cap, d);
+        fd_check(loss, &psi, &grad, 40, 99);
+    }
+}

@@ -1,0 +1,164 @@
+//! Flat-parameter layouts of the three networks, mirroring
+//! `python/compile/params.py` + `model.py` **exactly** (same entry order,
+//! offsets, and PyTorch-Linear init bounds), so parameters initialized by
+//! either backend are interchangeable.
+
+use crate::runtime::manifest::{ParamInfo, Segment};
+
+/// Table-feature count (paper section A.2). Equals `tables::NUM_FEATURES`.
+pub const F: usize = 21;
+/// Latent dim.
+pub const L: usize = 32;
+/// Shared table-MLP hidden width.
+pub const H_TBL: usize = 128;
+/// Prediction-head hidden width.
+pub const H_HEAD: usize = 64;
+/// Policy cost-feature MLP hidden width.
+pub const H_COST: usize = 64;
+/// Entropy-bonus weight in the REINFORCE loss (Eq. 2).
+pub const ENTROPY_W: f32 = 0.001;
+
+/// One dense layer's location inside the flat parameter vector:
+/// weight `[n_in, n_out]` (row-major) at `w`, bias `[n_out]` at `b`.
+#[derive(Clone, Copy, Debug)]
+pub struct Lin {
+    pub w: usize,
+    pub b: usize,
+    pub n_in: usize,
+    pub n_out: usize,
+}
+
+/// Ordered list of named segments living inside one flat vector.
+#[derive(Clone, Debug, Default)]
+pub struct Spec {
+    /// (name, offset, len, init bound).
+    pub segs: Vec<(String, usize, usize, f32)>,
+    pub total: usize,
+}
+
+impl Spec {
+    fn add(&mut self, name: String, len: usize, fan_in: usize) {
+        // PyTorch nn.Linear default: U(-1/sqrt(fan_in), 1/sqrt(fan_in))
+        // for both weight and bias.
+        let bound = 1.0 / (fan_in as f32).sqrt();
+        self.segs.push((name, self.total, len, bound));
+        self.total += len;
+    }
+
+    /// Register a dense layer's weight `[n_in, n_out]` and bias `[n_out]`.
+    fn linear(&mut self, name: &str, n_in: usize, n_out: usize) {
+        self.add(format!("{name}.w"), n_in * n_out, n_in);
+        self.add(format!("{name}.b"), n_out, n_in);
+    }
+
+    /// Locate a dense layer registered with [`Spec::linear`].
+    pub fn lin(&self, name: &str) -> Lin {
+        let wname = format!("{name}.w");
+        let wi = self
+            .segs
+            .iter()
+            .position(|(n, ..)| *n == wname)
+            .unwrap_or_else(|| panic!("no layer {name} in spec"));
+        let (_, w_off, w_len, _) = &self.segs[wi];
+        let (_, b_off, b_len, _) = &self.segs[wi + 1];
+        Lin { w: *w_off, b: *b_off, n_in: w_len / b_len, n_out: *b_len }
+    }
+
+    /// Manifest record of this layout.
+    pub fn param_info(&self) -> ParamInfo {
+        ParamInfo {
+            total: self.total,
+            segments: self
+                .segs
+                .iter()
+                .map(|(name, offset, len, bound)| Segment {
+                    name: name.clone(),
+                    offset: *offset,
+                    len: *len,
+                    bound: *bound,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Cost network (paper section 3.2 / B.1).
+pub fn cost_spec() -> Spec {
+    let mut s = Spec::default();
+    s.linear("tbl1", F, H_TBL);
+    s.linear("tbl2", H_TBL, L);
+    for head in ["fwd", "bwd", "comm"] {
+        s.linear(&format!("{head}1"), L, H_HEAD);
+        s.linear(&format!("{head}2"), H_HEAD, 1);
+    }
+    s.linear("ovr1", L, H_HEAD);
+    s.linear("ovr2", H_HEAD, 1);
+    s
+}
+
+/// Policy network (paper section 3.3 / B.2).
+pub fn policy_spec() -> Spec {
+    let mut s = Spec::default();
+    s.linear("tbl1", F, H_TBL);
+    s.linear("tbl2", H_TBL, L);
+    s.linear("cost1", 3, H_COST);
+    s.linear("cost2", H_COST, L);
+    // Head input: [device rep ; cost rep ; current-table rep].
+    s.linear("head", 3 * L, 1);
+    s
+}
+
+/// RNN baseline controller (section D.2); artifacts are per device count.
+pub fn rnn_spec(n_devices: usize) -> Spec {
+    let mut s = Spec::default();
+    s.linear("tbl1", F, H_TBL);
+    s.linear("tbl2", H_TBL, L);
+    for gate in ["z", "r", "n"] {
+        s.linear(&format!("gru_x{gate}"), L, L);
+        s.linear(&format!("gru_h{gate}"), L, L);
+    }
+    s.linear("head", 2 * L, n_devices);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_layout_matches_python() {
+        let s = cost_spec();
+        // tbl1.w starts at 0; tbl1.b right after; total covers all segs
+        assert_eq!(s.segs[0], ("tbl1.w".into(), 0, F * H_TBL, 1.0 / (F as f32).sqrt()));
+        assert_eq!(s.segs[1].1, F * H_TBL);
+        let covered: usize = s.segs.iter().map(|(_, _, l, _)| *l).sum();
+        assert_eq!(covered, s.total);
+        // 2 tbl layers + 3 heads x 2 + 2 ovr = 10 linears = 20 segments
+        assert_eq!(s.segs.len(), 20);
+        let expected = (F * H_TBL + H_TBL)
+            + (H_TBL * L + L)
+            + 4 * ((L * H_HEAD + H_HEAD) + (H_HEAD + 1));
+        assert_eq!(s.total, expected);
+    }
+
+    #[test]
+    fn lin_lookup() {
+        let s = policy_spec();
+        let head = s.lin("head");
+        assert_eq!(head.n_in, 3 * L);
+        assert_eq!(head.n_out, 1);
+        assert_eq!(head.b, head.w + 3 * L);
+        assert_eq!(head.b + 1, s.total);
+        let c1 = s.lin("cost1");
+        assert_eq!((c1.n_in, c1.n_out), (3, H_COST));
+    }
+
+    #[test]
+    fn rnn_layout() {
+        let s = rnn_spec(4);
+        assert_eq!(s.lin("head").n_out, 4);
+        assert_eq!(s.lin("gru_hn").n_in, L);
+        // tbl MLP + 6 GRU linears + head = 9 linears
+        assert_eq!(s.segs.len(), 18);
+    }
+}

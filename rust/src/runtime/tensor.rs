@@ -1,9 +1,11 @@
-//! Dense host tensors + literal packing for the PJRT boundary.
+//! Dense host tensors + the dynamically-typed [`Value`] passed across the
+//! backend boundary.
 //!
 //! These are deliberately minimal: row-major `Vec<T>` with shape, plus
 //! indexed writes used by the coordinator when building padded batches.
 
-use anyhow::{anyhow, Result};
+use crate::util::error::Result;
+use crate::{bail, err};
 
 /// Row-major f32 tensor.
 #[derive(Clone, Debug)]
@@ -60,8 +62,14 @@ impl TensorF32 {
         self.data[off..off + vals.len()].copy_from_slice(vals);
     }
 
-    pub fn literal(&self) -> xla::Literal {
-        xla::Literal::vec1(&self.data).reshape(&self.dims).expect("reshape literal")
+    /// Wrap (a copy of) this tensor as a backend input.
+    pub fn value(&self) -> Value {
+        Value::F32(self.clone())
+    }
+
+    /// Wrap this tensor as a backend input without copying.
+    pub fn into_value(self) -> Value {
+        Value::F32(self)
     }
 }
 
@@ -84,18 +92,69 @@ impl TensorI32 {
         TensorI32 { dims: dims.iter().map(|&d| d as i64).collect(), data }
     }
 
-    pub fn literal(&self) -> xla::Literal {
-        xla::Literal::vec1(&self.data).reshape(&self.dims).expect("reshape literal")
+    /// Wrap (a copy of) this tensor as a backend input.
+    pub fn value(&self) -> Value {
+        Value::I32(self.clone())
+    }
+
+    /// Wrap this tensor as a backend input without copying.
+    pub fn into_value(self) -> Value {
+        Value::I32(self)
     }
 }
 
-/// Extract a literal into a f32 vec, with shape check against `expect_len`.
-pub fn to_f32_vec(lit: &xla::Literal, expect_len: usize) -> Result<Vec<f32>> {
-    let v = lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32: {e:?}"))?;
-    if v.len() != expect_len {
-        return Err(anyhow!("literal has {} elements, expected {expect_len}", v.len()));
+/// A dynamically-typed tensor crossing the [`super::Backend`] boundary
+/// (the role `xla::Literal` played when the runtime was PJRT-only).
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(TensorF32),
+    I32(TensorI32),
+}
+
+impl Value {
+    pub fn dims(&self) -> &[i64] {
+        match self {
+            Value::F32(t) => &t.dims,
+            Value::I32(t) => &t.dims,
+        }
     }
-    Ok(v)
+
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(t) => t.data.len(),
+            Value::I32(t) => t.data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32 tensor, or error with the actual dtype.
+    pub fn f32s(&self) -> Result<&TensorF32> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => Err(err!("expected f32 tensor, got i32")),
+        }
+    }
+
+    /// Borrow as i32 tensor, or error with the actual dtype.
+    pub fn i32s(&self) -> Result<&TensorI32> {
+        match self {
+            Value::I32(t) => Ok(t),
+            Value::F32(_) => Err(err!("expected i32 tensor, got f32")),
+        }
+    }
+}
+
+/// Extract a value into an f32 vec, with a length check against
+/// `expect_len` (shape mismatches here mean a backend bug).
+pub fn to_f32_vec(v: &Value, expect_len: usize) -> Result<Vec<f32>> {
+    let t = v.f32s()?;
+    if t.data.len() != expect_len {
+        bail!("value has {} elements, expected {expect_len}", t.data.len());
+    }
+    Ok(t.data.clone())
 }
 
 #[cfg(test)]
@@ -113,10 +172,15 @@ mod tests {
     }
 
     #[test]
-    fn literal_roundtrip() {
+    fn value_roundtrip() {
         let t = TensorF32::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
-        let lit = t.literal();
-        assert_eq!(lit.to_vec::<f32>().unwrap(), t.data);
+        let v = t.value();
+        assert_eq!(v.dims(), &[2, 3]);
+        assert_eq!(to_f32_vec(&v, 6).unwrap(), t.data);
+        assert!(to_f32_vec(&v, 5).is_err());
+        let i = TensorI32::from_vec(vec![1, 2], &[2]).value();
+        assert!(i.f32s().is_err());
+        assert_eq!(i.i32s().unwrap().data, vec![1, 2]);
     }
 
     #[test]

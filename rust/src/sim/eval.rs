@@ -95,18 +95,17 @@ impl Simulator {
         let dim_sums: Vec<f64> = traces.iter().map(|t| t.dim_sum).collect();
         let fwd_comm = self.comm.all_to_all_ms(&dim_sums);
         let bwd_comm = self.comm.all_to_all_ms(&dim_sums); // same volume, opposite direction
-        let max_fwd_comp = traces.iter().map(|t| t.fwd_comp).fold(0.0, f64::max);
         for (i, tr) in traces.iter_mut().enumerate() {
             tr.fwd_comm = fwd_comm[i];
-            // PyTorch books the wait-for-stragglers into fwd comm (§A.4)
-            tr.fwd_comm_reported = (max_fwd_comp - tr.fwd_comp) + fwd_comm[i];
             tr.bwd_comm = bwd_comm[i];
         }
 
         // measurement noise: deterministic in (seed, placement)
         let mut h = self.cfg.seed ^ 0xC0FFEE;
         for &p in noise_key {
-            h = h.wrapping_mul(0x100000001B3).wrapping_add(p as u64 + 1);
+            // wrapping: unplaced entries are usize::MAX, so `+ 1` would
+            // overflow (a debug-build panic on every partial placement)
+            h = h.wrapping_mul(0x100000001B3).wrapping_add((p as u64).wrapping_add(1));
         }
         let mut rng = Rng::new(h);
         let jitter = |rng: &mut Rng, x: f64| x * (1.0 + self.cfg.noise as f64 * rng.normal());
@@ -118,6 +117,15 @@ impl Simulator {
             tr.bwd_comm = jitter(&mut rng, tr.bwd_comm);
             tr.fwd_comm = jitter(&mut rng, tr.fwd_comm);
             q.push([tr.fwd_comp as f32, tr.bwd_comp as f32, tr.bwd_comm as f32]);
+        }
+
+        // PyTorch books the wait-for-stragglers into fwd comm (§A.4).
+        // Derived AFTER the jitter so the reported idle time is consistent
+        // with the (jittered) trace it ships with — deriving it from the
+        // pre-jitter values could even go negative against them.
+        let max_fwd_comp = traces.iter().map(|t| t.fwd_comp).fold(0.0, f64::max);
+        for tr in traces.iter_mut() {
+            tr.fwd_comm_reported = (max_fwd_comp - tr.fwd_comp) + tr.fwd_comm;
         }
 
         let phase = |f: fn(&DeviceTrace) -> f64| traces.iter().map(f).fold(0.0, f64::max);
@@ -231,6 +239,19 @@ mod tests {
         // GPU1 finishes fwd comp early, so its *reported* fwd comm
         // includes waiting for GPU0 (§A.4)
         assert!(eval.devices[1].fwd_comm_reported > eval.devices[1].fwd_comm);
+    }
+
+    #[test]
+    fn fwd_comm_reported_consistent_with_jittered_trace() {
+        let (ds, task, sim) = setup();
+        let eval = sim.evaluate(&ds, &task, &round_robin(&task));
+        let max_fwd = eval.devices.iter().map(|t| t.fwd_comp).fold(0.0, f64::max);
+        for tr in &eval.devices {
+            // idle = straggler wait against the *jittered* compute times
+            let idle = tr.fwd_comm_reported - tr.fwd_comm;
+            assert!((idle - (max_fwd - tr.fwd_comp)).abs() < 1e-12);
+            assert!(idle >= 0.0, "reported idle can never be negative");
+        }
     }
 
     #[test]

@@ -1,0 +1,148 @@
+//! Minimal std-only error plumbing (the crate builds with zero external
+//! dependencies, so there is no `anyhow`).
+//!
+//! [`Error`] is a message-carrying error, [`Result`] defaults its error
+//! type to it, [`Context`] adds `.context(..)` / `.with_context(..)` on
+//! `Result` and `Option`, and the [`err!`](crate::err) / [`bail!`](crate::bail)
+//! macros build/return formatted errors.
+
+use std::fmt;
+
+/// A simple message-carrying error. Context wraps prepend `"<ctx>: "`.
+#[derive(Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: Into<String>>(m: M) -> Error {
+        Error { msg: m.into() }
+    }
+
+    /// Prepend a context layer: `"<ctx>: <self>"`.
+    pub fn wrap<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Crate-wide result type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` for results and options.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! err {
+    ($msg:literal $(, $arg:expr)* $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg $(, $arg)*))
+    };
+    ($e:expr) => {
+        $crate::util::error::Error::msg(format!("{}", $e))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::err!($($t)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::err!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(crate::err!("base {}", 42))
+    }
+
+    #[test]
+    fn formats_and_wraps() {
+        let e = fails().with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: base 42");
+        let e2 = e.wrap("top");
+        assert_eq!(e2.to_string(), "top: outer: base 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(7u32).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                crate::bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert!(f(11).is_err());
+        assert!(f(3).is_err());
+        assert_eq!(f(5).unwrap(), 5);
+    }
+}

@@ -3,9 +3,11 @@
 //! The build is fully offline with a minimal dependency closure, so the
 //! RNG (SplitMix64) and helpers live here instead of pulling `rand`.
 
+pub mod error;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use error::{Context, Error, Result};
 pub use rng::Rng;
 pub use stats::{mean, mean_std};

@@ -1,0 +1,138 @@
+//! Backend-seam tests: the pure-Rust reference backend must be finite,
+//! deterministic under a fixed seed, and — once fitted on simulator
+//! measurements — predict costs that grow with table count. Also covers
+//! the all-devices-full dead end through the full inference path.
+
+use dreamshard::coordinator::{CostNet, CostSample, DreamShard, ReplayBuffer, TrainCfg, Variant};
+use dreamshard::mdp::{heuristic_order, PlacementState};
+use dreamshard::runtime::{Runtime, TensorF32};
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools, Dataset, Task, NUM_FEATURES};
+use dreamshard::util::Rng;
+
+fn prefix_sample(
+    ds: &Dataset,
+    task: &Task,
+    sim: &Simulator,
+    placement: &[usize],
+    keep: usize,
+    d: usize,
+    s: usize,
+) -> (CostSample, f64) {
+    let mut st = PlacementState::new(ds, task, heuristic_order(ds, task), s);
+    for _ in 0..keep {
+        let idx = st.current();
+        st.apply(placement[idx]);
+    }
+    let eval = st.evaluate(sim);
+    let mut feats = TensorF32::zeros(&[1, d, s, NUM_FEATURES]);
+    let mut mask = TensorF32::zeros(&[1, d, s]);
+    let mut dmask = TensorF32::zeros(&[1, d]);
+    st.fill_feats(0, d, s, &mut feats, &mut mask, &mut dmask).unwrap();
+    let mut q = vec![0.0f32; d * 3];
+    for (dev, qd) in eval.q.iter().enumerate() {
+        q[dev * 3..dev * 3 + 3].copy_from_slice(qd);
+    }
+    let sample = CostSample {
+        feats: feats.data,
+        mask: mask.data,
+        dmask: dmask.data,
+        q,
+        cost: eval.latency as f32,
+    };
+    (sample, eval.latency)
+}
+
+#[test]
+fn reference_predictions_finite_and_deterministic() {
+    let rt = Runtime::reference();
+    let ds = gen_dlrm(60, 4);
+    let feats: Vec<[f32; NUM_FEATURES]> = ds.tables.iter().map(|t| t.features()).collect();
+    let run = || {
+        let mut rng = Rng::new(5);
+        let net = CostNet::new(&rt, &mut rng).unwrap();
+        net.predict_table_costs(&rt, &feats).unwrap()
+    };
+    let a = run();
+    assert_eq!(a.len(), feats.len());
+    assert!(a.iter().all(|v| v.is_finite()), "non-finite cost prediction");
+    // bit-identical replay under the same seed
+    let b = run();
+    assert_eq!(a, b);
+    // a fresh runtime changes nothing either (stateless backend)
+    let rt2 = Runtime::reference();
+    let mut rng = Rng::new(5);
+    let net = CostNet::new(&rt2, &mut rng).unwrap();
+    let c = net.predict_table_costs(&rt2, &feats).unwrap();
+    assert_eq!(a, c);
+}
+
+#[test]
+fn fitted_cost_net_is_monotone_in_table_count() {
+    let rt = Runtime::reference();
+    let ds = gen_dlrm(120, 3);
+    let (pool_tr, pool_te) = split_pools(&ds, 1);
+    let sim = Simulator::new(SimConfig::default());
+    let n_tables = 12usize;
+    let var = Variant::for_devices(&rt, 2).unwrap();
+    let (d, s) = (var.d, var.s);
+
+    // supervised set: nested prefixes of round-robin placements
+    let train_tasks = sample_tasks(&pool_tr, n_tables, 2, 5, 21);
+    let mut buf = ReplayBuffer::new(256);
+    for task in &train_tasks {
+        let placement: Vec<usize> = (0..n_tables).map(|i| i % 2).collect();
+        for keep in 1..=n_tables {
+            let (sample, _) = prefix_sample(&ds, task, &sim, &placement, keep, d, s);
+            buf.push(sample);
+        }
+    }
+    let mut rng = Rng::new(33);
+    let mut net = CostNet::new(&rt, &mut rng).unwrap();
+    for _ in 0..300 {
+        let (feats, mask, dmask, q, c) = buf.sample_batch(16, d, s, &mut rng);
+        let loss = net.train_batch(&rt, &var, &feats, &mask, &dmask, &q, &c, 1e-3).unwrap();
+        assert!(loss.is_finite(), "training diverged");
+    }
+
+    // held-out task: predicted cost should grow with placed-table count
+    let task = sample_tasks(&pool_te, n_tables, 2, 1, 22).remove(0);
+    let placement: Vec<usize> = (0..n_tables).map(|i| i % 2).collect();
+    let mut preds = vec![];
+    for keep in 1..=n_tables {
+        let mut st = PlacementState::new(&ds, &task, heuristic_order(&ds, &task), s);
+        for _ in 0..keep {
+            let idx = st.current();
+            st.apply(placement[idx]);
+        }
+        let pred = net.predict_states(&rt, &var, &[&st]).unwrap().remove(0);
+        assert!(pred.cost.is_finite());
+        preds.push(pred.cost);
+    }
+    let head: f32 = preds[..4].iter().sum::<f32>() / 4.0;
+    let tail: f32 = preds[n_tables - 4..].iter().sum::<f32>() / 4.0;
+    assert!(
+        tail > head,
+        "fitted cost net not monotone in table count: head {head:.2} tail {tail:.2} ({preds:?})"
+    );
+    assert!(
+        preds[n_tables - 1] > preds[0],
+        "full placement predicted cheaper than a single table: {preds:?}"
+    );
+}
+
+#[test]
+fn dead_end_placement_completes_via_fallback() {
+    // a memory cap so small that legal() is all-false from step one:
+    // inference must still emit a complete placement (fallback path)
+    let rt = Runtime::reference();
+    let ds = gen_dlrm(60, 6);
+    let (pool, _) = split_pools(&ds, 1);
+    let task = sample_tasks(&pool, 8, 4, 1, 7).remove(0);
+    let sim = Simulator::new(SimConfig { mem_cap_gb: 1e-6, ..SimConfig::default() });
+    let mut rng = Rng::new(8);
+    let agent = DreamShard::new(&rt, 4, TrainCfg::default(), &mut rng).unwrap();
+    let p = agent.place(&rt, &sim, &ds, &task).unwrap();
+    assert_eq!(p.len(), 8);
+    assert!(p.iter().all(|&dev| dev < 4), "{p:?}");
+}

@@ -1,7 +1,7 @@
 //! End-to-end integration: train DreamShard for a couple of iterations on
-//! tiny tasks through the real PJRT artifacts, then check that inference
-//! produces legal placements and that learning actually moves the needle
-//! versus an untrained policy.
+//! tiny tasks through the default (pure-Rust reference) backend, then
+//! check that inference produces legal placements. Runs from a bare
+//! toolchain — no `make artifacts`, no native libraries.
 
 use dreamshard::coordinator::{evaluate_policy, DreamShard, RnnBaseline, TrainCfg};
 use dreamshard::runtime::Runtime;
@@ -9,29 +9,28 @@ use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
 use dreamshard::util::Rng;
 
-fn runtime() -> Runtime {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Runtime::open(dir).expect("artifacts missing — run `make artifacts` first")
+fn smoke_cfg() -> TrainCfg {
+    TrainCfg {
+        n_iterations: 2,
+        n_collect: 4,
+        n_cost: 20,
+        n_batch: 16,
+        n_rl: 2,
+        n_episode: 6,
+        ..Default::default()
+    }
 }
 
 #[test]
 fn trains_and_places() {
-    let rt = runtime();
+    let rt = Runtime::open_default().unwrap();
     let ds = gen_dlrm(120, 0);
     let (pool_tr, pool_te) = split_pools(&ds, 1);
     let train = sample_tasks(&pool_tr, 10, 4, 4, 2);
     let test = sample_tasks(&pool_te, 10, 4, 4, 3);
     let sim = Simulator::new(SimConfig::default());
-    let cfg = TrainCfg {
-        n_iterations: 2,
-        n_collect: 4,
-        n_cost: 30,
-        n_rl: 3,
-        n_episode: 6,
-        ..Default::default()
-    };
     let mut rng = Rng::new(7);
-    let mut agent = DreamShard::new(&rt, 4, cfg, &mut rng).unwrap();
+    let mut agent = DreamShard::new(&rt, 4, smoke_cfg(), &mut rng).unwrap();
 
     let before = evaluate_policy(&agent, &rt, &sim, &ds, &test).unwrap();
     agent.train(&rt, &sim, &ds, &train, &mut rng).unwrap();
@@ -39,13 +38,17 @@ fn trains_and_places() {
 
     assert_eq!(agent.log.len(), 2);
     assert!(agent.buffer.len() >= 16, "buffer got {} samples", agent.buffer.len());
+    for st in &agent.log {
+        assert!(st.cost_loss.is_finite(), "cost loss diverged: {}", st.cost_loss);
+        assert!(st.policy_loss.is_finite(), "policy loss diverged: {}", st.policy_loss);
+    }
     // placements are legal device ids and complete
     let p = agent.place(&rt, &sim, &ds, &test[0]).unwrap();
     assert_eq!(p.len(), 10);
     assert!(p.iter().all(|&d| d < 4));
     // training should not make things dramatically worse; usually better
     assert!(
-        after < before * 1.15,
+        after < before * 1.25,
         "after-training cost {after:.2} way above untrained {before:.2}"
     );
     println!("untrained {before:.2} ms -> trained {after:.2} ms");
@@ -53,7 +56,7 @@ fn trains_and_places() {
 
 #[test]
 fn rnn_baseline_runs() {
-    let rt = runtime();
+    let rt = Runtime::open_default().unwrap();
     let ds = gen_dlrm(80, 1);
     let (pool, _) = split_pools(&ds, 1);
     let tasks = sample_tasks(&pool, 8, 4, 2, 5);
@@ -70,7 +73,7 @@ fn rnn_baseline_runs() {
 fn generalizes_across_device_counts() {
     // The paper's headline generalization: a policy trained at one device
     // count runs unchanged at another (smaller) count via masking.
-    let rt = runtime();
+    let rt = Runtime::open_default().unwrap();
     let ds = gen_dlrm(80, 2);
     let (pool, _) = split_pools(&ds, 1);
     let sim = Simulator::new(SimConfig::default());

@@ -1,0 +1,130 @@
+//! Compile-only stand-in for the `xla-rs` PJRT bindings.
+//!
+//! The dreamshard crate's `xla` feature gates an `XlaBackend` that executes
+//! AOT-lowered HLO artifacts through the PJRT C API. The real binding crate
+//! links a native `libxla_extension` shared library that offline CI images
+//! do not carry, so this stub provides exactly the API surface the backend
+//! uses and fails — with a clear message — at client construction time.
+//!
+//! To run the accelerated backend, point the workspace's `xla` path
+//! dependency at a real xla-rs checkout (and run `make artifacts`); the
+//! `runtime::pjrt` module documents the required surface.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring xla-rs's: carries a message, no backtrace.
+pub struct Error {
+    msg: String,
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str = "xla-stub: this build links the in-tree compile-only stub; \
+     point the workspace `xla` path dependency at a real xla-rs checkout \
+     (native PJRT library required) to enable the XLA backend";
+
+fn stub_err() -> Error {
+    Error { msg: STUB_MSG.to_string() }
+}
+
+/// Element types the literal container understands.
+pub trait NativeType: Copy + Default {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Host literal (dense array + shape). The stub keeps no data: it can only
+/// be produced by an executing client, which the stub never constructs.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(stub_err())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(stub_err())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(stub_err())
+    }
+}
+
+/// Parsed HLO module (text format).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(stub_err())
+    }
+}
+
+/// An XLA computation ready for compilation.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle returned by an execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err())
+    }
+}
+
+/// Compiled executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err())
+    }
+}
+
+/// PJRT client. `cpu()` always fails in the stub — this is the single
+/// choke point that keeps every other method unreachable.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(stub_err())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err())
+    }
+}
