@@ -1,8 +1,10 @@
 //! End-to-end placement benchmarks: inference latency per task size (the
-//! paper's headline "hundreds of tables in less than a second", Fig. 8)
-//! and one full Algorithm-1 training iteration.
+//! paper's headline "hundreds of tables in less than a second", Fig. 8),
+//! lane-batched vs sequential multi-task planning through the `Placer`
+//! facade, and one full Algorithm-1 training iteration.
 use dreamshard::bench::common::{make_suite, Which};
 use dreamshard::coordinator::{DreamShard, TrainCfg};
+use dreamshard::placer::{DreamShardPlacer, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
 use dreamshard::util::Rng;
 use std::time::Instant;
@@ -25,6 +27,42 @@ fn main() {
             t0.elapsed().as_secs_f64() / reps as f64 * 1e3
         );
     }
+
+    // multi-task planning: sequential episodes vs lane-batched place_many
+    // (identical plans — see tests/placer_api.rs — different wall-clock)
+    let suite = make_suite(Which::Dlrm, 50, 4, 16, 11);
+    let agent = DreamShard::new(&rt, 4, TrainCfg::default(), &mut rng).unwrap();
+    let mut placer = DreamShardPlacer::from_agent(&rt, &agent);
+    let reqs: Vec<PlacementRequest> = suite
+        .train
+        .iter()
+        .map(|t| PlacementRequest::for_runtime(&rt, &suite.ds, t, &suite.sim).unwrap())
+        .collect();
+    placer.place_many(&reqs).unwrap(); // warm
+    let reps = 3;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for r in &reqs {
+            placer.place(r).unwrap();
+        }
+    }
+    let seq_s = t0.elapsed().as_secs_f64() / reps as f64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        placer.place_many(&reqs).unwrap();
+    }
+    let batched_s = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "plan {} tasks (50 tables x 4 devices): sequential {:.1} ms ({:.1} tasks/s), \
+         lane-batched {:.1} ms ({:.1} tasks/s), speedup {:.2}x",
+        reqs.len(),
+        seq_s * 1e3,
+        reqs.len() as f64 / seq_s,
+        batched_s * 1e3,
+        reqs.len() as f64 / batched_s,
+        seq_s / batched_s
+    );
+
     // one full training iteration at the paper's default budget
     let suite = make_suite(Which::Dlrm, 50, 4, 4, 7);
     let mut agent = DreamShard::new(&rt, 4, TrainCfg::default(), &mut rng).unwrap();

@@ -1,30 +1,36 @@
 //! Cluster-scale planning: train at 8 devices, plan ~1,000 diverse-dim
-//! production-like tables onto 128 devices through the inference-only
-//! ultra artifact — the paper's Table-13 scenario as a library call.
+//! production-like tables onto 128 devices — the paper's Table-13
+//! scenario as a library call. The `Placer` facade routes the 128-device
+//! request to the inference-only ultra artifact variant automatically.
 //!
 //!     cargo run --release --example cluster_plan
 
 use dreamshard::Result;
 
-use dreamshard::baselines::{greedy_placement, Expert};
-use dreamshard::coordinator::{DreamShard, TrainCfg, Variant};
+use dreamshard::coordinator::TrainCfg;
+use dreamshard::placer::{self, FitRequest, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
 use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_prod, sample_tasks, split_pools};
-use dreamshard::util::Rng;
 
 fn main() -> Result<()> {
     let rt = Runtime::open_default()?;
-    let mut rng = Rng::new(3);
 
-    // train at small scale (Prod-40 (8))
+    // train at small scale (Prod-40 (8)) behind the facade
     let train_ds = gen_prod(400, 42);
     let (pool, _) = split_pools(&train_ds, 1);
     let train_tasks = sample_tasks(&pool, 40, 8, 12, 2);
     let sim8 = Simulator::new(SimConfig::v100());
-    let mut agent = DreamShard::new(&rt, 8, TrainCfg::fast(), &mut rng)?;
+    let mut agent = placer::by_name(&rt, "dreamshard")?;
     println!("training at 8 devices ...");
-    agent.train(&rt, &sim8, &train_ds, &train_tasks, &mut rng)?;
+    agent.fit(&FitRequest {
+        ds: &train_ds,
+        tasks: &train_tasks,
+        sim: &sim8,
+        cfg: TrainCfg::fast(),
+        seed: 3,
+        verbose: false,
+    })?;
 
     // plan at 128 devices, ~960 tables, unchanged parameters
     let ds = gen_prod(1024, 77);
@@ -39,26 +45,23 @@ fn main() -> Result<()> {
         total_gb / 1024.0
     );
 
-    let var = Variant::for_devices(&rt, 128)?;
+    let req = PlacementRequest::for_runtime(&rt, &ds, &task, &sim)?;
     let t0 = std::time::Instant::now();
-    let ep = agent
-        .run_episodes_var(&rt, &sim, &ds, &task, 1, false, false, &mut rng, &var, false)?
-        .remove(0);
+    let ours = agent.place(&req)?;
     let plan_s = t0.elapsed().as_secs_f64();
-    let ours = sim.evaluate(&ds, &task, &ep.placement);
-    let dim = sim.evaluate(&ds, &task, &greedy_placement(&ds, &task, &sim, Expert::Dim));
+    let dim = placer::by_name(&rt, "greedy:dim")?.place(&req)?;
     println!("planned in {plan_s:.1}s");
-    println!("  dim-based expert : {:.1} ms", dim.latency);
-    println!("  DreamShard       : {:.1} ms", ours.latency);
+    println!("  dim-based expert : {:.1} ms", dim.eval.latency);
+    println!("  DreamShard       : {:.1} ms", ours.eval.latency);
 
     // per-device balance summary
-    let mems: Vec<f64> = ours.devices.iter().map(|d| d.mem_gb).collect();
+    let mems: Vec<f64> = ours.eval.devices.iter().map(|d| d.mem_gb).collect();
     let max_mem = mems.iter().cloned().fold(0.0, f64::max);
     println!(
         "  max device memory {:.1} GB (cap {:.0} GB), max tables/device {}",
         max_mem,
         sim.cfg.mem_cap_gb,
-        ours.devices.iter().map(|d| d.n_tables).max().unwrap_or(0)
+        ours.eval.devices.iter().map(|d| d.n_tables).max().unwrap_or(0)
     );
     Ok(())
 }

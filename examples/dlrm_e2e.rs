@@ -14,8 +14,8 @@
 use dreamshard::Result;
 use std::io::Write;
 
-use dreamshard::baselines::{greedy_placement, random_placement, Expert};
-use dreamshard::coordinator::{DreamShard, TrainCfg};
+use dreamshard::coordinator::TrainCfg;
+use dreamshard::placer::{self, FitRequest, Placer, PlacementRequest};
 use dreamshard::runtime::{to_f32_vec, Runtime, TensorF32, TensorI32};
 use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools, Dataset, Table, Task};
@@ -106,19 +106,25 @@ fn main() -> Result<()> {
     let pool_ds = gen_dlrm(200, 42);
     let (pool_tr, _) = split_pools(&pool_ds, 1);
     let plan_tasks = sample_tasks(&pool_tr, 26, 4, 12, 2);
-    let mut rng = Rng::new(0);
-    let mut agent = DreamShard::new(&rt, 4, TrainCfg::fast(), &mut rng)?;
+    let mut agent = placer::by_name(&rt, "dreamshard")?;
     println!("\ntraining the placement agent ...");
-    agent.train(&rt, &sim, &pool_ds, &plan_tasks, &mut rng)?;
+    agent.fit(&FitRequest {
+        ds: &pool_ds,
+        tasks: &plan_tasks,
+        sim: &sim,
+        cfg: TrainCfg::fast(),
+        seed: 0,
+        verbose: false,
+    })?;
 
-    let p_rand = random_placement(&ds, &task, &sim, &mut rng);
-    let p_dim = greedy_placement(&ds, &task, &sim, Expert::Dim);
-    let p_ds = agent.place(&rt, &sim, &ds, &task)?;
+    let req = PlacementRequest::for_runtime(&rt, &ds, &task, &sim)?;
+    let p_ds = agent.place(&req)?;
     println!("\nsimulated distributed step time for the DLRM embedding stage:");
-    for (name, p) in [("random", &p_rand), ("dim-based", &p_dim), ("DreamShard", &p_ds)] {
-        let eval = sim.evaluate(&ds, &task, p);
-        println!("  {name:<12} {:.2} ms", eval.latency);
+    for name in ["random", "greedy:dim"] {
+        let plan = placer::by_name(&rt, name)?.place(&req)?;
+        println!("  {:<12} {:.2} ms", plan.strategy, plan.eval.latency);
     }
+    println!("  {:<12} {:.2} ms", "DreamShard", p_ds.eval.latency);
 
     // ---- 2. actually train the model through the AOT artifact ------------
     let steps: usize = std::env::var("DLRM_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(300);

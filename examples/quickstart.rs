@@ -1,17 +1,17 @@
-//! Quickstart: train DreamShard on small DLRM tasks, place a task with
-//! unseen tables, and compare against the expert baselines.
+//! Quickstart: train DreamShard on small DLRM tasks through the `placer`
+//! facade, plan a task with unseen tables, and compare every registered
+//! baseline on the *same* `PlacementRequest`.
 //!
 //!     cargo run --release --example quickstart
 //!
 //! Runs on the pure-Rust reference backend by default; `make artifacts`
 //! plus `--features xla` switches to the PJRT/XLA backend.
 
-use dreamshard::baselines::{greedy_placement, random_placement, ALL_EXPERTS};
-use dreamshard::coordinator::{DreamShard, TrainCfg};
+use dreamshard::coordinator::TrainCfg;
+use dreamshard::placer::{self, FitRequest, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
 use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
-use dreamshard::util::Rng;
 
 fn main() -> dreamshard::Result<()> {
     // 1. open the runtime (reference backend unless XLA artifacts exist)
@@ -26,36 +26,35 @@ fn main() -> dreamshard::Result<()> {
     // 3. the simulated 4-GPU cluster (the "hardware" of this repo)
     let sim = Simulator::new(SimConfig::default());
 
-    // 4. train (Algorithm 1): cost net + policy net on the estimated MDP
-    let mut rng = Rng::new(0);
-    let mut agent = DreamShard::new(&rt, 4, TrainCfg::fast(), &mut rng)?;
+    // 4. every strategy is a `Placer` picked by name; "dreamshard" comes
+    //    out of the registry untrained, so fit it (Algorithm 1)
+    let mut agent = placer::by_name(&rt, "dreamshard")?;
     println!("training on {} tasks ...", train_tasks.len());
-    agent.train(&rt, &sim, &ds, &train_tasks, &mut rng)?;
-    for st in &agent.log {
-        println!(
-            "  iter {}: collected {:.1} ms | cost-loss {:.2} | {:.1}s",
-            st.iter, st.collected_mean_cost, st.cost_loss, st.wall_s
-        );
-    }
+    agent.fit(&FitRequest {
+        ds: &ds,
+        tasks: &train_tasks,
+        sim: &sim,
+        cfg: TrainCfg::fast(),
+        seed: 0,
+        verbose: true,
+    })?;
 
-    // 5. place a task of UNSEEN tables (Algorithm 2 — no simulator costs)
-    let placement = agent.place(&rt, &sim, &ds, &test_task)?;
-    let eval = sim.evaluate(&ds, &test_task, &placement);
-    println!("\n{}", sim.render_trace(&eval, "DreamShard"));
+    // 5. plan a task of UNSEEN tables (Algorithm 2 — no simulator costs);
+    //    the request carries the task plus the shared legality knobs
+    let req = PlacementRequest::for_runtime(&rt, &ds, &test_task, &sim)?;
+    let plan = agent.place(&req)?;
+    println!("\n{}", sim.render_trace(&plan.eval, "DreamShard"));
 
-    // 6. compare with the baselines
-    let mut rows = vec![("random".to_string(), {
-        let p = random_placement(&ds, &test_task, &sim, &mut rng);
-        sim.evaluate(&ds, &test_task, &p).latency
-    })];
-    for e in ALL_EXPERTS {
-        let p = greedy_placement(&ds, &test_task, &sim, e);
-        rows.push((e.name().to_string(), sim.evaluate(&ds, &test_task, &p).latency));
-    }
-    rows.push(("DreamShard".to_string(), eval.latency));
+    // 6. the identical request through every non-learned baseline
     println!("strategy            cost (ms)");
-    for (name, ms) in rows {
-        println!("{name:<18}  {ms:>8.2}");
+    for name in placer::PLACER_NAMES {
+        let mut p = placer::by_name(&rt, name)?;
+        if p.needs_fit() {
+            continue; // learned strategies need their own training run
+        }
+        let b = p.place(&req)?;
+        println!("{:<18}  {:>8.2}", b.strategy, b.eval.latency);
     }
+    println!("{:<18}  {:>8.2}", plan.strategy, plan.eval.latency);
     Ok(())
 }

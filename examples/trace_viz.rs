@@ -1,15 +1,16 @@
 //! Trace visualization (paper Fig. 1 / Figs. 23-28): render the four-stage
 //! embedding pipeline per device for random vs each expert strategy on a
-//! DLRM-50 (4) task. Pure substrate demo — no training required.
+//! DLRM-50 (4) task — every strategy pulled from the placer registry and
+//! planning the same `PlacementRequest`. No training required.
 //!
 //!     cargo run --release --example trace_viz [n_tables] [n_devices]
 
-use dreamshard::baselines::{greedy_placement, random_placement, ALL_EXPERTS};
+use dreamshard::placer::{self, Placer, PlacementRequest};
+use dreamshard::runtime::Runtime;
 use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
-use dreamshard::util::Rng;
 
-fn main() {
+fn main() -> dreamshard::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let n_tables: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(50);
     let n_devices: usize = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(4);
@@ -18,15 +19,24 @@ fn main() {
     let (pool, _) = split_pools(&ds, 1);
     let task = sample_tasks(&pool, n_tables, n_devices, 1, 7).remove(0);
     let sim = Simulator::new(SimConfig::default());
-    let mut rng = Rng::new(0);
+    let rt = Runtime::open_default()?;
+    // variant slot cap when the grid covers this device count; the
+    // heuristics render fine uncapped for exotic counts (e.g. 200 GPUs)
+    let req = PlacementRequest::for_runtime(&rt, &ds, &task, &sim)
+        .unwrap_or_else(|_| PlacementRequest::new(&ds, &task, &sim));
 
-    println!("task: {} tables on {} devices (F=fwd comp, f=fwd comm, b=bwd comm, B=bwd comp)\n", n_tables, n_devices);
-    let p = random_placement(&ds, &task, &sim, &mut rng);
-    print!("{}", sim.render_trace(&sim.evaluate(&ds, &task, &p), "random"));
-    println!();
-    for e in ALL_EXPERTS {
-        let p = greedy_placement(&ds, &task, &sim, e);
-        print!("{}", sim.render_trace(&sim.evaluate(&ds, &task, &p), e.name()));
+    println!(
+        "task: {} tables on {} devices (F=fwd comp, f=fwd comm, b=bwd comm, B=bwd comp)\n",
+        n_tables, n_devices
+    );
+    for name in placer::PLACER_NAMES {
+        let mut p = placer::by_name(&rt, name)?;
+        if p.needs_fit() {
+            continue; // heuristics only — this demo never trains
+        }
+        let plan = p.place(&req)?;
+        print!("{}", sim.render_trace(&plan.eval, &plan.strategy));
         println!();
     }
+    Ok(())
 }

@@ -3,6 +3,11 @@
 //! assigns every table an estimated cost, sorts descending, and places
 //! each table on the device with the lowest cost sum so far, subject to
 //! the memory constraint.
+//!
+//! These are the raw algorithms; callers normally reach them through the
+//! [`crate::placer`] facade ([`crate::placer::by_name`] with `"random"` /
+//! `"greedy:dim"` / ...), which also routes the MDP's slot cap into the
+//! `*_capped` variants so every strategy obeys the same legality rules.
 
 use crate::sim::Simulator;
 use crate::tables::{Dataset, Table, Task};
@@ -34,6 +39,16 @@ impl Expert {
         }
     }
 
+    /// Short registry key: the `<key>` of the `greedy:<key>` placer name.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Expert::Size => "size",
+            Expert::Dim => "dim",
+            Expert::Lookup => "lookup",
+            Expert::SizeLookup => "size-lookup",
+        }
+    }
+
     fn cost(&self, t: &Table) -> f64 {
         let size = t.size_gb() as f64;
         let dim = t.dim as f64;
@@ -47,8 +62,24 @@ impl Expert {
     }
 }
 
-/// Uniform-random legal placement.
+/// Uniform-random legal placement (no slot cap).
 pub fn random_placement(ds: &Dataset, task: &Task, sim: &Simulator, rng: &mut Rng) -> Vec<usize> {
+    random_placement_capped(ds, task, sim, rng, usize::MAX)
+}
+
+/// Uniform-random legal placement under the MDP's legality rules: a
+/// device is eligible only while it has a free slot (`max_slots`) *and*
+/// the memory cap holds. When no device passes both, falls back to the
+/// least-loaded (by memory) device with a free slot — ignoring the slot
+/// cap only in the degenerate case where every slot in the cluster is
+/// already taken (such a task has no legal placement at all).
+pub fn random_placement_capped(
+    ds: &Dataset,
+    task: &Task,
+    sim: &Simulator,
+    rng: &mut Rng,
+    max_slots: usize,
+) -> Vec<usize> {
     let mut groups: Vec<Vec<&Table>> = vec![vec![]; task.n_devices];
     task.table_ids
         .iter()
@@ -57,15 +88,19 @@ pub fn random_placement(ds: &Dataset, task: &Task, sim: &Simulator, rng: &mut Rn
             // rejection-sample a device that fits (falls back to least loaded)
             for _ in 0..8 {
                 let d = rng.below(task.n_devices);
-                if sim.fits(&groups[d], t) {
+                if groups[d].len() < max_slots && sim.fits(&groups[d], t) {
                     groups[d].push(t);
                     return d;
                 }
             }
-            let d = (0..task.n_devices)
-                .min_by(|&a, &b| {
-                    Simulator::mem_gb(&groups[a]).partial_cmp(&Simulator::mem_gb(&groups[b])).unwrap()
+            // total_cmp: a NaN memory sum (corrupt table) must not panic
+            let least_loaded = |devs: &mut dyn Iterator<Item = usize>| {
+                devs.min_by(|&a, &b| {
+                    Simulator::mem_gb(&groups[a]).total_cmp(&Simulator::mem_gb(&groups[b]))
                 })
+            };
+            let d = least_loaded(&mut (0..task.n_devices).filter(|&d| groups[d].len() < max_slots))
+                .or_else(|| least_loaded(&mut (0..task.n_devices)))
                 .unwrap();
             groups[d].push(t);
             d
@@ -73,30 +108,52 @@ pub fn random_placement(ds: &Dataset, task: &Task, sim: &Simulator, rng: &mut Rn
         .collect()
 }
 
-/// Greedy balancing placement for one expert cost function.
+/// Greedy balancing placement for one expert cost function (no slot cap).
 pub fn greedy_placement(ds: &Dataset, task: &Task, sim: &Simulator, expert: Expert) -> Vec<usize> {
+    greedy_placement_capped(ds, task, sim, expert, usize::MAX)
+}
+
+/// Greedy balancing placement under the MDP's legality rules (see
+/// [`random_placement_capped`] for the slot-cap/fallback semantics).
+pub fn greedy_placement_capped(
+    ds: &Dataset,
+    task: &Task,
+    sim: &Simulator,
+    expert: Expert,
+    max_slots: usize,
+) -> Vec<usize> {
     let mut order: Vec<usize> = (0..task.n_tables()).collect();
     let costs: Vec<f64> =
         task.table_ids.iter().map(|&tid| expert.cost(&ds.tables[tid])).collect();
-    order.sort_by(|&a, &b| costs[b].partial_cmp(&costs[a]).unwrap());
+    // total_cmp: a NaN cost (corrupt table feature) must not panic the
+    // sort — NaNs order deterministically, the rest exactly as before
+    order.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]));
 
     let mut placement = vec![usize::MAX; task.n_tables()];
     let mut load = vec![0.0f64; task.n_devices];
     let mut groups: Vec<Vec<&Table>> = vec![vec![]; task.n_devices];
     for &i in &order {
         let t = &ds.tables[task.table_ids[i]];
-        // lowest-load device that satisfies memory; fall back to lowest-load
+        // lowest-load device with a free slot that satisfies memory;
+        // fall back to lowest-load with a free slot, then lowest-load
         let mut best: Option<usize> = None;
         for d in 0..task.n_devices {
-            if sim.fits(&groups[d], t) && best.map_or(true, |b| load[d] < load[b]) {
+            if groups[d].len() < max_slots
+                && sim.fits(&groups[d], t)
+                && best.map_or(true, |b| load[d] < load[b])
+            {
                 best = Some(d);
             }
         }
-        let d = best.unwrap_or_else(|| {
-            (0..task.n_devices)
-                .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
-                .unwrap()
-        });
+        let d = best
+            .or_else(|| {
+                (0..task.n_devices)
+                    .filter(|&d| groups[d].len() < max_slots)
+                    .min_by(|&a, &b| load[a].total_cmp(&load[b]))
+            })
+            .unwrap_or_else(|| {
+                (0..task.n_devices).min_by(|&a, &b| load[a].total_cmp(&load[b])).unwrap()
+            });
         placement[i] = d;
         load[d] += costs[i];
         groups[d].push(t);
@@ -171,6 +228,42 @@ mod tests {
             let p = greedy_placement(&ds, &task, &sim, e);
             let eval = sim.evaluate(&ds, &task, &p);
             assert!(eval.latency > 0.0);
+        }
+    }
+
+    #[test]
+    fn greedy_survives_nan_costs() {
+        // total_cmp: a corrupt table (NaN pooling) must not panic the sort
+        let (mut ds, task, sim) = setup();
+        ds.tables[task.table_ids[2]].pooling = f32::NAN;
+        for e in ALL_EXPERTS {
+            let p = greedy_placement(&ds, &task, &sim, e);
+            assert_eq!(p.len(), task.n_tables());
+            assert!(p.iter().all(|&d| d < task.n_devices), "{e:?}");
+        }
+        let mut rng = Rng::new(8);
+        let p = random_placement(&ds, &task, &sim, &mut rng);
+        assert!(p.iter().all(|&d| d < task.n_devices));
+    }
+
+    #[test]
+    fn capped_variants_obey_slot_cap() {
+        let (ds, task, sim) = setup(); // 40 tables on 4 devices
+        let cap = 10; // exactly 40 / 4: the cap binds
+        let mut rng = Rng::new(3);
+        let p = random_placement_capped(&ds, &task, &sim, &mut rng, cap);
+        let mut counts = vec![0usize; task.n_devices];
+        for &d in &p {
+            counts[d] += 1;
+        }
+        assert!(counts.iter().all(|&c| c <= cap), "random: {counts:?}");
+        for e in ALL_EXPERTS {
+            let p = greedy_placement_capped(&ds, &task, &sim, e, cap);
+            let mut counts = vec![0usize; task.n_devices];
+            for &d in &p {
+                counts[d] += 1;
+            }
+            assert!(counts.iter().all(|&c| c <= cap), "{e:?}: {counts:?}");
         }
     }
 

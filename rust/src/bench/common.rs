@@ -6,8 +6,9 @@ use crate::util::error::Result;
 use std::io::Write;
 use std::path::PathBuf;
 
-use crate::baselines::{greedy_placement, random_placement, Expert, ALL_EXPERTS};
+use crate::baselines::{Expert, ALL_EXPERTS};
 use crate::coordinator::{DreamShard, TrainCfg};
+use crate::placer::{DreamShardPlacer, GreedyPlacer, Placer, PlacementRequest};
 use crate::runtime::Runtime;
 use crate::sim::{SimConfig, Simulator};
 use crate::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools, Dataset, Task};
@@ -92,40 +93,45 @@ pub fn make_suite(which: Which, n_tables: usize, n_devices: usize, n_tasks: usiz
     }
 }
 
-/// (mean, std) latency of random placement over tasks (20 draws each).
-pub fn eval_random(suite: &Suite, tasks: &[Task], seed: u64) -> (f64, f64) {
-    let mut rng = Rng::new(seed).fork(0xBAD);
-    let costs: Vec<f64> = tasks
-        .iter()
-        .flat_map(|t| {
-            (0..5).map(|_| {
-                let p = random_placement(&suite.ds, t, &suite.sim, &mut rng);
-                suite.sim.evaluate(&suite.ds, t, &p).latency
-            }).collect::<Vec<_>>()
-        })
-        .collect();
-    mean_std(&costs)
+/// The one generic evaluation loop every strategy shares (the old
+/// `eval_random` / `eval_expert` / `eval_agent` trio collapsed): (mean,
+/// std) latency of a placer over tasks, `draws` plans per task (`draws >
+/// 1` only matters for stochastic placers). All requests flow through a
+/// single `place_many`, so batch-capable placers lane-batch the episodes.
+pub fn eval_placer(
+    ctx: &Ctx,
+    suite: &Suite,
+    placer: &mut dyn Placer,
+    tasks: &[Task],
+    draws: usize,
+) -> Result<(f64, f64)> {
+    let mut reqs = Vec::with_capacity(tasks.len() * draws);
+    for t in tasks {
+        for _ in 0..draws {
+            reqs.push(PlacementRequest::for_runtime(&ctx.rt, &suite.ds, t, &suite.sim)?);
+        }
+    }
+    let plans = placer.place_many(&reqs)?;
+    let costs: Vec<f64> = plans.iter().map(|p| p.eval.latency).collect();
+    Ok(mean_std(&costs))
 }
 
-/// (mean, std) latency of one greedy expert over tasks.
-pub fn eval_expert(suite: &Suite, tasks: &[Task], e: Expert) -> (f64, f64) {
-    let costs: Vec<f64> = tasks
-        .iter()
-        .map(|t| {
-            let p = greedy_placement(&suite.ds, t, &suite.sim, e);
-            suite.sim.evaluate(&suite.ds, t, &p).latency
-        })
-        .collect();
-    mean_std(&costs)
+/// Wrap a trained agent in its facade placer (the tables evaluate agents
+/// exclusively through [`eval_placer`]).
+pub fn agent_placer<'a>(ctx: &'a Ctx, agent: &'a DreamShard) -> DreamShardPlacer<'a> {
+    DreamShardPlacer::from_agent(&ctx.rt, agent)
 }
 
 /// Best expert's mean latency (the paper's "best baseline" column).
-pub fn best_expert(suite: &Suite, tasks: &[Task]) -> (Expert, f64) {
-    ALL_EXPERTS
-        .into_iter()
-        .map(|e| (e, eval_expert(suite, tasks, e).0))
-        .min_by(|a, b| a.1.total_cmp(&b.1))
-        .unwrap()
+pub fn best_expert(ctx: &Ctx, suite: &Suite, tasks: &[Task]) -> Result<(Expert, f64)> {
+    let mut best: Option<(Expert, f64)> = None;
+    for e in ALL_EXPERTS {
+        let (m, _) = eval_placer(ctx, suite, &mut GreedyPlacer::new(e), tasks, 1)?;
+        if best.map_or(true, |(_, bm)| m < bm) {
+            best = Some((e, m));
+        }
+    }
+    Ok(best.expect("ALL_EXPERTS is non-empty"))
 }
 
 /// Train one DreamShard agent on a suite (one seed).
@@ -134,16 +140,6 @@ pub fn train_agent(ctx: &Ctx, suite: &Suite, cfg: TrainCfg, seed: u64) -> Result
     let mut agent = DreamShard::new(&ctx.rt, suite.train[0].n_devices, cfg, &mut rng)?;
     agent.train(&ctx.rt, &suite.sim, &suite.ds, &suite.train, &mut rng)?;
     Ok(agent)
-}
-
-/// (mean, std) latency of an agent's argmax placements over tasks.
-pub fn eval_agent(ctx: &Ctx, suite: &Suite, agent: &DreamShard, tasks: &[Task]) -> Result<(f64, f64)> {
-    let mut costs = vec![];
-    for t in tasks {
-        let p = agent.place(&ctx.rt, &suite.sim, &suite.ds, t)?;
-        costs.push(suite.sim.evaluate(&suite.ds, t, &p).latency);
-    }
-    Ok(mean_std(&costs))
 }
 
 /// Train `seeds` agents and return per-seed mean test/train latencies.
@@ -156,8 +152,9 @@ pub fn seeded_agent_eval(
     let mut test_means = vec![];
     for seed in 0..ctx.seeds as u64 {
         let agent = train_agent(ctx, suite, cfg.clone(), seed)?;
-        train_means.push(eval_agent(ctx, suite, &agent, &suite.train)?.0);
-        test_means.push(eval_agent(ctx, suite, &agent, &suite.test)?.0);
+        let mut placer = agent_placer(ctx, &agent);
+        train_means.push(eval_placer(ctx, suite, &mut placer, &suite.train, 1)?.0);
+        test_means.push(eval_placer(ctx, suite, &mut placer, &suite.test, 1)?.0);
     }
     Ok((train_means, test_means))
 }

@@ -8,12 +8,19 @@
 use crate::util::error::Result;
 use std::time::Instant;
 
-use super::common::{eval_agent, make_suite, train_agent, Ctx, Which};
+use super::common::{agent_placer, eval_placer, make_suite, train_agent, Ctx, Suite, Which};
 use super::costfit::{collect_cost_dataset, fit_cost_net, test_mse};
 use crate::coordinator::{DreamShard, TrainCfg};
+use crate::placer::{Placer, PlacementRequest};
 use crate::tables::NUM_FEATURES;
 use crate::util::table::TextTable;
 use crate::util::Rng;
+
+/// Test-split mean of one agent through the facade (the recurring
+/// evaluation of every training-dynamics figure).
+fn test_mean(ctx: &Ctx, suite: &Suite, agent: &DreamShard) -> Result<f64> {
+    Ok(eval_placer(ctx, suite, &mut agent_placer(ctx, agent), &suite.test, 1)?.0)
+}
 
 /// Fig. 5: test-task cost after each training iteration + wall time.
 pub fn fig5(ctx: &Ctx) -> Result<()> {
@@ -24,11 +31,11 @@ pub fn fig5(ctx: &Ctx) -> Result<()> {
     let mut agent = DreamShard::new(&ctx.rt, 4, TrainCfg { n_iterations: iters, ..cfg }, &mut rng)?;
     let mut out = String::from("fig5: DLRM-50 (4) — test cost vs training iteration\niter\ttest_ms\twall_s\n");
     let t0 = Instant::now();
-    let eval0 = eval_agent(ctx, &suite, &agent, &suite.test)?.0;
+    let eval0 = test_mean(ctx, &suite, &agent)?;
     out.push_str(&format!("0\t{eval0:.2}\t0.0\n"));
     for it in 0..iters {
         agent.train_iteration(&ctx.rt, &suite.sim, &suite.ds, &suite.train, it, false, &mut rng)?;
-        let m = eval_agent(ctx, &suite, &agent, &suite.test)?.0;
+        let m = test_mean(ctx, &suite, &agent)?;
         out.push_str(&format!("{}\t{m:.2}\t{:.1}\n", it + 1, t0.elapsed().as_secs_f64()));
         eprintln!("[fig5] iter {} -> {m:.2} ms", it + 1);
     }
@@ -45,14 +52,14 @@ pub fn fig6(ctx: &Ctx) -> Result<()> {
     for &n_rl in n_rls {
         let cfg = TrainCfg { n_rl, ..base.clone() };
         let agent = train_agent(ctx, &suite, cfg, 1)?;
-        let m = eval_agent(ctx, &suite, &agent, &suite.test)?.0;
+        let m = test_mean(ctx, &suite, &agent)?;
         tbl.row(vec!["N_RL".into(), n_rl.to_string(), format!("{m:.2}")]);
         eprintln!("[fig6] N_RL={n_rl} -> {m:.2}");
     }
     for &n_cost in n_costs {
         let cfg = TrainCfg { n_cost, ..base.clone() };
         let agent = train_agent(ctx, &suite, cfg, 1)?;
-        let m = eval_agent(ctx, &suite, &agent, &suite.test)?.0;
+        let m = test_mean(ctx, &suite, &agent)?;
         tbl.row(vec!["N_cost".into(), n_cost.to_string(), format!("{m:.2}")]);
         eprintln!("[fig6] N_cost={n_cost} -> {m:.2}");
     }
@@ -80,7 +87,7 @@ pub fn fig7(ctx: &Ctx) -> Result<()> {
         let mut agent = DreamShard::new(&ctx.rt, 4, cfg, &mut rng)?;
         agent.cost = net;
         agent.train(&ctx.rt, &suite.sim, &suite.ds, &suite.train, &mut rng)?;
-        let m = eval_agent(ctx, &suite, &agent, &suite.test)?.0;
+        let m = test_mean(ctx, &suite, &agent)?;
         tbl.row(vec![n.to_string(), format!("{mse:.3}"), format!("{m:.2}")]);
         eprintln!("[fig7] n={n}: MSE {mse:.3}, policy {m:.2} ms");
     }
@@ -111,7 +118,7 @@ pub fn fig8(ctx: &Ctx) -> Result<()> {
         let mut series = vec![];
         for it in 0..iters {
             agent.train_iteration(&ctx.rt, &suite.sim, &suite.ds, &suite.train, it, real, &mut rng)?;
-            let m = eval_agent(ctx, &suite, &agent, &suite.test)?.0;
+            let m = test_mean(ctx, &suite, &agent)?;
             // hardware runs: data collection always hits the hardware;
             // the real-MDP arm additionally measures every step + reward
             let per_iter_hw = if real {
@@ -136,12 +143,14 @@ pub fn fig8(ctx: &Ctx) -> Result<()> {
     // right panel: inference time vs number of tables (argmax placement)
     out.push_str("\nfig8 (right): inference wall time vs number of tables\nn_tables\tplace_ms\n");
     let agent = train_agent(ctx, &suite, ctx.train_cfg(), 0)?;
+    let mut dsp = agent_placer(ctx, &agent);
     for &n in &[10usize, 25, 50, 100, 150, 200] {
         let s2 = make_suite(Which::Dlrm, n, 4, 2, 9);
         let t0 = Instant::now();
         let mut reps = 0;
         for task in &s2.test {
-            agent.place(&ctx.rt, &s2.sim, &s2.ds, task)?;
+            // sequential on purpose: this panel reports per-task latency
+            dsp.place(&PlacementRequest::for_runtime(&ctx.rt, &s2.ds, task, &s2.sim)?)?;
             reps += 1;
         }
         let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;

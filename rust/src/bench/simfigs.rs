@@ -5,8 +5,9 @@
 
 use crate::util::error::Result;
 
-use super::common::{make_suite, Ctx, Which};
-use crate::baselines::{greedy_placement, random_placement, ALL_EXPERTS};
+use super::common::{agent_placer, make_suite, Ctx, Which};
+use crate::baselines::ALL_EXPERTS;
+use crate::placer::{GreedyPlacer, Placer, PlacementPlan, PlacementRequest, RandomPlacer};
 use crate::sim::{CommModel, KernelModel, SimConfig, Simulator};
 use crate::tables::{gen_dlrm, Table, NUM_BINS};
 use crate::util::table::TextTable;
@@ -182,26 +183,26 @@ pub fn fig1(ctx: &Ctx) -> Result<()> {
     eprintln!("[fig1] training DreamShard on DLRM-50 (4) ...");
     let agent = super::common::train_agent(ctx, &suite, ctx.train_cfg(), 0)?;
     let mut out = String::new();
-    let mut rng = Rng::new(123);
+    let mut random = RandomPlacer::new(123);
+    let mut dsp = agent_placer(ctx, &agent);
     for (case, task) in suite.test.iter().take(3).enumerate() {
         out.push_str(&format!("=== case {case} ===\n"));
-        let p_rand = random_placement(&suite.ds, task, &suite.sim, &mut rng);
-        let e_rand = suite.sim.evaluate(&suite.ds, task, &p_rand);
-        out.push_str(&suite.sim.render_trace(&e_rand, "random"));
-        let (best_e, _) = ALL_EXPERTS
-            .into_iter()
-            .map(|e| {
-                let p = greedy_placement(&suite.ds, task, &suite.sim, e);
-                (e, suite.sim.evaluate(&suite.ds, task, &p).latency)
-            })
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .unwrap();
-        let p_exp = greedy_placement(&suite.ds, task, &suite.sim, best_e);
-        let e_exp = suite.sim.evaluate(&suite.ds, task, &p_exp);
-        out.push_str(&suite.sim.render_trace(&e_exp, best_e.name()));
-        let p_ds = agent.place(&ctx.rt, &suite.sim, &suite.ds, task)?;
-        let e_ds = suite.sim.evaluate(&suite.ds, task, &p_ds);
-        out.push_str(&suite.sim.render_trace(&e_ds, "DreamShard"));
+        let req = PlacementRequest::for_runtime(&ctx.rt, &suite.ds, task, &suite.sim)?;
+        let plan_rand = random.place(&req)?;
+        out.push_str(&suite.sim.render_trace(&plan_rand.eval, "random"));
+        let mut best: Option<(&'static str, PlacementPlan)> = None;
+        for e in ALL_EXPERTS {
+            let plan = GreedyPlacer::new(e).place(&req)?;
+            let better =
+                best.as_ref().map_or(true, |(_, b)| plan.eval.latency < b.eval.latency);
+            if better {
+                best = Some((e.name(), plan));
+            }
+        }
+        let (best_name, best_plan) = best.expect("ALL_EXPERTS is non-empty");
+        out.push_str(&suite.sim.render_trace(&best_plan.eval, best_name));
+        let plan_ds = dsp.place(&req)?;
+        out.push_str(&suite.sim.render_trace(&plan_ds.eval, "DreamShard"));
         out.push('\n');
     }
     ctx.emit("fig1", &out)

@@ -5,13 +5,12 @@
 use crate::util::error::Result;
 
 use super::common::{
-    best_expert, eval_agent, eval_expert, eval_random, make_suite, seeded_agent_eval, train_agent,
-    Ctx, Suite, Which,
+    best_expert, eval_placer, make_suite, seeded_agent_eval, train_agent, Ctx, Suite, Which,
 };
 use crate::baselines::ALL_EXPERTS;
-use crate::coordinator::RnnBaseline;
+use crate::placer::{FitRequest, GreedyPlacer, Placer, RandomPlacer, RnnPlacer};
 use crate::util::table::{ms_pm, speedup_vs, TextTable};
-use crate::util::{mean_std, Rng};
+use crate::util::mean_std;
 
 pub const TABLE1_CONFIGS: &[(Which, usize, usize)] = &[
     (Which::Dlrm, 20, 4),
@@ -47,23 +46,20 @@ pub const TABLE7_CONFIGS: &[(Which, usize, usize)] = &[
 
 /// Train + evaluate the RNN baseline; per-seed mean costs on train/test.
 fn rnn_eval(ctx: &Ctx, suite: &Suite) -> Result<(Vec<f64>, Vec<f64>)> {
-    let updates = ctx.train_cfg().n_iterations * ctx.train_cfg().n_rl;
     let mut tr = vec![];
     let mut te = vec![];
     for seed in 0..ctx.seeds as u64 {
-        let mut rng = Rng::new(77_000 + seed);
-        let mut rnn = RnnBaseline::new(&ctx.rt, suite.train[0].n_devices, &mut rng)?;
-        rnn.train(&ctx.rt, &suite.sim, &suite.ds, &suite.train, updates, &mut rng)?;
-        for (tasks, out) in [(&suite.train, &mut tr), (&suite.test, &mut te)] {
-            let costs: Vec<f64> = tasks
-                .iter()
-                .map(|t| {
-                    let p = rnn.place(&ctx.rt, &suite.sim, &suite.ds, t)?;
-                    Ok(suite.sim.evaluate(&suite.ds, t, &p).latency)
-                })
-                .collect::<Result<_>>()?;
-            out.push(crate::util::mean(&costs));
-        }
+        let mut rnn = RnnPlacer::untrained(&ctx.rt);
+        rnn.fit(&FitRequest {
+            ds: &suite.ds,
+            tasks: &suite.train,
+            sim: &suite.sim,
+            cfg: ctx.train_cfg(),
+            seed: 77_000 + seed,
+            verbose: false,
+        })?;
+        tr.push(eval_placer(ctx, suite, &mut rnn, &suite.train, 1)?.0);
+        te.push(eval_placer(ctx, suite, &mut rnn, &suite.test, 1)?.0);
     }
     Ok((tr, te))
 }
@@ -94,14 +90,14 @@ pub fn run_configs(ctx: &Ctx, name: &str, configs: &[(Which, usize, usize)]) -> 
             ("Train", &suite.train, &agent_tr, &rnn_tr),
             ("Test", &suite.test, &agent_te, &rnn_te),
         ] {
-            let (r_m, r_s) = eval_random(&suite, tasks, 3);
+            let (r_m, r_s) = eval_placer(ctx, &suite, &mut RandomPlacer::new(3), tasks, 5)?;
             let expert_cells: Vec<String> = ALL_EXPERTS
                 .iter()
-                .map(|&e| {
-                    let (m, s) = eval_expert(&suite, tasks, e);
-                    format!("{} ({})", ms_pm(m, s), speedup_vs(r_m, m))
+                .map(|&e| -> Result<String> {
+                    let (m, s) = eval_placer(ctx, &suite, &mut GreedyPlacer::new(e), tasks, 1)?;
+                    Ok(format!("{} ({})", ms_pm(m, s), speedup_vs(r_m, m)))
                 })
-                .collect();
+                .collect::<Result<_>>()?;
             let (a_m, a_s) = mean_std(agent_runs);
             let rnn_cell = if rnn_runs.is_empty() {
                 "-".to_string()
@@ -142,7 +138,8 @@ pub fn table7(ctx: &Ctx) -> Result<()> {
 pub fn quick_headline(ctx: &Ctx, which: Which, n_tables: usize, n_devices: usize) -> Result<(Suite, crate::coordinator::DreamShard, f64, f64)> {
     let suite = make_suite(which, n_tables, n_devices, ctx.n_tasks(), 7);
     let agent = train_agent(ctx, &suite, ctx.train_cfg(), 0)?;
-    let (test_m, _) = eval_agent(ctx, &suite, &agent, &suite.test)?;
-    let (_, be) = best_expert(&suite, &suite.test);
+    let (test_m, _) =
+        eval_placer(ctx, &suite, &mut super::common::agent_placer(ctx, &agent), &suite.test, 1)?;
+    let (_, be) = best_expert(ctx, &suite, &suite.test)?;
     Ok((suite, agent, test_m, be))
 }

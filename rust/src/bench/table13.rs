@@ -7,13 +7,12 @@
 
 use crate::util::error::Result;
 
-use super::common::{make_suite, train_agent, Ctx, Which};
-use crate::baselines::{greedy_placement, random_placement, ALL_EXPERTS};
-use crate::coordinator::Variant;
+use super::common::{agent_placer, make_suite, train_agent, Ctx, Which};
+use crate::baselines::ALL_EXPERTS;
+use crate::placer::{GreedyPlacer, Placer, PlacementRequest, RandomPlacer};
 use crate::sim::{SimConfig, Simulator};
 use crate::tables::{gen_prod, sample_tasks, split_pools};
 use crate::util::table::TextTable;
-use crate::util::Rng;
 
 /// Embedding cost -> end-to-end training-throughput improvement: the
 /// embedding stage overlaps the dense stage but dominates it (section
@@ -42,34 +41,31 @@ pub fn table13(ctx: &Ctx) -> Result<()> {
     eprintln!("[table13] {} tables, {:.1} TB of embedding weights, 128 devices", n_tables, total_size * 3.0 / 1024.0);
 
     let mut tbl = TextTable::new(vec!["Sharding Algorithm", "Embedding cost (ms)", "Throughput improvement"]);
-    let mut rng = Rng::new(99);
+    // every strategy plans the same request through the Placer facade
+    let req = PlacementRequest::for_runtime(&ctx.rt, &ds, &task, &sim)?;
     let rand_ms = {
+        let mut random = RandomPlacer::new(99);
         let costs: Vec<f64> = (0..3)
-            .map(|_| {
-                let p = random_placement(&ds, &task, &sim, &mut rng);
-                sim.evaluate(&ds, &task, &p).latency
-            })
-            .collect();
+            .map(|_| Ok(random.place(&req)?.eval.latency))
+            .collect::<Result<_>>()?;
         crate::util::mean(&costs)
     };
     tbl.row(vec!["Random".into(), format!("{rand_ms:.1}"), "0.0%".into()]);
     for e in ALL_EXPERTS {
-        let p = greedy_placement(&ds, &task, &sim, e);
-        let ms = sim.evaluate(&ds, &task, &p).latency;
+        let ms = GreedyPlacer::new(e).place(&req)?.eval.latency;
         tbl.row(vec![
             e.name().into(),
             format!("{ms:.1} ({:+.1}%)", (rand_ms / ms - 1.0) * 100.0),
             format!("{:+.1}%", throughput_gain(rand_ms, ms) * 100.0),
         ]);
     }
-    // DreamShard through the ultra variant
-    let var = Variant::for_devices(&ctx.rt, 128)?;
+    // DreamShard: the facade routes the 128-device task to the
+    // inference-only ultra variant automatically
+    let mut dsp = agent_placer(ctx, &agent);
     let t0 = std::time::Instant::now();
-    let ep = agent
-        .run_episodes_var(&ctx.rt, &sim, &ds, &task, 1, false, false, &mut rng, &var, false)?
-        .remove(0);
+    let plan = dsp.place(&req)?;
     let plan_s = t0.elapsed().as_secs_f64();
-    let ms = sim.evaluate(&ds, &task, &ep.placement).latency;
+    let ms = plan.eval.latency;
     tbl.row(vec![
         "DreamShard".into(),
         format!("{ms:.1} ({:+.1}%)", (rand_ms / ms - 1.0) * 100.0),

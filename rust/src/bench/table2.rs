@@ -5,23 +5,17 @@
 
 use crate::util::error::Result;
 
-use super::common::{eval_agent, make_suite, train_agent, Ctx, Suite, Which};
-use crate::coordinator::{DreamShard, Variant};
+use super::common::{agent_placer, eval_placer, make_suite, train_agent, Ctx, Suite, Which};
+use crate::coordinator::DreamShard;
+use crate::placer::RandomPlacer;
 use crate::util::table::{ms_pm, TextTable};
 
-/// Evaluate `agent` (trained elsewhere) on `suite`'s test tasks, running
-/// inference through the variant that fits the suite's device count.
+/// Evaluate `agent` (trained elsewhere) on `suite`'s test tasks through
+/// the facade, which routes each task to a fitting artifact variant (the
+/// agent's own when the device count fits, the smallest covering one
+/// otherwise) — lane-batched across the suite's tasks.
 fn transfer_eval(ctx: &Ctx, agent: &DreamShard, suite: &Suite) -> Result<f64> {
-    let var = Variant::for_devices(&ctx.rt, suite.test[0].n_devices)?;
-    let mut costs = vec![];
-    for task in &suite.test {
-        let mut rng = crate::util::Rng::new(0);
-        let ep = agent
-            .run_episodes_var(&ctx.rt, &suite.sim, &suite.ds, task, 1, false, false, &mut rng, &var, false)?
-            .remove(0);
-        costs.push(suite.sim.evaluate(&suite.ds, task, &ep.placement).latency);
-    }
-    Ok(crate::util::mean(&costs))
+    Ok(eval_placer(ctx, suite, &mut agent_placer(ctx, agent), &suite.test, 1)?.0)
 }
 
 pub fn table2(ctx: &Ctx) -> Result<()> {
@@ -53,8 +47,9 @@ pub fn table2(ctx: &Ctx) -> Result<()> {
             agents.insert((t_t, t_d), train_agent(ctx, &tgt_suite, ctx.train_cfg(), 0)?);
         }
         let transferred = transfer_eval(ctx, &agents[&(s_t, s_d)], &tgt_suite)?;
-        let on_target = eval_agent(ctx, &tgt_suite, &agents[&(t_t, t_d)], &tgt_suite.test)?.0;
-        let (rand_m, rand_s) = super::common::eval_random(&tgt_suite, &tgt_suite.test, 3);
+        let on_target = transfer_eval(ctx, &agents[&(t_t, t_d)], &tgt_suite)?;
+        let (rand_m, rand_s) =
+            eval_placer(ctx, &tgt_suite, &mut RandomPlacer::new(3), &tgt_suite.test, 5)?;
         tbl.row(vec![
             format!("DLRM-{s_t} ({s_d}) -> DLRM-{t_t} ({t_d})"),
             ms_pm(rand_m, rand_s),
@@ -112,7 +107,7 @@ fn matrix(
     let mut row = vec!["trained-on-target".to_string()];
     for suite in &tgt_suites {
         let agent = train_agent(ctx, suite, ctx.train_cfg(), 0)?;
-        row.push(format!("{:.1}", eval_agent(ctx, suite, &agent, &suite.test)?.0));
+        row.push(format!("{:.1}", transfer_eval(ctx, &agent, suite)?));
     }
     tbl.row(row);
     Ok(format!("{title}\n{}\n", tbl.render()))

@@ -7,7 +7,7 @@
 
 use crate::util::error::Result;
 
-use super::common::{make_suite, Ctx, Which};
+use super::common::{agent_placer, eval_placer, make_suite, Ctx, Which};
 use super::costfit::{collect_cost_dataset, fit_cost_net, test_mse};
 use crate::coordinator::{DreamShard, TrainCfg};
 use crate::tables::NUM_FEATURES;
@@ -63,8 +63,9 @@ pub fn table3(ctx: &Ctx) -> Result<()> {
             let mut te = vec![];
             for seed in 0..ctx.seeds as u64 {
                 let agent = train_ablated(ctx, &suite, &ctx.train_cfg(), Some(range), false, seed)?;
-                tr.push(super::common::eval_agent(ctx, &suite, &agent, &suite.train)?.0);
-                te.push(super::common::eval_agent(ctx, &suite, &agent, &suite.test)?.0);
+                let mut placer = agent_placer(ctx, &agent);
+                tr.push(eval_placer(ctx, &suite, &mut placer, &suite.train, 1)?.0);
+                te.push(eval_placer(ctx, &suite, &mut placer, &suite.test, 1)?.0);
             }
             cols.push((tr, te));
         }
@@ -74,8 +75,9 @@ pub fn table3(ctx: &Ctx) -> Result<()> {
             let mut te = vec![];
             for seed in 0..ctx.seeds as u64 {
                 let agent = train_ablated(ctx, &suite, &ctx.train_cfg(), None, no_cost, seed)?;
-                tr.push(super::common::eval_agent(ctx, &suite, &agent, &suite.train)?.0);
-                te.push(super::common::eval_agent(ctx, &suite, &agent, &suite.test)?.0);
+                let mut placer = agent_placer(ctx, &agent);
+                tr.push(eval_placer(ctx, &suite, &mut placer, &suite.train, 1)?.0);
+                te.push(eval_placer(ctx, &suite, &mut placer, &suite.test, 1)?.0);
             }
             cols.push((tr, te));
         }

@@ -1,0 +1,131 @@
+//! Hand-rolled CLI flag parsing for the `dreamshard` binary (the crate is
+//! dependency-free by design, so there is no clap). Extracted from
+//! `main.rs` so the grammar is unit-testable.
+//!
+//! Grammar:
+//! * `--name value` — a named flag; the value is the next argument unless
+//!   that argument itself starts with `--`.
+//! * `--switch` — a bare switch (no value follows, or the next argument
+//!   is another flag).
+//! * anything else — a positional argument, in order.
+
+use std::collections::{HashMap, HashSet};
+
+/// Parsed command-line flags.
+#[derive(Debug, Default)]
+pub struct Flags {
+    pub positional: Vec<String>,
+    pub named: HashMap<String, String>,
+    pub switches: HashSet<String>,
+}
+
+/// Parse arguments (everything after the subcommand) into [`Flags`].
+pub fn parse_flags(args: &[String]) -> Flags {
+    let mut f = Flags::default();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                f.named.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                f.switches.insert(name.to_string());
+                i += 1;
+            }
+        } else {
+            f.positional.push(a.clone());
+            i += 1;
+        }
+    }
+    f
+}
+
+impl Flags {
+    /// Value of `--name` parsed as usize, or `default`.
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.named.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Value of `--name` as a string, or `default`.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.named.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Whether `--name` was given at all (as a switch or with a value).
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.contains(name) || self.named.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Flags {
+        parse_flags(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn named_values_and_defaults() {
+        let f = parse(&["--tables", "80", "--devices", "8"]);
+        assert_eq!(f.get_usize("tables", 50), 80);
+        assert_eq!(f.get_usize("devices", 4), 8);
+        assert_eq!(f.get_usize("seeds", 3), 3, "absent flag falls back");
+        assert_eq!(f.get_usize("tables", 0), 80);
+    }
+
+    #[test]
+    fn policy_flag_round_trips() {
+        let f = parse(&["--policy", "greedy:size-lookup", "--fast"]);
+        assert_eq!(f.get_str("policy", "dreamshard"), "greedy:size-lookup");
+        assert!(f.has("fast"));
+        let g = parse(&["--fast"]);
+        assert_eq!(g.get_str("policy", "dreamshard"), "dreamshard");
+    }
+
+    #[test]
+    fn switches_with_and_without_values() {
+        // a flag directly followed by another flag is a switch
+        let f = parse(&["--fast", "--seeds", "2", "--prod"]);
+        assert!(f.has("fast"));
+        assert!(f.has("prod"));
+        assert_eq!(f.get_usize("seeds", 3), 2);
+        // `has` also sees valued flags
+        assert!(f.has("seeds"));
+        assert!(!f.has("tables"));
+    }
+
+    #[test]
+    fn positionals_keep_order_and_mix_with_flags() {
+        let f = parse(&["repro", "table1", "--seeds", "2"]);
+        assert_eq!(f.positional, vec!["repro".to_string(), "table1".to_string()]);
+        assert_eq!(f.get_usize("seeds", 3), 2);
+    }
+
+    #[test]
+    fn flag_followed_by_bare_word_takes_it_as_value() {
+        // the grammar is greedy: `--fast extra` reads as --fast=extra, so
+        // switches must come last or be followed by another flag (this is
+        // the long-standing CLI behavior, pinned here on purpose)
+        let f = parse(&["--fast", "extra"]);
+        assert!(f.has("fast"));
+        assert_eq!(f.get_str("fast", ""), "extra");
+        assert!(f.positional.is_empty());
+    }
+
+    #[test]
+    fn unparsable_value_falls_back() {
+        let f = parse(&["--tables", "many"]);
+        assert_eq!(f.get_usize("tables", 50), 50);
+        assert_eq!(f.get_str("tables", ""), "many");
+    }
+
+    #[test]
+    fn empty_args() {
+        let f = parse(&[]);
+        assert!(f.positional.is_empty());
+        assert!(f.named.is_empty());
+        assert!(f.switches.is_empty());
+    }
+}

@@ -13,5 +13,5 @@ pub use buffer::{CostSample, ReplayBuffer};
 pub use costnet::{CostNet, CostPrediction};
 pub use policy::{select_action, PolicyNet, StepRec};
 pub use rnn::RnnBaseline;
-pub use trainer::{evaluate_policy, DreamShard, Episode, IterStat, TrainCfg};
+pub use trainer::{DreamShard, Episode, IterStat, TrainCfg};
 pub use variant::Variant;

@@ -77,6 +77,7 @@ impl RnnBaseline {
     /// Run `n` episodes; returns (placements, real costs, recorded masks
     /// and actions for training).
     #[allow(clippy::type_complexity)]
+    #[allow(clippy::too_many_arguments)]
     fn episodes(
         &self,
         rt: &Runtime,
@@ -85,6 +86,7 @@ impl RnnBaseline {
         task: &Task,
         n: usize,
         sample: bool,
+        max_slots: usize,
         rng: &mut Rng,
     ) -> Result<(Vec<Vec<usize>>, Vec<f64>, TensorF32, TensorI32, TensorF32, TensorF32)> {
         let order = heuristic_order(ds, task);
@@ -101,7 +103,7 @@ impl RnnBaseline {
         let mut placements = vec![];
         let mut costs = vec![];
         for lane in 0..n {
-            let mut st = PlacementState::new(ds, task, order.clone(), usize::MAX);
+            let mut st = PlacementState::new(ds, task, order.clone(), max_slots);
             for t in 0..m {
                 let lg = st.legal(sim);
                 let base = (lane * self.t_cap + t) * self.d;
@@ -142,7 +144,7 @@ impl RnnBaseline {
             let task = &tasks[rng.below(tasks.len())];
             let n = self.e_train;
             let (_p, costs, feats, actions, legal, tmask) =
-                self.episodes(rt, sim, ds, task, n, true, rng)?;
+                self.episodes(rt, sim, ds, task, n, true, usize::MAX, rng)?;
             let returns: Vec<f32> = costs.iter().map(|&c| -(c as f32)).collect();
             let baseline = returns.iter().sum::<f32>() / returns.len() as f32;
             let mut adv = TensorF32::zeros(&[self.e_train]);
@@ -185,8 +187,21 @@ impl RnnBaseline {
         ds: &Dataset,
         task: &Task,
     ) -> Result<Vec<usize>> {
+        self.place_with_slots(rt, sim, ds, task, usize::MAX)
+    }
+
+    /// Greedy placement under an explicit per-device slot cap (the MDP
+    /// legality rule shared by all strategies behind [`crate::placer`]).
+    pub fn place_with_slots(
+        &self,
+        rt: &Runtime,
+        sim: &Simulator,
+        ds: &Dataset,
+        task: &Task,
+        max_slots: usize,
+    ) -> Result<Vec<usize>> {
         let mut rng = Rng::new(0);
-        let (mut p, _c, ..) = self.episodes(rt, sim, ds, task, 1, false, &mut rng)?;
+        let (mut p, _c, ..) = self.episodes(rt, sim, ds, task, 1, false, max_slots, &mut rng)?;
         Ok(p.remove(0))
     }
 }

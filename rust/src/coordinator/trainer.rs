@@ -117,6 +117,36 @@ impl DreamShard {
         self.cfg.lr * frac.max(0.05)
     }
 
+    /// Execute one fused estimated-MDP step artifact (cost features +
+    /// policy logits for every lane). This is the single definition of
+    /// the artifact's 9-input contract, shared by the training episode
+    /// loop and the placer facade's lane-batched planning.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_fused_step(
+        &self,
+        rt: &Runtime,
+        step_name: &str,
+        feats: &TensorF32,
+        mask: &TensorF32,
+        dmask: &TensorF32,
+        cur: &TensorF32,
+        legal: &TensorF32,
+    ) -> Result<Vec<crate::runtime::Value>> {
+        rt.run(step_name, &[
+            TensorF32::from_vec(self.cost.theta.clone(), &[self.cost.theta.len()])
+                .into_value(),
+            TensorF32::from_vec(self.policy.phi.clone(), &[self.policy.phi.len()])
+                .into_value(),
+            feats.value(),
+            mask.value(),
+            dmask.value(),
+            cur.value(),
+            legal.value(),
+            TensorF32::from_vec(self.cost.fmask.clone(), &[NUM_FEATURES]).into_value(),
+            TensorF32::from_vec(self.policy.qscale.clone(), &[3]).into_value(),
+        ])
+    }
+
     /// Sort a task's tables descending by predicted single-table cost.
     pub fn order_tables(&self, rt: &Runtime, ds: &Dataset, task: &Task) -> Result<Vec<usize>> {
         let feats: Vec<[f32; NUM_FEATURES]> =
@@ -143,13 +173,16 @@ impl DreamShard {
         record: bool,
         rng: &mut Rng,
     ) -> Result<Vec<Episode>> {
-        self.run_episodes_var(rt, sim, ds, task, n, sample, record, rng, &self.var, false)
+        self.run_episodes_var(rt, sim, ds, task, n, sample, record, rng, &self.var, false, usize::MAX)
     }
 
     /// `run_episodes` with an explicit artifact variant (e.g. the ultra
-    /// D=128 variant for Table 13) and an optional **real-MDP** mode in
+    /// D=128 variant for Table 13), an optional **real-MDP** mode in
     /// which cost features and the reward come from the simulator instead
-    /// of the cost network (Fig. 8's w/o-estimation arm).
+    /// of the cost network (Fig. 8's w/o-estimation arm), and an episode
+    /// slot cap (effective cap = `min(var.s, max_slots)`; pass
+    /// `usize::MAX` for the variant's own cap) so the placer facade's
+    /// request-level legality holds on this path too.
     #[allow(clippy::too_many_arguments)]
     pub fn run_episodes_var(
         &self,
@@ -163,6 +196,7 @@ impl DreamShard {
         rng: &mut Rng,
         var: &Variant,
         real_mdp: bool,
+        max_slots: usize,
     ) -> Result<Vec<Episode>> {
         // fused-step artifact sized to the episode count: E=1 for greedy
         // inference, E=16 for lockstep training episodes (§Perf)
@@ -171,8 +205,9 @@ impl DreamShard {
         let (d, s) = (var.d, var.s);
         let n = n.min(e);
         let order = self.order_tables(rt, ds, task)?;
+        let slot_cap = s.min(max_slots);
         let mut states: Vec<PlacementState> =
-            (0..n).map(|_| PlacementState::new(ds, task, order.clone(), s)).collect();
+            (0..n).map(|_| PlacementState::new(ds, task, order.clone(), slot_cap)).collect();
         let mut episodes: Vec<Episode> = (0..n)
             .map(|_| Episode { placement: vec![], steps: vec![], est_cost: 0.0 })
             .collect();
@@ -202,19 +237,8 @@ impl DreamShard {
             // simulator-measured q on the real MDP (Fig. 8 arm)
             let mut q = TensorF32::zeros(&[e, d, 3]);
             let logits = if let Some((_, step_name)) = &fused {
-                let out = rt.run(step_name, &[
-                    TensorF32::from_vec(self.cost.theta.clone(), &[self.cost.theta.len()])
-                        .into_value(),
-                    TensorF32::from_vec(self.policy.phi.clone(), &[self.policy.phi.len()])
-                        .into_value(),
-                    feats.value(),
-                    mask.value(),
-                    dmask.value(),
-                    cur.value(),
-                    legal_t.value(),
-                    TensorF32::from_vec(self.cost.fmask.clone(), &[f]).into_value(),
-                    TensorF32::from_vec(self.policy.qscale.clone(), &[3]).into_value(),
-                ])?;
+                let out =
+                    self.run_fused_step(rt, step_name, &feats, &mask, &dmask, &cur, &legal_t)?;
                 let logits_flat = crate::runtime::to_f32_vec(&out[0], e * d)?;
                 q.data = crate::runtime::to_f32_vec(&out[1], e * d * 3)?;
                 (0..n).map(|lane| logits_flat[lane * d..(lane + 1) * d].to_vec()).collect()
@@ -374,6 +398,7 @@ impl DreamShard {
                 let var = self.var.clone();
                 let eps = self.run_episodes_var(
                     rt, sim, ds, task, self.cfg.n_episode, true, true, rng, &var, real_mdp,
+                    usize::MAX,
                 )?;
                 let returns: Vec<f32> = eps.iter().map(|e| -e.est_cost).collect();
                 let baseline: f32 = returns.iter().sum::<f32>() / returns.len() as f32;
@@ -401,6 +426,11 @@ impl DreamShard {
     }
 
     /// Algorithm 2: place a task greedily (argmax), no simulator costs.
+    ///
+    /// This is the raw single-episode entry point; callers outside the
+    /// training loop should prefer the [`crate::placer`] facade
+    /// ([`crate::placer::DreamShardPlacer`]), whose `place_many`
+    /// additionally lane-batches several tasks per backend call.
     pub fn place(
         &self,
         rt: &Runtime,
@@ -414,20 +444,4 @@ impl DreamShard {
             .remove(0);
         Ok(ep.placement)
     }
-}
-
-/// Mean simulated latency of a policy's argmax placements over tasks.
-pub fn evaluate_policy(
-    agent: &DreamShard,
-    rt: &Runtime,
-    sim: &Simulator,
-    ds: &Dataset,
-    tasks: &[Task],
-) -> Result<f64> {
-    let mut costs = vec![];
-    for task in tasks {
-        let p = agent.place(rt, sim, ds, task)?;
-        costs.push(sim.evaluate(ds, task, &p).latency);
-    }
-    Ok(crate::util::mean(&costs))
 }

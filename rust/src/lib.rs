@@ -6,11 +6,47 @@
 //!
 //! * **Layer 3 (this crate)** — the coordinator: datasets, the simulated
 //!   GPU cluster substrate, the placement MDP, the Algorithm-1 trainer,
-//!   greedy expert baselines, and the experiment harness.
+//!   greedy expert baselines, the [`placer`] planning facade, and the
+//!   experiment harness.
 //! * **Layer 2** (`python/compile/model.py`) — cost / policy / RNN / DLRM
 //!   networks in JAX, AOT-lowered to HLO text.
 //! * **Layer 1** (`python/compile/kernels/`) — Pallas kernels for the
 //!   embedding-bag hot spot and the sum/max reductions.
+//!
+//! ## Planning API
+//!
+//! Every placement strategy sits behind one trait: build a
+//! [`placer::PlacementRequest`] (dataset + task + simulator + legality
+//! knobs), pick a strategy by name from the registry, and get a
+//! [`placer::PlacementPlan`] back:
+//!
+//! ```
+//! use dreamshard::placer::{self, Placer, PlacementRequest};
+//! use dreamshard::runtime::Runtime;
+//! use dreamshard::sim::{SimConfig, Simulator};
+//! use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
+//!
+//! let rt = Runtime::reference();
+//! let ds = gen_dlrm(100, 0);
+//! let (pool, _) = split_pools(&ds, 1);
+//! let task = sample_tasks(&pool, 12, 4, 1, 2).remove(0);
+//! let sim = Simulator::new(SimConfig::default());
+//!
+//! let req = PlacementRequest::for_runtime(&rt, &ds, &task, &sim).unwrap();
+//! let mut expert = placer::by_name(&rt, "greedy:lookup").unwrap();
+//! let plan = expert.place(&req).unwrap();
+//! println!("{}: {:.1} ms", plan.strategy, plan.eval.latency);
+//! ```
+//!
+//! Learned strategies (`"dreamshard"`, `"rnn"`) report
+//! [`placer::Placer::needs_fit`] and are trained with
+//! [`placer::Placer::fit`]. [`placer::Placer::place_many`] plans a batch;
+//! the DreamShard implementation fills the backend's episode lanes with
+//! different tasks and advances them in lockstep — one fused backend call
+//! per MDP step for up to `E` tasks at once (see
+//! [`placer::DreamShardPlacer`]).
+//!
+//! ## Execution backends
 //!
 //! Python never runs at placement time: the coordinator drives the
 //! networks through the [`runtime::Backend`] seam, which has two
@@ -33,8 +69,10 @@
 
 pub mod baselines;
 pub mod bench;
+pub mod cli;
 pub mod coordinator;
 pub mod mdp;
+pub mod placer;
 pub mod runtime;
 pub mod sim;
 pub mod tables;

@@ -1,66 +1,35 @@
 //! DreamShard CLI — the leader entrypoint.
 //!
 //! Subcommands:
-//!   repro <id|all> [--fast] [--seeds N]   regenerate a paper table/figure
-//!   train [--tables N] [--devices D] ...  train an agent and report costs
-//!   place [--tables N] [--devices D]      plan one placement and print it
-//!   info                                  show artifact/manifest summary
+//!
+//! ```text
+//! repro <id|all> [--fast] [--seeds N]   regenerate a paper table/figure
+//! train [--tables N] [--devices D] ...  train a policy and report costs
+//! place [--tables N] [--policy NAME]    plan one placement and print it
+//! placers                               list registered strategies
+//! info                                  show artifact/manifest summary
+//! ```
+//!
+//! `place --policy <name>` plans through the placer registry: learned
+//! policies (`dreamshard`, `rnn`) are trained first; baselines
+//! (`random`, `greedy:dim`, ...) plan immediately with no training.
 //!
 //! (dependency-light by design: flags are parsed by hand, no clap)
 
 use dreamshard::{bail, Context, Result};
 
 use dreamshard::bench::{self, common::Ctx};
-use dreamshard::coordinator::{DreamShard, TrainCfg};
+use dreamshard::cli::parse_flags;
+use dreamshard::coordinator::TrainCfg;
+use dreamshard::placer::{self, FitRequest, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
-use dreamshard::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools};
 use dreamshard::sim::{SimConfig, Simulator};
-use dreamshard::util::Rng;
-
-struct Flags {
-    positional: Vec<String>,
-    named: std::collections::HashMap<String, String>,
-    switches: std::collections::HashSet<String>,
-}
-
-fn parse_flags(args: &[String]) -> Flags {
-    let mut f = Flags {
-        positional: vec![],
-        named: Default::default(),
-        switches: Default::default(),
-    };
-    let mut i = 0;
-    while i < args.len() {
-        let a = &args[i];
-        if let Some(name) = a.strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                f.named.insert(name.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                f.switches.insert(name.to_string());
-                i += 1;
-            }
-        } else {
-            f.positional.push(a.clone());
-            i += 1;
-        }
-    }
-    f
-}
-
-impl Flags {
-    fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.named.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
-    }
-    fn has(&self, name: &str) -> bool {
-        self.switches.contains(name) || self.named.contains_key(name)
-    }
-}
+use dreamshard::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first().cloned() else {
-        eprintln!("usage: dreamshard <repro|train|place|info> [...]");
+        eprintln!("usage: dreamshard <repro|train|place|placers|info> [...]");
         std::process::exit(2);
     };
     let flags = parse_flags(&args[1..]);
@@ -80,6 +49,7 @@ fn main() -> Result<()> {
             let n_tables = flags.get_usize("tables", 50);
             let n_devices = flags.get_usize("devices", 4);
             let prod = flags.has("prod");
+            let policy = flags.get_str("policy", "dreamshard");
             let rt = Runtime::open_default()?;
             let (ds, sim) = if prod {
                 (gen_prod(856, 42), Simulator::new(SimConfig::v100()))
@@ -89,26 +59,55 @@ fn main() -> Result<()> {
             let (pool_tr, pool_te) = split_pools(&ds, 1007);
             let train = sample_tasks(&pool_tr, n_tables, n_devices, 20, 2007);
             let test = sample_tasks(&pool_te, n_tables, n_devices, 10, 3007);
-            let cfg = if flags.has("fast") { TrainCfg::fast() } else { TrainCfg::default() };
-            let mut rng = Rng::new(flags.get_usize("seed", 0) as u64);
-            let mut agent = DreamShard::new(&rt, n_devices, cfg, &mut rng)?;
-            eprintln!("training on {} tasks of {} tables x {} devices ...", train.len(), n_tables, n_devices);
-            agent.train(&rt, &sim, &ds, &train, &mut rng)?;
-            for st in &agent.log {
+            let seed = flags.get_usize("seed", 0) as u64;
+            let mut placer = placer::by_name_seeded(&rt, &policy, seed)?;
+            // only learned policies train; `place --policy greedy:dim`
+            // and friends go straight to planning
+            if placer.needs_fit() {
+                let cfg = if flags.has("fast") { TrainCfg::fast() } else { TrainCfg::default() };
                 eprintln!(
-                    "  iter {}: collected {:.1} ms, cost-loss {:.3}, policy-loss {:.4} ({:.1}s)",
-                    st.iter, st.collected_mean_cost, st.cost_loss, st.policy_loss, st.wall_s
+                    "training {policy} on {} tasks of {n_tables} tables x {n_devices} devices ...",
+                    train.len()
                 );
+                placer.fit(&FitRequest {
+                    ds: &ds,
+                    tasks: &train,
+                    sim: &sim,
+                    cfg,
+                    seed,
+                    verbose: true,
+                })?;
+            } else if cmd == "train" {
+                eprintln!("policy `{policy}` has nothing to train; planning directly");
             }
-            let task = &test[0];
-            let p = agent.place(&rt, &sim, &ds, task)?;
-            let eval = sim.evaluate(&ds, task, &p);
+            // one lane-batched pass over all test tasks
+            let reqs = test
+                .iter()
+                .map(|t| PlacementRequest::for_runtime(&rt, &ds, t, &sim))
+                .collect::<Result<Vec<_>>>()?;
+            let plans = placer.place_many(&reqs)?;
             if cmd == "place" {
-                println!("placement: {p:?}");
+                println!("placement: {:?}", plans[0].placement);
             }
-            println!("{}", sim.render_trace(&eval, "DreamShard placement on first test task"));
-            let mean = dreamshard::coordinator::evaluate_policy(&agent, &rt, &sim, &ds, &test)?;
+            println!(
+                "{}",
+                sim.render_trace(
+                    &plans[0].eval,
+                    &format!("{} placement on first test task", plans[0].strategy)
+                )
+            );
+            let costs: Vec<f64> = plans.iter().map(|p| p.eval.latency).collect();
+            let mean = dreamshard::util::mean(&costs);
             println!("mean test cost over {} tasks: {mean:.2} ms", test.len());
+            Ok(())
+        }
+        "placers" => {
+            let rt = Runtime::open_default()?;
+            for name in placer::PLACER_NAMES {
+                let p = placer::by_name(&rt, name)?;
+                let kind = if p.needs_fit() { "learned" } else { "heuristic" };
+                println!("{name:<20} {kind}");
+            }
             Ok(())
         }
         "info" => {

@@ -1,0 +1,233 @@
+//! The trained DreamShard agent behind the [`Placer`] facade, with
+//! **lane-batched multi-task planning**: `place_many` fills the backend's
+//! `[E, D, S, F]` episode lanes with *different tasks* and advances them
+//! in lockstep, one fused `mdp_step` backend call per MDP step — instead
+//! of `E` sequential full episodes. Per-lane network math is independent,
+//! so each task's plan is identical to what sequential [`Placer::place`]
+//! produces (asserted by `tests/placer_api.rs`); only the wall-clock
+//! changes (`benches/placement.rs` reports the throughput gap).
+
+use super::{FitRequest, Placer, PlacementPlan, PlacementRequest};
+use crate::coordinator::{select_action, DreamShard, TrainCfg, Variant};
+use crate::mdp::PlacementState;
+use crate::runtime::{to_f32_vec, Runtime, TensorF32};
+use crate::tables::NUM_FEATURES;
+use crate::util::error::{Context, Result};
+use crate::util::Rng;
+
+const NAME: &str = "dreamshard";
+
+/// The DreamShard agent as a [`Placer`]. Holds either a borrowed trained
+/// agent ([`DreamShardPlacer::from_agent`]) or an owned one created by
+/// [`Placer::fit`] / lazily on first use ([`DreamShardPlacer::untrained`]).
+pub struct DreamShardPlacer<'a> {
+    rt: &'a Runtime,
+    owned: Option<DreamShard>,
+    borrowed: Option<&'a DreamShard>,
+    cfg: TrainCfg,
+    seed: u64,
+}
+
+impl<'a> DreamShardPlacer<'a> {
+    /// An unfitted agent; [`Placer::place`] before [`Placer::fit`] lazily
+    /// initializes random weights (deterministic, useful for benches).
+    pub fn untrained(rt: &'a Runtime) -> Self {
+        DreamShardPlacer { rt, owned: None, borrowed: None, cfg: TrainCfg::default(), seed: 0 }
+    }
+
+    /// Wrap an already-trained agent.
+    pub fn from_agent(rt: &'a Runtime, agent: &'a DreamShard) -> Self {
+        DreamShardPlacer { rt, owned: None, borrowed: Some(agent), cfg: TrainCfg::default(), seed: 0 }
+    }
+
+    /// Configuration for the lazily-created untrained agent (first
+    /// placement without a prior [`Placer::fit`]). `fit` itself always
+    /// uses [`FitRequest::cfg`].
+    pub fn with_cfg(mut self, cfg: TrainCfg) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    fn agent(&self) -> Option<&DreamShard> {
+        match self.borrowed {
+            Some(a) => Some(a),
+            None => self.owned.as_ref(),
+        }
+    }
+
+    fn ensure_agent(&mut self, n_devices: usize) -> Result<()> {
+        if self.agent().is_none() {
+            let mut rng = Rng::new(self.seed).fork(0xD5);
+            self.owned = Some(DreamShard::new(self.rt, n_devices, self.cfg.clone(), &mut rng)?);
+        }
+        Ok(())
+    }
+
+    /// The artifact variant serving one task: the agent's own (matching
+    /// sequential `DreamShard::place` exactly) whenever the task fits its
+    /// device capacity, else the smallest variant that does (how Table 13
+    /// plans 128 devices with an agent trained at 8).
+    fn variant_for(&self, agent: &DreamShard, n_devices: usize) -> Result<Variant> {
+        if n_devices <= agent.var.d {
+            Ok(agent.var.clone())
+        } else {
+            Variant::for_devices(self.rt, n_devices)
+        }
+    }
+
+    /// Plan one group of requests that share an artifact variant, in
+    /// chunks of up to `E` lockstep lanes. Within a chunk every MDP step
+    /// costs exactly one fused backend call, shared by all lanes.
+    fn plan_batch(
+        &self,
+        agent: &DreamShard,
+        var: &Variant,
+        reqs: &[&PlacementRequest<'_>],
+    ) -> Result<Vec<PlacementPlan>> {
+        let (d, s) = (var.d, var.s);
+        let f = NUM_FEATURES;
+        let Some((lanes, step_name)) = var.mdp_step_for(reqs.len()).cloned() else {
+            // no fused artifact lowered for this variant: plan one
+            // episode at a time through the classic path (which honors
+            // the request's slot cap just like the lane-batched path)
+            let mut plans = Vec::with_capacity(reqs.len());
+            for &r in reqs {
+                let mut rng = Rng::new(0); // unused by argmax
+                let ep = agent
+                    .run_episodes_var(
+                        self.rt, r.sim, r.ds, r.task, 1, false, false, &mut rng, var, false,
+                        r.max_slots,
+                    )?
+                    .remove(0);
+                plans.push(PlacementPlan::new(r, ep.placement, NAME));
+            }
+            return Ok(plans);
+        };
+        let mut plans = Vec::with_capacity(reqs.len());
+        for chunk in reqs.chunks(lanes) {
+            let n = chunk.len();
+            let mut states: Vec<PlacementState> = Vec::with_capacity(n);
+            for &r in chunk {
+                let order = agent.order_tables(self.rt, r.ds, r.task)?;
+                states.push(PlacementState::new(r.ds, r.task, order, s.min(r.max_slots)));
+            }
+            let steps = chunk.iter().map(|r| r.task.n_tables()).max().unwrap_or(0);
+            let mut rng = Rng::new(0); // unused by argmax
+            for _t in 0..steps {
+                let mut feats = TensorF32::zeros(&[lanes, d, s, f]);
+                let mut mask = TensorF32::zeros(&[lanes, d, s]);
+                let mut dmask = TensorF32::zeros(&[lanes, d]);
+                let mut cur = TensorF32::zeros(&[lanes, f]);
+                let mut legal_t = TensorF32::zeros(&[lanes, d]);
+                // per-lane legal mask; None once a (shorter) task finished
+                let mut legal: Vec<Option<Vec<bool>>> = Vec::with_capacity(n);
+                for (lane, st) in states.iter().enumerate() {
+                    st.fill_feats(lane, d, s, &mut feats, &mut mask, &mut dmask)?;
+                    if st.done() {
+                        legal.push(None); // lane logits computed but unused
+                        continue;
+                    }
+                    cur.set_row(&[lane, 0], &st.current_features());
+                    let lg = st.legal(chunk[lane].sim);
+                    for (dev, &ok) in lg.iter().enumerate() {
+                        legal_t.set(&[lane, dev], if ok { 1.0 } else { 0.0 });
+                    }
+                    legal.push(Some(lg));
+                }
+                // the single fused backend call all lanes share this step
+                let out = agent
+                    .run_fused_step(self.rt, &step_name, &feats, &mask, &dmask, &cur, &legal_t)?;
+                let logits = to_f32_vec(&out[0], lanes * d)?;
+                for (lane, st) in states.iter_mut().enumerate() {
+                    let Some(lg) = &legal[lane] else { continue };
+                    // dead end (memory + slot caps exhausted everywhere):
+                    // least-loaded device with a free slot, as in training
+                    let a = if lg.iter().any(|&ok| ok) {
+                        select_action(&logits[lane * d..(lane + 1) * d], lg, false, &mut rng)
+                    } else {
+                        st.fallback_device().with_context(|| {
+                            format!("lane {lane}: no device can take the table")
+                        })?
+                    };
+                    st.apply(a);
+                }
+            }
+            for (st, &r) in states.iter().zip(chunk.iter()) {
+                plans.push(PlacementPlan::new(r, st.placement.clone(), NAME));
+            }
+        }
+        Ok(plans)
+    }
+}
+
+impl Placer for DreamShardPlacer<'_> {
+    fn name(&self) -> &str {
+        NAME
+    }
+
+    fn needs_fit(&self) -> bool {
+        self.agent().is_none()
+    }
+
+    fn fit(&mut self, req: &FitRequest<'_>) -> Result<()> {
+        let d = req
+            .tasks
+            .iter()
+            .map(|t| t.n_devices)
+            .max()
+            .context("dreamshard fit requires at least one task")?;
+        let mut rng = Rng::new(req.seed);
+        let mut agent = DreamShard::new(self.rt, d, req.cfg.clone(), &mut rng)?;
+        agent.train(self.rt, req.sim, req.ds, req.tasks, &mut rng)?;
+        if req.verbose {
+            for st in &agent.log {
+                eprintln!(
+                    "  iter {}: collected {:.1} ms, cost-loss {:.3}, policy-loss {:.4} ({:.1}s)",
+                    st.iter, st.collected_mean_cost, st.cost_loss, st.policy_loss, st.wall_s
+                );
+            }
+        }
+        self.borrowed = None;
+        self.owned = Some(agent);
+        Ok(())
+    }
+
+    fn place(&mut self, req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
+        let mut plans = self.place_many(std::slice::from_ref(req))?;
+        Ok(plans.remove(0))
+    }
+
+    fn place_many(&mut self, reqs: &[PlacementRequest<'_>]) -> Result<Vec<PlacementPlan>> {
+        if reqs.is_empty() {
+            return Ok(vec![]);
+        }
+        let max_dev = reqs.iter().map(|r| r.task.n_devices).max().unwrap();
+        self.ensure_agent(max_dev)?;
+        let agent = self.agent().expect("agent ensured above");
+        // group lanes by serving variant: tasks with different device
+        // counts share the agent's variant (masking covers the gap), so
+        // heterogeneous batches still fill the same lanes
+        let mut groups: Vec<(Variant, Vec<usize>)> = vec![];
+        for (i, r) in reqs.iter().enumerate() {
+            let var = self.variant_for(agent, r.task.n_devices)?;
+            match groups.iter_mut().find(|(v, _)| v.d == var.d && v.s == var.s) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((var, vec![i])),
+            }
+        }
+        let mut plans: Vec<Option<PlacementPlan>> = (0..reqs.len()).map(|_| None).collect();
+        for (var, idxs) in &groups {
+            let group: Vec<&PlacementRequest<'_>> = idxs.iter().map(|&i| &reqs[i]).collect();
+            let got = self.plan_batch(agent, var, &group)?;
+            for (&i, plan) in idxs.iter().zip(got.into_iter()) {
+                plans[i] = Some(plan);
+            }
+        }
+        Ok(plans.into_iter().map(|p| p.expect("every request planned")).collect())
+    }
+}

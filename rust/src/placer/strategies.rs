@@ -1,0 +1,139 @@
+//! Non-fused [`Placer`] implementations: the random baseline, the four
+//! greedy human experts, and the RNN-based RL baseline.
+
+use super::{FitRequest, Placer, PlacementPlan, PlacementRequest};
+use crate::bail;
+use crate::baselines::{greedy_placement_capped, random_placement_capped, Expert};
+use crate::coordinator::RnnBaseline;
+use crate::runtime::Runtime;
+use crate::util::error::{Context, Result};
+use crate::util::Rng;
+
+/// Uniform-random legal placement. Stateful: repeated [`Placer::place`]
+/// calls on the same request draw different placements from one
+/// deterministic stream (seeded at construction).
+pub struct RandomPlacer {
+    rng: Rng,
+}
+
+impl RandomPlacer {
+    pub fn new(seed: u64) -> Self {
+        RandomPlacer { rng: Rng::new(seed).fork(0xBAD) }
+    }
+}
+
+impl Placer for RandomPlacer {
+    fn name(&self) -> &str {
+        "random"
+    }
+
+    fn place(&mut self, req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
+        let p = random_placement_capped(req.ds, req.task, req.sim, &mut self.rng, req.max_slots);
+        Ok(PlacementPlan::new(req, p, "random"))
+    }
+}
+
+/// One greedy human-expert strategy (cost-sort + least-loaded packing).
+pub struct GreedyPlacer {
+    expert: Expert,
+    /// `greedy:<key>` — derived from [`Expert::key`], the single source
+    /// of the registry naming.
+    name: String,
+}
+
+impl GreedyPlacer {
+    pub fn new(expert: Expert) -> Self {
+        GreedyPlacer { expert, name: format!("greedy:{}", expert.key()) }
+    }
+}
+
+impl Placer for GreedyPlacer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn place(&mut self, req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
+        let p = greedy_placement_capped(req.ds, req.task, req.sim, self.expert, req.max_slots);
+        Ok(PlacementPlan::new(req, p, &self.name))
+    }
+}
+
+/// The RNN-based RL baseline (Mirhoseini et al. 2017, section D.2) behind
+/// the facade. Learned and device-count-specific: [`Placer::fit`] trains
+/// a controller for the fit tasks' device count, and planning a task with
+/// any other device count fails (the architecture cannot generalize —
+/// that limitation is the point of the baseline).
+pub struct RnnPlacer<'rt> {
+    rt: &'rt Runtime,
+    model: Option<RnnBaseline>,
+    seed: u64,
+}
+
+impl<'rt> RnnPlacer<'rt> {
+    /// An unfitted controller; [`Placer::place`] before [`Placer::fit`]
+    /// lazily initializes random weights (useful for smoke tests only).
+    pub fn untrained(rt: &'rt Runtime) -> Self {
+        RnnPlacer { rt, model: None, seed: 0 }
+    }
+
+    /// Wrap an already-trained controller.
+    pub fn from_model(rt: &'rt Runtime, model: RnnBaseline) -> Self {
+        RnnPlacer { rt, model: Some(model), seed: 0 }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+impl Placer for RnnPlacer<'_> {
+    fn name(&self) -> &str {
+        "rnn"
+    }
+
+    fn needs_fit(&self) -> bool {
+        self.model.is_none()
+    }
+
+    fn fit(&mut self, req: &FitRequest<'_>) -> Result<()> {
+        let d = req
+            .tasks
+            .iter()
+            .map(|t| t.n_devices)
+            .max()
+            .context("rnn fit requires at least one task")?;
+        let mut rng = Rng::new(req.seed);
+        let mut model = RnnBaseline::new(self.rt, d, &mut rng)?;
+        // same update budget the paper grants DreamShard's policy stage;
+        // one-update steps keep the rng stream identical to a single
+        // train(updates) call while allowing progress logging
+        let updates = req.cfg.n_iterations * req.cfg.n_rl;
+        for u in 0..updates {
+            model.train(self.rt, req.sim, req.ds, req.tasks, 1, &mut rng)?;
+            if req.verbose && ((u + 1) % 10 == 0 || u + 1 == updates) {
+                eprintln!("  rnn: REINFORCE update {}/{updates}", u + 1);
+            }
+        }
+        self.model = Some(model);
+        Ok(())
+    }
+
+    fn place(&mut self, req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
+        if self.model.is_none() {
+            let mut rng = Rng::new(self.seed).fork(0x9A11);
+            self.model = Some(RnnBaseline::new(self.rt, req.task.n_devices, &mut rng)?);
+        }
+        let model = self.model.as_ref().unwrap();
+        if model.d != req.task.n_devices {
+            bail!(
+                "rnn placer was fitted for {} devices but the task has {} \
+                 (the RNN architecture cannot generalize across device counts)",
+                model.d,
+                req.task.n_devices
+            );
+        }
+        let p = model.place_with_slots(self.rt, req.sim, req.ds, req.task, req.max_slots)?;
+        Ok(PlacementPlan::new(req, p, "rnn"))
+    }
+}

@@ -31,6 +31,7 @@ pub use reference::ReferenceBackend;
 pub use tensor::{to_f32_vec, TensorF32, TensorI32, Value};
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::util::error::Result;
 use crate::util::Rng;
@@ -57,6 +58,8 @@ pub trait Backend {
 pub struct Runtime {
     pub manifest: Manifest,
     backend: Box<dyn Backend>,
+    /// Executions dispatched through [`Runtime::run`] (see [`Runtime::run_count`]).
+    calls: AtomicU64,
 }
 
 impl Runtime {
@@ -65,6 +68,7 @@ impl Runtime {
         Runtime {
             manifest: reference::reference_manifest(),
             backend: Box::new(ReferenceBackend::new()),
+            calls: AtomicU64::new(0),
         }
     }
 
@@ -78,7 +82,7 @@ impl Runtime {
         let manifest = Manifest::parse_file(&dir.join("manifest.txt"))
             .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
         let backend = XlaBackend::new(dir, &manifest)?;
-        Ok(Runtime { manifest, backend: Box::new(backend) })
+        Ok(Runtime { manifest, backend: Box::new(backend), calls: AtomicU64::new(0) })
     }
 
     /// Without the `xla` feature there is nothing to open: artifacts are
@@ -113,9 +117,17 @@ impl Runtime {
         if !self.manifest.artifacts.contains_key(name) {
             bail!("artifact {name} not in manifest");
         }
+        self.calls.fetch_add(1, Ordering::Relaxed);
         self.backend
             .execute(name, inputs)
             .map_err(|e| e.wrap(format!("executing {name} on {}", self.backend.name())))
+    }
+
+    /// Total artifact executions dispatched through [`Runtime::run`] so
+    /// far. Diagnostics counter: the lane-batching tests use deltas of it
+    /// to assert the one-backend-call-per-MDP-step contract.
+    pub fn run_count(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
     }
 
     /// Initialize a flat parameter vector for a registered network,

@@ -1,0 +1,201 @@
+//! Placer-facade integration tests: lane-batched `place_many` parity
+//! with sequential planning, the one-backend-call-per-MDP-step contract,
+//! registry round-trips, and uniform slot-cap legality.
+
+use dreamshard::baselines::ALL_EXPERTS;
+use dreamshard::coordinator::{DreamShard, TrainCfg};
+use dreamshard::placer::{
+    self, DreamShardPlacer, GreedyPlacer, Placer, PlacementRequest, RandomPlacer,
+};
+use dreamshard::runtime::Runtime;
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools, Dataset, Task};
+use dreamshard::util::Rng;
+
+fn setup(n_tasks: usize, n_tables: usize, n_devices: usize) -> (Dataset, Vec<Task>, Simulator) {
+    let ds = gen_dlrm(300, 0);
+    let (pool, _) = split_pools(&ds, 1);
+    let tasks = sample_tasks(&pool, n_tables, n_devices, n_tasks, 2);
+    (ds, tasks, Simulator::new(SimConfig::default()))
+}
+
+/// An agent with deterministic random-init weights (no training needed:
+/// parity and call-count contracts are independent of weight quality).
+fn untrained_agent(rt: &Runtime, n_devices: usize) -> DreamShard {
+    let mut rng = Rng::new(42);
+    DreamShard::new(rt, n_devices, TrainCfg::default(), &mut rng).unwrap()
+}
+
+#[test]
+fn batched_place_many_matches_sequential_place() {
+    let rt = Runtime::reference();
+    let (ds, tasks, sim) = setup(5, 20, 4);
+    let agent = untrained_agent(&rt, 4);
+    let mut placer = DreamShardPlacer::from_agent(&rt, &agent);
+    let reqs: Vec<PlacementRequest> = tasks
+        .iter()
+        .map(|t| PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap())
+        .collect();
+    let plans = placer.place_many(&reqs).unwrap();
+    assert_eq!(plans.len(), tasks.len());
+    for (task, plan) in tasks.iter().zip(&plans) {
+        // the raw single-episode path must agree lane-for-lane
+        let sequential = agent.place(&rt, &sim, &ds, task).unwrap();
+        assert_eq!(plan.placement, sequential);
+        assert_eq!(plan.strategy, "dreamshard");
+        assert!(plan.placement.iter().all(|&d| d < task.n_devices));
+    }
+}
+
+#[test]
+fn batched_place_many_handles_heterogeneous_task_lengths() {
+    // lanes finish at different MDP steps: shorter tasks idle while the
+    // longest lane drains, and every plan still matches its sequential run
+    let rt = Runtime::reference();
+    let ds = gen_dlrm(300, 3);
+    let (pool, _) = split_pools(&ds, 4);
+    let sim = Simulator::new(SimConfig::default());
+    let mut tasks = sample_tasks(&pool, 8, 4, 2, 5);
+    tasks.extend(sample_tasks(&pool, 25, 4, 2, 6));
+    tasks.extend(sample_tasks(&pool, 14, 2, 1, 7)); // fewer devices too
+    let agent = untrained_agent(&rt, 4);
+    let mut placer = DreamShardPlacer::from_agent(&rt, &agent);
+    let reqs: Vec<PlacementRequest> = tasks
+        .iter()
+        .map(|t| PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap())
+        .collect();
+    let plans = placer.place_many(&reqs).unwrap();
+    for (task, plan) in tasks.iter().zip(&plans) {
+        assert_eq!(plan.placement.len(), task.n_tables());
+        assert!(plan.placement.iter().all(|&d| d < task.n_devices));
+    }
+}
+
+#[test]
+fn place_many_is_one_backend_call_per_mdp_step() {
+    let rt = Runtime::reference();
+    let (ds, tasks, sim) = setup(4, 20, 4);
+    let agent = untrained_agent(&rt, 4);
+    let mut placer = DreamShardPlacer::from_agent(&rt, &agent);
+    let reqs: Vec<PlacementRequest> = tasks
+        .iter()
+        .map(|t| PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap())
+        .collect();
+
+    let before = rt.run_count();
+    placer.place_many(&reqs).unwrap();
+    let batched = rt.run_count() - before;
+    // one table_cost call per task (episode ordering) + one fused
+    // mdp_step call per MDP step shared by ALL lanes
+    assert_eq!(batched, (tasks.len() + 20) as u64, "lane-batched call budget");
+
+    let before = rt.run_count();
+    for r in &reqs {
+        placer.place(r).unwrap();
+    }
+    let sequential = rt.run_count() - before;
+    // sequential pays the per-step call per *task*
+    assert_eq!(sequential, (tasks.len() * (1 + 20)) as u64);
+    assert!(batched < sequential);
+}
+
+#[test]
+fn dreamshard_placer_respects_request_slot_cap() {
+    let rt = Runtime::reference();
+    let (ds, tasks, sim) = setup(1, 20, 4);
+    let agent = untrained_agent(&rt, 4);
+    let mut placer = DreamShardPlacer::from_agent(&rt, &agent);
+    let req = PlacementRequest::new(&ds, &tasks[0], &sim).with_max_slots(5);
+    let plan = placer.place(&req).unwrap();
+    let mut counts = vec![0usize; 4];
+    for &d in &plan.placement {
+        counts[d] += 1;
+    }
+    // 20 tables over 4 devices x 5 slots: the cap binds exactly
+    assert!(counts.iter().all(|&c| c <= 5), "slot cap violated: {counts:?}");
+}
+
+#[test]
+fn baseline_placers_respect_request_slot_cap() {
+    let (ds, tasks, sim) = setup(1, 12, 4);
+    let task = &tasks[0];
+    let req = PlacementRequest::new(&ds, task, &sim).with_max_slots(3);
+    let mut placers: Vec<Box<dyn Placer>> = vec![Box::new(RandomPlacer::new(7))];
+    for e in ALL_EXPERTS {
+        placers.push(Box::new(GreedyPlacer::new(e)));
+    }
+    for p in placers.iter_mut() {
+        // several draws so the stochastic placer gets chances to violate
+        for _ in 0..5 {
+            let plan = p.place(&req).unwrap();
+            let mut counts = vec![0usize; task.n_devices];
+            for &d in &plan.placement {
+                counts[d] += 1;
+            }
+            assert!(
+                counts.iter().all(|&c| c <= 3),
+                "{} violated the slot cap: {counts:?}",
+                p.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn registry_learned_placers_fit_then_plan() {
+    // by_name("dreamshard") -> fit on a tiny budget -> lane-batched plans
+    let rt = Runtime::reference();
+    let (ds, tasks, sim) = setup(3, 8, 4);
+    let mut p = placer::by_name(&rt, "dreamshard").unwrap();
+    assert!(p.needs_fit());
+    p.fit(&placer::FitRequest {
+        ds: &ds,
+        tasks: &tasks,
+        sim: &sim,
+        cfg: TrainCfg {
+            n_iterations: 1,
+            n_collect: 2,
+            n_cost: 5,
+            n_batch: 8,
+            n_rl: 1,
+            n_episode: 4,
+            ..Default::default()
+        },
+        seed: 0,
+        verbose: false,
+    })
+    .unwrap();
+    assert!(!p.needs_fit());
+    let reqs: Vec<PlacementRequest> = tasks
+        .iter()
+        .map(|t| PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap())
+        .collect();
+    let plans = p.place_many(&reqs).unwrap();
+    for (task, plan) in tasks.iter().zip(&plans) {
+        assert_eq!(plan.placement.len(), task.n_tables());
+        assert!(plan.placement.iter().all(|&d| d < task.n_devices));
+    }
+}
+
+#[test]
+fn oversized_batches_chunk_across_lanes() {
+    // more requests than the fused artifact's E=16 lanes: chunked, all planned
+    let rt = Runtime::reference();
+    let (ds, tasks, sim) = setup(20, 6, 4);
+    let agent = untrained_agent(&rt, 4);
+    let mut placer = DreamShardPlacer::from_agent(&rt, &agent);
+    let reqs: Vec<PlacementRequest> = tasks
+        .iter()
+        .map(|t| PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap())
+        .collect();
+    let before = rt.run_count();
+    let plans = placer.place_many(&reqs).unwrap();
+    let calls = rt.run_count() - before;
+    assert_eq!(plans.len(), 20);
+    // 2 chunks (16 + 4 lanes): per chunk 6 fused steps, plus 20 ordering calls
+    assert_eq!(calls, 20 + 2 * 6);
+    for (task, plan) in tasks.iter().zip(&plans) {
+        let sequential = agent.place(&rt, &sim, &ds, task).unwrap();
+        assert_eq!(plan.placement, sequential);
+    }
+}

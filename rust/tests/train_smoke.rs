@@ -3,11 +3,22 @@
 //! check that inference produces legal placements. Runs from a bare
 //! toolchain — no `make artifacts`, no native libraries.
 
-use dreamshard::coordinator::{evaluate_policy, DreamShard, RnnBaseline, TrainCfg};
+use dreamshard::coordinator::{DreamShard, RnnBaseline, TrainCfg};
+use dreamshard::placer::{DreamShardPlacer, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
 use dreamshard::sim::{SimConfig, Simulator};
-use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
+use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools, Dataset, Task};
 use dreamshard::util::Rng;
+
+/// Mean test-task latency of an agent's argmax plans, via the facade.
+fn mean_cost(rt: &Runtime, agent: &DreamShard, sim: &Simulator, ds: &Dataset, tasks: &[Task]) -> f64 {
+    let reqs: Vec<PlacementRequest> = tasks
+        .iter()
+        .map(|t| PlacementRequest::for_runtime(rt, ds, t, sim).unwrap())
+        .collect();
+    let plans = DreamShardPlacer::from_agent(rt, agent).place_many(&reqs).unwrap();
+    plans.iter().map(|p| p.eval.latency).sum::<f64>() / plans.len() as f64
+}
 
 fn smoke_cfg() -> TrainCfg {
     TrainCfg {
@@ -32,9 +43,9 @@ fn trains_and_places() {
     let mut rng = Rng::new(7);
     let mut agent = DreamShard::new(&rt, 4, smoke_cfg(), &mut rng).unwrap();
 
-    let before = evaluate_policy(&agent, &rt, &sim, &ds, &test).unwrap();
+    let before = mean_cost(&rt, &agent, &sim, &ds, &test);
     agent.train(&rt, &sim, &ds, &train, &mut rng).unwrap();
-    let after = evaluate_policy(&agent, &rt, &sim, &ds, &test).unwrap();
+    let after = mean_cost(&rt, &agent, &sim, &ds, &test);
 
     assert_eq!(agent.log.len(), 2);
     assert!(agent.buffer.len() >= 16, "buffer got {} samples", agent.buffer.len());
