@@ -1,0 +1,84 @@
+//! Serving-throughput benchmark: plans/sec of the [`PlanService`]
+//! lane-batched drain vs sequential per-request planning on the same
+//! 64-request mixed-device open-loop workload (see the ROADMAP's serving
+//! front-end item). Also reports the backend-call gap: the batched drain
+//! shares one fused `mdp_step` call per MDP step across a chunk's lanes
+//! and orders every task in a chunk with one concatenated `table_cost`
+//! pass.
+
+use dreamshard::coordinator::{DreamShard, TrainCfg};
+use dreamshard::placer::{DreamShardPlacer, Placer, PlacementRequest};
+use dreamshard::runtime::Runtime;
+use dreamshard::serve::{synthetic_arrivals, PlanService, ServeConfig, WorkloadCfg};
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::tables::{gen_dlrm, split_pools};
+use dreamshard::util::Rng;
+use std::time::Instant;
+
+fn main() {
+    let rt = Runtime::open_default().expect("runtime");
+    let ds = gen_dlrm(400, 0);
+    let (pool, _) = split_pools(&ds, 1);
+    let sim = Simulator::new(SimConfig::default());
+    let arrivals = synthetic_arrivals(&pool, &WorkloadCfg {
+        n_requests: 64,
+        device_mix: vec![2, 4, 8],
+        min_tables: 20,
+        max_tables: 40,
+        mean_gap_ms: 1.0,
+        seed: 3,
+    });
+    let mut rng = Rng::new(0);
+    let agent = DreamShard::new(&rt, 8, TrainCfg::default(), &mut rng).unwrap();
+    let reqs: Vec<PlacementRequest> = arrivals
+        .iter()
+        .map(|a| PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim).unwrap())
+        .collect();
+
+    // sequential baseline: one full episode per request
+    let mut seq = DreamShardPlacer::from_agent(&rt, &agent);
+    for r in reqs.iter().take(4) {
+        seq.place(r).unwrap(); // warm
+    }
+    let calls_before = rt.run_count();
+    let t0 = Instant::now();
+    for r in &reqs {
+        seq.place(r).unwrap();
+    }
+    let seq_s = t0.elapsed().as_secs_f64();
+    let seq_calls = rt.run_count() - calls_before;
+
+    // service: variant-grouped lane-chunks through place_many
+    let run = |chunk: usize| {
+        let mut svc = PlanService::new(
+            &rt,
+            Box::new(DreamShardPlacer::from_agent(&rt, &agent)),
+            ServeConfig { capacity: reqs.len(), chunk },
+        );
+        for r in &reqs {
+            svc.submit(*r).unwrap();
+        }
+        let calls_before = rt.run_count();
+        let t0 = Instant::now();
+        let done = svc.drain().unwrap();
+        assert_eq!(done.len(), reqs.len());
+        (t0.elapsed().as_secs_f64(), rt.run_count() - calls_before)
+    };
+    run(16); // warm
+    for chunk in [4usize, 16] {
+        let (bat_s, bat_calls) = run(chunk);
+        println!(
+            "serve {} mixed-device requests, chunk {chunk:>2}: \
+             batched drain {:.1} ms ({:.1} plans/s, {} backend calls) vs \
+             sequential {:.1} ms ({:.1} plans/s, {} calls) -> speedup {:.2}x",
+            reqs.len(),
+            bat_s * 1e3,
+            reqs.len() as f64 / bat_s,
+            bat_calls,
+            seq_s * 1e3,
+            reqs.len() as f64 / seq_s,
+            seq_calls,
+            seq_s / bat_s,
+        );
+    }
+}

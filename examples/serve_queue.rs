@@ -1,0 +1,61 @@
+//! Serving front end in a dozen lines: feed an open-loop mix of
+//! 2/4/8-device placement requests through a bounded [`PlanService`]
+//! queue and drain it in lane-batched chunks.
+//!
+//!     cargo run --release --example serve_queue
+//!
+//! The service wraps *any* registered placer; here the untrained
+//! DreamShard agent (deterministic random-init weights) so the run is
+//! quick — swap in a fitted one exactly as `examples/quickstart.rs`
+//! trains it. Watch the backend-call counter: a drained chunk shares one
+//! fused `mdp_step` call per MDP step across all its lanes and orders
+//! every task with one concatenated `table_cost` pass, so serving beats
+//! per-request planning on calls as well as wall-clock.
+
+use dreamshard::placer::{self, PlacementRequest};
+use dreamshard::runtime::Runtime;
+use dreamshard::serve::{synthetic_arrivals, PlanService, ServeConfig, WorkloadCfg};
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::tables::{gen_dlrm, split_pools};
+
+fn main() -> dreamshard::Result<()> {
+    let rt = Runtime::open_default()?;
+    let ds = gen_dlrm(300, 7);
+    let (pool, _) = split_pools(&ds, 1);
+    let sim = Simulator::new(SimConfig::default());
+
+    // a synthetic open-loop workload: Poisson arrivals, heterogeneous tasks
+    let arrivals = synthetic_arrivals(&pool, &WorkloadCfg {
+        n_requests: 24,
+        device_mix: vec![2, 4, 8],
+        min_tables: 6,
+        max_tables: 16,
+        mean_gap_ms: 2.0,
+        seed: 1,
+    });
+
+    let placer = placer::by_name(&rt, "dreamshard")?;
+    let mut svc = PlanService::new(&rt, placer, ServeConfig { capacity: 32, chunk: 8 });
+    for a in &arrivals {
+        let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim)?;
+        svc.submit(req)?; // Ok(None) would mean the bounded queue shed it
+    }
+    println!("queued {} heterogeneous requests; draining ...\n", svc.queued());
+
+    let mut done = svc.drain()?;
+    done.sort_by_key(|p| p.ticket);
+    for p in &done {
+        println!(
+            "ticket {:>2}  variant d{:<3}  {:>2} tables  queue {:>6.2} ms  \
+             plan {:>6.2} ms  cost {:>6.1} ms",
+            p.ticket,
+            p.variant.0,
+            p.plan.placement.len(),
+            p.queue_ms,
+            p.plan_ms,
+            p.plan.eval.latency,
+        );
+    }
+    println!("\n{}", svc.stats().summary());
+    Ok(())
+}

@@ -114,9 +114,19 @@ impl CostNet {
             .collect())
     }
 
+    /// Row capacity `N` of the `table_cost` artifact: one backend call
+    /// scores up to this many feature rows, so a caller batching `n` rows
+    /// pays exactly `ceil(n / cap)` calls (the serving tests pin this).
+    pub fn table_cost_cap(rt: &Runtime) -> usize {
+        rt.manifest.artifact_meta("table_cost", "N").unwrap_or(256) as usize
+    }
+
     /// Predicted single-table total costs (for episode ordering, §B.4.2).
+    /// Rows are scored independently, so callers may concatenate many
+    /// tasks' features into one call — the per-row results are identical
+    /// to scoring each task separately, only the call count drops.
     pub fn predict_table_costs(&self, rt: &Runtime, feats: &[[f32; NUM_FEATURES]]) -> Result<Vec<f32>> {
-        let n_cap = rt.manifest.artifact_meta("table_cost", "N").unwrap_or(256) as usize;
+        let n_cap = Self::table_cost_cap(rt);
         let mut out = Vec::with_capacity(feats.len());
         let theta = TensorF32::from_vec(self.theta.clone(), &[self.theta.len()]);
         let fmask = TensorF32::from_vec(self.fmask.clone(), &[NUM_FEATURES]);

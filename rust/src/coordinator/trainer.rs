@@ -149,13 +149,40 @@ impl DreamShard {
 
     /// Sort a task's tables descending by predicted single-table cost.
     pub fn order_tables(&self, rt: &Runtime, ds: &Dataset, task: &Task) -> Result<Vec<usize>> {
-        let feats: Vec<[f32; NUM_FEATURES]> =
-            task.table_ids.iter().map(|&tid| ds.tables[tid].features()).collect();
+        Ok(self.order_tables_batch(rt, &[(ds, task)])?.remove(0))
+    }
+
+    /// [`DreamShard::order_tables`] for a whole chunk of (dataset, task)
+    /// jobs at once: every task's table features are concatenated into one
+    /// `[N, F]` `table_cost` pass (split only on the artifact's baked row
+    /// cap), instead of one backend call per task. `table_cost` scores
+    /// rows independently, so each task's order is bit-identical to its
+    /// own [`DreamShard::order_tables`] call — this is the chunk-batched
+    /// ordering the serving front end drains queues through.
+    pub fn order_tables_batch(
+        &self,
+        rt: &Runtime,
+        jobs: &[(&Dataset, &Task)],
+    ) -> Result<Vec<Vec<usize>>> {
+        let mut feats: Vec<[f32; NUM_FEATURES]> =
+            Vec::with_capacity(jobs.iter().map(|(_, t)| t.n_tables()).sum());
+        for (ds, task) in jobs {
+            for &tid in &task.table_ids {
+                feats.push(ds.tables[tid].features());
+            }
+        }
         let costs = self.cost.predict_table_costs(rt, &feats)?;
-        let mut order: Vec<usize> = (0..task.n_tables()).collect();
-        // total_cmp: an early (or diverged) cost net may emit NaN
-        order.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]));
-        Ok(order)
+        let mut orders = Vec::with_capacity(jobs.len());
+        let mut off = 0;
+        for (_, task) in jobs {
+            let c = &costs[off..off + task.n_tables()];
+            off += task.n_tables();
+            let mut order: Vec<usize> = (0..task.n_tables()).collect();
+            // total_cmp: an early (or diverged) cost net may emit NaN
+            order.sort_by(|&a, &b| c[b].total_cmp(&c[a]));
+            orders.push(order);
+        }
+        Ok(orders)
     }
 
     /// Run `n` episodes in lockstep lanes against the **estimated** MDP.

@@ -43,8 +43,20 @@
 //! [`placer::Placer::fit`]. [`placer::Placer::place_many`] plans a batch;
 //! the DreamShard implementation fills the backend's episode lanes with
 //! different tasks and advances them in lockstep — one fused backend call
-//! per MDP step for up to `E` tasks at once (see
+//! per MDP step for up to `E` tasks at once, and one concatenated
+//! `table_cost` pass ordering every task in a chunk (see
 //! [`placer::DreamShardPlacer`]).
+//!
+//! ## Serving
+//!
+//! [`serve::PlanService`] turns the facade into a front end for traffic:
+//! a bounded FIFO of heterogeneous placement requests (mixed table and
+//! device counts), drained in variant-grouped lane-chunks through one
+//! `place_many` call each, with per-request queue/plan latency and
+//! aggregate throughput recorded in [`serve::ServeStats`]. The
+//! `dreamshard serve-sim` CLI subcommand replays a synthetic open-loop
+//! workload ([`serve::synthetic_arrivals`]) against it, and
+//! `benches/serving.rs` reports batched-drain vs sequential plans/sec.
 //!
 //! ## Execution backends
 //!
@@ -74,6 +86,7 @@ pub mod coordinator;
 pub mod mdp;
 pub mod placer;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tables;
 pub mod util;

@@ -6,6 +6,7 @@
 //! repro <id|all> [--fast] [--seeds N]   regenerate a paper table/figure
 //! train [--tables N] [--devices D] ...  train a policy and report costs
 //! place [--tables N] [--policy NAME]    plan one placement and print it
+//! serve-sim [--requests N] [--chunk C]  replay an open-loop serving load
 //! placers                               list registered strategies
 //! info                                  show artifact/manifest summary
 //! ```
@@ -14,22 +15,49 @@
 //! policies (`dreamshard`, `rnn`) are trained first; baselines
 //! (`random`, `greedy:dim`, ...) plan immediately with no training.
 //!
+//! `serve-sim` drives the [`dreamshard::serve::PlanService`] front end
+//! with a synthetic open-loop workload (Poisson arrivals, mixed
+//! 2/4/8/128-device tasks) and prints a per-variant summary table plus
+//! aggregate throughput.
+//!
 //! (dependency-light by design: flags are parsed by hand, no clap)
 
-use dreamshard::{bail, Context, Result};
+use dreamshard::{bail, err, Context, Result};
 
 use dreamshard::bench::{self, common::Ctx};
 use dreamshard::cli::parse_flags;
 use dreamshard::coordinator::TrainCfg;
 use dreamshard::placer::{self, FitRequest, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
+use dreamshard::serve::{synthetic_arrivals, PlanService, Planned, ServeConfig, WorkloadCfg};
 use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools};
+use dreamshard::util::table::TextTable;
+
+/// serve-sim helper: drain one chunk, stamp each completed request's
+/// queue latency on the open-loop virtual clock (drain start minus its
+/// arrival time), and advance the clock by the chunk's measured planning
+/// wall time — the service is busy for that long on the replayed clock.
+fn drain_once(
+    svc: &mut PlanService<'_>,
+    at_ms_by_ticket: &[f64],
+    clock_ms: &mut f64,
+    done: &mut Vec<(Planned, f64)>,
+) -> Result<()> {
+    let drained = svc.drain_chunk()?;
+    let wall_ms = drained.first().map(|p| p.plan_ms).unwrap_or(0.0);
+    for p in drained {
+        let vq = (*clock_ms - at_ms_by_ticket[p.ticket as usize]).max(0.0);
+        done.push((p, vq));
+    }
+    *clock_ms += wall_ms;
+    Ok(())
+}
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first().cloned() else {
-        eprintln!("usage: dreamshard <repro|train|place|placers|info> [...]");
+        eprintln!("usage: dreamshard <repro|train|place|serve-sim|placers|info> [...]");
         std::process::exit(2);
     };
     let flags = parse_flags(&args[1..]);
@@ -99,6 +127,110 @@ fn main() -> Result<()> {
             let costs: Vec<f64> = plans.iter().map(|p| p.eval.latency).collect();
             let mean = dreamshard::util::mean(&costs);
             println!("mean test cost over {} tasks: {mean:.2} ms", test.len());
+            Ok(())
+        }
+        "serve-sim" => {
+            let chunk = flags.get_usize("chunk", 16);
+            let capacity = flags.get_usize("capacity", 128);
+            let seed = flags.get_usize("seed", 0) as u64;
+            let policy = flags.get_str("policy", "dreamshard");
+            // --devices 2,4,8,128 (device-count-specific placers like
+            // `rnn` need a single count here, e.g. --devices 4)
+            let device_mix = flags
+                .get_str("devices", "2,4,8,128")
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .map_err(|_| err!("--devices wants a comma list of counts, got `{s}`"))
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            let rt = Runtime::open_default()?;
+            let ds = gen_dlrm(856, 42);
+            let (pool, _) = split_pools(&ds, 1007);
+            let sim = Simulator::new(SimConfig::default());
+            let wl = WorkloadCfg {
+                n_requests: flags.get_usize("requests", 64),
+                device_mix,
+                min_tables: flags.get_usize("min-tables", 10),
+                max_tables: flags.get_usize("max-tables", 40),
+                mean_gap_ms: flags.get_usize("gap-ms", 5) as f64,
+                seed,
+            };
+            let arrivals = synthetic_arrivals(&pool, &wl);
+            let placer = placer::by_name_seeded(&rt, &policy, seed)?;
+            if placer.needs_fit() {
+                eprintln!(
+                    "note: `{policy}` serves with deterministic untrained weights \
+                     (serve-sim exercises the serving path; use `train` for plan quality)"
+                );
+            }
+            let mut svc = PlanService::new(&rt, placer, ServeConfig { capacity, chunk });
+
+            // open-loop replay on a virtual clock: requests arrive at
+            // their schedule times; a drain occupies the service for its
+            // measured planning wall time, so a request's queue latency
+            // is how long it sat behind earlier traffic on that clock
+            let mut clock_ms = 0.0f64;
+            let mut at_ms_by_ticket: Vec<f64> = Vec::with_capacity(arrivals.len());
+            // (completed request, queue latency on the open-loop clock)
+            let mut done: Vec<(Planned, f64)> = Vec::with_capacity(arrivals.len());
+            for a in &arrivals {
+                clock_ms = clock_ms.max(a.at_ms);
+                let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim)?;
+                if svc.submit(req)?.is_none() {
+                    continue; // shed by the bounded queue
+                }
+                at_ms_by_ticket.push(a.at_ms);
+                // a full lane-chunk triggers a drain
+                while svc.queued() >= chunk {
+                    drain_once(&mut svc, &at_ms_by_ticket, &mut clock_ms, &mut done)?;
+                }
+            }
+            while !svc.is_empty() {
+                drain_once(&mut svc, &at_ms_by_ticket, &mut clock_ms, &mut done)?;
+            }
+
+            // per-serving-variant summary
+            let mut keys: Vec<(usize, usize)> = done.iter().map(|(p, _)| p.variant).collect();
+            keys.sort_unstable();
+            keys.dedup();
+            let mut table = TextTable::new(vec![
+                "variant",
+                "plans",
+                "queue ms (clock)",
+                "plan ms",
+                "cost ms",
+            ]);
+            for key in keys {
+                let group: Vec<&(Planned, f64)> =
+                    done.iter().filter(|(p, _)| p.variant == key).collect();
+                let n = group.len() as f64;
+                let queue = group.iter().map(|(_, vq)| *vq).sum::<f64>() / n;
+                let plan = group.iter().map(|(p, _)| p.plan_ms).sum::<f64>() / n;
+                let cost = group.iter().map(|(p, _)| p.plan.eval.latency).sum::<f64>() / n;
+                table.row(vec![
+                    format!("d{}s{}", key.0, key.1),
+                    group.len().to_string(),
+                    format!("{queue:.2}"),
+                    format!("{plan:.2}"),
+                    format!("{cost:.1}"),
+                ]);
+            }
+            let span_ms = arrivals.last().map(|a| a.at_ms).unwrap_or(0.0);
+            println!(
+                "serve-sim: {} arrivals over {span_ms:.0} ms, {} shed, policy {}, \
+                 chunk {chunk}, capacity {capacity}",
+                arrivals.len(),
+                svc.stats().rejected,
+                svc.placer_name(),
+            );
+            println!("{}", table.render());
+            println!(
+                "open-loop makespan {clock_ms:.0} ms (arrival span + planning); \
+                 queue ms above are measured on that clock"
+            );
+            println!("{}", svc.stats().summary());
             Ok(())
         }
         "placers" => {

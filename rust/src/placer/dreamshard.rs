@@ -2,7 +2,10 @@
 //! **lane-batched multi-task planning**: `place_many` fills the backend's
 //! `[E, D, S, F]` episode lanes with *different tasks* and advances them
 //! in lockstep, one fused `mdp_step` backend call per MDP step — instead
-//! of `E` sequential full episodes. Per-lane network math is independent,
+//! of `E` sequential full episodes. Table ordering is chunk-batched the
+//! same way: one concatenated `[N, F]` `table_cost` pass scores every
+//! task in a chunk (`DreamShard::order_tables_batch`) instead of one
+//! backend call per task. Per-lane/per-row network math is independent,
 //! so each task's plan is identical to what sequential [`Placer::place`]
 //! produces (asserted by `tests/placer_api.rs`); only the wall-clock
 //! changes (`benches/placement.rs` reports the throughput gap).
@@ -11,7 +14,7 @@ use super::{FitRequest, Placer, PlacementPlan, PlacementRequest};
 use crate::coordinator::{select_action, DreamShard, TrainCfg, Variant};
 use crate::mdp::PlacementState;
 use crate::runtime::{to_f32_vec, Runtime, TensorF32};
-use crate::tables::NUM_FEATURES;
+use crate::tables::{Dataset, Task, NUM_FEATURES};
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
 
@@ -108,12 +111,19 @@ impl<'a> DreamShardPlacer<'a> {
             }
             return Ok(plans);
         };
+        // chunk-batched table ordering: one concatenated [N, F]
+        // table_cost pass for the WHOLE group (split only on the
+        // artifact's row cap) instead of one backend call per task —
+        // hoisted above the lane chunking so the ordering budget is
+        // ceil(total_tables / N_cap) however the lanes split
+        let jobs: Vec<(&Dataset, &Task)> = reqs.iter().map(|r| (r.ds, r.task)).collect();
+        let mut orders = agent.order_tables_batch(self.rt, &jobs)?.into_iter();
         let mut plans = Vec::with_capacity(reqs.len());
         for chunk in reqs.chunks(lanes) {
             let n = chunk.len();
             let mut states: Vec<PlacementState> = Vec::with_capacity(n);
             for &r in chunk {
-                let order = agent.order_tables(self.rt, r.ds, r.task)?;
+                let order = orders.next().expect("one order per request");
                 states.push(PlacementState::new(r.ds, r.task, order, s.min(r.max_slots)));
             }
             let steps = chunk.iter().map(|r| r.task.n_tables()).max().unwrap_or(0);
@@ -200,6 +210,17 @@ impl Placer for DreamShardPlacer<'_> {
     fn place(&mut self, req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
         let mut plans = self.place_many(std::slice::from_ref(req))?;
         Ok(plans.remove(0))
+    }
+
+    /// The variant [`DreamShardPlacer::place_many`] would group this
+    /// request under — the agent's own variant whenever the task fits it
+    /// (so a scheduler can lane-share mixed device counts), else the
+    /// smallest one that serves the task. `None` before the agent exists
+    /// (untrained placer prior to its first fit/place).
+    fn serving_variant(&self, req: &PlacementRequest<'_>) -> Option<(usize, usize)> {
+        let agent = self.agent()?;
+        let var = self.variant_for(agent, req.task.n_devices).ok()?;
+        Some((var.d, var.s))
     }
 
     fn place_many(&mut self, reqs: &[PlacementRequest<'_>]) -> Result<Vec<PlacementPlan>> {

@@ -158,6 +158,18 @@ pub trait Placer {
     fn place_many(&mut self, reqs: &[PlacementRequest<'_>]) -> Result<Vec<PlacementPlan>> {
         reqs.iter().map(|r| self.place(r)).collect()
     }
+
+    /// Scheduling hint for batch-capable placers: the artifact variant
+    /// `(D, S)` this placer would serve `req` with, when it knows.
+    /// `None` (the default) means the scheduler should fall back to the
+    /// smallest lowered variant for the request's device count.
+    /// DreamShard reports its agent's own variant for any device count
+    /// the agent covers, so a serving queue can batch heterogeneous
+    /// 2/4/8-device traffic into one lane-chunk instead of splitting it
+    /// per device count.
+    fn serving_variant(&self, _req: &PlacementRequest<'_>) -> Option<(usize, usize)> {
+        None
+    }
 }
 
 /// Every name [`by_name`] accepts, in display order.

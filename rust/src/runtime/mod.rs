@@ -30,8 +30,10 @@ pub use pjrt::XlaBackend;
 pub use reference::ReferenceBackend;
 pub use tensor::{to_f32_vec, TensorF32, TensorI32, Value};
 
+use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::util::error::Result;
 use crate::util::Rng;
@@ -60,6 +62,8 @@ pub struct Runtime {
     backend: Box<dyn Backend>,
     /// Executions dispatched through [`Runtime::run`] (see [`Runtime::run_count`]).
     calls: AtomicU64,
+    /// Per-artifact execution counts (see [`Runtime::run_count_for`]).
+    calls_named: Mutex<HashMap<String, u64>>,
 }
 
 impl Runtime {
@@ -69,6 +73,7 @@ impl Runtime {
             manifest: reference::reference_manifest(),
             backend: Box::new(ReferenceBackend::new()),
             calls: AtomicU64::new(0),
+            calls_named: Mutex::new(HashMap::new()),
         }
     }
 
@@ -82,7 +87,12 @@ impl Runtime {
         let manifest = Manifest::parse_file(&dir.join("manifest.txt"))
             .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
         let backend = XlaBackend::new(dir, &manifest)?;
-        Ok(Runtime { manifest, backend: Box::new(backend), calls: AtomicU64::new(0) })
+        Ok(Runtime {
+            manifest,
+            backend: Box::new(backend),
+            calls: AtomicU64::new(0),
+            calls_named: Mutex::new(HashMap::new()),
+        })
     }
 
     /// Without the `xla` feature there is nothing to open: artifacts are
@@ -118,6 +128,16 @@ impl Runtime {
             bail!("artifact {name} not in manifest");
         }
         self.calls.fetch_add(1, Ordering::Relaxed);
+        {
+            // allocate the key only the first time an artifact is seen
+            let mut named = self.calls_named.lock().unwrap();
+            match named.get_mut(name) {
+                Some(count) => *count += 1,
+                None => {
+                    named.insert(name.to_string(), 1);
+                }
+            }
+        }
         self.backend
             .execute(name, inputs)
             .map_err(|e| e.wrap(format!("executing {name} on {}", self.backend.name())))
@@ -128,6 +148,13 @@ impl Runtime {
     /// to assert the one-backend-call-per-MDP-step contract.
     pub fn run_count(&self) -> u64 {
         self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Executions of one specific artifact so far. The serving tests use
+    /// deltas of it to pin the chunk-batched `table_cost` call budget
+    /// (`ceil(total_tables / N_cap)` per drained chunk).
+    pub fn run_count_for(&self, name: &str) -> u64 {
+        self.calls_named.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
     /// Initialize a flat parameter vector for a registered network,
@@ -202,5 +229,28 @@ mod tests {
     fn unknown_artifact_is_an_error() {
         let rt = Runtime::reference();
         assert!(rt.run("no_such_artifact", &[]).is_err());
+        // a failed dispatch (unknown name) is not counted
+        assert_eq!(rt.run_count(), 0);
+        assert_eq!(rt.run_count_for("no_such_artifact"), 0);
+    }
+
+    #[test]
+    fn per_artifact_counter_tracks_dispatches() {
+        let rt = Runtime::reference();
+        let mut rng = Rng::new(0);
+        let theta = rt.init_params("cost", &mut rng).unwrap();
+        let n = rt.manifest.artifact_meta("table_cost", "N").unwrap() as usize;
+        let f = rt.manifest.consts["F"] as usize;
+        let inputs = [
+            TensorF32::from_vec(theta, &[rt.manifest.params["cost"].total]).value(),
+            TensorF32::zeros(&[n, f]).value(),
+            TensorF32::ones(&[f]).value(),
+        ];
+        assert_eq!(rt.run_count_for("table_cost"), 0);
+        rt.run("table_cost", &inputs).unwrap();
+        rt.run("table_cost", &inputs).unwrap();
+        assert_eq!(rt.run_count_for("table_cost"), 2);
+        assert_eq!(rt.run_count_for("cost_fwd_d4s48"), 0);
+        assert_eq!(rt.run_count(), 2);
     }
 }

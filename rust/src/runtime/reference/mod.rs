@@ -362,13 +362,12 @@ fn run_table_cost(inputs: &[Value]) -> Result<Vec<Value>> {
     if f != spec::F {
         bail!("table_cost: feature dim {f} != {}", spec::F);
     }
-    let n_eff = active_rows(&feats.data, n, f);
-    let mut total = vec![0.0f32; n];
-    if n_eff > 0 {
-        let part =
-            cost::table_cost_forward(&theta.data, &feats.data[..n_eff * f], &fmask.data, n_eff);
-        total[..n_eff].copy_from_slice(&part);
-    }
+    // score every row, exactly as the AOT artifact computes. Unlike the
+    // mask-driven lane trims above, trimming trailing zero FEATURE rows
+    // here would be a content-based guess that makes a row's score
+    // depend on what happens to follow it — concatenated multi-task
+    // ordering batches require strict per-row independence.
+    let total = cost::table_cost_forward(&theta.data, &feats.data, &fmask.data, n);
     Ok(vec![out_f32(total, &[n])])
 }
 

@@ -1,0 +1,37 @@
+//! Serving front end: lane-batched planning as a **service**, not a
+//! library call.
+//!
+//! The PR-2 placer facade made every strategy answer one request; this
+//! module makes the crate answer *traffic*. [`PlanService`] wraps any
+//! [`crate::placer::Placer`] behind a bounded FIFO of heterogeneous
+//! placement requests (mixed table counts and device counts):
+//!
+//! * [`PlanService::submit`] enqueues a request — tagged with the
+//!   artifact variant that will serve it, asking the placer first
+//!   ([`crate::placer::Placer::serving_variant`]: a DreamShard agent
+//!   lane-shares all the device counts it covers under one variant) —
+//!   or sheds it when the bounded queue is full: open-loop load
+//!   shedding, never unbounded growth;
+//! * [`PlanService::drain_chunk`] takes the oldest request's serving
+//!   variant, collects up to a lane-chunk of queued requests of that same
+//!   variant (FIFO order within the group; younger requests of other
+//!   variants stay queued), and plans them through **one**
+//!   [`crate::placer::Placer::place_many`] call. For the DreamShard
+//!   placer that means one fused `mdp_step` backend call per MDP step
+//!   shared by every lane, plus one concatenated `[N, F]` `table_cost`
+//!   pass ordering every task in the chunk
+//!   ([`crate::coordinator::DreamShard::order_tables_batch`]);
+//! * per-request queue/plan latency and aggregate throughput are recorded
+//!   in [`ServeStats`], and drained plans come back as [`Planned`]
+//!   (ticket + plan + latency split).
+//!
+//! Workload generation lives in [`synthetic_arrivals`]: the open-loop
+//! arrival schedules (exponential gaps, mixed 2/4/8/128-device tasks)
+//! that the `serve-sim` CLI subcommand, `benches/serving.rs`, and
+//! `examples/serve_queue.rs` replay.
+
+mod service;
+mod workload;
+
+pub use service::{PlanService, Planned, ServeConfig, ServeStats};
+pub use workload::{synthetic_arrivals, Arrival, WorkloadCfg};

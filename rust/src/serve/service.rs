@@ -1,0 +1,496 @@
+//! [`PlanService`]: the bounded planning queue and its variant-grouped,
+//! lane-chunked drain loop.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::coordinator::Variant;
+use crate::err;
+use crate::placer::{Placer, PlacementPlan, PlacementRequest};
+use crate::runtime::Runtime;
+use crate::util::error::Result;
+use crate::util::median;
+
+/// Service knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Bounded-queue capacity: submits beyond it are shed
+    /// ([`PlanService::submit`] returns `Ok(None)`), never buffered
+    /// without limit.
+    pub capacity: usize,
+    /// Maximum requests drained per [`Placer::place_many`] call — the
+    /// lane-chunk size. The DreamShard placer fills up to `E` backend
+    /// lanes per chunk, so the artifact's lane count is the natural value.
+    pub chunk: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { capacity: 256, chunk: 16 }
+    }
+}
+
+/// One completed request: the plan plus its service-side latency split.
+#[derive(Clone, Debug)]
+pub struct Planned {
+    /// Submission ticket (monotonically increasing per service).
+    pub ticket: u64,
+    /// Serving-variant key `(D, S)` the scheduler grouped this request by.
+    pub variant: (usize, usize),
+    pub plan: PlacementPlan,
+    /// Time spent queued (submit to drain start), ms.
+    pub queue_ms: f64,
+    /// Wall time of the chunk this request was planned with, ms —
+    /// requests in one chunk complete together, so they share it.
+    pub plan_ms: f64,
+}
+
+/// Per-request latency samples kept for the median: a bounded window of
+/// the most recent requests, so a long-lived service stays O(1) memory
+/// no matter how much traffic it serves (means use exact running sums).
+const SAMPLE_WINDOW: usize = 1024;
+
+/// Aggregate service counters and latency aggregates.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Requests accepted into the queue.
+    pub submitted: u64,
+    /// Requests shed because the bounded queue was full.
+    pub rejected: u64,
+    /// Requests planned and returned.
+    pub planned: u64,
+    /// `place_many` chunks drained.
+    pub chunks: u64,
+    /// Backend executions dispatched while draining (via
+    /// [`Runtime::run_count`] deltas).
+    pub backend_calls: u64,
+    /// Total wall time spent inside `place_many`, seconds.
+    pub busy_s: f64,
+    queue_ms_sum: f64,
+    plan_ms_sum: f64,
+    recent_queue_ms: VecDeque<f64>,
+}
+
+impl ServeStats {
+    fn record(&mut self, queue_ms: f64, plan_ms: f64) {
+        self.planned += 1;
+        self.queue_ms_sum += queue_ms;
+        self.plan_ms_sum += plan_ms;
+        if self.recent_queue_ms.len() == SAMPLE_WINDOW {
+            self.recent_queue_ms.pop_front();
+        }
+        self.recent_queue_ms.push_back(queue_ms);
+    }
+
+    /// Planning throughput over the time actually spent planning.
+    pub fn plans_per_sec(&self) -> f64 {
+        if self.busy_s > 0.0 {
+            self.planned as f64 / self.busy_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean queue latency over every planned request, ms.
+    pub fn mean_queue_ms(&self) -> f64 {
+        if self.planned > 0 {
+            self.queue_ms_sum / self.planned as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean plan latency over every planned request, ms.
+    pub fn mean_plan_ms(&self) -> f64 {
+        if self.planned > 0 {
+            self.plan_ms_sum / self.planned as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Median queue latency over the most recent requests (bounded
+    /// window), ms.
+    pub fn median_queue_ms(&self) -> f64 {
+        let recent: Vec<f64> = self.recent_queue_ms.iter().copied().collect();
+        median(&recent)
+    }
+
+    /// One-line human summary of the counters and latency aggregates.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} planned / {} accepted ({} shed) in {} chunks: {:.1} plans/s, \
+             {} backend calls, queue {:.2}/{:.2} ms (mean/median), plan {:.2} ms mean",
+            self.planned,
+            self.submitted,
+            self.rejected,
+            self.chunks,
+            self.plans_per_sec(),
+            self.backend_calls,
+            self.mean_queue_ms(),
+            self.median_queue_ms(),
+            self.mean_plan_ms(),
+        )
+    }
+}
+
+struct Queued<'a> {
+    ticket: u64,
+    req: PlacementRequest<'a>,
+    key: (usize, usize),
+    submitted: Instant,
+}
+
+/// A planning service over any [`Placer`]: bounded FIFO in, lane-batched
+/// chunks out. See the [module docs](crate::serve) for the drain policy.
+pub struct PlanService<'a> {
+    rt: &'a Runtime,
+    placer: Box<dyn Placer + 'a>,
+    cfg: ServeConfig,
+    queue: VecDeque<Queued<'a>>,
+    next_ticket: u64,
+    stats: ServeStats,
+    /// Some queued keys came from the per-device-count fallback (the
+    /// placer could not name its serving variant at submit time), so the
+    /// next drain should ask again before grouping.
+    fallback_keys: bool,
+    /// A refresh pass after planning had begun got `None` for every
+    /// queued request: the placer never names variants (greedy, random,
+    /// rnn) — stop asking.
+    refresh_hopeless: bool,
+}
+
+impl<'a> PlanService<'a> {
+    /// Wrap a placer. `rt` must be the same runtime the placer executes
+    /// on — it is consulted for scheduling metadata (fallback variant
+    /// keys from its manifest) and for the backend-call counters the
+    /// stats report; a different handle would mis-key and count nothing.
+    pub fn new(rt: &'a Runtime, placer: Box<dyn Placer + 'a>, cfg: ServeConfig) -> Self {
+        PlanService {
+            rt,
+            placer,
+            cfg: ServeConfig { capacity: cfg.capacity.max(1), chunk: cfg.chunk.max(1) },
+            queue: VecDeque::new(),
+            next_ticket: 0,
+            stats: ServeStats::default(),
+            fallback_keys: false,
+            refresh_hopeless: false,
+        }
+    }
+
+    /// Registry name of the wrapped strategy.
+    pub fn placer_name(&self) -> &str {
+        self.placer.name()
+    }
+
+    /// Requests currently queued.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Whether the next submit would be shed.
+    pub fn is_full(&self) -> bool {
+        self.queue.len() >= self.cfg.capacity
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Enqueue one request. Returns `Ok(Some(ticket))` on acceptance and
+    /// `Ok(None)` when the bounded queue is full (the request is counted
+    /// as shed — that is load shedding, not an error; a full queue sheds
+    /// before any other work or validation). `Err` only when no lowered
+    /// artifact variant can serve the request's device count.
+    ///
+    /// The grouping key prefers [`Placer::serving_variant`] — DreamShard
+    /// reports its agent's variant for every device count the agent
+    /// covers, so mixed 2/4/8-device traffic shares one lane-chunk —
+    /// falling back to the smallest lowered variant for the device count.
+    pub fn submit(&mut self, req: PlacementRequest<'a>) -> Result<Option<u64>> {
+        if self.is_full() {
+            self.stats.rejected += 1;
+            return Ok(None);
+        }
+        let key = match self.placer.serving_variant(&req) {
+            Some(key) => key,
+            None => {
+                let var = Variant::for_devices(self.rt, req.task.n_devices)?;
+                self.fallback_keys = true;
+                (var.d, var.s)
+            }
+        };
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        self.queue.push_back(Queued { ticket, req, key, submitted: Instant::now() });
+        self.stats.submitted += 1;
+        Ok(Some(ticket))
+    }
+
+    /// Drain one lane-chunk: the oldest request picks the serving
+    /// variant; up to [`ServeConfig::chunk`] queued requests of that
+    /// variant are collected in FIFO order (younger requests of other
+    /// variants keep their place in the queue) and planned through one
+    /// [`Placer::place_many`] call. Returns the completed requests in
+    /// submission order; empty when the queue is empty.
+    ///
+    /// Completion order is FIFO within each variant group as keyed at
+    /// drain time. Keys are stable — and the per-group FIFO guarantee
+    /// therefore global — once the placer knows its serving variants,
+    /// which is always the case for a fitted (or wrapped-agent) placer;
+    /// a lazily-initialized one may merge fallback-keyed groups after
+    /// its first drain creates the agent.
+    pub fn drain_chunk(&mut self) -> Result<Vec<Planned>> {
+        if self.queue.is_empty() {
+            return Ok(vec![]);
+        }
+        // refresh grouping keys first, but only when they can be stale:
+        // some key came from the submit-time fallback AND a drain has
+        // already run (a lazily-initialized placer — an untrained
+        // DreamShard — cannot report its serving variant until its first
+        // drain creates the agent; after that, fallback-keyed requests
+        // re-merge under the agent's variant here). Placers that knew
+        // their variants at submit time never pay this pass, and one
+        // all-`None` pass disarms it for placers that never will.
+        if self.fallback_keys && !self.refresh_hopeless && self.stats.chunks > 0 {
+            let mut any_known = false;
+            let mut all_known = true;
+            for q in self.queue.iter_mut() {
+                match self.placer.serving_variant(&q.req) {
+                    Some(k) => {
+                        q.key = k;
+                        any_known = true;
+                    }
+                    None => all_known = false,
+                }
+            }
+            if all_known {
+                self.fallback_keys = false;
+            }
+            if !any_known {
+                self.refresh_hopeless = true;
+            }
+        }
+        let key = self.queue.front().expect("checked non-empty").key;
+        let mut picked: Vec<Queued<'a>> = Vec::new();
+        let mut rest: VecDeque<Queued<'a>> = VecDeque::with_capacity(self.queue.len());
+        while let Some(q) = self.queue.pop_front() {
+            if q.key == key && picked.len() < self.cfg.chunk {
+                picked.push(q);
+            } else {
+                rest.push_back(q);
+            }
+        }
+        self.queue = rest;
+
+        let start = Instant::now();
+        let calls_before = self.rt.run_count();
+        let reqs: Vec<PlacementRequest<'a>> = picked.iter().map(|q| q.req).collect();
+        let result = self.placer.place_many(&reqs);
+        // count backend work whether or not the drain succeeded — a
+        // failed chunk still spent real executions
+        self.stats.backend_calls += self.rt.run_count() - calls_before;
+        let plans: Vec<PlacementPlan> = match result {
+            Ok(plans) if plans.len() == reqs.len() => plans,
+            result => {
+                // a failed — or short: every request must come back, or
+                // the zip below would silently drop the tail — drain
+                // must not lose requests: put the chunk back at the
+                // head of the queue, original order intact
+                let err = match result {
+                    Err(e) => e,
+                    Ok(short) => err!(
+                        "placer `{}` returned {} plans for {} requests",
+                        self.placer.name(),
+                        short.len(),
+                        reqs.len()
+                    ),
+                };
+                for q in picked.into_iter().rev() {
+                    self.queue.push_front(q);
+                }
+                return Err(err);
+            }
+        };
+        let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+        self.stats.chunks += 1;
+        self.stats.busy_s += wall_ms / 1e3;
+
+        let mut done = Vec::with_capacity(picked.len());
+        for (q, plan) in picked.into_iter().zip(plans.into_iter()) {
+            let queue_ms = start.duration_since(q.submitted).as_secs_f64() * 1e3;
+            self.stats.record(queue_ms, wall_ms);
+            done.push(Planned { ticket: q.ticket, variant: key, plan, queue_ms, plan_ms: wall_ms });
+        }
+        Ok(done)
+    }
+
+    /// Drain the whole queue, chunk by chunk.
+    pub fn drain(&mut self) -> Result<Vec<Planned>> {
+        let mut out = vec![];
+        while !self.queue.is_empty() {
+            out.extend(self.drain_chunk()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placer;
+    use crate::sim::{SimConfig, Simulator};
+    use crate::tables::{gen_dlrm, sample_tasks, split_pools, Dataset, Task};
+
+    fn setup(n_tasks: usize, n_devices: usize) -> (Dataset, Vec<Task>, Simulator) {
+        let ds = gen_dlrm(200, 0);
+        let (pool, _) = split_pools(&ds, 1);
+        let tasks = sample_tasks(&pool, 8, n_devices, n_tasks, 2);
+        (ds, tasks, Simulator::new(SimConfig::default()))
+    }
+
+    #[test]
+    fn bounded_queue_sheds_when_full() {
+        let rt = Runtime::reference();
+        let (ds, tasks, sim) = setup(6, 4);
+        let placer = placer::by_name(&rt, "greedy:dim").unwrap();
+        let mut svc =
+            PlanService::new(&rt, placer, ServeConfig { capacity: 4, chunk: 16 });
+        let mut accepted = 0;
+        let mut shed = 0;
+        for t in &tasks {
+            let req = PlacementRequest::new(&ds, t, &sim);
+            match svc.submit(req).unwrap() {
+                Some(_) => accepted += 1,
+                None => shed += 1,
+            }
+        }
+        assert_eq!((accepted, shed), (4, 2));
+        assert!(svc.is_full());
+        assert_eq!(svc.stats().submitted, 4);
+        assert_eq!(svc.stats().rejected, 2);
+        let done = svc.drain().unwrap();
+        assert_eq!(done.len(), 4);
+        assert!(svc.is_empty());
+        assert_eq!(svc.stats().planned, 4);
+    }
+
+    #[test]
+    fn unservable_device_count_errors_at_submit() {
+        let rt = Runtime::reference();
+        let (ds, mut tasks, sim) = setup(1, 4);
+        tasks[0].n_devices = 1000; // beyond the largest lowered variant
+        let placer = placer::by_name(&rt, "greedy:dim").unwrap();
+        let mut svc = PlanService::new(&rt, placer, ServeConfig::default());
+        let req = PlacementRequest::new(&ds, &tasks[0], &sim);
+        assert!(svc.submit(req).is_err());
+        assert_eq!(svc.stats().submitted, 0);
+    }
+
+    #[test]
+    fn drain_chunk_respects_chunk_size_and_records_latency() {
+        let rt = Runtime::reference();
+        let (ds, tasks, sim) = setup(5, 4);
+        let placer = placer::by_name(&rt, "greedy:lookup").unwrap();
+        let mut svc =
+            PlanService::new(&rt, placer, ServeConfig { capacity: 64, chunk: 2 });
+        for t in &tasks {
+            svc.submit(PlacementRequest::new(&ds, t, &sim)).unwrap();
+        }
+        let first = svc.drain_chunk().unwrap();
+        assert_eq!(first.len(), 2, "chunk size caps the drain");
+        assert_eq!(svc.queued(), 3);
+        assert_eq!(first[0].ticket, 0);
+        assert_eq!(first[1].ticket, 1);
+        for p in &first {
+            assert_eq!(p.variant, (4, 48));
+            assert_eq!(p.plan.strategy, "greedy:lookup");
+            assert!(p.queue_ms >= 0.0);
+            assert!(p.plan_ms >= 0.0);
+        }
+        let rest = svc.drain().unwrap();
+        assert_eq!(rest.len(), 3);
+        let stats = svc.stats();
+        assert_eq!(stats.chunks, 3); // 2 + 2 + 1
+        assert_eq!(stats.planned, 5);
+        assert!(stats.mean_queue_ms() >= 0.0);
+        assert!(stats.median_queue_ms() >= 0.0);
+        assert!(stats.mean_plan_ms() >= 0.0);
+        assert!(stats.summary().contains("5 planned"));
+    }
+
+    /// A placer whose planning always fails (drain error-path fixture).
+    struct FailingPlacer;
+    impl Placer for FailingPlacer {
+        fn name(&self) -> &str {
+            "failing"
+        }
+        fn place(&mut self, _req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
+            Err(crate::err!("backend exploded"))
+        }
+    }
+
+    #[test]
+    fn failed_drain_requeues_the_chunk() {
+        let rt = Runtime::reference();
+        let (ds, tasks, sim) = setup(3, 4);
+        let mut svc =
+            PlanService::new(&rt, Box::new(FailingPlacer), ServeConfig::default());
+        for t in &tasks {
+            svc.submit(PlacementRequest::new(&ds, t, &sim)).unwrap();
+        }
+        let err = svc.drain_chunk().expect_err("failing placer must error");
+        assert!(err.to_string().contains("backend exploded"));
+        // nothing was lost or double-counted: the chunk is back in the
+        // queue, original order intact, and can be retried
+        assert_eq!(svc.queued(), 3);
+        assert_eq!(svc.stats().planned, 0);
+        assert_eq!(svc.stats().chunks, 0);
+        let err2 = svc.drain().expect_err("retry fails the same way");
+        assert!(err2.to_string().contains("backend exploded"));
+        assert_eq!(svc.queued(), 3);
+    }
+
+    /// A placer whose batch path drops requests (short-Ok fixture).
+    struct ShortPlacer;
+    impl Placer for ShortPlacer {
+        fn name(&self) -> &str {
+            "short"
+        }
+        fn place(&mut self, _req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
+            Err(crate::err!("unused"))
+        }
+        fn place_many(&mut self, _reqs: &[PlacementRequest<'_>]) -> Result<Vec<PlacementPlan>> {
+            Ok(vec![]) // loses every request
+        }
+    }
+
+    #[test]
+    fn short_plan_batches_are_rejected_not_dropped() {
+        let rt = Runtime::reference();
+        let (ds, tasks, sim) = setup(2, 4);
+        let mut svc =
+            PlanService::new(&rt, Box::new(ShortPlacer), ServeConfig::default());
+        for t in &tasks {
+            svc.submit(PlacementRequest::new(&ds, t, &sim)).unwrap();
+        }
+        let err = svc.drain_chunk().expect_err("short batch must be an error");
+        assert!(err.to_string().contains("returned 0 plans for 2"), "{err}");
+        assert_eq!(svc.queued(), 2, "the chunk went back to the queue");
+        assert_eq!(svc.stats().planned, 0);
+    }
+
+    #[test]
+    fn drain_on_empty_queue_is_a_noop() {
+        let rt = Runtime::reference();
+        let placer = placer::by_name(&rt, "random").unwrap();
+        let mut svc = PlanService::new(&rt, placer, ServeConfig::default());
+        assert!(svc.drain_chunk().unwrap().is_empty());
+        assert!(svc.drain().unwrap().is_empty());
+        assert_eq!(svc.stats().chunks, 0);
+    }
+}

@@ -1,0 +1,138 @@
+//! Synthetic open-loop serving workloads: Poisson arrivals of
+//! heterogeneous placement tasks (mixed table counts and device counts),
+//! replayed by the `serve-sim` CLI subcommand, `benches/serving.rs`, and
+//! `examples/serve_queue.rs`.
+
+use crate::tables::Task;
+use crate::util::Rng;
+
+/// Workload shape knobs.
+#[derive(Clone, Debug)]
+pub struct WorkloadCfg {
+    pub n_requests: usize,
+    /// Device counts drawn uniformly per request (each must have a
+    /// lowered artifact variant, e.g. 2/4/8/128).
+    pub device_mix: Vec<usize>,
+    /// Tables per task, drawn uniformly in `[min_tables, max_tables]`.
+    pub min_tables: usize,
+    pub max_tables: usize,
+    /// Mean exponential inter-arrival gap, ms (open-loop arrival clock).
+    pub mean_gap_ms: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadCfg {
+    fn default() -> Self {
+        WorkloadCfg {
+            n_requests: 64,
+            device_mix: vec![2, 4, 8],
+            min_tables: 10,
+            max_tables: 40,
+            mean_gap_ms: 5.0,
+            seed: 0,
+        }
+    }
+}
+
+/// One arriving request: the sampled task plus its arrival time on the
+/// open-loop clock (ms since the workload started).
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    pub task: Task,
+    pub at_ms: f64,
+}
+
+/// Generate a deterministic open-loop arrival schedule from a table pool
+/// (ids into a dataset, e.g. one side of
+/// [`crate::tables::split_pools`]): exponential inter-arrival gaps, table
+/// counts uniform in `[min_tables, max_tables]`, device counts uniform
+/// over `device_mix`, tables sampled without replacement per task.
+pub fn synthetic_arrivals(pool: &[usize], cfg: &WorkloadCfg) -> Vec<Arrival> {
+    assert!(!cfg.device_mix.is_empty(), "device_mix must not be empty");
+    assert!(
+        cfg.min_tables >= 1 && cfg.min_tables <= cfg.max_tables,
+        "need 1 <= min_tables <= max_tables"
+    );
+    assert!(
+        cfg.max_tables <= pool.len(),
+        "pool of {} too small for {}-table tasks",
+        pool.len(),
+        cfg.max_tables
+    );
+    let mut rng = Rng::new(cfg.seed).fork(0x5E47E);
+    let mut clock_ms = 0.0;
+    (0..cfg.n_requests)
+        .map(|_| {
+            // exponential gaps -> Poisson arrival process
+            clock_ms += -cfg.mean_gap_ms * (1.0 - rng.f64()).ln();
+            let n_tables = cfg.min_tables + rng.below(cfg.max_tables - cfg.min_tables + 1);
+            let n_devices = cfg.device_mix[rng.below(cfg.device_mix.len())];
+            let picks = rng.sample_indices(pool.len(), n_tables);
+            Arrival {
+                task: Task {
+                    table_ids: picks.into_iter().map(|i| pool[i]).collect(),
+                    n_devices,
+                },
+                at_ms: clock_ms,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::{gen_dlrm, split_pools};
+
+    fn cfg() -> WorkloadCfg {
+        WorkloadCfg {
+            n_requests: 50,
+            device_mix: vec![2, 4, 8, 128],
+            min_tables: 5,
+            max_tables: 20,
+            mean_gap_ms: 3.0,
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn arrivals_match_the_requested_shape() {
+        let ds = gen_dlrm(120, 0);
+        let (pool, _) = split_pools(&ds, 1);
+        let arrivals = synthetic_arrivals(&pool, &cfg());
+        assert_eq!(arrivals.len(), 50);
+        let mut last = 0.0;
+        let mut mixes = std::collections::HashSet::new();
+        for a in &arrivals {
+            assert!(a.at_ms >= last, "arrival clock must be nondecreasing");
+            last = a.at_ms;
+            assert!((5..=20).contains(&a.task.n_tables()));
+            assert!([2, 4, 8, 128].contains(&a.task.n_devices));
+            mixes.insert(a.task.n_devices);
+            let mut ids = a.task.table_ids.clone();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), a.task.n_tables(), "duplicate table in task");
+            assert!(a.task.table_ids.iter().all(|id| pool.contains(id)));
+        }
+        assert!(mixes.len() >= 2, "50 draws should hit several device counts");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let ds = gen_dlrm(120, 0);
+        let (pool, _) = split_pools(&ds, 1);
+        let a = synthetic_arrivals(&pool, &cfg());
+        let b = synthetic_arrivals(&pool, &cfg());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.task.table_ids, y.task.table_ids);
+            assert_eq!(x.task.n_devices, y.task.n_devices);
+            assert_eq!(x.at_ms, y.at_ms);
+        }
+        let other = synthetic_arrivals(&pool, &WorkloadCfg { seed: 10, ..cfg() });
+        assert!(
+            a.iter().zip(other.iter()).any(|(x, y)| x.task.table_ids != y.task.table_ids),
+            "different seeds should draw different workloads"
+        );
+    }
+}

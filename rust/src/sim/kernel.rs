@@ -100,7 +100,9 @@ impl KernelModel {
         let floor = self.fusion_floor(tables);
         let mut costs: Vec<(f64, f64)> =
             tables.iter().map(|t| (self.fwd_ms(t), self.bwd_ms(t))).collect();
-        costs.sort_by(|a, b| (b.0 + b.1).partial_cmp(&(a.0 + a.1)).unwrap());
+        // total_cmp: a NaN-featured table (corrupt input) must not panic
+        // the fused-cost model — NaNs order deterministically instead
+        costs.sort_by(|a, b| (b.0 + b.1).total_cmp(&(a.0 + a.1)));
         let mut fwd = 0.0;
         let mut bwd = 0.0;
         let mut decay = 1.0; // 0.75^rank
@@ -186,6 +188,24 @@ mod tests {
         }
         // single table: no fusion
         assert_eq!(k.fusion_speedup(&[&d.tables[0]]), 1.0);
+    }
+
+    #[test]
+    fn device_ms_survives_nan_features() {
+        // regression: the rank-weighting sort used partial_cmp().unwrap(),
+        // so one NaN-costed table panicked the whole fused-cost model
+        let k = KernelModel::new(65_536);
+        let good = table(32, 1 << 20, 16.0);
+        let mut bad = table(32, 1 << 20, 16.0);
+        // a NaN bin poisons reuse_factor -> cache_factor -> fwd/bwd cost
+        // (NaN pooling would be laundered by the .max(0.2) clamp)
+        bad.bins[6] = f32::NAN;
+        assert!(k.fwd_ms(&bad).is_nan(), "NaN must reach the standalone cost");
+        let tables = vec![&good, &bad, &good];
+        let (f, b) = k.device_ms(&tables); // must not panic
+        assert!(f.is_nan() || f >= 0.0);
+        assert!(b.is_nan() || b >= 0.0);
+        let _ = k.fusion_speedup(&tables); // must not panic either
     }
 
     #[test]

@@ -40,10 +40,28 @@ impl Rng {
         self.f64() as f32
     }
 
-    /// Uniform integer in [0, n).
+    /// Uniform integer in [0, n), exactly unbiased via Lemire's
+    /// multiply-shift rejection method (the old `next_u64() % n` carried a
+    /// modulo bias of up to n/2^64 toward small residues). Draws one extra
+    /// `next_u64` only in the rare rejection case, so the stream stays
+    /// deterministic per seed — but it is a *different* stream than the
+    /// modulo version produced.
     pub fn below(&mut self, n: usize) -> usize {
-        debug_assert!(n > 0);
-        (self.next_u64() % n as u64) as usize
+        // hard assert: the old `% n` panicked on n = 0 in every build
+        // profile; Lemire's guard would instead silently return 0, so
+        // keep the fault at the call site
+        assert!(n > 0, "Rng::below(0)");
+        let n = n as u64;
+        let mut m = (self.next_u64() as u128) * (n as u128);
+        if (m as u64) < n {
+            // threshold = 2^64 mod n; reject the low fringe that maps
+            // unevenly onto [0, n)
+            let t = n.wrapping_neg() % n;
+            while (m as u64) < t {
+                m = (self.next_u64() as u128) * (n as u128);
+            }
+        }
+        (m >> 64) as usize
     }
 
     /// Uniform in [lo, hi).
@@ -132,6 +150,25 @@ mod tests {
         let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
         assert!(m.abs() < 0.03, "mean {m}");
         assert!((v - 1.0).abs() < 0.05, "var {v}");
+    }
+
+    #[test]
+    fn below_in_range_and_roughly_uniform() {
+        let mut r = Rng::new(11);
+        for n in [1usize, 2, 3, 7, 10, 1000] {
+            for _ in 0..200 {
+                assert!(r.below(n) < n);
+            }
+        }
+        // Lemire rejection removes the modulo bias; each residue of a
+        // non-power-of-two n should land near 1/n
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.below(3)] += 1;
+        }
+        for &c in &counts {
+            assert!((9_000..11_000).contains(&c), "bucket count {c} far from 10k");
+        }
     }
 
     #[test]

@@ -19,13 +19,14 @@ pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     (m, v.sqrt())
 }
 
-/// Median (sorts a copy); 0.0 for an empty slice.
+/// Median (sorts a copy); 0.0 for an empty slice. NaN inputs sort to the
+/// ends (`total_cmp`) instead of panicking the sort.
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(|a, b| a.total_cmp(b));
     let n = s.len();
     if n % 2 == 1 {
         s[n / 2]
@@ -46,6 +47,16 @@ mod tests {
         assert!((s - 2.0).abs() < 1e-12);
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn median_survives_nan_input() {
+        // regression: partial_cmp().unwrap() panicked on any NaN sample
+        let m = median(&[3.0, f64::NAN, 1.0]);
+        // positive NaN totally-orders after +inf, so the finite values
+        // stay in front and the middle element is the larger finite one
+        assert_eq!(m, 3.0);
+        assert!(median(&[f64::NAN]).is_nan());
     }
 
     #[test]

@@ -83,18 +83,21 @@ fn place_many_is_one_backend_call_per_mdp_step() {
         .collect();
 
     let before = rt.run_count();
+    let ordering_before = rt.run_count_for("table_cost");
     placer.place_many(&reqs).unwrap();
     let batched = rt.run_count() - before;
-    // one table_cost call per task (episode ordering) + one fused
-    // mdp_step call per MDP step shared by ALL lanes
-    assert_eq!(batched, (tasks.len() + 20) as u64, "lane-batched call budget");
+    // ONE concatenated table_cost call orders the whole chunk (4 tasks x
+    // 20 tables = 80 rows <= the 256-row cap) + one fused mdp_step call
+    // per MDP step shared by ALL lanes
+    assert_eq!(batched, (1 + 20) as u64, "lane-batched call budget");
+    assert_eq!(rt.run_count_for("table_cost") - ordering_before, 1, "chunk-batched ordering");
 
     let before = rt.run_count();
     for r in &reqs {
         placer.place(r).unwrap();
     }
     let sequential = rt.run_count() - before;
-    // sequential pays the per-step call per *task*
+    // sequential pays the ordering call AND the per-step call per *task*
     assert_eq!(sequential, (tasks.len() * (1 + 20)) as u64);
     assert!(batched < sequential);
 }
@@ -192,8 +195,9 @@ fn oversized_batches_chunk_across_lanes() {
     let plans = placer.place_many(&reqs).unwrap();
     let calls = rt.run_count() - before;
     assert_eq!(plans.len(), 20);
-    // 2 chunks (16 + 4 lanes): per chunk 6 fused steps, plus 20 ordering calls
-    assert_eq!(calls, 20 + 2 * 6);
+    // ONE concatenated ordering call for the whole group (20 x 6 = 120
+    // rows <= the 256 cap), then 2 lane-chunks (16 + 4) x 6 fused steps
+    assert_eq!(calls, 1 + 2 * 6);
     for (task, plan) in tasks.iter().zip(&plans) {
         let sequential = agent.place(&rt, &sim, &ds, task).unwrap();
         assert_eq!(plan.placement, sequential);

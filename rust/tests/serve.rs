@@ -1,0 +1,157 @@
+//! Serving front-end integration tests: drained plans are bit-identical
+//! to sequential `Placer::place`, FIFO completion order holds per
+//! serving-variant group, and the lane-batched drain + chunk-batched
+//! `order_tables` spend strictly fewer backend calls than sequential
+//! planning (with the `table_cost` budget pinned per drained chunk).
+
+use dreamshard::coordinator::{CostNet, DreamShard, TrainCfg};
+use dreamshard::placer::{DreamShardPlacer, Placer, PlacementRequest};
+use dreamshard::runtime::Runtime;
+use dreamshard::serve::{synthetic_arrivals, PlanService, Planned, ServeConfig, WorkloadCfg};
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::tables::{gen_dlrm, split_pools, Dataset};
+use dreamshard::util::Rng;
+
+/// 64 heterogeneous arrivals: mixed 2/4/8/128-device tasks of 5-12 tables.
+fn mixed_workload(ds: &Dataset) -> Vec<dreamshard::serve::Arrival> {
+    let (pool, _) = split_pools(ds, 1);
+    synthetic_arrivals(&pool, &WorkloadCfg {
+        n_requests: 64,
+        device_mix: vec![2, 4, 8, 128],
+        min_tables: 5,
+        max_tables: 12,
+        mean_gap_ms: 1.0,
+        seed: 4,
+    })
+}
+
+/// Deterministic random-init weights; plan parity and call budgets are
+/// independent of weight quality.
+fn untrained_agent(rt: &Runtime) -> DreamShard {
+    let mut rng = Rng::new(42);
+    DreamShard::new(rt, 8, TrainCfg::default(), &mut rng).unwrap()
+}
+
+#[test]
+fn drained_plans_are_bit_identical_to_sequential_place() {
+    let rt = Runtime::reference();
+    let ds = gen_dlrm(300, 0);
+    let sim = Simulator::new(SimConfig::default());
+    let arrivals = mixed_workload(&ds);
+    let agent = untrained_agent(&rt);
+
+    let service_placer = Box::new(DreamShardPlacer::from_agent(&rt, &agent));
+    let mut svc = PlanService::new(&rt, service_placer, ServeConfig { capacity: 64, chunk: 16 });
+    for a in &arrivals {
+        let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim).unwrap();
+        assert!(svc.submit(req).unwrap().is_some(), "capacity fits the whole workload");
+    }
+    let seq_calls_before = rt.run_count();
+    let mut done = svc.drain().unwrap();
+    let batched_calls = rt.run_count() - seq_calls_before;
+    assert_eq!(done.len(), 64);
+
+    // tickets are assigned in submission order: sort back to arrival order
+    done.sort_by_key(|p| p.ticket);
+    let mut sequential = DreamShardPlacer::from_agent(&rt, &agent);
+    let seq_before = rt.run_count();
+    for (a, p) in arrivals.iter().zip(&done) {
+        let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim).unwrap();
+        let direct = sequential.place(&req).unwrap();
+        assert_eq!(p.plan.placement, direct.placement, "ticket {}", p.ticket);
+        assert_eq!(p.plan.placement.len(), a.task.n_tables());
+        assert!(p.plan.placement.iter().all(|&d| d < a.task.n_devices));
+        assert_eq!(p.plan.strategy, "dreamshard");
+    }
+    let sequential_calls = rt.run_count() - seq_before;
+    // the acceptance contract: lane-batched drain + chunk-batched
+    // ordering spend strictly fewer backend executions
+    assert!(
+        batched_calls < sequential_calls,
+        "batched drain used {batched_calls} calls, sequential {sequential_calls}"
+    );
+}
+
+#[test]
+fn fifo_completion_order_is_preserved_per_variant_group() {
+    let rt = Runtime::reference();
+    let ds = gen_dlrm(300, 0);
+    let sim = Simulator::new(SimConfig::default());
+    let arrivals = mixed_workload(&ds);
+    let agent = untrained_agent(&rt);
+    let mut svc = PlanService::new(
+        &rt,
+        Box::new(DreamShardPlacer::from_agent(&rt, &agent)),
+        ServeConfig { capacity: 64, chunk: 4 }, // small chunks: many drains
+    );
+    for a in &arrivals {
+        let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim).unwrap();
+        svc.submit(req).unwrap().unwrap();
+    }
+    let mut completed: Vec<Planned> = vec![];
+    let first_chunk = svc.drain_chunk().unwrap();
+    assert!(!first_chunk.is_empty());
+    assert_eq!(first_chunk[0].ticket, 0, "oldest request drains first");
+    completed.extend(first_chunk);
+    completed.extend(svc.drain().unwrap());
+    assert_eq!(completed.len(), 64);
+
+    // the d=8 agent lane-shares all 2/4/8-device traffic under its own
+    // variant (Placer::serving_variant); only 128-device tasks need the
+    // ultra variant — so exactly two serving groups
+    let mut keys: Vec<(usize, usize)> = completed.iter().map(|p| p.variant).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    assert_eq!(keys, vec![(8, 48), (128, 16)], "serving groups: {keys:?}");
+    // within each serving-variant group, completion order == submit order
+    for key in keys {
+        let tickets: Vec<u64> =
+            completed.iter().filter(|p| p.variant == key).map(|p| p.ticket).collect();
+        assert!(
+            tickets.windows(2).all(|w| w[0] < w[1]),
+            "variant {key:?} completed out of FIFO order: {tickets:?}"
+        );
+    }
+}
+
+#[test]
+fn chunk_batched_ordering_pins_the_table_cost_budget() {
+    let rt = Runtime::reference();
+    let ds = gen_dlrm(300, 0);
+    let sim = Simulator::new(SimConfig::default());
+    let arrivals = mixed_workload(&ds);
+    let agent = untrained_agent(&rt);
+    let mut svc = PlanService::new(
+        &rt,
+        Box::new(DreamShardPlacer::from_agent(&rt, &agent)),
+        ServeConfig { capacity: 64, chunk: 16 },
+    );
+    for a in &arrivals {
+        let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim).unwrap();
+        svc.submit(req).unwrap().unwrap();
+    }
+    let n_cap = CostNet::table_cost_cap(&rt);
+    let mut total_chunks = 0u64;
+    while !svc.is_empty() {
+        let before = rt.run_count_for("table_cost");
+        let chunk = svc.drain_chunk().unwrap();
+        let ordering_calls = rt.run_count_for("table_cost") - before;
+        let total_tables: usize = chunk.iter().map(|p| p.plan.placement.len()).sum();
+        let budget = ((total_tables + n_cap - 1) / n_cap).max(1) as u64;
+        assert!(
+            ordering_calls <= budget,
+            "chunk of {} tables spent {ordering_calls} table_cost calls (budget {budget})",
+            total_tables
+        );
+        total_chunks += 1;
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.planned, 64);
+    assert_eq!(stats.chunks, total_chunks);
+    // one ordering pass per chunk beats one per task by construction
+    assert!(total_chunks < 64);
+    assert!(stats.mean_queue_ms() >= 0.0);
+    assert!(stats.median_queue_ms() >= 0.0);
+    assert!(stats.plans_per_sec() > 0.0);
+    assert!(stats.backend_calls > 0);
+}
