@@ -7,10 +7,11 @@ use dreamshard::coordinator::{DreamShard, TrainCfg};
 use dreamshard::placer::{DreamShardPlacer, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
 use dreamshard::util::Rng;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
-    let rt = Runtime::open_default().expect("runtime");
+    let rt = Arc::new(Runtime::open_default().expect("runtime"));
     let mut rng = Rng::new(0);
     for (n, d) in [(10usize, 4usize), (50, 4), (100, 4), (200, 8)] {
         let suite = make_suite(Which::Dlrm, n, d, 2, 7);

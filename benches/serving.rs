@@ -1,10 +1,12 @@
 //! Serving-throughput benchmark: plans/sec of the [`PlanService`]
 //! lane-batched drain vs sequential per-request planning on the same
-//! 64-request mixed-device open-loop workload (see the ROADMAP's serving
-//! front-end item). Also reports the backend-call gap: the batched drain
-//! shares one fused `mdp_step` call per MDP step across a chunk's lanes
-//! and orders every task in a chunk with one concatenated `table_cost`
-//! pass.
+//! 64-request mixed-device open-loop workload, plus the pipelined drain
+//! vs the blocking drain at 1, 2, and 4 runtime workers (see the
+//! ROADMAP's async/pipelined planning item). The batched drain shares
+//! one fused `mdp_step` call per MDP step across a chunk's lanes and
+//! orders every task in a chunk with one concatenated `table_cost` pass;
+//! the pipelined drain additionally fills chunk k+1's feature tensors
+//! while chunk k's fused call executes on the worker pool.
 
 use dreamshard::coordinator::{DreamShard, TrainCfg};
 use dreamshard::placer::{DreamShardPlacer, Placer, PlacementRequest};
@@ -13,10 +15,11 @@ use dreamshard::serve::{synthetic_arrivals, PlanService, ServeConfig, WorkloadCf
 use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, split_pools};
 use dreamshard::util::Rng;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
-    let rt = Runtime::open_default().expect("runtime");
+    let rt = Arc::new(Runtime::open_default().expect("runtime"));
     let ds = gen_dlrm(400, 0);
     let (pool, _) = split_pools(&ds, 1);
     let sim = Simulator::new(SimConfig::default());
@@ -53,14 +56,14 @@ fn main() {
         let mut svc = PlanService::new(
             &rt,
             Box::new(DreamShardPlacer::from_agent(&rt, &agent)),
-            ServeConfig { capacity: reqs.len(), chunk },
+            ServeConfig { capacity: reqs.len(), chunk, ..ServeConfig::default() },
         );
         for r in &reqs {
             svc.submit(*r).unwrap();
         }
         let calls_before = rt.run_count();
         let t0 = Instant::now();
-        let done = svc.drain().unwrap();
+        let done = svc.drain_blocking().unwrap();
         assert_eq!(done.len(), reqs.len());
         (t0.elapsed().as_secs_f64(), rt.run_count() - calls_before)
     };
@@ -79,6 +82,39 @@ fn main() {
             reqs.len() as f64 / seq_s,
             seq_calls,
             seq_s / bat_s,
+        );
+    }
+
+    // pipelined drain (sessions on the runtime worker pool, double-
+    // buffered chunk fills) vs blocking drain, across pool sizes. Plans
+    // are bit-identical (tests/serve.rs pins it); only the overlap wins.
+    for workers in [1usize, 2, 4] {
+        let rtw = Arc::new(Runtime::open_default().expect("runtime").with_workers(workers));
+        let drain = |pipelined: bool| {
+            let mut svc = PlanService::new(
+                &rtw,
+                Box::new(DreamShardPlacer::from_agent(&rtw, &agent)),
+                ServeConfig { capacity: reqs.len(), chunk: 16, ..ServeConfig::default() },
+            );
+            for r in &reqs {
+                svc.submit(*r).unwrap();
+            }
+            let t0 = Instant::now();
+            let done = if pipelined { svc.drain().unwrap() } else { svc.drain_blocking().unwrap() };
+            assert_eq!(done.len(), reqs.len());
+            t0.elapsed().as_secs_f64()
+        };
+        drain(true); // warm
+        let blk_s = drain(false);
+        let pipe_s = drain(true);
+        println!(
+            "pipelined drain, {workers} worker(s): blocking {:.1} ms ({:.1} plans/s) vs \
+             pipelined {:.1} ms ({:.1} plans/s) -> overlap win {:.2}x",
+            blk_s * 1e3,
+            reqs.len() as f64 / blk_s,
+            pipe_s * 1e3,
+            reqs.len() as f64 / pipe_s,
+            blk_s / pipe_s,
         );
     }
 }

@@ -14,7 +14,7 @@ use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_prod, sample_tasks, split_pools};
 
 fn main() -> Result<()> {
-    let rt = Runtime::open_default()?;
+    let rt = std::sync::Arc::new(Runtime::open_default()?);
 
     // train at small scale (Prod-40 (8)) behind the facade
     let train_ds = gen_prod(400, 42);

@@ -82,7 +82,7 @@ fn dlrm_as_task(hash: &[u64]) -> (Dataset, Task) {
 }
 
 fn main() -> Result<()> {
-    let rt = Runtime::open_default()?;
+    let rt = std::sync::Arc::new(Runtime::open_default()?);
     let hash = rt.manifest.dlrm_hash.clone();
     dreamshard::ensure!(
         !hash.is_empty(),

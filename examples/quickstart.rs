@@ -14,8 +14,9 @@ use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
 
 fn main() -> dreamshard::Result<()> {
-    // 1. open the runtime (reference backend unless XLA artifacts exist)
-    let rt = Runtime::open_default()?;
+    // 1. open the runtime (reference backend unless XLA artifacts exist);
+    //    placers share it through an Arc
+    let rt = std::sync::Arc::new(Runtime::open_default()?);
 
     // 2. a synthetic DLRM table pool and disjoint train/test tasks
     let ds = gen_dlrm(856, 42);

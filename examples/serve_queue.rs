@@ -10,7 +10,12 @@
 //! trains it. Watch the backend-call counter: a drained chunk shares one
 //! fused `mdp_step` call per MDP step across all its lanes and orders
 //! every task with one concatenated `table_cost` pass, so serving beats
-//! per-request planning on calls as well as wall-clock.
+//! per-request planning on calls as well as wall-clock. The drain itself
+//! is pipelined: while one chunk's fused call executes on the runtime's
+//! worker pool, the next chunk's feature tensors are filled
+//! (`PlanService::drain` — `drain_blocking` is the serial comparison).
+
+use std::sync::Arc;
 
 use dreamshard::placer::{self, PlacementRequest};
 use dreamshard::runtime::Runtime;
@@ -19,7 +24,7 @@ use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, split_pools};
 
 fn main() -> dreamshard::Result<()> {
-    let rt = Runtime::open_default()?;
+    let rt = Arc::new(Runtime::open_default()?);
     let ds = gen_dlrm(300, 7);
     let (pool, _) = split_pools(&ds, 1);
     let sim = Simulator::new(SimConfig::default());
@@ -35,12 +40,20 @@ fn main() -> dreamshard::Result<()> {
     });
 
     let placer = placer::by_name(&rt, "dreamshard")?;
-    let mut svc = PlanService::new(&rt, placer, ServeConfig { capacity: 32, chunk: 8 });
+    let mut svc = PlanService::new(&rt, placer, ServeConfig {
+        capacity: 32,
+        chunk: 8,
+        ..ServeConfig::default()
+    });
     for a in &arrivals {
         let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim)?;
         svc.submit(req)?; // Ok(None) would mean the bounded queue shed it
     }
-    println!("queued {} heterogeneous requests; draining ...\n", svc.queued());
+    println!(
+        "queued {} heterogeneous requests; pipelined drain on {} runtime worker(s) ...\n",
+        svc.queued(),
+        rt.workers()
+    );
 
     let mut done = svc.drain()?;
     done.sort_by_key(|p| p.ticket);

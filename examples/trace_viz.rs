@@ -19,7 +19,7 @@ fn main() -> dreamshard::Result<()> {
     let (pool, _) = split_pools(&ds, 1);
     let task = sample_tasks(&pool, n_tables, n_devices, 1, 7).remove(0);
     let sim = Simulator::new(SimConfig::default());
-    let rt = Runtime::open_default()?;
+    let rt = std::sync::Arc::new(Runtime::open_default()?);
     // variant slot cap when the grid covers this device count; the
     // heuristics render fine uncapped for exotic counts (e.g. 200 GPUs)
     let req = PlacementRequest::for_runtime(&rt, &ds, &task, &sim)

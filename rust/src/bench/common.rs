@@ -5,6 +5,7 @@
 use crate::util::error::Result;
 use std::io::Write;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::baselines::{Expert, ALL_EXPERTS};
 use crate::coordinator::{DreamShard, TrainCfg};
@@ -14,9 +15,9 @@ use crate::sim::{SimConfig, Simulator};
 use crate::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools, Dataset, Task};
 use crate::util::{mean_std, Rng};
 
-/// Experiment context: runtime + output directory + effort knobs.
+/// Experiment context: shared runtime + output directory + effort knobs.
 pub struct Ctx {
-    pub rt: Runtime,
+    pub rt: Arc<Runtime>,
     pub out_dir: PathBuf,
     /// Reduced task counts / training budget (see EXPERIMENTS.md).
     pub fast: bool,
@@ -25,7 +26,7 @@ pub struct Ctx {
 
 impl Ctx {
     pub fn new(fast: bool, seeds: usize) -> Result<Self> {
-        let rt = Runtime::open_default()?;
+        let rt = Arc::new(Runtime::open_default()?);
         let out_dir = PathBuf::from(
             std::env::var("DREAMSHARD_OUT").unwrap_or_else(|_| "bench_out".into()),
         );
@@ -118,7 +119,7 @@ pub fn eval_placer(
 
 /// Wrap a trained agent in its facade placer (the tables evaluate agents
 /// exclusively through [`eval_placer`]).
-pub fn agent_placer<'a>(ctx: &'a Ctx, agent: &'a DreamShard) -> DreamShardPlacer<'a> {
+pub fn agent_placer(ctx: &Ctx, agent: &DreamShard) -> DreamShardPlacer {
     DreamShardPlacer::from_agent(&ctx.rt, agent)
 }
 

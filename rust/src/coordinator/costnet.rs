@@ -92,7 +92,7 @@ impl CostNet {
         let (e, d) = (var.e, var.d);
         let theta = TensorF32::from_vec(self.theta.clone(), &[self.theta.len()]);
         let fmask = TensorF32::from_vec(self.fmask.clone(), &[NUM_FEATURES]);
-        let out = rt.run(&self.fwd_name(var), &[
+        let out = rt.run_owned(&self.fwd_name(var), vec![
             theta.value(),
             feats.value(),
             mask.value(),
@@ -135,7 +135,8 @@ impl CostNet {
             for (i, f) in chunk.iter().enumerate() {
                 t.set_row(&[i, 0], f);
             }
-            let res = rt.run("table_cost", &[theta.value(), t.value(), fmask.value()])?;
+            let res =
+                rt.run_owned("table_cost", vec![theta.value(), t.value(), fmask.value()])?;
             let v = to_f32_vec(&res[0], n_cap)?;
             out.extend_from_slice(&v[..chunk.len()]);
         }
@@ -157,7 +158,7 @@ impl CostNet {
     ) -> Result<f32> {
         self.t_step += 1.0;
         let n = self.theta.len();
-        let out = rt.run(&self.train_name(var)?, &[
+        let out = rt.run_owned(&self.train_name(var)?, vec![
             TensorF32::from_vec(std::mem::take(&mut self.theta), &[n]).into_value(),
             TensorF32::from_vec(std::mem::take(&mut self.m), &[n]).into_value(),
             TensorF32::from_vec(std::mem::take(&mut self.v), &[n]).into_value(),

@@ -64,7 +64,7 @@ impl PolicyNet {
         n: usize,
     ) -> Result<Vec<Vec<f32>>> {
         let (e, d) = (var.e, var.d);
-        let out = rt.run(&var.policy_fwd, &[
+        let out = rt.run_owned(&var.policy_fwd, vec![
             TensorF32::from_vec(self.phi.clone(), &[self.phi.len()]).into_value(),
             feats.value(),
             mask.value(),
@@ -115,7 +115,7 @@ impl PolicyNet {
             }
             self.t_step += 1.0;
             let n = self.phi.len();
-            let out = rt.run(&name, &[
+            let out = rt.run_owned(&name, vec![
                 TensorF32::from_vec(std::mem::take(&mut self.phi), &[n]).into_value(),
                 TensorF32::from_vec(std::mem::take(&mut self.m), &[n]).into_value(),
                 TensorF32::from_vec(std::mem::take(&mut self.v), &[n]).into_value(),

@@ -64,7 +64,7 @@ impl RnnBaseline {
     /// the recorded masks are replayed in training).
     fn logits(&self, rt: &Runtime, feats: &TensorF32, tmask: &TensorF32) -> Result<Vec<f32>> {
         let legal = TensorF32::ones(&[self.e_fwd, self.t_cap, self.d]);
-        let out = rt.run(&format!("rnn_fwd_d{}", self.d), &[
+        let out = rt.run_owned(&format!("rnn_fwd_d{}", self.d), vec![
             TensorF32::from_vec(self.psi.clone(), &[self.psi.len()]).into_value(),
             feats.value(),
             tmask.value(),
@@ -159,7 +159,7 @@ impl RnnBaseline {
             tm.data.copy_from_slice(&tmask.data[..self.e_train * self.t_cap]);
             self.t_step += 1.0;
             let np = self.psi.len();
-            let out = rt.run(&format!("rnn_train_d{}", self.d), &[
+            let out = rt.run_owned(&format!("rnn_train_d{}", self.d), vec![
                 TensorF32::from_vec(std::mem::take(&mut self.psi), &[np]).into_value(),
                 TensorF32::from_vec(std::mem::take(&mut self.m), &[np]).into_value(),
                 TensorF32::from_vec(std::mem::take(&mut self.v), &[np]).into_value(),

@@ -13,7 +13,7 @@ use super::costnet::CostNet;
 use super::policy::{select_action, PolicyNet, StepRec};
 use super::variant::Variant;
 use crate::mdp::PlacementState;
-use crate::runtime::{Runtime, TensorF32};
+use crate::runtime::{Runtime, TensorF32, Ticket};
 use crate::sim::Simulator;
 use crate::tables::{Dataset, Task, NUM_FEATURES};
 use crate::util::error::{Context, Result};
@@ -117,12 +117,34 @@ impl DreamShard {
         self.cfg.lr * frac.max(0.05)
     }
 
-    /// Execute one fused estimated-MDP step artifact (cost features +
-    /// policy logits for every lane). This is the single definition of
-    /// the artifact's 9-input contract, shared by the training episode
-    /// loop and the placer facade's lane-batched planning.
+    /// A cheap inference-only copy of this agent: the networks, variant,
+    /// and config are cloned (parameter vectors — kilobytes), while the
+    /// replay buffer and training log start empty. Planning reads exactly
+    /// the cloned state, so the copy's plans are bit-identical to the
+    /// original's; only [`DreamShard::train`] would diverge (it needs the
+    /// buffer), which is what the copy is *not* for.
+    pub fn inference_clone(&self) -> DreamShard {
+        DreamShard {
+            cost: self.cost.clone(),
+            policy: self.policy.clone(),
+            var: self.var.clone(),
+            cfg: self.cfg.clone(),
+            buffer: ReplayBuffer::new(self.cfg.buffer_capacity),
+            log: vec![],
+            updates_done: self.updates_done,
+            updates_total: self.updates_total,
+        }
+    }
+
+    /// Dispatch one fused estimated-MDP step artifact (cost features +
+    /// policy logits for every lane) onto the runtime's worker pool and
+    /// return its [`Ticket`]. This is the single definition of the
+    /// artifact's 9-input contract, shared by the training episode loop,
+    /// the placer facade's lane-batched planning, and the pipelined
+    /// serving drain (which fills the next chunk's tensors while this
+    /// call executes).
     #[allow(clippy::too_many_arguments)]
-    pub fn run_fused_step(
+    pub fn submit_fused_step(
         &self,
         rt: &Runtime,
         step_name: &str,
@@ -131,8 +153,8 @@ impl DreamShard {
         dmask: &TensorF32,
         cur: &TensorF32,
         legal: &TensorF32,
-    ) -> Result<Vec<crate::runtime::Value>> {
-        rt.run(step_name, &[
+    ) -> Result<Ticket> {
+        rt.submit(step_name, vec![
             TensorF32::from_vec(self.cost.theta.clone(), &[self.cost.theta.len()])
                 .into_value(),
             TensorF32::from_vec(self.policy.phi.clone(), &[self.policy.phi.len()])
@@ -145,6 +167,21 @@ impl DreamShard {
             TensorF32::from_vec(self.cost.fmask.clone(), &[NUM_FEATURES]).into_value(),
             TensorF32::from_vec(self.policy.qscale.clone(), &[3]).into_value(),
         ])
+    }
+
+    /// [`DreamShard::submit_fused_step`], blocking.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_fused_step(
+        &self,
+        rt: &Runtime,
+        step_name: &str,
+        feats: &TensorF32,
+        mask: &TensorF32,
+        dmask: &TensorF32,
+        cur: &TensorF32,
+        legal: &TensorF32,
+    ) -> Result<Vec<crate::runtime::Value>> {
+        self.submit_fused_step(rt, step_name, feats, mask, dmask, cur, legal)?.wait()
     }
 
     /// Sort a task's tables descending by predicted single-table cost.

@@ -6,12 +6,28 @@
 //!
 //! * **Layer 3 (this crate)** — the coordinator: datasets, the simulated
 //!   GPU cluster substrate, the placement MDP, the Algorithm-1 trainer,
-//!   greedy expert baselines, the [`placer`] planning facade, and the
-//!   experiment harness.
+//!   greedy expert baselines, the [`placer`] planning facade, the
+//!   [`serve`] front end, and the experiment harness.
 //! * **Layer 2** (`python/compile/model.py`) — cost / policy / RNN / DLRM
 //!   networks in JAX, AOT-lowered to HLO text.
 //! * **Layer 1** (`python/compile/kernels/`) — Pallas kernels for the
 //!   embedding-bag hot spot and the sum/max reductions.
+//!
+//! ## Concurrent runtime sessions
+//!
+//! Everything executes through one shared, thread-safe
+//! [`runtime::Runtime`] (`Arc<Runtime>` end-to-end — no borrowed runtime
+//! lifetimes anywhere in the planning stack). The runtime owns a small
+//! in-crate worker pool: [`runtime::Runtime::submit`] dispatches an
+//! artifact execution and returns a [`runtime::Ticket`],
+//! [`runtime::Ticket::wait`] joins it, and the blocking
+//! [`runtime::Runtime::run`] is exactly `submit(..).wait()` — one
+//! dispatch path, one set of lock-free per-artifact call counters
+//! ([`runtime::Runtime::run_count`] / [`runtime::Runtime::run_count_for`]),
+//! exact under any number of concurrent submitters and unpoisonable by a
+//! failed execution. [`runtime::Backend`] is `Send + Sync`; pool size
+//! comes from `DREAMSHARD_WORKERS`, [`runtime::Runtime::with_workers`],
+//! or the `serve-sim --workers` flag.
 //!
 //! ## Planning API
 //!
@@ -21,12 +37,13 @@
 //! [`placer::PlacementPlan`] back:
 //!
 //! ```
+//! use std::sync::Arc;
 //! use dreamshard::placer::{self, Placer, PlacementRequest};
 //! use dreamshard::runtime::Runtime;
 //! use dreamshard::sim::{SimConfig, Simulator};
 //! use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
 //!
-//! let rt = Runtime::reference();
+//! let rt = Arc::new(Runtime::reference());
 //! let ds = gen_dlrm(100, 0);
 //! let (pool, _) = split_pools(&ds, 1);
 //! let task = sample_tasks(&pool, 12, 4, 1, 2).remove(0);
@@ -45,24 +62,34 @@
 //! different tasks and advances them in lockstep — one fused backend call
 //! per MDP step for up to `E` tasks at once, and one concatenated
 //! `table_cost` pass ordering every task in a chunk (see
-//! [`placer::DreamShardPlacer`]).
+//! [`placer::DreamShardPlacer`]). The same lockstep loop is available as
+//! a resumable [`placer::PlanSession`] ([`placer::Placer::open_session`]):
+//! each step's CPU feature-fill and fused backend call are driven
+//! separately, which is what pipelined callers overlap.
 //!
 //! ## Serving
 //!
 //! [`serve::PlanService`] turns the facade into a front end for traffic:
 //! a bounded FIFO of heterogeneous placement requests (mixed table and
-//! device counts), drained in variant-grouped lane-chunks through one
-//! `place_many` call each, with per-request queue/plan latency and
-//! aggregate throughput recorded in [`serve::ServeStats`]. The
+//! device counts), drained in variant-grouped lane-chunks. The default
+//! [`serve::PlanService::drain`] is **pipelined**: up to
+//! [`serve::ServeConfig::inflight`] chunks stay in flight on the runtime
+//! worker pool, and while chunk k's fused call executes, chunk k+1's
+//! feature tensors are filled — plans and backend-call budgets are
+//! bit-identical to the blocking
+//! [`serve::PlanService::drain_blocking`], only the waits overlap
+//! (pinned in `tests/serve.rs`). Per-request queue/plan latency and
+//! aggregate throughput land in [`serve::ServeStats`]. The
 //! `dreamshard serve-sim` CLI subcommand replays a synthetic open-loop
 //! workload ([`serve::synthetic_arrivals`]) against it, and
-//! `benches/serving.rs` reports batched-drain vs sequential plans/sec.
+//! `benches/serving.rs` reports pipelined vs blocking drains at 1/2/4
+//! workers.
 //!
 //! ## Execution backends
 //!
 //! Python never runs at placement time: the coordinator drives the
-//! networks through the [`runtime::Backend`] seam, which has two
-//! implementations:
+//! networks through the [`runtime::Backend`] seam (`Send + Sync`), which
+//! has two implementations:
 //!
 //! * [`runtime::ReferenceBackend`] (**default**) — a pure-Rust,
 //!   dependency-free evaluator of the cost / policy / RNN networks
@@ -70,14 +97,18 @@
 //!   to the operation). `cargo build && cargo test` work from a bare
 //!   toolchain: no `make artifacts`, no native libraries.
 //! * `XlaBackend` (`--features xla`) — loads the `make artifacts` HLO
-//!   text via the PJRT C API and JIT-compiles it. Requires a real xla-rs
-//!   checkout in place of the in-tree `xla-stub` crate plus its native
-//!   `libxla_extension`; `make artifacts` is only ever needed for this
-//!   backend (and for the DLRM end-to-end example, whose embedding-bag
-//!   training step is XLA-only).
+//!   text via the PJRT C API and JIT-compiles it (thread-safe executable
+//!   cache). Requires a real xla-rs checkout in place of the in-tree
+//!   `xla-stub` crate plus its native `libxla_extension`; `make
+//!   artifacts` is only ever needed for this backend (and for the DLRM
+//!   end-to-end example, whose embedding-bag training step is XLA-only).
 //!
-//! [`runtime::Runtime::open_default`] picks the backend: artifacts present
-//! *and* the `xla` feature enabled → XLA; otherwise the reference backend.
+//! [`runtime::Runtime::open_default`] picks the backend: an explicitly
+//! set `DREAMSHARD_ARTIFACTS` makes the XLA backend mandatory (a build
+//! without the feature, or an unopenable directory, is a hard error —
+//! never a silent reference-backend substitution); otherwise artifacts
+//! present *and* the `xla` feature enabled → XLA, else the reference
+//! backend.
 
 pub mod baselines;
 pub mod bench;

@@ -18,9 +18,14 @@
 //! `serve-sim` drives the [`dreamshard::serve::PlanService`] front end
 //! with a synthetic open-loop workload (Poisson arrivals, mixed
 //! 2/4/8/128-device tasks) and prints a per-variant summary table plus
-//! aggregate throughput.
+//! aggregate throughput. `--workers N` sizes the runtime's execution
+//! worker pool, and the run closes with a pipelined-drain vs
+//! blocking-drain throughput comparison on that pool.
 //!
 //! (dependency-light by design: flags are parsed by hand, no clap)
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use dreamshard::{bail, err, Context, Result};
 
@@ -78,7 +83,7 @@ fn main() -> Result<()> {
             let n_devices = flags.get_usize("devices", 4);
             let prod = flags.has("prod");
             let policy = flags.get_str("policy", "dreamshard");
-            let rt = Runtime::open_default()?;
+            let rt = Arc::new(Runtime::open_default()?);
             let (ds, sim) = if prod {
                 (gen_prod(856, 42), Simulator::new(SimConfig::v100()))
             } else {
@@ -134,6 +139,9 @@ fn main() -> Result<()> {
             let capacity = flags.get_usize("capacity", 128);
             let seed = flags.get_usize("seed", 0) as u64;
             let policy = flags.get_str("policy", "dreamshard");
+            // --workers N resizes the runtime's execution pool (0 =
+            // keep the DREAMSHARD_WORKERS / built-in default)
+            let workers = flags.get_usize("workers", 0);
             // --devices 2,4,8,128 (device-count-specific placers like
             // `rnn` need a single count here, e.g. --devices 4)
             let device_mix = flags
@@ -145,7 +153,11 @@ fn main() -> Result<()> {
                         .map_err(|_| err!("--devices wants a comma list of counts, got `{s}`"))
                 })
                 .collect::<Result<Vec<usize>>>()?;
-            let rt = Runtime::open_default()?;
+            let mut rt = Runtime::open_default()?;
+            if workers > 0 {
+                rt = rt.with_workers(workers);
+            }
+            let rt = Arc::new(rt);
             let ds = gen_dlrm(856, 42);
             let (pool, _) = split_pools(&ds, 1007);
             let sim = Simulator::new(SimConfig::default());
@@ -165,7 +177,8 @@ fn main() -> Result<()> {
                      (serve-sim exercises the serving path; use `train` for plan quality)"
                 );
             }
-            let mut svc = PlanService::new(&rt, placer, ServeConfig { capacity, chunk });
+            let cfg = ServeConfig { capacity, chunk, ..ServeConfig::default() };
+            let mut svc = PlanService::new(&rt, placer, cfg);
 
             // open-loop replay on a virtual clock: requests arrive at
             // their schedule times; a drain occupies the service for its
@@ -220,10 +233,11 @@ fn main() -> Result<()> {
             let span_ms = arrivals.last().map(|a| a.at_ms).unwrap_or(0.0);
             println!(
                 "serve-sim: {} arrivals over {span_ms:.0} ms, {} shed, policy {}, \
-                 chunk {chunk}, capacity {capacity}",
+                 chunk {chunk}, capacity {capacity}, {} runtime workers",
                 arrivals.len(),
                 svc.stats().rejected,
                 svc.placer_name(),
+                rt.workers(),
             );
             println!("{}", table.render());
             println!(
@@ -231,10 +245,39 @@ fn main() -> Result<()> {
                  queue ms above are measured on that clock"
             );
             println!("{}", svc.stats().summary());
+
+            // saturated-queue throughput check on the same workload:
+            // blocking per-chunk drain vs the pipelined drain that fills
+            // chunk k+1's tensors while chunk k executes on the pool
+            let timed = |pipelined: bool| -> Result<f64> {
+                let placer = placer::by_name_seeded(&rt, &policy, seed)?;
+                let mut svc = PlanService::new(&rt, placer, cfg);
+                let mut accepted = 0usize;
+                for a in &arrivals {
+                    let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim)?;
+                    if svc.submit(req)?.is_some() {
+                        accepted += 1;
+                    }
+                }
+                let t0 = Instant::now();
+                let done =
+                    if pipelined { svc.drain()? } else { svc.drain_blocking()? };
+                let s = t0.elapsed().as_secs_f64();
+                debug_assert_eq!(done.len(), accepted);
+                Ok(accepted as f64 / s.max(1e-9))
+            };
+            let blocking_pps = timed(false)?;
+            let pipelined_pps = timed(true)?;
+            println!(
+                "saturated drain: blocking {blocking_pps:.1} plans/s vs pipelined \
+                 {pipelined_pps:.1} plans/s ({:.2}x) on {} workers",
+                pipelined_pps / blocking_pps.max(1e-9),
+                rt.workers(),
+            );
             Ok(())
         }
         "placers" => {
-            let rt = Runtime::open_default()?;
+            let rt = Arc::new(Runtime::open_default()?);
             for name in placer::PLACER_NAMES {
                 let p = placer::by_name(&rt, name)?;
                 let kind = if p.needs_fit() { "learned" } else { "heuristic" };

@@ -9,38 +9,57 @@
 //! so each task's plan is identical to what sequential [`Placer::place`]
 //! produces (asserted by `tests/placer_api.rs`); only the wall-clock
 //! changes (`benches/placement.rs` reports the throughput gap).
+//!
+//! The same lockstep loop is also exposed as a resumable
+//! [`DreamShardSession`] ([`Placer::open_session`]): each MDP step splits
+//! into a CPU fill half and an asynchronous fused-call half
+//! ([`crate::runtime::Runtime::submit`]), which is what lets the serving
+//! drain fill chunk k+1's tensors while chunk k executes. Both paths run
+//! the identical `LaneChunk` state machine, so pipelined plans are
+//! bit-identical to blocking ones by construction.
 
-use super::{FitRequest, Placer, PlacementPlan, PlacementRequest};
+use std::sync::Arc;
+
+use super::{FitRequest, Placer, PlacementPlan, PlacementRequest, PlanSession};
+use crate::bail;
 use crate::coordinator::{select_action, DreamShard, TrainCfg, Variant};
 use crate::mdp::PlacementState;
-use crate::runtime::{to_f32_vec, Runtime, TensorF32};
+use crate::runtime::{to_f32_vec, Runtime, TensorF32, Ticket, Value};
 use crate::tables::{Dataset, Task, NUM_FEATURES};
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
 
 const NAME: &str = "dreamshard";
 
-/// The DreamShard agent as a [`Placer`]. Holds either a borrowed trained
-/// agent ([`DreamShardPlacer::from_agent`]) or an owned one created by
-/// [`Placer::fit`] / lazily on first use ([`DreamShardPlacer::untrained`]).
-pub struct DreamShardPlacer<'a> {
-    rt: &'a Runtime,
-    owned: Option<DreamShard>,
-    borrowed: Option<&'a DreamShard>,
+/// The DreamShard agent as a [`Placer`]. Shares the runtime as
+/// `Arc<Runtime>` and the agent as `Arc<DreamShard>` (no borrowed
+/// lifetimes), so the placer — and any service or session built on it —
+/// moves freely across threads.
+pub struct DreamShardPlacer {
+    rt: Arc<Runtime>,
+    agent: Option<Arc<DreamShard>>,
     cfg: TrainCfg,
     seed: u64,
 }
 
-impl<'a> DreamShardPlacer<'a> {
+impl DreamShardPlacer {
     /// An unfitted agent; [`Placer::place`] before [`Placer::fit`] lazily
     /// initializes random weights (deterministic, useful for benches).
-    pub fn untrained(rt: &'a Runtime) -> Self {
-        DreamShardPlacer { rt, owned: None, borrowed: None, cfg: TrainCfg::default(), seed: 0 }
+    pub fn untrained(rt: &Arc<Runtime>) -> Self {
+        DreamShardPlacer { rt: Arc::clone(rt), agent: None, cfg: TrainCfg::default(), seed: 0 }
     }
 
-    /// Wrap an already-trained agent.
-    pub fn from_agent(rt: &'a Runtime, agent: &'a DreamShard) -> Self {
-        DreamShardPlacer { rt, owned: None, borrowed: Some(agent), cfg: TrainCfg::default(), seed: 0 }
+    /// Wrap an already-trained agent. The placer snapshots the agent's
+    /// inference state ([`DreamShard::inference_clone`]: networks +
+    /// variant, kilobytes), which is exactly what planning reads — plans
+    /// are bit-identical to running the original agent.
+    pub fn from_agent(rt: &Arc<Runtime>, agent: &DreamShard) -> Self {
+        DreamShardPlacer {
+            rt: Arc::clone(rt),
+            agent: Some(Arc::new(agent.inference_clone())),
+            cfg: TrainCfg::default(),
+            seed: 0,
+        }
     }
 
     /// Configuration for the lazily-created untrained agent (first
@@ -57,16 +76,14 @@ impl<'a> DreamShardPlacer<'a> {
     }
 
     fn agent(&self) -> Option<&DreamShard> {
-        match self.borrowed {
-            Some(a) => Some(a),
-            None => self.owned.as_ref(),
-        }
+        self.agent.as_deref()
     }
 
     fn ensure_agent(&mut self, n_devices: usize) -> Result<()> {
-        if self.agent().is_none() {
+        if self.agent.is_none() {
             let mut rng = Rng::new(self.seed).fork(0xD5);
-            self.owned = Some(DreamShard::new(self.rt, n_devices, self.cfg.clone(), &mut rng)?);
+            self.agent =
+                Some(Arc::new(DreamShard::new(&self.rt, n_devices, self.cfg.clone(), &mut rng)?));
         }
         Ok(())
     }
@@ -79,7 +96,7 @@ impl<'a> DreamShardPlacer<'a> {
         if n_devices <= agent.var.d {
             Ok(agent.var.clone())
         } else {
-            Variant::for_devices(self.rt, n_devices)
+            Variant::for_devices(&self.rt, n_devices)
         }
     }
 
@@ -90,20 +107,18 @@ impl<'a> DreamShardPlacer<'a> {
         &self,
         agent: &DreamShard,
         var: &Variant,
-        reqs: &[&PlacementRequest<'_>],
+        reqs: &[PlacementRequest<'_>],
     ) -> Result<Vec<PlacementPlan>> {
-        let (d, s) = (var.d, var.s);
-        let f = NUM_FEATURES;
         let Some((lanes, step_name)) = var.mdp_step_for(reqs.len()).cloned() else {
             // no fused artifact lowered for this variant: plan one
             // episode at a time through the classic path (which honors
             // the request's slot cap just like the lane-batched path)
             let mut plans = Vec::with_capacity(reqs.len());
-            for &r in reqs {
+            for r in reqs {
                 let mut rng = Rng::new(0); // unused by argmax
                 let ep = agent
                     .run_episodes_var(
-                        self.rt, r.sim, r.ds, r.task, 1, false, false, &mut rng, var, false,
+                        &self.rt, r.sim, r.ds, r.task, 1, false, false, &mut rng, var, false,
                         r.max_slots,
                     )?
                     .remove(0);
@@ -117,71 +132,31 @@ impl<'a> DreamShardPlacer<'a> {
         // hoisted above the lane chunking so the ordering budget is
         // ceil(total_tables / N_cap) however the lanes split
         let jobs: Vec<(&Dataset, &Task)> = reqs.iter().map(|r| (r.ds, r.task)).collect();
-        let mut orders = agent.order_tables_batch(self.rt, &jobs)?.into_iter();
+        let mut orders = agent.order_tables_batch(&self.rt, &jobs)?.into_iter();
         let mut plans = Vec::with_capacity(reqs.len());
         for chunk in reqs.chunks(lanes) {
-            let n = chunk.len();
-            let mut states: Vec<PlacementState> = Vec::with_capacity(n);
-            for &r in chunk {
-                let order = orders.next().expect("one order per request");
-                states.push(PlacementState::new(r.ds, r.task, order, s.min(r.max_slots)));
-            }
-            let steps = chunk.iter().map(|r| r.task.n_tables()).max().unwrap_or(0);
-            let mut rng = Rng::new(0); // unused by argmax
-            for _t in 0..steps {
-                let mut feats = TensorF32::zeros(&[lanes, d, s, f]);
-                let mut mask = TensorF32::zeros(&[lanes, d, s]);
-                let mut dmask = TensorF32::zeros(&[lanes, d]);
-                let mut cur = TensorF32::zeros(&[lanes, f]);
-                let mut legal_t = TensorF32::zeros(&[lanes, d]);
-                // per-lane legal mask; None once a (shorter) task finished
-                let mut legal: Vec<Option<Vec<bool>>> = Vec::with_capacity(n);
-                for (lane, st) in states.iter().enumerate() {
-                    st.fill_feats(lane, d, s, &mut feats, &mut mask, &mut dmask)?;
-                    if st.done() {
-                        legal.push(None); // lane logits computed but unused
-                        continue;
-                    }
-                    cur.set_row(&[lane, 0], &st.current_features());
-                    let lg = st.legal(chunk[lane].sim);
-                    for (dev, &ok) in lg.iter().enumerate() {
-                        legal_t.set(&[lane, dev], if ok { 1.0 } else { 0.0 });
-                    }
-                    legal.push(Some(lg));
-                }
+            let chunk_orders: Vec<Vec<usize>> = orders.by_ref().take(chunk.len()).collect();
+            let mut lc = LaneChunk::new(var, lanes, chunk, chunk_orders);
+            while !lc.done() {
+                let (feats, mask, dmask, cur, legal_t) = lc.fill()?;
                 // the single fused backend call all lanes share this step
                 let out = agent
-                    .run_fused_step(self.rt, &step_name, &feats, &mask, &dmask, &cur, &legal_t)?;
-                let logits = to_f32_vec(&out[0], lanes * d)?;
-                for (lane, st) in states.iter_mut().enumerate() {
-                    let Some(lg) = &legal[lane] else { continue };
-                    // dead end (memory + slot caps exhausted everywhere):
-                    // least-loaded device with a free slot, as in training
-                    let a = if lg.iter().any(|&ok| ok) {
-                        select_action(&logits[lane * d..(lane + 1) * d], lg, false, &mut rng)
-                    } else {
-                        st.fallback_device().with_context(|| {
-                            format!("lane {lane}: no device can take the table")
-                        })?
-                    };
-                    st.apply(a);
-                }
+                    .run_fused_step(&self.rt, &step_name, &feats, &mask, &dmask, &cur, &legal_t)?;
+                lc.apply(&out)?;
             }
-            for (st, &r) in states.iter().zip(chunk.iter()) {
-                plans.push(PlacementPlan::new(r, st.placement.clone(), NAME));
-            }
+            plans.extend(lc.into_plans());
         }
         Ok(plans)
     }
 }
 
-impl Placer for DreamShardPlacer<'_> {
+impl Placer for DreamShardPlacer {
     fn name(&self) -> &str {
         NAME
     }
 
     fn needs_fit(&self) -> bool {
-        self.agent().is_none()
+        self.agent.is_none()
     }
 
     fn fit(&mut self, req: &FitRequest<'_>) -> Result<()> {
@@ -192,8 +167,8 @@ impl Placer for DreamShardPlacer<'_> {
             .max()
             .context("dreamshard fit requires at least one task")?;
         let mut rng = Rng::new(req.seed);
-        let mut agent = DreamShard::new(self.rt, d, req.cfg.clone(), &mut rng)?;
-        agent.train(self.rt, req.sim, req.ds, req.tasks, &mut rng)?;
+        let mut agent = DreamShard::new(&self.rt, d, req.cfg.clone(), &mut rng)?;
+        agent.train(&self.rt, req.sim, req.ds, req.tasks, &mut rng)?;
         if req.verbose {
             for st in &agent.log {
                 eprintln!(
@@ -202,8 +177,7 @@ impl Placer for DreamShardPlacer<'_> {
                 );
             }
         }
-        self.borrowed = None;
-        self.owned = Some(agent);
+        self.agent = Some(Arc::new(agent));
         Ok(())
     }
 
@@ -229,13 +203,13 @@ impl Placer for DreamShardPlacer<'_> {
         }
         let max_dev = reqs.iter().map(|r| r.task.n_devices).max().unwrap();
         self.ensure_agent(max_dev)?;
-        let agent = self.agent().expect("agent ensured above");
+        let agent = Arc::clone(self.agent.as_ref().expect("agent ensured above"));
         // group lanes by serving variant: tasks with different device
         // counts share the agent's variant (masking covers the gap), so
         // heterogeneous batches still fill the same lanes
         let mut groups: Vec<(Variant, Vec<usize>)> = vec![];
         for (i, r) in reqs.iter().enumerate() {
-            let var = self.variant_for(agent, r.task.n_devices)?;
+            let var = self.variant_for(&agent, r.task.n_devices)?;
             match groups.iter_mut().find(|(v, _)| v.d == var.d && v.s == var.s) {
                 Some((_, idxs)) => idxs.push(i),
                 None => groups.push((var, vec![i])),
@@ -243,12 +217,212 @@ impl Placer for DreamShardPlacer<'_> {
         }
         let mut plans: Vec<Option<PlacementPlan>> = (0..reqs.len()).map(|_| None).collect();
         for (var, idxs) in &groups {
-            let group: Vec<&PlacementRequest<'_>> = idxs.iter().map(|&i| &reqs[i]).collect();
-            let got = self.plan_batch(agent, var, &group)?;
+            let group: Vec<PlacementRequest<'_>> = idxs.iter().map(|&i| reqs[i]).collect();
+            let got = self.plan_batch(&agent, var, &group)?;
             for (&i, plan) in idxs.iter().zip(got.into_iter()) {
                 plans[i] = Some(plan);
             }
         }
         Ok(plans.into_iter().map(|p| p.expect("every request planned")).collect())
+    }
+
+    /// A [`DreamShardSession`] whenever the chunk is what a
+    /// variant-grouped serving drain produces: every request served by
+    /// the same artifact variant, a fused step artifact lowered for it,
+    /// and the chunk fitting that artifact's lanes. Mixed-variant or
+    /// oversized chunks (and variants without a fused artifact) decline
+    /// with `Ok(None)` so the caller falls back to blocking
+    /// [`Placer::place_many`] — same plans, no overlap.
+    fn open_session<'a>(
+        &mut self,
+        reqs: &[PlacementRequest<'a>],
+    ) -> Result<Option<Box<dyn PlanSession<'a> + 'a>>> {
+        if reqs.is_empty() {
+            return Ok(None);
+        }
+        let max_dev = reqs.iter().map(|r| r.task.n_devices).max().unwrap();
+        self.ensure_agent(max_dev)?;
+        let agent = Arc::clone(self.agent.as_ref().expect("agent ensured above"));
+        let var = self.variant_for(&agent, reqs[0].task.n_devices)?;
+        for r in &reqs[1..] {
+            let v = self.variant_for(&agent, r.task.n_devices)?;
+            if (v.d, v.s) != (var.d, var.s) {
+                return Ok(None);
+            }
+        }
+        let Some((lanes, step_name)) = var.mdp_step_for(reqs.len()).cloned() else {
+            return Ok(None);
+        };
+        if reqs.len() > lanes {
+            return Ok(None);
+        }
+        // the chunk-batched ordering pass runs blocking at session open:
+        // it is one `table_cost` call per N_cap rows either way, and its
+        // output feeds the very first fill
+        let jobs: Vec<(&Dataset, &Task)> = reqs.iter().map(|r| (r.ds, r.task)).collect();
+        let orders = agent.order_tables_batch(&self.rt, &jobs)?;
+        let chunk = LaneChunk::new(&var, lanes, reqs, orders);
+        Ok(Some(Box::new(DreamShardSession {
+            rt: Arc::clone(&self.rt),
+            agent,
+            step_name,
+            chunk,
+        })))
+    }
+}
+
+/// Lockstep lane state for one chunk of requests sharing a fused-step
+/// artifact. Each MDP step splits into [`LaneChunk::fill`] (CPU: build
+/// the fused call's input tensors, record per-lane legality) and
+/// [`LaneChunk::apply`] (CPU: pick actions from the call's logits and
+/// advance the lanes), so the blocking path and the pipelined session
+/// drive the *same* state machine — bit-identical plans by construction.
+struct LaneChunk<'a> {
+    reqs: Vec<PlacementRequest<'a>>,
+    states: Vec<PlacementState<'a>>,
+    /// Per-lane legal mask of the in-flight step; `None` once a (shorter)
+    /// task has finished. Rebuilt by each `fill`, consumed by `apply`.
+    legal: Vec<Option<Vec<bool>>>,
+    lanes: usize,
+    d: usize,
+    /// The artifact's baked slot dimension S (tensor shape — per-state
+    /// slot *caps* are `min(S, request.max_slots)` and live in the
+    /// states).
+    s: usize,
+    step: usize,
+    steps: usize,
+    rng: Rng,
+}
+
+impl<'a> LaneChunk<'a> {
+    fn new(
+        var: &Variant,
+        lanes: usize,
+        reqs: &[PlacementRequest<'a>],
+        orders: Vec<Vec<usize>>,
+    ) -> Self {
+        let s = var.s;
+        let states: Vec<PlacementState<'a>> = reqs
+            .iter()
+            .zip(orders)
+            .map(|(r, order)| PlacementState::new(r.ds, r.task, order, s.min(r.max_slots)))
+            .collect();
+        let steps = reqs.iter().map(|r| r.task.n_tables()).max().unwrap_or(0);
+        LaneChunk {
+            reqs: reqs.to_vec(),
+            states,
+            legal: vec![],
+            lanes,
+            d: var.d,
+            s,
+            step: 0,
+            steps,
+            rng: Rng::new(0), // unused by argmax
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.step >= self.steps
+    }
+
+    /// CPU half 1: build the fused step's input tensors from the lanes.
+    #[allow(clippy::type_complexity)]
+    fn fill(&mut self) -> Result<(TensorF32, TensorF32, TensorF32, TensorF32, TensorF32)> {
+        let (lanes, d, s, f) = (self.lanes, self.d, self.s, NUM_FEATURES);
+        let mut feats = TensorF32::zeros(&[lanes, d, s, f]);
+        let mut mask = TensorF32::zeros(&[lanes, d, s]);
+        let mut dmask = TensorF32::zeros(&[lanes, d]);
+        let mut cur = TensorF32::zeros(&[lanes, f]);
+        let mut legal_t = TensorF32::zeros(&[lanes, d]);
+        self.legal.clear();
+        for (lane, st) in self.states.iter().enumerate() {
+            st.fill_feats(lane, d, s, &mut feats, &mut mask, &mut dmask)?;
+            if st.done() {
+                self.legal.push(None); // lane logits computed but unused
+                continue;
+            }
+            cur.set_row(&[lane, 0], &st.current_features());
+            let lg = st.legal(self.reqs[lane].sim);
+            for (dev, &ok) in lg.iter().enumerate() {
+                legal_t.set(&[lane, dev], if ok { 1.0 } else { 0.0 });
+            }
+            self.legal.push(Some(lg));
+        }
+        Ok((feats, mask, dmask, cur, legal_t))
+    }
+
+    /// CPU half 2: pick each live lane's action from the fused call's
+    /// logits and advance its MDP state.
+    fn apply(&mut self, out: &[Value]) -> Result<()> {
+        let (lanes, d) = (self.lanes, self.d);
+        let logits = to_f32_vec(&out[0], lanes * d)?;
+        for (lane, st) in self.states.iter_mut().enumerate() {
+            let Some(lg) = &self.legal[lane] else { continue };
+            // dead end (memory + slot caps exhausted everywhere):
+            // least-loaded device with a free slot, as in training
+            let a = if lg.iter().any(|&ok| ok) {
+                select_action(&logits[lane * d..(lane + 1) * d], lg, false, &mut self.rng)
+            } else {
+                st.fallback_device()
+                    .with_context(|| format!("lane {lane}: no device can take the table"))?
+            };
+            st.apply(a);
+        }
+        self.step += 1;
+        Ok(())
+    }
+
+    fn into_plans(self) -> Vec<PlacementPlan> {
+        self.states
+            .iter()
+            .zip(self.reqs.iter())
+            .map(|(st, r)| PlacementPlan::new(r, st.placement.clone(), NAME))
+            .collect()
+    }
+}
+
+/// The DreamShard implementation of [`PlanSession`]: one variant-grouped
+/// lane-chunk advanced through [`DreamShard::submit_fused_step`], so the
+/// fused call of step t executes on the runtime worker pool while the
+/// caller fills other tensors (see
+/// [`crate::serve::PlanService::drain`]).
+pub struct DreamShardSession<'a> {
+    rt: Arc<Runtime>,
+    agent: Arc<DreamShard>,
+    step_name: String,
+    chunk: LaneChunk<'a>,
+}
+
+impl<'a> PlanSession<'a> for DreamShardSession<'a> {
+    fn submit_step(&mut self) -> Result<Option<Ticket>> {
+        if self.chunk.done() {
+            return Ok(None);
+        }
+        let (feats, mask, dmask, cur, legal_t) = self.chunk.fill()?;
+        let ticket = self.agent.submit_fused_step(
+            &self.rt,
+            &self.step_name,
+            &feats,
+            &mask,
+            &dmask,
+            &cur,
+            &legal_t,
+        )?;
+        Ok(Some(ticket))
+    }
+
+    fn apply_step(&mut self, out: Vec<Value>) -> Result<()> {
+        self.chunk.apply(&out)
+    }
+
+    fn finish(self: Box<Self>) -> Result<Vec<PlacementPlan>> {
+        if !self.chunk.done() {
+            bail!(
+                "planning session finished early: {}/{} MDP steps applied",
+                self.chunk.step,
+                self.chunk.steps
+            );
+        }
+        Ok(self.chunk.into_plans())
     }
 }

@@ -1,5 +1,6 @@
 //! The crate's planning facade: **one trait over every placement
-//! strategy**, a string registry, and lane-batched multi-task planning.
+//! strategy**, a string registry, lane-batched multi-task planning, and
+//! resumable planning sessions for pipelined serving.
 //!
 //! DreamShard's core claim is a single policy that generalizes across
 //! placement tasks; this module gives the crate a matching shape. Every
@@ -14,17 +15,25 @@
 //!   loop; [`DreamShardPlacer`] overrides it to run up to `E` requests
 //!   *concurrently through one fused backend call per MDP step* — the
 //!   feature tensors already carry an episode dimension, so a batch of
-//!   heterogeneous tasks fills lanes instead of looping whole episodes.
+//!   heterogeneous tasks fills lanes instead of looping whole episodes;
+//! * [`Placer::open_session`] opens the same lane-batched planning as a
+//!   resumable [`PlanSession`]: the caller drives each MDP step's
+//!   CPU feature-fill and asynchronous backend dispatch explicitly, so a
+//!   pipelined drain can fill chunk k+1's tensors while chunk k's fused
+//!   call executes on the runtime worker pool.
 //!
+//! Placers share the runtime as `Arc<Runtime>` — no borrowed lifetimes —
+//! so they (and the services wrapping them) move freely across threads.
 //! Strategies are selected by name through [`by_name`]:
 //!
 //! ```
+//! use std::sync::Arc;
 //! use dreamshard::placer::{self, Placer, PlacementRequest};
 //! use dreamshard::runtime::Runtime;
 //! use dreamshard::sim::{SimConfig, Simulator};
 //! use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
 //!
-//! let rt = Runtime::reference();
+//! let rt = Arc::new(Runtime::reference());
 //! let ds = gen_dlrm(100, 0);
 //! let (pool, _) = split_pools(&ds, 1);
 //! let task = sample_tasks(&pool, 10, 4, 1, 2).remove(0);
@@ -45,13 +54,15 @@
 mod dreamshard;
 mod strategies;
 
-pub use self::dreamshard::DreamShardPlacer;
+pub use self::dreamshard::{DreamShardPlacer, DreamShardSession};
 pub use self::strategies::{GreedyPlacer, RandomPlacer, RnnPlacer};
+
+use std::sync::Arc;
 
 use crate::baselines::ALL_EXPERTS;
 use crate::coordinator::{TrainCfg, Variant};
 use crate::err;
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, Ticket, Value};
 use crate::sim::{Evaluation, Simulator};
 use crate::tables::{Dataset, Table, Task};
 use crate::util::error::Result;
@@ -133,6 +144,33 @@ pub struct FitRequest<'a> {
     pub verbose: bool,
 }
 
+/// A resumable lane-chunk planning session ([`Placer::open_session`]):
+/// one chunk of requests advanced one fused MDP step at a time, with the
+/// CPU half (feature fill, action selection) and the backend half
+/// (the fused call, dispatched onto the runtime worker pool) split apart
+/// so a caller can overlap them across chunks.
+///
+/// Protocol: call [`PlanSession::submit_step`]; while its [`Ticket`] is
+/// in flight, do other CPU work (fill another chunk's tensors); then
+/// [`PlanSession::apply_step`] with the joined outputs; repeat until
+/// `submit_step` returns `Ok(None)`, then [`PlanSession::finish`]. The
+/// session runs the same MDP with the same artifacts as a blocking
+/// [`Placer::place_many`] over the same requests — plans are
+/// bit-identical, only the wait is moved.
+pub trait PlanSession<'a> {
+    /// Fill the next MDP step's feature tensors (CPU) and dispatch the
+    /// fused backend call. `Ok(None)` once every lane has finished.
+    fn submit_step(&mut self) -> Result<Option<Ticket>>;
+
+    /// Apply the joined outputs of the ticket returned by the matching
+    /// [`PlanSession::submit_step`] to the lanes (CPU).
+    fn apply_step(&mut self, out: Vec<Value>) -> Result<()>;
+
+    /// Extract the finished plans, in request order. Errors if steps
+    /// remain (a ticket was submitted but never applied).
+    fn finish(self: Box<Self>) -> Result<Vec<PlacementPlan>>;
+}
+
 /// One placement strategy behind a stable task -> plan interface.
 pub trait Placer {
     /// Registry name (`by_name(rt, placer.name())` rebuilds it).
@@ -170,6 +208,21 @@ pub trait Placer {
     fn serving_variant(&self, _req: &PlacementRequest<'_>) -> Option<(usize, usize)> {
         None
     }
+
+    /// Open a resumable [`PlanSession`] over one chunk of requests — the
+    /// hook pipelined drains overlap chunks through. `Ok(None)` (the
+    /// default) means this placer (or this particular request mix) only
+    /// supports blocking [`Placer::place_many`], and the caller must fall
+    /// back to it; that is never an error. DreamShard returns a session
+    /// whenever the chunk shares one artifact variant with a fused step
+    /// artifact and fits its lanes — exactly the chunks a variant-grouped
+    /// serving drain produces.
+    fn open_session<'a>(
+        &mut self,
+        _reqs: &[PlacementRequest<'a>],
+    ) -> Result<Option<Box<dyn PlanSession<'a> + 'a>>> {
+        Ok(None)
+    }
 }
 
 /// Every name [`by_name`] accepts, in display order.
@@ -185,19 +238,16 @@ pub const PLACER_NAMES: &[&str] = &[
 
 /// Build a placer from its registry name. Learned strategies come back
 /// untrained (see [`Placer::needs_fit`] / [`Placer::fit`]); `rt` is the
-/// runtime they execute on. Stochastic/lazy-init streams are seeded 0;
-/// use [`by_name_seeded`] to control them.
-pub fn by_name<'rt>(rt: &'rt Runtime, name: &str) -> Result<Box<dyn Placer + 'rt>> {
+/// shared runtime they execute on (learned placers keep an `Arc` clone).
+/// Stochastic/lazy-init streams are seeded 0; use [`by_name_seeded`] to
+/// control them.
+pub fn by_name(rt: &Arc<Runtime>, name: &str) -> Result<Box<dyn Placer>> {
     by_name_seeded(rt, name, 0)
 }
 
 /// [`by_name`] with an explicit seed for the strategy's stochastic
 /// stream (random draws, lazy weight init).
-pub fn by_name_seeded<'rt>(
-    rt: &'rt Runtime,
-    name: &str,
-    seed: u64,
-) -> Result<Box<dyn Placer + 'rt>> {
+pub fn by_name_seeded(rt: &Arc<Runtime>, name: &str, seed: u64) -> Result<Box<dyn Placer>> {
     if let Some(key) = name.strip_prefix("greedy:") {
         let expert = ALL_EXPERTS
             .into_iter()
@@ -232,7 +282,7 @@ mod tests {
 
     #[test]
     fn by_name_round_trips_every_listed_placer() {
-        let rt = Runtime::reference();
+        let rt = Arc::new(Runtime::reference());
         for name in PLACER_NAMES {
             let p = by_name(&rt, name).unwrap_or_else(|e| panic!("{name}: {e}"));
             assert_eq!(p.name(), *name);
@@ -241,7 +291,7 @@ mod tests {
 
     #[test]
     fn by_name_rejects_unknown_names() {
-        let rt = Runtime::reference();
+        let rt = Arc::new(Runtime::reference());
         for bad in ["", "greedy", "greedy:", "greedy:bogus", "dream-shard", "RANDOM"] {
             let e = by_name(&rt, bad).err().unwrap_or_else(|| panic!("`{bad}` accepted"));
             assert!(e.to_string().contains("unknown placer"), "{bad}: {e}");
@@ -250,7 +300,7 @@ mod tests {
 
     #[test]
     fn learned_placers_need_fit_and_baselines_do_not() {
-        let rt = Runtime::reference();
+        let rt = Arc::new(Runtime::reference());
         for name in PLACER_NAMES {
             let p = by_name(&rt, name).unwrap();
             let learned = matches!(*name, "rnn" | "dreamshard");
@@ -260,7 +310,7 @@ mod tests {
 
     #[test]
     fn every_baseline_plans_through_the_trait() {
-        let rt = Runtime::reference();
+        let rt = Arc::new(Runtime::reference());
         let (ds, task, sim) = setup();
         let req = PlacementRequest::for_runtime(&rt, &ds, &task, &sim).unwrap();
         assert_eq!(req.max_slots, 48, "trainable-variant slot cap");
@@ -279,7 +329,7 @@ mod tests {
 
     #[test]
     fn seeded_random_placers_draw_differently() {
-        let rt = Runtime::reference();
+        let rt = Arc::new(Runtime::reference());
         let (ds, task, sim) = setup();
         let req = PlacementRequest::new(&ds, &task, &sim);
         let p1 = by_name_seeded(&rt, "random", 1).unwrap().place(&req).unwrap();
@@ -291,7 +341,7 @@ mod tests {
 
     #[test]
     fn place_many_default_covers_all_requests() {
-        let rt = Runtime::reference();
+        let rt = Arc::new(Runtime::reference());
         let (ds, _, sim) = setup();
         let (pool, _) = split_pools(&ds, 1);
         let tasks = sample_tasks(&pool, 15, 4, 4, 9);
@@ -303,6 +353,17 @@ mod tests {
         for plan in &plans {
             assert_eq!(plan.placement.len(), 15);
         }
+    }
+
+    #[test]
+    fn default_open_session_declines_gracefully() {
+        // non-batch placers have no session path; the serving drain must
+        // get a clean None (fall back to blocking), never an error
+        let rt = Arc::new(Runtime::reference());
+        let (ds, task, sim) = setup();
+        let req = PlacementRequest::new(&ds, &task, &sim);
+        let mut p = by_name(&rt, "greedy:dim").unwrap();
+        assert!(p.open_session(&[req]).unwrap().is_none());
     }
 
     #[test]

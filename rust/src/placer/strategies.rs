@@ -1,6 +1,8 @@
 //! Non-fused [`Placer`] implementations: the random baseline, the four
 //! greedy human experts, and the RNN-based RL baseline.
 
+use std::sync::Arc;
+
 use super::{FitRequest, Placer, PlacementPlan, PlacementRequest};
 use crate::bail;
 use crate::baselines::{greedy_placement_capped, random_placement_capped, Expert};
@@ -63,22 +65,22 @@ impl Placer for GreedyPlacer {
 /// a controller for the fit tasks' device count, and planning a task with
 /// any other device count fails (the architecture cannot generalize —
 /// that limitation is the point of the baseline).
-pub struct RnnPlacer<'rt> {
-    rt: &'rt Runtime,
+pub struct RnnPlacer {
+    rt: Arc<Runtime>,
     model: Option<RnnBaseline>,
     seed: u64,
 }
 
-impl<'rt> RnnPlacer<'rt> {
+impl RnnPlacer {
     /// An unfitted controller; [`Placer::place`] before [`Placer::fit`]
     /// lazily initializes random weights (useful for smoke tests only).
-    pub fn untrained(rt: &'rt Runtime) -> Self {
-        RnnPlacer { rt, model: None, seed: 0 }
+    pub fn untrained(rt: &Arc<Runtime>) -> Self {
+        RnnPlacer { rt: Arc::clone(rt), model: None, seed: 0 }
     }
 
     /// Wrap an already-trained controller.
-    pub fn from_model(rt: &'rt Runtime, model: RnnBaseline) -> Self {
-        RnnPlacer { rt, model: Some(model), seed: 0 }
+    pub fn from_model(rt: &Arc<Runtime>, model: RnnBaseline) -> Self {
+        RnnPlacer { rt: Arc::clone(rt), model: Some(model), seed: 0 }
     }
 
     pub fn with_seed(mut self, seed: u64) -> Self {
@@ -87,7 +89,7 @@ impl<'rt> RnnPlacer<'rt> {
     }
 }
 
-impl Placer for RnnPlacer<'_> {
+impl Placer for RnnPlacer {
     fn name(&self) -> &str {
         "rnn"
     }
@@ -104,13 +106,13 @@ impl Placer for RnnPlacer<'_> {
             .max()
             .context("rnn fit requires at least one task")?;
         let mut rng = Rng::new(req.seed);
-        let mut model = RnnBaseline::new(self.rt, d, &mut rng)?;
+        let mut model = RnnBaseline::new(&self.rt, d, &mut rng)?;
         // same update budget the paper grants DreamShard's policy stage;
         // one-update steps keep the rng stream identical to a single
         // train(updates) call while allowing progress logging
         let updates = req.cfg.n_iterations * req.cfg.n_rl;
         for u in 0..updates {
-            model.train(self.rt, req.sim, req.ds, req.tasks, 1, &mut rng)?;
+            model.train(&self.rt, req.sim, req.ds, req.tasks, 1, &mut rng)?;
             if req.verbose && ((u + 1) % 10 == 0 || u + 1 == updates) {
                 eprintln!("  rnn: REINFORCE update {}/{updates}", u + 1);
             }
@@ -122,7 +124,7 @@ impl Placer for RnnPlacer<'_> {
     fn place(&mut self, req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
         if self.model.is_none() {
             let mut rng = Rng::new(self.seed).fork(0x9A11);
-            self.model = Some(RnnBaseline::new(self.rt, req.task.n_devices, &mut rng)?);
+            self.model = Some(RnnBaseline::new(&self.rt, req.task.n_devices, &mut rng)?);
         }
         let model = self.model.as_ref().unwrap();
         if model.d != req.task.n_devices {
@@ -133,7 +135,7 @@ impl Placer for RnnPlacer<'_> {
                 req.task.n_devices
             );
         }
-        let p = model.place_with_slots(self.rt, req.sim, req.ds, req.task, req.max_slots)?;
+        let p = model.place_with_slots(&self.rt, req.sim, req.ds, req.task, req.max_slots)?;
         Ok(PlacementPlan::new(req, p, "rnn"))
     }
 }

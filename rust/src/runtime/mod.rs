@@ -1,6 +1,7 @@
 //! Network-execution runtime behind a pluggable [`Backend`] seam.
 //!
 //! The coordinator only ever calls `Runtime::run(artifact_name, inputs)`
+//! (or its asynchronous form, `Runtime::submit(..)` + [`Ticket::wait`])
 //! with host [`Value`] tensors; what executes underneath is a backend:
 //!
 //! * [`ReferenceBackend`] (default, always available) — pure-Rust
@@ -17,23 +18,37 @@
 //! The artifact *names* (`cost_fwd_d4s48`, `policy_train_d4s48_b512`, ...)
 //! are the contract both backends implement; the manifest carries their
 //! baked shape metadata either way.
+//!
+//! ## Concurrent sessions
+//!
+//! [`Backend`] is `Send + Sync` and the runtime is designed to be shared
+//! as `Arc<Runtime>`: executions dispatch onto a small in-crate worker
+//! pool ([`Runtime::submit`] returns a [`Ticket`]; [`Ticket::wait`] joins
+//! it), the blocking [`Runtime::run`] is exactly `submit(..).wait()`, and
+//! the per-artifact call counters are lock-free atomics (one per manifest
+//! artifact, fixed at construction) so N threads hammering one runtime
+//! never contend on — or poison — a lock on the hot dispatch path. Pool
+//! size comes from `DREAMSHARD_WORKERS` (default 2, always ≥ 1) or
+//! [`Runtime::with_workers`].
 
 mod manifest;
 #[cfg(feature = "xla")]
 mod pjrt;
 pub mod reference;
+mod session;
 mod tensor;
 
 pub use manifest::{Artifact, Manifest, ParamInfo, Segment};
 #[cfg(feature = "xla")]
 pub use pjrt::XlaBackend;
 pub use reference::ReferenceBackend;
+pub use session::Ticket;
 pub use tensor::{to_f32_vec, TensorF32, TensorI32, Value};
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
 
 use crate::util::error::Result;
 use crate::util::Rng;
@@ -44,11 +59,17 @@ use crate::{bail, err};
 /// with `return_tuple=True`, and the reference backend matches that
 /// calling convention).
 ///
+/// Backends are `Send + Sync`: the runtime dispatches executions from a
+/// worker pool and may run several concurrently, so any internal caches
+/// must be contention-safe. They are also *leaf* executors — `execute`
+/// must never call back into `Runtime::run`/`submit` (with one worker
+/// that would self-deadlock).
+///
 /// Output contract: element order and total length are guaranteed;
 /// output `dims()` are advisory only (the XLA backend returns flattened
 /// rank-1 values, the reference backend returns shaped ones). Consume
 /// outputs through [`to_f32_vec`]-style length-checked extraction.
-pub trait Backend {
+pub trait Backend: Send + Sync {
     /// Short human-readable backend name (for logs / `dreamshard info`).
     fn name(&self) -> &'static str;
 
@@ -56,25 +77,103 @@ pub trait Backend {
     fn execute(&self, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>>;
 }
 
-/// Executor facade over a [`Backend`] + its [`Manifest`].
+/// The shared dispatch core: the backend plus its call counters. Worker
+/// threads hold `Arc<Dispatch>` clones, so the pool needs no back-pointer
+/// to the [`Runtime`] that owns it.
+pub(crate) struct Dispatch {
+    backend: Box<dyn Backend>,
+    /// Total executions dispatched (see [`Runtime::run_count`]).
+    calls: AtomicU64,
+    /// Per-artifact execution counts: one atomic per manifest artifact,
+    /// keys fixed at construction — lock-free on the hot dispatch path
+    /// and unpoisonable (a panicking execution cannot wedge them).
+    calls_named: HashMap<String, AtomicU64>,
+}
+
+impl Dispatch {
+    fn new(backend: Box<dyn Backend>, manifest: &Manifest) -> Dispatch {
+        Dispatch {
+            backend,
+            calls: AtomicU64::new(0),
+            calls_named: manifest
+                .artifacts
+                .keys()
+                .map(|k| (k.clone(), AtomicU64::new(0)))
+                .collect(),
+        }
+    }
+
+    /// Count the dispatch, then execute. Runs on pool workers.
+    pub(crate) fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        if let Some(counter) = self.calls_named.get(name) {
+            counter.fetch_add(1, Ordering::Relaxed);
+        }
+        self.backend
+            .execute(name, inputs)
+            .map_err(|e| e.wrap(format!("executing {name} on {}", self.backend.name())))
+    }
+}
+
+/// Default worker-pool size: `DREAMSHARD_WORKERS` when set, else 2 —
+/// enough to overlap feature-fill with execution without oversubscribing
+/// test machines that build many runtimes. An explicitly set but
+/// unusable value (not an integer ≥ 1) panics with the reason rather
+/// than being silently replaced by the default — the same
+/// no-silent-substitution policy [`Runtime::open_default`] applies to
+/// `DREAMSHARD_ARTIFACTS` (a CI run that typos the variable must not
+/// green-light an unexercised configuration). The programmatic
+/// [`Runtime::with_workers`] keeps its forgiving clamp-to-1 instead.
+fn default_workers() -> usize {
+    match std::env::var("DREAMSHARD_WORKERS") {
+        Ok(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => panic!(
+                "DREAMSHARD_WORKERS={v} is not a valid worker count (want an integer >= 1); \
+                 unset it to use the default pool size"
+            ),
+        },
+        Err(_) => 2,
+    }
+}
+
+/// Executor facade over a [`Backend`] + its [`Manifest`], shareable
+/// across threads as `Arc<Runtime>`.
 pub struct Runtime {
     pub manifest: Manifest,
-    backend: Box<dyn Backend>,
-    /// Executions dispatched through [`Runtime::run`] (see [`Runtime::run_count`]).
-    calls: AtomicU64,
-    /// Per-artifact execution counts (see [`Runtime::run_count_for`]).
-    calls_named: Mutex<HashMap<String, u64>>,
+    dispatch: Arc<Dispatch>,
+    pool: session::Pool,
 }
 
 impl Runtime {
+    fn build(manifest: Manifest, backend: Box<dyn Backend>, workers: usize) -> Self {
+        let dispatch = Arc::new(Dispatch::new(backend, &manifest));
+        let pool = session::Pool::spawn(Arc::clone(&dispatch), workers);
+        Runtime { manifest, dispatch, pool }
+    }
+
     /// The pure-Rust reference backend (no artifacts, no native code).
     pub fn reference() -> Self {
-        Runtime {
-            manifest: reference::reference_manifest(),
-            backend: Box::new(ReferenceBackend::new()),
-            calls: AtomicU64::new(0),
-            calls_named: Mutex::new(HashMap::new()),
-        }
+        Self::with_backend(reference::reference_manifest(), Box::new(ReferenceBackend::new()))
+    }
+
+    /// A runtime over any [`Backend`] implementation and its manifest
+    /// (how tests inject failing/panicking backends; the named counters
+    /// are allocated from the manifest's artifact set here).
+    pub fn with_backend(manifest: Manifest, backend: Box<dyn Backend>) -> Self {
+        Self::build(manifest, backend, default_workers())
+    }
+
+    /// Replace the worker pool with one of `n` threads (clamped to ≥ 1).
+    /// Call before wrapping the runtime in an `Arc`; counters carry over.
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.pool = session::Pool::spawn(Arc::clone(&self.dispatch), n);
+        self
+    }
+
+    /// Worker threads serving [`Runtime::submit`].
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
     }
 
     /// Open an artifact directory produced by `make artifacts` on the XLA
@@ -87,12 +186,7 @@ impl Runtime {
         let manifest = Manifest::parse_file(&dir.join("manifest.txt"))
             .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
         let backend = XlaBackend::new(dir, &manifest)?;
-        Ok(Runtime {
-            manifest,
-            backend: Box::new(backend),
-            calls: AtomicU64::new(0),
-            calls_named: Mutex::new(HashMap::new()),
-        })
+        Ok(Self::with_backend(manifest, Box::new(backend)))
     }
 
     /// Without the `xla` feature there is nothing to open: artifacts are
@@ -106,55 +200,90 @@ impl Runtime {
         )
     }
 
-    /// Default runtime: the XLA backend when it is compiled in *and* its
-    /// artifacts exist (`DREAMSHARD_ARTIFACTS`, default `artifacts/`),
-    /// otherwise the reference backend.
+    /// Default runtime. When `DREAMSHARD_ARTIFACTS` is **explicitly set**
+    /// the XLA backend is mandatory: a build without the `xla` feature —
+    /// or a directory that does not open — is a hard error, never a
+    /// silent substitution of the reference backend. Without the
+    /// variable, the XLA backend is used when it is compiled in *and*
+    /// `artifacts/manifest.txt` exists, otherwise the reference backend.
     pub fn open_default() -> Result<Self> {
-        let dir = std::env::var("DREAMSHARD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        if cfg!(feature = "xla") && Path::new(&dir).join("manifest.txt").exists() {
-            return Self::open(dir);
+        match std::env::var("DREAMSHARD_ARTIFACTS") {
+            Ok(dir) => {
+                if cfg!(feature = "xla") {
+                    Self::open(dir)
+                } else {
+                    bail!(
+                        "DREAMSHARD_ARTIFACTS={dir} is set but this build has no XLA \
+                         backend (rebuild with `--features xla`); refusing to silently \
+                         substitute the reference backend — unset the variable to opt \
+                         into Runtime::reference()"
+                    )
+                }
+            }
+            Err(_) => {
+                if cfg!(feature = "xla") && Path::new("artifacts").join("manifest.txt").exists()
+                {
+                    return Self::open("artifacts");
+                }
+                Ok(Self::reference())
+            }
         }
-        Ok(Self::reference())
     }
 
     /// Which backend this runtime executes on.
     pub fn backend_name(&self) -> &'static str {
-        self.backend.name()
+        self.dispatch.backend.name()
     }
 
-    /// Execute an artifact by manifest name.
-    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+    /// Dispatch an artifact execution onto the worker pool and return a
+    /// [`Ticket`] for it. Errors immediately for names not in the
+    /// manifest (such a dispatch is never counted). The inputs are moved
+    /// to the executing worker; results come back through
+    /// [`Ticket::wait`].
+    pub fn submit(&self, name: &str, inputs: Vec<Value>) -> Result<Ticket> {
         if !self.manifest.artifacts.contains_key(name) {
             bail!("artifact {name} not in manifest");
         }
-        self.calls.fetch_add(1, Ordering::Relaxed);
-        {
-            // allocate the key only the first time an artifact is seen
-            let mut named = self.calls_named.lock().unwrap();
-            match named.get_mut(name) {
-                Some(count) => *count += 1,
-                None => {
-                    named.insert(name.to_string(), 1);
-                }
-            }
-        }
-        self.backend
-            .execute(name, inputs)
-            .map_err(|e| e.wrap(format!("executing {name} on {}", self.backend.name())))
+        Ok(self.pool.submit(name.to_string(), inputs))
     }
 
-    /// Total artifact executions dispatched through [`Runtime::run`] so
-    /// far. Diagnostics counter: the lane-batching tests use deltas of it
-    /// to assert the one-backend-call-per-MDP-step contract.
+    /// Execute an artifact by manifest name, blocking: exactly
+    /// [`Runtime::submit`] followed by [`Ticket::wait`], so blocking and
+    /// pipelined call sites share one dispatch path and one set of
+    /// call-budget counters. Borrowed inputs are cloned to cross onto the
+    /// pool; hot loops that build their input array per call should use
+    /// [`Runtime::run_owned`] and move it instead.
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.run_owned(name, inputs.to_vec())
+    }
+
+    /// [`Runtime::run`] taking ownership of the inputs — no defensive
+    /// clone before the worker hand-off. The coordinator's network
+    /// forward/train calls (which assemble fresh input tensors every
+    /// call) go through this.
+    pub fn run_owned(&self, name: &str, inputs: Vec<Value>) -> Result<Vec<Value>> {
+        self.submit(name, inputs)?.wait()
+    }
+
+    /// Total artifact executions dispatched so far (through blocking
+    /// [`Runtime::run`] or [`Runtime::submit`] tickets). Diagnostics
+    /// counter: the lane-batching tests use deltas of it to assert the
+    /// one-backend-call-per-MDP-step contract.
     pub fn run_count(&self) -> u64 {
-        self.calls.load(Ordering::Relaxed)
+        self.dispatch.calls.load(Ordering::Relaxed)
     }
 
     /// Executions of one specific artifact so far. The serving tests use
     /// deltas of it to pin the chunk-batched `table_cost` call budget
-    /// (`ceil(total_tables / N_cap)` per drained chunk).
+    /// (`ceil(total_tables / N_cap)` per drained chunk). Reads a
+    /// per-artifact atomic — exact under concurrent submitters, and still
+    /// readable after a failed (even panicked) execution.
     pub fn run_count_for(&self, name: &str) -> u64 {
-        self.calls_named.lock().unwrap().get(name).copied().unwrap_or(0)
+        self.dispatch
+            .calls_named
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     /// Initialize a flat parameter vector for a registered network,
@@ -188,6 +317,7 @@ mod tests {
         assert!(rt.manifest.params.contains_key("cost"));
         assert!(rt.manifest.params.contains_key("policy"));
         assert_eq!(rt.backend_name(), "reference");
+        assert!(rt.workers() >= 1);
     }
 
     #[test]
@@ -226,9 +356,34 @@ mod tests {
     }
 
     #[test]
+    fn submit_wait_matches_blocking_run() {
+        let rt = Runtime::reference();
+        let mut rng = Rng::new(0);
+        let theta = rt.init_params("cost", &mut rng).unwrap();
+        let n = rt.manifest.artifact_meta("table_cost", "N").unwrap() as usize;
+        let f = rt.manifest.consts["F"] as usize;
+        let inputs = vec![
+            TensorF32::from_vec(theta, &[rt.manifest.params["cost"].total]).value(),
+            TensorF32::ones(&[n, f]).value(),
+            TensorF32::ones(&[f]).value(),
+        ];
+        let blocking = rt.run("table_cost", &inputs).unwrap();
+        let ticket = rt.submit("table_cost", inputs).unwrap();
+        let ticketed = ticket.wait().unwrap();
+        assert_eq!(
+            to_f32_vec(&blocking[0], n).unwrap(),
+            to_f32_vec(&ticketed[0], n).unwrap(),
+            "ticketed execution is bit-identical to blocking run"
+        );
+        assert_eq!(rt.run_count(), 2);
+        assert_eq!(rt.run_count_for("table_cost"), 2);
+    }
+
+    #[test]
     fn unknown_artifact_is_an_error() {
         let rt = Runtime::reference();
         assert!(rt.run("no_such_artifact", &[]).is_err());
+        assert!(rt.submit("no_such_artifact", vec![]).is_err());
         // a failed dispatch (unknown name) is not counted
         assert_eq!(rt.run_count(), 0);
         assert_eq!(rt.run_count_for("no_such_artifact"), 0);
@@ -252,5 +407,44 @@ mod tests {
         assert_eq!(rt.run_count_for("table_cost"), 2);
         assert_eq!(rt.run_count_for("cost_fwd_d4s48"), 0);
         assert_eq!(rt.run_count(), 2);
+    }
+
+    #[test]
+    fn with_workers_resizes_the_pool() {
+        let rt = Runtime::reference().with_workers(3);
+        assert_eq!(rt.workers(), 3);
+        // the clamp: zero workers would deadlock every dispatch
+        let rt = Runtime::reference().with_workers(0);
+        assert_eq!(rt.workers(), 1);
+        // the pool still executes after a resize
+        let mut rng = Rng::new(0);
+        let theta = rt.init_params("cost", &mut rng).unwrap();
+        let n = rt.manifest.artifact_meta("table_cost", "N").unwrap() as usize;
+        let f = rt.manifest.consts["F"] as usize;
+        let out = rt
+            .run("table_cost", &[
+                TensorF32::from_vec(theta, &[rt.manifest.params["cost"].total]).value(),
+                TensorF32::zeros(&[n, f]).value(),
+                TensorF32::ones(&[f]).value(),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn dropping_an_unwaited_ticket_does_not_wedge_the_runtime() {
+        let rt = Runtime::reference();
+        let mut rng = Rng::new(0);
+        let theta = rt.init_params("cost", &mut rng).unwrap();
+        let n = rt.manifest.artifact_meta("table_cost", "N").unwrap() as usize;
+        let f = rt.manifest.consts["F"] as usize;
+        let inputs = vec![
+            TensorF32::from_vec(theta, &[rt.manifest.params["cost"].total]).value(),
+            TensorF32::zeros(&[n, f]).value(),
+            TensorF32::ones(&[f]).value(),
+        ];
+        drop(rt.submit("table_cost", inputs.clone()).unwrap());
+        // the pool keeps serving, and the runtime drops cleanly afterward
+        assert!(rt.run("table_cost", &inputs).is_ok());
     }
 }

@@ -6,10 +6,9 @@
 //! feature type-checks offline; constructing the backend against the stub
 //! fails with a pointer at the real dependency.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use super::manifest::Manifest;
 use super::tensor::{TensorF32, TensorI32, Value};
@@ -17,14 +16,38 @@ use super::Backend;
 use crate::err;
 use crate::util::error::Result;
 
-/// Lazily-compiling PJRT executor over an artifact directory.
-pub struct XlaBackend {
+/// Every xla-rs handle the backend owns, behind one lock: the client and
+/// the compiled-executable cache. All compilation *and* execution happen
+/// under this mutex — xla-rs wrapper types use non-atomic internal
+/// sharing (the pre-concurrency design here held them in `Rc`/`RefCell`
+/// for a reason), so concurrent `execute` calls are serialized rather
+/// than trusted to be thread-safe. Lifting this to true parallel
+/// dispatch requires auditing the real xla-rs crate's handle sharing,
+/// not just the PJRT C API underneath it.
+struct XlaState {
     client: xla::PjRtClient,
+    cache: HashMap<String, Arc<xla::PjRtLoadedExecutable>>,
+}
+
+/// Lazily-compiling PJRT executor over an artifact directory. Satisfies
+/// the `Backend: Send + Sync` contract by serializing all xla-handle
+/// access behind `XlaState`'s mutex (executions do not overlap on this
+/// backend; the reference backend is the parallel one).
+pub struct XlaBackend {
+    state: Mutex<XlaState>,
     dir: PathBuf,
     /// artifact name -> HLO text file (from the manifest).
     files: HashMap<String, String>,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
 }
+
+// SAFETY: every xla-rs handle lives inside `state: Mutex<XlaState>` and
+// is only touched while that lock is held, so cross-thread use is fully
+// serialized (the mutex provides the happens-before edges); the impls
+// additionally assert that the handles may *move* between threads
+// while externally synchronized, which holds for PJRT's C-API objects
+// (they are plain heap pointers with no thread affinity).
+unsafe impl Send for XlaBackend {}
+unsafe impl Sync for XlaBackend {}
 
 impl XlaBackend {
     pub fn new(dir: PathBuf, manifest: &Manifest) -> Result<Self> {
@@ -34,28 +57,38 @@ impl XlaBackend {
             .iter()
             .map(|(name, art)| (name.clone(), art.file.clone()))
             .collect();
-        Ok(XlaBackend { client, dir, files, cache: RefCell::new(HashMap::new()) })
+        Ok(XlaBackend {
+            state: Mutex::new(XlaState { client, cache: HashMap::new() }),
+            dir,
+            files,
+        })
     }
 
     /// Compile (or fetch from cache) an artifact by manifest name.
-    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
+    /// Called with the state lock held; keeping the compile under the
+    /// lock also means concurrent first calls never duplicate JIT work.
+    fn executable(
+        &self,
+        state: &mut XlaState,
+        name: &str,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = state.cache.get(name) {
+            return Ok(Arc::clone(e));
         }
         let file = self.files.get(name).ok_or_else(|| err!("artifact {name} not in manifest"))?;
         let path = self.dir.join(file);
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| err!("parse {path:?}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| err!("compile {name}: {e:?}"))?;
-        let rc = Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        let exe = state.client.compile(&comp).map_err(|e| err!("compile {name}: {e:?}"))?;
+        let rc = Arc::new(exe);
+        state.cache.insert(name.to_string(), Arc::clone(&rc));
         Ok(rc)
     }
 
     /// Number of artifacts compiled so far (for tests/metrics).
     pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).cache.len()
     }
 }
 
@@ -80,9 +113,11 @@ impl Backend for XlaBackend {
     }
 
     /// Execute an artifact: literals in, tuple-decomposed literals out
-    /// (everything is lowered with `return_tuple=True`).
+    /// (everything is lowered with `return_tuple=True`). Serialized
+    /// under the state lock (see `XlaState`).
     fn execute(&self, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>> {
-        let exe = self.executable(artifact)?;
+        let mut state = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let exe = self.executable(&mut state, artifact)?;
         let literals: Vec<xla::Literal> =
             inputs.iter().map(to_literal).collect::<Result<_>>()?;
         let out = exe.execute(&literals).map_err(|e| err!("execute {artifact}: {e:?}"))?;

@@ -1,0 +1,147 @@
+//! The runtime's execution-session layer: a small in-crate worker pool
+//! (std threads + channels, zero external dependencies) behind
+//! `Runtime::submit` / `Ticket::wait`.
+//!
+//! Every artifact execution is a `Job` pushed onto one shared queue;
+//! pool workers pull jobs FIFO, run them through the shared `Dispatch`
+//! core (which counts the dispatch and calls `Backend::execute`), and
+//! reply on the job's private channel. A `Ticket` is the caller's end of
+//! that channel: `wait` joins the execution. The blocking `Runtime::run`
+//! is exactly `submit(..).wait()`, so blocking and pipelined callers
+//! share one dispatch path — and one set of call-budget counters.
+//!
+//! Two deliberate properties:
+//!
+//! * **panics stay on the worker**: a panic inside `Backend::execute` is
+//!   caught, converted to an `Err`, and the worker survives — callers see
+//!   a normal error and the counters remain readable (no poisoned locks:
+//!   the counters are atomics).
+//! * **no nested dispatch**: jobs must never `submit`/`run` from inside
+//!   `Backend::execute` — with a single worker that would self-deadlock.
+//!   Backends are leaf executors by contract.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use super::{Dispatch, Value};
+use crate::err;
+use crate::util::error::Result;
+
+/// One queued artifact execution.
+struct Job {
+    name: String,
+    inputs: Vec<Value>,
+    reply: Sender<Result<Vec<Value>>>,
+}
+
+/// A pending execution dispatched by [`Runtime::submit`]. Join it with
+/// [`Ticket::wait`]; dropping it instead abandons the result (the worker
+/// still executes — and counts — the job, the output is discarded).
+///
+/// [`Runtime::submit`]: super::Runtime::submit
+pub struct Ticket {
+    name: String,
+    rx: Receiver<Result<Vec<Value>>>,
+}
+
+impl Ticket {
+    /// Block until the pool finishes this execution and return the
+    /// artifact outputs. A panic inside the backend surfaces here as an
+    /// `Err` (the worker survives), never as a second panic.
+    pub fn wait(self) -> Result<Vec<Value>> {
+        match self.rx.recv() {
+            Ok(result) => result,
+            // only possible if the pool was torn down mid-flight
+            Err(_) => Err(err!("runtime shut down before `{}` finished executing", self.name)),
+        }
+    }
+}
+
+/// The worker pool: N threads draining one shared job queue.
+pub(super) struct Pool {
+    /// `None` after shutdown begins; workers exit on the disconnect.
+    tx: Mutex<Option<Sender<Job>>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    n: usize,
+}
+
+impl Pool {
+    pub(super) fn spawn(dispatch: Arc<Dispatch>, n: usize) -> Pool {
+        let n = n.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let dispatch = Arc::clone(&dispatch);
+                thread::Builder::new()
+                    .name(format!("dreamshard-exec-{i}"))
+                    .spawn(move || worker(&rx, &dispatch))
+                    .expect("spawn runtime worker thread")
+            })
+            .collect();
+        Pool { tx: Mutex::new(Some(tx)), handles, n }
+    }
+
+    pub(super) fn workers(&self) -> usize {
+        self.n
+    }
+
+    pub(super) fn submit(&self, name: String, inputs: Vec<Value>) -> Ticket {
+        let (reply, rx) = channel();
+        let ticket = Ticket { name: name.clone(), rx };
+        let guard = self.tx.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(tx) = guard.as_ref() {
+            // cannot fail: workers only exit once this sender is dropped
+            let _ = tx.send(Job { name, inputs, reply });
+        }
+        ticket
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        // close the queue first so blocked workers observe the disconnect
+        *self.tx.lock().unwrap_or_else(|e| e.into_inner()) = None;
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(rx: &Mutex<Receiver<Job>>, dispatch: &Dispatch) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+            match guard.recv() {
+                Ok(job) => job,
+                Err(_) => return, // queue closed: the runtime was dropped
+            }
+        };
+        // a backend panic must not kill the worker (or poison anything):
+        // catch it, report it as an error, keep serving. The counters the
+        // dispatch already bumped are atomics, so they stay readable.
+        let result = catch_unwind(AssertUnwindSafe(|| dispatch.run(&job.name, &job.inputs)))
+            .unwrap_or_else(|payload| {
+                Err(err!(
+                    "backend panicked executing {}: {}",
+                    job.name,
+                    panic_message(payload.as_ref())
+                ))
+            });
+        // the ticket may have been dropped without waiting; that is fine
+        let _ = job.reply.send(result);
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}

@@ -21,14 +21,23 @@
 //!   shared by every lane, plus one concatenated `[N, F]` `table_cost`
 //!   pass ordering every task in the chunk
 //!   ([`crate::coordinator::DreamShard::order_tables_batch`]);
+//! * [`PlanService::drain`] **pipelines** those chunks over the placer's
+//!   resumable sessions ([`crate::placer::Placer::open_session`]): up to
+//!   [`ServeConfig::inflight`] chunks stay in flight on the shared
+//!   runtime's worker pool, and while chunk k's fused call executes, the
+//!   drain loop fills chunk k+1's feature tensors (double-buffered).
+//!   Plans and per-chunk call budgets are bit-identical to the blocking
+//!   [`PlanService::drain_blocking`]; only the waits overlap. Chunks the
+//!   placer declines a session for fall back to the blocking path;
 //! * per-request queue/plan latency and aggregate throughput are recorded
 //!   in [`ServeStats`], and drained plans come back as [`Planned`]
 //!   (ticket + plan + latency split).
 //!
 //! Workload generation lives in [`synthetic_arrivals`]: the open-loop
 //! arrival schedules (exponential gaps, mixed 2/4/8/128-device tasks)
-//! that the `serve-sim` CLI subcommand, `benches/serving.rs`, and
-//! `examples/serve_queue.rs` replay.
+//! that the `serve-sim` CLI subcommand (`--workers` sizes the runtime
+//! pool), `benches/serving.rs` (pipelined vs blocking drain at 1/2/4
+//! workers), and `examples/serve_queue.rs` replay.
 
 mod service;
 mod workload;

@@ -1,14 +1,16 @@
 //! [`PlanService`]: the bounded planning queue and its variant-grouped,
-//! lane-chunked drain loop.
+//! lane-chunked drain loop — blocking per chunk, or pipelined across
+//! chunks over the placer's resumable sessions.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::Variant;
 use crate::err;
-use crate::placer::{Placer, PlacementPlan, PlacementRequest};
-use crate::runtime::Runtime;
-use crate::util::error::Result;
+use crate::placer::{Placer, PlacementPlan, PlacementRequest, PlanSession};
+use crate::runtime::{Runtime, Ticket};
+use crate::util::error::{Error, Result};
 use crate::util::median;
 
 /// Service knobs.
@@ -22,11 +24,16 @@ pub struct ServeConfig {
     /// lane-chunk size. The DreamShard placer fills up to `E` backend
     /// lanes per chunk, so the artifact's lane count is the natural value.
     pub chunk: usize,
+    /// Chunks concurrently in flight during a pipelined
+    /// [`PlanService::drain`] (2 = double buffering: chunk k+1's feature
+    /// tensors fill while chunk k's fused call executes). 1 disables the
+    /// overlap without changing any plan.
+    pub inflight: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { capacity: 256, chunk: 16 }
+        ServeConfig { capacity: 256, chunk: 16, inflight: 2 }
     }
 }
 
@@ -41,7 +48,10 @@ pub struct Planned {
     /// Time spent queued (submit to drain start), ms.
     pub queue_ms: f64,
     /// Wall time of the chunk this request was planned with, ms —
-    /// requests in one chunk complete together, so they share it.
+    /// requests in one chunk complete together, so they share it. In a
+    /// pipelined drain this span overlaps other chunks' spans (it is a
+    /// latency, not a throughput denominator — that is
+    /// [`ServeStats::busy_s`]).
     pub plan_ms: f64,
 }
 
@@ -59,12 +69,15 @@ pub struct ServeStats {
     pub rejected: u64,
     /// Requests planned and returned.
     pub planned: u64,
-    /// `place_many` chunks drained.
+    /// Chunks drained (one `place_many` call or one planning session
+    /// each).
     pub chunks: u64,
     /// Backend executions dispatched while draining (via
     /// [`Runtime::run_count`] deltas).
     pub backend_calls: u64,
-    /// Total wall time spent inside `place_many`, seconds.
+    /// Total wall time spent planning, seconds: inside `place_many` for
+    /// blocking drains, and the whole pipelined burst (overlap counted
+    /// once) for [`PlanService::drain`].
     pub busy_s: f64,
     queue_ms_sum: f64,
     plan_ms_sum: f64,
@@ -141,11 +154,22 @@ struct Queued<'a> {
     submitted: Instant,
 }
 
+/// One chunk being advanced by the pipelined drain: its open session,
+/// the queue entries it will answer, and the fused call currently in
+/// flight on the runtime worker pool (`None` once all steps applied).
+struct InFlight<'a> {
+    session: Box<dyn PlanSession<'a> + 'a>,
+    picked: Vec<Queued<'a>>,
+    key: (usize, usize),
+    start: Instant,
+    ticket: Option<Ticket>,
+}
+
 /// A planning service over any [`Placer`]: bounded FIFO in, lane-batched
 /// chunks out. See the [module docs](crate::serve) for the drain policy.
 pub struct PlanService<'a> {
-    rt: &'a Runtime,
-    placer: Box<dyn Placer + 'a>,
+    rt: Arc<Runtime>,
+    placer: Box<dyn Placer>,
     cfg: ServeConfig,
     queue: VecDeque<Queued<'a>>,
     next_ticket: u64,
@@ -154,6 +178,12 @@ pub struct PlanService<'a> {
     /// placer could not name its serving variant at submit time), so the
     /// next drain should ask again before grouping.
     fallback_keys: bool,
+    /// The placer has been handed at least one chunk (`place_many` or
+    /// `open_session`) — i.e. a lazily-initialized placer has had its
+    /// chance to create its agent, so re-asking for serving variants can
+    /// succeed now. Gates [`PlanService::refresh_keys`] so the pass never
+    /// runs — and never wrongly concludes "hopeless" — before that.
+    placer_engaged: bool,
     /// A refresh pass after planning had begun got `None` for every
     /// queued request: the placer never names variants (greedy, random,
     /// rnn) — stop asking.
@@ -165,15 +195,20 @@ impl<'a> PlanService<'a> {
     /// on — it is consulted for scheduling metadata (fallback variant
     /// keys from its manifest) and for the backend-call counters the
     /// stats report; a different handle would mis-key and count nothing.
-    pub fn new(rt: &'a Runtime, placer: Box<dyn Placer + 'a>, cfg: ServeConfig) -> Self {
+    pub fn new(rt: &Arc<Runtime>, placer: Box<dyn Placer>, cfg: ServeConfig) -> Self {
         PlanService {
-            rt,
+            rt: Arc::clone(rt),
             placer,
-            cfg: ServeConfig { capacity: cfg.capacity.max(1), chunk: cfg.chunk.max(1) },
+            cfg: ServeConfig {
+                capacity: cfg.capacity.max(1),
+                chunk: cfg.chunk.max(1),
+                inflight: cfg.inflight.max(1),
+            },
             queue: VecDeque::new(),
             next_ticket: 0,
             stats: ServeStats::default(),
             fallback_keys: false,
+            placer_engaged: false,
             refresh_hopeless: false,
         }
     }
@@ -219,7 +254,7 @@ impl<'a> PlanService<'a> {
         let key = match self.placer.serving_variant(&req) {
             Some(key) => key,
             None => {
-                let var = Variant::for_devices(self.rt, req.task.n_devices)?;
+                let var = Variant::for_devices(&self.rt, req.task.n_devices)?;
                 self.fallback_keys = true;
                 (var.d, var.s)
             }
@@ -231,50 +266,49 @@ impl<'a> PlanService<'a> {
         Ok(Some(ticket))
     }
 
-    /// Drain one lane-chunk: the oldest request picks the serving
+    /// Refresh stale grouping keys when they can be stale: some key came
+    /// from the submit-time fallback AND the placer has been engaged (a
+    /// lazily-initialized placer — an untrained DreamShard — cannot
+    /// report its serving variant until its first chunk creates the
+    /// agent; after that, fallback-keyed requests re-merge under the
+    /// agent's variant here — in a pipelined drain that is already the
+    /// *second pick of the first burst*, matching the blocking drain's
+    /// grouping). Placers that knew their variants at submit time never
+    /// pay this pass, and one all-`None` pass disarms it for placers
+    /// that never will.
+    fn refresh_keys(&mut self) {
+        if !self.fallback_keys || self.refresh_hopeless || !self.placer_engaged {
+            return;
+        }
+        let mut any_known = false;
+        let mut all_known = true;
+        for q in self.queue.iter_mut() {
+            match self.placer.serving_variant(&q.req) {
+                Some(k) => {
+                    q.key = k;
+                    any_known = true;
+                }
+                None => all_known = false,
+            }
+        }
+        if all_known {
+            self.fallback_keys = false;
+        }
+        if !any_known {
+            self.refresh_hopeless = true;
+        }
+    }
+
+    /// Pop the next lane-chunk: the oldest request picks the serving
     /// variant; up to [`ServeConfig::chunk`] queued requests of that
     /// variant are collected in FIFO order (younger requests of other
-    /// variants keep their place in the queue) and planned through one
-    /// [`Placer::place_many`] call. Returns the completed requests in
-    /// submission order; empty when the queue is empty.
-    ///
-    /// Completion order is FIFO within each variant group as keyed at
-    /// drain time. Keys are stable — and the per-group FIFO guarantee
-    /// therefore global — once the placer knows its serving variants,
-    /// which is always the case for a fitted (or wrapped-agent) placer;
-    /// a lazily-initialized one may merge fallback-keyed groups after
-    /// its first drain creates the agent.
-    pub fn drain_chunk(&mut self) -> Result<Vec<Planned>> {
+    /// variants keep their place in the queue). `None` when the queue is
+    /// empty.
+    fn pick_chunk(&mut self) -> Option<((usize, usize), Vec<Queued<'a>>)> {
         if self.queue.is_empty() {
-            return Ok(vec![]);
+            return None;
         }
-        // refresh grouping keys first, but only when they can be stale:
-        // some key came from the submit-time fallback AND a drain has
-        // already run (a lazily-initialized placer — an untrained
-        // DreamShard — cannot report its serving variant until its first
-        // drain creates the agent; after that, fallback-keyed requests
-        // re-merge under the agent's variant here). Placers that knew
-        // their variants at submit time never pay this pass, and one
-        // all-`None` pass disarms it for placers that never will.
-        if self.fallback_keys && !self.refresh_hopeless && self.stats.chunks > 0 {
-            let mut any_known = false;
-            let mut all_known = true;
-            for q in self.queue.iter_mut() {
-                match self.placer.serving_variant(&q.req) {
-                    Some(k) => {
-                        q.key = k;
-                        any_known = true;
-                    }
-                    None => all_known = false,
-                }
-            }
-            if all_known {
-                self.fallback_keys = false;
-            }
-            if !any_known {
-                self.refresh_hopeless = true;
-            }
-        }
+        self.refresh_keys();
         let key = self.queue.front().expect("checked non-empty").key;
         let mut picked: Vec<Queued<'a>> = Vec::new();
         let mut rest: VecDeque<Queued<'a>> = VecDeque::with_capacity(self.queue.len());
@@ -286,11 +320,62 @@ impl<'a> PlanService<'a> {
             }
         }
         self.queue = rest;
+        Some((key, picked))
+    }
 
+    /// Put a picked chunk back at the head of the queue, original order
+    /// intact (a failed drain must not lose requests).
+    fn requeue(&mut self, picked: Vec<Queued<'a>>) {
+        for q in picked.into_iter().rev() {
+            self.queue.push_front(q);
+        }
+    }
+
+    /// Account a successfully planned chunk and build its [`Planned`]
+    /// records. `count_busy` adds the chunk's own wall span to
+    /// [`ServeStats::busy_s`] (blocking drains); pipelined drains count
+    /// their burst wall once instead, since chunk spans overlap.
+    fn finish_chunk(
+        &mut self,
+        key: (usize, usize),
+        picked: Vec<Queued<'a>>,
+        plans: Vec<PlacementPlan>,
+        start: Instant,
+        count_busy: bool,
+    ) -> Vec<Planned> {
+        let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+        self.stats.chunks += 1;
+        if count_busy {
+            self.stats.busy_s += wall_ms / 1e3;
+        }
+        let mut done = Vec::with_capacity(picked.len());
+        for (q, plan) in picked.into_iter().zip(plans.into_iter()) {
+            let queue_ms = start.duration_since(q.submitted).as_secs_f64() * 1e3;
+            self.stats.record(queue_ms, wall_ms);
+            done.push(Planned { ticket: q.ticket, variant: key, plan, queue_ms, plan_ms: wall_ms });
+        }
+        done
+    }
+
+    /// Drain one lane-chunk through one blocking
+    /// [`Placer::place_many`] call. Returns the completed requests in
+    /// submission order; empty when the queue is empty.
+    ///
+    /// Completion order is FIFO within each variant group as keyed at
+    /// drain time. Keys are stable — and the per-group FIFO guarantee
+    /// therefore global — once the placer knows its serving variants,
+    /// which is always the case for a fitted (or wrapped-agent) placer;
+    /// a lazily-initialized one may merge fallback-keyed groups after
+    /// its first drain creates the agent.
+    pub fn drain_chunk(&mut self) -> Result<Vec<Planned>> {
+        let Some((key, picked)) = self.pick_chunk() else {
+            return Ok(vec![]);
+        };
         let start = Instant::now();
         let calls_before = self.rt.run_count();
         let reqs: Vec<PlacementRequest<'a>> = picked.iter().map(|q| q.req).collect();
         let result = self.placer.place_many(&reqs);
+        self.placer_engaged = true;
         // count backend work whether or not the drain succeeded — a
         // failed chunk still spent real executions
         self.stats.backend_calls += self.rt.run_count() - calls_before;
@@ -299,8 +384,7 @@ impl<'a> PlanService<'a> {
             result => {
                 // a failed — or short: every request must come back, or
                 // the zip below would silently drop the tail — drain
-                // must not lose requests: put the chunk back at the
-                // head of the queue, original order intact
+                // must not lose requests
                 let err = match result {
                     Err(e) => e,
                     Ok(short) => err!(
@@ -310,32 +394,180 @@ impl<'a> PlanService<'a> {
                         reqs.len()
                     ),
                 };
-                for q in picked.into_iter().rev() {
-                    self.queue.push_front(q);
-                }
+                self.requeue(picked);
                 return Err(err);
             }
         };
-        let wall_ms = start.elapsed().as_secs_f64() * 1e3;
-        self.stats.chunks += 1;
-        self.stats.busy_s += wall_ms / 1e3;
-
-        let mut done = Vec::with_capacity(picked.len());
-        for (q, plan) in picked.into_iter().zip(plans.into_iter()) {
-            let queue_ms = start.duration_since(q.submitted).as_secs_f64() * 1e3;
-            self.stats.record(queue_ms, wall_ms);
-            done.push(Planned { ticket: q.ticket, variant: key, plan, queue_ms, plan_ms: wall_ms });
-        }
-        Ok(done)
+        Ok(self.finish_chunk(key, picked, plans, start, true))
     }
 
-    /// Drain the whole queue, chunk by chunk.
-    pub fn drain(&mut self) -> Result<Vec<Planned>> {
+    /// Drain the whole queue, one blocking chunk at a time (the
+    /// pre-session behavior; `benches/serving.rs` compares it against the
+    /// pipelined [`PlanService::drain`]).
+    pub fn drain_blocking(&mut self) -> Result<Vec<Planned>> {
         let mut out = vec![];
         while !self.queue.is_empty() {
             out.extend(self.drain_chunk()?);
         }
         Ok(out)
+    }
+
+    /// Drain the whole queue. Chunks whose placer supports resumable
+    /// sessions ([`Placer::open_session`]) are **pipelined**: up to
+    /// [`ServeConfig::inflight`] chunks stay in flight on the runtime's
+    /// worker pool, and while one chunk's fused call executes, the drain
+    /// loop fills the next chunk's feature tensors (double-buffered).
+    /// Chunk composition, per-chunk backend-call budgets, and every plan
+    /// are identical to [`PlanService::drain_blocking`] — the sessions
+    /// run the same MDP with the same artifacts; only the waits overlap.
+    /// Chunks the placer declines a session for (non-batch placers,
+    /// mixed-variant or oversized chunks) fall back to the blocking path
+    /// one chunk at a time, preserving drain order.
+    ///
+    /// On error the failed chunk and every still-in-flight chunk requeue
+    /// at the head (original order intact, those requests are never
+    /// lost), while chunks the same drain call had already completed are
+    /// counted in [`ServeStats`] but their [`Planned`] results are not
+    /// returned — the `Err` carries no partial output (exactly the
+    /// whole-queue contract [`PlanService::drain_blocking`] has always
+    /// had). Callers that need loss-free delivery of every completed
+    /// chunk under mid-drain failures should loop
+    /// [`PlanService::drain_chunk`] and keep each returned batch.
+    pub fn drain(&mut self) -> Result<Vec<Planned>> {
+        let mut out = vec![];
+        while !self.queue.is_empty() {
+            let (mut burst, declined) = self.drain_pipelined_burst()?;
+            out.append(&mut burst);
+            if declined && !self.queue.is_empty() {
+                // the placer declined a session for the chunk now at the
+                // head: plan exactly that one blocking, then try
+                // pipelining again (later chunks may support sessions)
+                out.extend(self.drain_chunk()?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Pipeline chunks through placer sessions until the queue empties or
+    /// the placer declines a session (`-> (completed, declined)`).
+    fn drain_pipelined_burst(&mut self) -> Result<(Vec<Planned>, bool)> {
+        let depth = self.cfg.inflight;
+        let burst_start = Instant::now();
+        let calls_before = self.rt.run_count();
+        let mut active: VecDeque<InFlight<'a>> = VecDeque::new();
+        let mut out: Vec<Planned> = vec![];
+        let mut declined = false;
+        let mut failure: Option<Error> = None;
+
+        'burst: loop {
+            // top up the pipeline: keep `depth` chunks actively stepping
+            while !declined
+                && active.iter().filter(|c| c.ticket.is_some()).count() < depth
+            {
+                let Some((key, picked)) = self.pick_chunk() else { break };
+                let reqs: Vec<PlacementRequest<'a>> = picked.iter().map(|q| q.req).collect();
+                let start = Instant::now();
+                let opened = self.placer.open_session(&reqs);
+                self.placer_engaged = true;
+                match opened {
+                    Ok(Some(mut session)) => match session.submit_step() {
+                        Ok(ticket) => {
+                            active.push_back(InFlight { session, picked, key, start, ticket });
+                        }
+                        Err(e) => {
+                            self.requeue(picked);
+                            failure = Some(e);
+                            break 'burst;
+                        }
+                    },
+                    Ok(None) => {
+                        // untouched: hand the chunk back for the
+                        // blocking fallback once the pipeline empties
+                        self.requeue(picked);
+                        declined = true;
+                    }
+                    Err(e) => {
+                        self.requeue(picked);
+                        failure = Some(e);
+                        break 'burst;
+                    }
+                }
+            }
+            // emit chunks completed at the pipeline head, preserving pick
+            // order (a shorter younger chunk waits for its elders)
+            while active.front().map_or(false, |c| c.ticket.is_none()) {
+                let InFlight { session, picked, key, start, .. } =
+                    active.pop_front().expect("checked non-empty");
+                match session.finish() {
+                    Ok(plans) if plans.len() == picked.len() => {
+                        out.extend(self.finish_chunk(key, picked, plans, start, false));
+                    }
+                    Ok(short) => {
+                        let n = picked.len();
+                        self.requeue(picked);
+                        failure = Some(err!(
+                            "placer `{}` session returned {} plans for {n} requests",
+                            self.placer.name(),
+                            short.len(),
+                        ));
+                        break 'burst;
+                    }
+                    Err(e) => {
+                        self.requeue(picked);
+                        failure = Some(e);
+                        break 'burst;
+                    }
+                }
+            }
+            if active.is_empty() {
+                if declined || self.queue.is_empty() {
+                    break;
+                }
+                continue;
+            }
+            // advance every in-flight chunk one MDP step, oldest first:
+            // joining chunk i overlaps chunk i+1's already-submitted
+            // execution, and chunk i's freshly submitted call executes
+            // while chunk i+1 is joined and refilled — the fill/execute
+            // overlap the session API exists for
+            for c in active.iter_mut() {
+                let Some(t) = c.ticket.take() else { continue };
+                match t.wait().and_then(|vals| {
+                    c.session.apply_step(vals)?;
+                    c.session.submit_step()
+                }) {
+                    Ok(next) => c.ticket = next,
+                    Err(e) => {
+                        failure = Some(e);
+                        break 'burst;
+                    }
+                }
+            }
+        }
+
+        // on failure, requeue every in-flight chunk youngest-first so the
+        // queue head ends up oldest-first again. Already-dispatched
+        // tickets are *joined* (results discarded), not dropped: the
+        // pool executes them regardless, and joining first means the
+        // backend_calls delta below sees every execution this burst
+        // dispatched instead of leaking stray increments into the next
+        // drain's delta.
+        while let Some(c) = active.pop_back() {
+            if let Some(t) = c.ticket {
+                let _ = t.wait();
+            }
+            self.requeue(c.picked);
+        }
+        self.stats.backend_calls += self.rt.run_count() - calls_before;
+        match failure {
+            Some(e) => Err(e),
+            None => {
+                if !out.is_empty() {
+                    self.stats.busy_s += burst_start.elapsed().as_secs_f64();
+                }
+                Ok((out, declined))
+            }
+        }
     }
 }
 
@@ -355,11 +587,14 @@ mod tests {
 
     #[test]
     fn bounded_queue_sheds_when_full() {
-        let rt = Runtime::reference();
+        let rt = Arc::new(Runtime::reference());
         let (ds, tasks, sim) = setup(6, 4);
         let placer = placer::by_name(&rt, "greedy:dim").unwrap();
-        let mut svc =
-            PlanService::new(&rt, placer, ServeConfig { capacity: 4, chunk: 16 });
+        let mut svc = PlanService::new(&rt, placer, ServeConfig {
+            capacity: 4,
+            chunk: 16,
+            ..ServeConfig::default()
+        });
         let mut accepted = 0;
         let mut shed = 0;
         for t in &tasks {
@@ -381,7 +616,7 @@ mod tests {
 
     #[test]
     fn unservable_device_count_errors_at_submit() {
-        let rt = Runtime::reference();
+        let rt = Arc::new(Runtime::reference());
         let (ds, mut tasks, sim) = setup(1, 4);
         tasks[0].n_devices = 1000; // beyond the largest lowered variant
         let placer = placer::by_name(&rt, "greedy:dim").unwrap();
@@ -393,11 +628,14 @@ mod tests {
 
     #[test]
     fn drain_chunk_respects_chunk_size_and_records_latency() {
-        let rt = Runtime::reference();
+        let rt = Arc::new(Runtime::reference());
         let (ds, tasks, sim) = setup(5, 4);
         let placer = placer::by_name(&rt, "greedy:lookup").unwrap();
-        let mut svc =
-            PlanService::new(&rt, placer, ServeConfig { capacity: 64, chunk: 2 });
+        let mut svc = PlanService::new(&rt, placer, ServeConfig {
+            capacity: 64,
+            chunk: 2,
+            ..ServeConfig::default()
+        });
         for t in &tasks {
             svc.submit(PlacementRequest::new(&ds, t, &sim)).unwrap();
         }
@@ -436,7 +674,7 @@ mod tests {
 
     #[test]
     fn failed_drain_requeues_the_chunk() {
-        let rt = Runtime::reference();
+        let rt = Arc::new(Runtime::reference());
         let (ds, tasks, sim) = setup(3, 4);
         let mut svc =
             PlanService::new(&rt, Box::new(FailingPlacer), ServeConfig::default());
@@ -471,7 +709,7 @@ mod tests {
 
     #[test]
     fn short_plan_batches_are_rejected_not_dropped() {
-        let rt = Runtime::reference();
+        let rt = Arc::new(Runtime::reference());
         let (ds, tasks, sim) = setup(2, 4);
         let mut svc =
             PlanService::new(&rt, Box::new(ShortPlacer), ServeConfig::default());
@@ -486,11 +724,62 @@ mod tests {
 
     #[test]
     fn drain_on_empty_queue_is_a_noop() {
-        let rt = Runtime::reference();
+        let rt = Arc::new(Runtime::reference());
         let placer = placer::by_name(&rt, "random").unwrap();
         let mut svc = PlanService::new(&rt, placer, ServeConfig::default());
         assert!(svc.drain_chunk().unwrap().is_empty());
         assert!(svc.drain().unwrap().is_empty());
         assert_eq!(svc.stats().chunks, 0);
+    }
+
+    /// A session-capable placer whose session errors mid-chunk, to pin
+    /// the pipelined drain's requeue guarantee without involving the
+    /// (never-failing) reference backend.
+    struct ExplodingSessionPlacer;
+    struct ExplodingSession;
+    impl<'a> PlanSession<'a> for ExplodingSession {
+        fn submit_step(&mut self) -> Result<Option<Ticket>> {
+            Err(crate::err!("session exploded"))
+        }
+        fn apply_step(&mut self, _out: Vec<crate::runtime::Value>) -> Result<()> {
+            unreachable!("submit_step never succeeds")
+        }
+        fn finish(self: Box<Self>) -> Result<Vec<PlacementPlan>> {
+            unreachable!("submit_step never succeeds")
+        }
+    }
+    impl Placer for ExplodingSessionPlacer {
+        fn name(&self) -> &str {
+            "exploding-session"
+        }
+        fn place(&mut self, _req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
+            Err(crate::err!("unused"))
+        }
+        fn open_session<'b>(
+            &mut self,
+            _reqs: &[PlacementRequest<'b>],
+        ) -> Result<Option<Box<dyn PlanSession<'b> + 'b>>> {
+            Ok(Some(Box::new(ExplodingSession)))
+        }
+    }
+
+    #[test]
+    fn failed_pipelined_session_requeues_everything() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, tasks, sim) = setup(5, 4);
+        let mut svc = PlanService::new(&rt, Box::new(ExplodingSessionPlacer), ServeConfig {
+            capacity: 64,
+            chunk: 2,
+            ..ServeConfig::default()
+        });
+        for t in &tasks {
+            svc.submit(PlacementRequest::new(&ds, t, &sim)).unwrap();
+        }
+        let err = svc.drain().expect_err("exploding session must error");
+        assert!(err.to_string().contains("session exploded"), "{err}");
+        assert_eq!(svc.queued(), 5, "every request survives the failed drain");
+        assert_eq!(svc.stats().planned, 0);
+        // order intact: retry pops the same head ticket first
+        assert_eq!(svc.queue.front().unwrap().ticket, 0);
     }
 }

@@ -1,0 +1,149 @@
+//! Concurrent-runtime integration tests: N threads hammering
+//! `submit`/`wait` on one shared `Arc<Runtime>` get results bit-identical
+//! to sequential `run`, the lock-free call counters stay exact under the
+//! race, and a panicking backend neither kills the worker pool nor
+//! poisons the counters (the pre-redesign `Mutex<HashMap>` counters were
+//! poisonable — this file is the regression net).
+
+use std::sync::Arc;
+use std::thread;
+
+use dreamshard::runtime::{
+    reference::reference_manifest, to_f32_vec, Backend, Runtime, TensorF32, Value,
+};
+use dreamshard::util::Rng;
+
+/// Distinct, deterministic `table_cost` inputs per caller id.
+fn table_cost_inputs(rt: &Runtime, id: u64) -> (Vec<Value>, usize) {
+    let mut rng = Rng::new(1000 + id);
+    let theta = rt.init_params("cost", &mut rng).unwrap();
+    let n = rt.manifest.artifact_meta("table_cost", "N").unwrap() as usize;
+    let f = rt.manifest.consts["F"] as usize;
+    let mut feats = TensorF32::zeros(&[n, f]);
+    for x in feats.data.iter_mut() {
+        *x = (rng.uniform(0.0, 1.0)) as f32;
+    }
+    let inputs = vec![
+        TensorF32::from_vec(theta, &[rt.manifest.params["cost"].total]).value(),
+        feats.value(),
+        TensorF32::ones(&[f]).value(),
+    ];
+    (inputs, n)
+}
+
+#[test]
+fn concurrent_submit_wait_is_bit_identical_and_counts_exactly() {
+    const THREADS: u64 = 8;
+    const REPS: usize = 5;
+    let rt = Arc::new(Runtime::reference().with_workers(4));
+
+    // sequential reference outputs, one distinct input set per thread id
+    let mut expected: Vec<Vec<f32>> = vec![];
+    for id in 0..THREADS {
+        let (inputs, n) = table_cost_inputs(&rt, id);
+        let out = rt.run("table_cost", &inputs).unwrap();
+        expected.push(to_f32_vec(&out[0], n).unwrap());
+    }
+    let calls_before = rt.run_count();
+    let named_before = rt.run_count_for("table_cost");
+
+    let handles: Vec<_> = (0..THREADS)
+        .map(|id| {
+            let rt = Arc::clone(&rt);
+            thread::spawn(move || {
+                let (inputs, n) = table_cost_inputs(&rt, id);
+                let mut outs = Vec::with_capacity(REPS);
+                for _ in 0..REPS {
+                    let ticket = rt.submit("table_cost", inputs.clone()).unwrap();
+                    outs.push(to_f32_vec(&ticket.wait().unwrap()[0], n).unwrap());
+                }
+                outs
+            })
+        })
+        .collect();
+    for (id, h) in handles.into_iter().enumerate() {
+        for out in h.join().expect("worker thread panicked") {
+            assert_eq!(out, expected[id], "thread {id} diverged from sequential run");
+        }
+    }
+
+    // totals are exact under the race: every dispatch counted once
+    let raced = THREADS * REPS as u64;
+    assert_eq!(rt.run_count() - calls_before, raced);
+    assert_eq!(rt.run_count_for("table_cost") - named_before, raced);
+}
+
+#[test]
+fn concurrent_blocking_run_shares_one_runtime() {
+    // the blocking path is submit+wait underneath — same pool, same
+    // counters, callable from any thread without a &mut anywhere
+    let rt = Arc::new(Runtime::reference().with_workers(2));
+    let calls_before = rt.run_count();
+    let handles: Vec<_> = (0..4u64)
+        .map(|id| {
+            let rt = Arc::clone(&rt);
+            thread::spawn(move || {
+                let (inputs, n) = table_cost_inputs(&rt, id);
+                let out = rt.run("table_cost", &inputs).unwrap();
+                to_f32_vec(&out[0], n).unwrap().iter().all(|x| x.is_finite())
+            })
+        })
+        .collect();
+    for h in handles {
+        assert!(h.join().unwrap(), "non-finite output under concurrency");
+    }
+    assert_eq!(rt.run_count() - calls_before, 4);
+}
+
+/// A backend that panics on every execution (counter-poisoning fixture).
+struct PanickingBackend;
+impl Backend for PanickingBackend {
+    fn name(&self) -> &'static str {
+        "panicking"
+    }
+    fn execute(&self, artifact: &str, _inputs: &[Value]) -> dreamshard::Result<Vec<Value>> {
+        panic!("deliberate test panic in {artifact}")
+    }
+}
+
+#[test]
+fn backend_panic_surfaces_as_error_and_counters_stay_readable() {
+    let rt = Runtime::with_backend(reference_manifest(), Box::new(PanickingBackend));
+    let err = rt.run("table_cost", &[]).expect_err("a backend panic must surface as Err");
+    assert!(err.to_string().contains("panicked"), "unexpected error: {err}");
+    assert!(err.to_string().contains("table_cost"), "error names the artifact: {err}");
+
+    // the regression this pins: a panic mid-execute used to poison the
+    // counter mutex, turning every later run_count_for into a second
+    // panic. The atomic counters must have recorded the dispatch and
+    // stay readable.
+    assert_eq!(rt.run_count(), 1);
+    assert_eq!(rt.run_count_for("table_cost"), 1);
+
+    // and the worker survives: the pool keeps serving dispatches
+    let err2 = rt.run("table_cost", &[]).expect_err("still panics, still served");
+    assert!(err2.to_string().contains("panicked"));
+    assert_eq!(rt.run_count(), 2);
+    assert_eq!(rt.run_count_for("table_cost"), 2);
+}
+
+#[test]
+fn backend_panic_does_not_wedge_concurrent_waiters() {
+    let rt = Arc::new(
+        Runtime::with_backend(reference_manifest(), Box::new(PanickingBackend)).with_workers(2),
+    );
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let rt = Arc::clone(&rt);
+            thread::spawn(move || {
+                let ticket = rt.submit("table_cost", vec![]).unwrap();
+                ticket.wait().expect_err("every execution panics").to_string()
+            })
+        })
+        .collect();
+    for h in handles {
+        let msg = h.join().expect("waiter must not propagate the backend panic");
+        assert!(msg.contains("panicked"), "{msg}");
+    }
+    assert_eq!(rt.run_count(), 4, "every panicked dispatch still counted");
+}

@@ -1,0 +1,31 @@
+//! `Runtime::open_default` must hard-error when `DREAMSHARD_ARTIFACTS`
+//! is explicitly set but unusable, instead of silently substituting the
+//! reference backend (a misconfigured production deploy would otherwise
+//! serve plans from the wrong backend without anyone noticing).
+//!
+//! Kept in its own integration binary with a single test: it mutates a
+//! process-global environment variable, which must not race other tests.
+
+use dreamshard::runtime::Runtime;
+
+#[test]
+fn explicit_artifacts_dir_never_silently_falls_back() {
+    std::env::set_var("DREAMSHARD_ARTIFACTS", "/nonexistent/dreamshard-artifacts");
+    let res = Runtime::open_default();
+    std::env::remove_var("DREAMSHARD_ARTIFACTS");
+
+    // without `--features xla` the error names the missing backend; with
+    // the feature on, opening the nonexistent directory fails — either
+    // way the explicit setting is honored with a hard error, never a
+    // silent reference-backend substitution
+    let err = res.expect_err("explicit DREAMSHARD_ARTIFACTS must be honored or rejected");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("DREAMSHARD_ARTIFACTS") || msg.contains("manifest"),
+        "error should explain the misconfiguration: {msg}"
+    );
+
+    // with the variable unset the default quietly works again
+    let rt = Runtime::open_default().expect("default runtime without the variable");
+    assert!(rt.workers() >= 1);
+}

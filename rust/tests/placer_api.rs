@@ -2,6 +2,8 @@
 //! with sequential planning, the one-backend-call-per-MDP-step contract,
 //! registry round-trips, and uniform slot-cap legality.
 
+use std::sync::Arc;
+
 use dreamshard::baselines::ALL_EXPERTS;
 use dreamshard::coordinator::{DreamShard, TrainCfg};
 use dreamshard::placer::{
@@ -28,7 +30,7 @@ fn untrained_agent(rt: &Runtime, n_devices: usize) -> DreamShard {
 
 #[test]
 fn batched_place_many_matches_sequential_place() {
-    let rt = Runtime::reference();
+    let rt = Arc::new(Runtime::reference());
     let (ds, tasks, sim) = setup(5, 20, 4);
     let agent = untrained_agent(&rt, 4);
     let mut placer = DreamShardPlacer::from_agent(&rt, &agent);
@@ -51,7 +53,7 @@ fn batched_place_many_matches_sequential_place() {
 fn batched_place_many_handles_heterogeneous_task_lengths() {
     // lanes finish at different MDP steps: shorter tasks idle while the
     // longest lane drains, and every plan still matches its sequential run
-    let rt = Runtime::reference();
+    let rt = Arc::new(Runtime::reference());
     let ds = gen_dlrm(300, 3);
     let (pool, _) = split_pools(&ds, 4);
     let sim = Simulator::new(SimConfig::default());
@@ -73,7 +75,7 @@ fn batched_place_many_handles_heterogeneous_task_lengths() {
 
 #[test]
 fn place_many_is_one_backend_call_per_mdp_step() {
-    let rt = Runtime::reference();
+    let rt = Arc::new(Runtime::reference());
     let (ds, tasks, sim) = setup(4, 20, 4);
     let agent = untrained_agent(&rt, 4);
     let mut placer = DreamShardPlacer::from_agent(&rt, &agent);
@@ -104,7 +106,7 @@ fn place_many_is_one_backend_call_per_mdp_step() {
 
 #[test]
 fn dreamshard_placer_respects_request_slot_cap() {
-    let rt = Runtime::reference();
+    let rt = Arc::new(Runtime::reference());
     let (ds, tasks, sim) = setup(1, 20, 4);
     let agent = untrained_agent(&rt, 4);
     let mut placer = DreamShardPlacer::from_agent(&rt, &agent);
@@ -147,7 +149,7 @@ fn baseline_placers_respect_request_slot_cap() {
 #[test]
 fn registry_learned_placers_fit_then_plan() {
     // by_name("dreamshard") -> fit on a tiny budget -> lane-batched plans
-    let rt = Runtime::reference();
+    let rt = Arc::new(Runtime::reference());
     let (ds, tasks, sim) = setup(3, 8, 4);
     let mut p = placer::by_name(&rt, "dreamshard").unwrap();
     assert!(p.needs_fit());
@@ -183,7 +185,7 @@ fn registry_learned_placers_fit_then_plan() {
 #[test]
 fn oversized_batches_chunk_across_lanes() {
     // more requests than the fused artifact's E=16 lanes: chunked, all planned
-    let rt = Runtime::reference();
+    let rt = Arc::new(Runtime::reference());
     let (ds, tasks, sim) = setup(20, 6, 4);
     let agent = untrained_agent(&rt, 4);
     let mut placer = DreamShardPlacer::from_agent(&rt, &agent);

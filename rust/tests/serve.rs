@@ -1,8 +1,12 @@
 //! Serving front-end integration tests: drained plans are bit-identical
 //! to sequential `Placer::place`, FIFO completion order holds per
-//! serving-variant group, and the lane-batched drain + chunk-batched
+//! serving-variant group, the lane-batched drain + chunk-batched
 //! `order_tables` spend strictly fewer backend calls than sequential
-//! planning (with the `table_cost` budget pinned per drained chunk).
+//! planning (with the `table_cost` budget pinned per drained chunk), and
+//! the pipelined drain (sessions on a multi-worker runtime) reproduces
+//! the blocking drain bit-for-bit — plans *and* backend-call budgets.
+
+use std::sync::Arc;
 
 use dreamshard::coordinator::{CostNet, DreamShard, TrainCfg};
 use dreamshard::placer::{DreamShardPlacer, Placer, PlacementRequest};
@@ -34,14 +38,18 @@ fn untrained_agent(rt: &Runtime) -> DreamShard {
 
 #[test]
 fn drained_plans_are_bit_identical_to_sequential_place() {
-    let rt = Runtime::reference();
+    let rt = Arc::new(Runtime::reference());
     let ds = gen_dlrm(300, 0);
     let sim = Simulator::new(SimConfig::default());
     let arrivals = mixed_workload(&ds);
     let agent = untrained_agent(&rt);
 
     let service_placer = Box::new(DreamShardPlacer::from_agent(&rt, &agent));
-    let mut svc = PlanService::new(&rt, service_placer, ServeConfig { capacity: 64, chunk: 16 });
+    let mut svc = PlanService::new(&rt, service_placer, ServeConfig {
+        capacity: 64,
+        chunk: 16,
+        ..ServeConfig::default()
+    });
     for a in &arrivals {
         let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim).unwrap();
         assert!(svc.submit(req).unwrap().is_some(), "capacity fits the whole workload");
@@ -74,7 +82,7 @@ fn drained_plans_are_bit_identical_to_sequential_place() {
 
 #[test]
 fn fifo_completion_order_is_preserved_per_variant_group() {
-    let rt = Runtime::reference();
+    let rt = Arc::new(Runtime::reference());
     let ds = gen_dlrm(300, 0);
     let sim = Simulator::new(SimConfig::default());
     let arrivals = mixed_workload(&ds);
@@ -82,7 +90,8 @@ fn fifo_completion_order_is_preserved_per_variant_group() {
     let mut svc = PlanService::new(
         &rt,
         Box::new(DreamShardPlacer::from_agent(&rt, &agent)),
-        ServeConfig { capacity: 64, chunk: 4 }, // small chunks: many drains
+        // small chunks: many drains
+        ServeConfig { capacity: 64, chunk: 4, ..ServeConfig::default() },
     );
     for a in &arrivals {
         let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim).unwrap();
@@ -116,7 +125,7 @@ fn fifo_completion_order_is_preserved_per_variant_group() {
 
 #[test]
 fn chunk_batched_ordering_pins_the_table_cost_budget() {
-    let rt = Runtime::reference();
+    let rt = Arc::new(Runtime::reference());
     let ds = gen_dlrm(300, 0);
     let sim = Simulator::new(SimConfig::default());
     let arrivals = mixed_workload(&ds);
@@ -124,7 +133,7 @@ fn chunk_batched_ordering_pins_the_table_cost_budget() {
     let mut svc = PlanService::new(
         &rt,
         Box::new(DreamShardPlacer::from_agent(&rt, &agent)),
-        ServeConfig { capacity: 64, chunk: 16 },
+        ServeConfig { capacity: 64, chunk: 16, ..ServeConfig::default() },
     );
     for a in &arrivals {
         let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim).unwrap();
@@ -154,4 +163,95 @@ fn chunk_batched_ordering_pins_the_table_cost_budget() {
     assert!(stats.median_queue_ms() >= 0.0);
     assert!(stats.plans_per_sec() > 0.0);
     assert!(stats.backend_calls > 0);
+}
+
+/// The pipelined-drain acceptance contract: on a multi-worker runtime,
+/// `drain()` (sessions, chunk k+1 filling while chunk k executes) must
+/// reproduce the blocking drain **bit-for-bit** on the 64-task
+/// mixed-device workload — same plans per ticket, same serving variants,
+/// same FIFO-per-group emission — and spend **exactly** the same backend
+/// calls: 1 fused `mdp_step` call per lockstep MDP step and
+/// `ceil(total_tables / N_cap)` `table_cost` ordering calls per chunk
+/// (the per-chunk budgets are pinned on the blocking pass, and the
+/// pipelined pass must match its totals to the call).
+#[test]
+fn pipelined_drain_matches_blocking_drain_and_call_budgets() {
+    let rt = Arc::new(Runtime::reference().with_workers(4));
+    assert!(rt.workers() > 1, "the pipelined contract must hold with workers > 1");
+    let ds = gen_dlrm(300, 0);
+    let sim = Simulator::new(SimConfig::default());
+    let arrivals = mixed_workload(&ds);
+    let agent = untrained_agent(&rt);
+    let cfg = ServeConfig { capacity: 64, chunk: 16, ..ServeConfig::default() };
+    let n_cap = CostNet::table_cost_cap(&rt);
+
+    // blocking reference pass, chunk by chunk, per-chunk budgets pinned
+    let mut svc = PlanService::new(&rt, Box::new(DreamShardPlacer::from_agent(&rt, &agent)), cfg);
+    for a in &arrivals {
+        let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim).unwrap();
+        svc.submit(req).unwrap().unwrap();
+    }
+    let calls_before = rt.run_count();
+    let ordering_before = rt.run_count_for("table_cost");
+    let mut blocking: Vec<Planned> = vec![];
+    loop {
+        let tc_before = rt.run_count_for("table_cost");
+        let chunk = svc.drain_chunk().unwrap();
+        if chunk.is_empty() {
+            break;
+        }
+        let total_tables: usize = chunk.iter().map(|p| p.plan.placement.len()).sum();
+        let budget = ((total_tables + n_cap - 1) / n_cap).max(1) as u64;
+        assert!(
+            rt.run_count_for("table_cost") - tc_before <= budget,
+            "blocking chunk of {total_tables} tables blew the ordering budget {budget}"
+        );
+        blocking.extend(chunk);
+    }
+    let blocking_calls = rt.run_count() - calls_before;
+    let blocking_ordering = rt.run_count_for("table_cost") - ordering_before;
+    assert_eq!(blocking.len(), 64);
+
+    // pipelined pass: same workload, fresh service, multi-worker overlap
+    let mut svc = PlanService::new(&rt, Box::new(DreamShardPlacer::from_agent(&rt, &agent)), cfg);
+    for a in &arrivals {
+        let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim).unwrap();
+        svc.submit(req).unwrap().unwrap();
+    }
+    let calls_before = rt.run_count();
+    let ordering_before = rt.run_count_for("table_cost");
+    let piped = svc.drain().unwrap();
+    let piped_calls = rt.run_count() - calls_before;
+    let piped_ordering = rt.run_count_for("table_cost") - ordering_before;
+    assert_eq!(piped.len(), 64);
+    assert_eq!(svc.stats().planned, 64);
+
+    // bit-identical plans, variants, and tickets
+    let mut by_ticket = piped.clone();
+    by_ticket.sort_by_key(|p| p.ticket);
+    let mut blocking_by_ticket = blocking.clone();
+    blocking_by_ticket.sort_by_key(|p| p.ticket);
+    for (b, p) in blocking_by_ticket.iter().zip(&by_ticket) {
+        assert_eq!(b.ticket, p.ticket);
+        assert_eq!(b.variant, p.variant, "ticket {}", b.ticket);
+        assert_eq!(b.plan.placement, p.plan.placement, "ticket {}", b.ticket);
+    }
+    // identical backend spend: the overlap moves waits, never adds calls —
+    // so the per-chunk budgets pinned on the blocking pass carry over
+    assert_eq!(piped_calls, blocking_calls, "pipelining must not change the call budget");
+    assert_eq!(piped_ordering, blocking_ordering, "table_cost ordering budget");
+    assert_eq!(
+        piped_calls - piped_ordering,
+        blocking_calls - blocking_ordering,
+        "one fused mdp_step call per lockstep MDP step"
+    );
+    // emission order: FIFO within each serving-variant group, unsorted
+    for key in [(8usize, 48usize), (128, 16)] {
+        let tickets: Vec<u64> =
+            piped.iter().filter(|p| p.variant == key).map(|p| p.ticket).collect();
+        assert!(
+            tickets.windows(2).all(|w| w[0] < w[1]),
+            "variant {key:?} emitted out of FIFO order: {tickets:?}"
+        );
+    }
 }

@@ -3,6 +3,8 @@
 //! check that inference produces legal placements. Runs from a bare
 //! toolchain — no `make artifacts`, no native libraries.
 
+use std::sync::Arc;
+
 use dreamshard::coordinator::{DreamShard, RnnBaseline, TrainCfg};
 use dreamshard::placer::{DreamShardPlacer, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
@@ -11,7 +13,13 @@ use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools, Dataset, Task};
 use dreamshard::util::Rng;
 
 /// Mean test-task latency of an agent's argmax plans, via the facade.
-fn mean_cost(rt: &Runtime, agent: &DreamShard, sim: &Simulator, ds: &Dataset, tasks: &[Task]) -> f64 {
+fn mean_cost(
+    rt: &Arc<Runtime>,
+    agent: &DreamShard,
+    sim: &Simulator,
+    ds: &Dataset,
+    tasks: &[Task],
+) -> f64 {
     let reqs: Vec<PlacementRequest> = tasks
         .iter()
         .map(|t| PlacementRequest::for_runtime(rt, ds, t, sim).unwrap())
@@ -34,7 +42,7 @@ fn smoke_cfg() -> TrainCfg {
 
 #[test]
 fn trains_and_places() {
-    let rt = Runtime::open_default().unwrap();
+    let rt = Arc::new(Runtime::open_default().unwrap());
     let ds = gen_dlrm(120, 0);
     let (pool_tr, pool_te) = split_pools(&ds, 1);
     let train = sample_tasks(&pool_tr, 10, 4, 4, 2);
