@@ -2,16 +2,22 @@
 //! lane-batched drain vs sequential per-request planning on the same
 //! 64-request mixed-device open-loop workload, plus the pipelined drain
 //! vs the blocking drain at 1, 2, and 4 runtime workers (see the
-//! ROADMAP's async/pipelined planning item). The batched drain shares
-//! one fused `mdp_step` call per MDP step across a chunk's lanes and
-//! orders every task in a chunk with one concatenated `table_cost` pass;
-//! the pipelined drain additionally fills chunk k+1's feature tensors
-//! while chunk k's fused call executes on the worker pool.
+//! ROADMAP's async/pipelined planning item), plus the sharded front end
+//! vs a single shared FIFO on a mixed 2/4/8/128-device workload. The
+//! batched drain shares one fused `mdp_step` call per MDP step across a
+//! chunk's lanes and orders every task in a chunk with one concatenated
+//! `table_cost` pass; the pipelined drain additionally fills chunk k+1's
+//! feature tensors while chunk k's fused call executes on the worker
+//! pool; the sharded drain additionally serves each variant's queue on
+//! its own thread so a 128-device chunk never stalls 8-device traffic
+//! at the head of one FIFO.
 
 use dreamshard::coordinator::{DreamShard, TrainCfg};
 use dreamshard::placer::{DreamShardPlacer, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
-use dreamshard::serve::{synthetic_arrivals, PlanService, ServeConfig, WorkloadCfg};
+use dreamshard::serve::{
+    synthetic_arrivals, PlanService, ServeConfig, ShardConfig, ShardedFrontEnd, WorkloadCfg,
+};
 use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, split_pools};
 use dreamshard::util::Rng;
@@ -115,6 +121,78 @@ fn main() {
             pipe_s * 1e3,
             reqs.len() as f64 / pipe_s,
             blk_s / pipe_s,
+        );
+    }
+
+    // sharded front end vs one shared FIFO on the mixed 2/4/8/128-device
+    // workload: the single service interleaves d8s48 and d128s16 chunks
+    // through one queue, while the front end routes each variant to its
+    // own PlanService and drains both on their own threads against the
+    // same worker pool. Plans and call budgets are bit-identical to the
+    // sequential per-variant drains (tests/sharded.rs pins it).
+    let mixed = synthetic_arrivals(&pool, &WorkloadCfg {
+        n_requests: 64,
+        device_mix: vec![2, 4, 8, 128],
+        min_tables: 10,
+        max_tables: 24,
+        mean_gap_ms: 1.0,
+        seed: 7,
+    });
+    for workers in [2usize, 4] {
+        let rtw = Arc::new(Runtime::open_default().expect("runtime").with_workers(workers));
+        let mixed_reqs: Vec<PlacementRequest> = mixed
+            .iter()
+            .map(|a| PlacementRequest::for_runtime(&rtw, &ds, &a.task, &sim).unwrap())
+            .collect();
+        let single = || {
+            let mut svc = PlanService::new(
+                &rtw,
+                Box::new(DreamShardPlacer::from_agent(&rtw, &agent)),
+                ServeConfig { capacity: mixed_reqs.len(), chunk: 16, ..ServeConfig::default() },
+            );
+            for r in &mixed_reqs {
+                svc.submit(*r).unwrap();
+            }
+            let t0 = Instant::now();
+            let done = svc.drain().unwrap();
+            assert_eq!(done.len(), mixed_reqs.len());
+            t0.elapsed().as_secs_f64()
+        };
+        let sharded = || {
+            let factory = {
+                let rtw = Arc::clone(&rtw);
+                let agent = &agent;
+                move || Ok(Box::new(DreamShardPlacer::from_agent(&rtw, agent)) as Box<dyn Placer>)
+            };
+            let mut front = ShardedFrontEnd::new(&rtw, factory, ShardConfig {
+                per_shard: ServeConfig {
+                    capacity: mixed_reqs.len(),
+                    chunk: 16,
+                    ..ServeConfig::default()
+                },
+                global_cap: mixed_reqs.len(),
+            })
+            .unwrap();
+            for r in &mixed_reqs {
+                front.submit(*r).unwrap();
+            }
+            let t0 = Instant::now();
+            let done = front.drain().unwrap();
+            assert_eq!(done.len(), mixed_reqs.len());
+            t0.elapsed().as_secs_f64()
+        };
+        single(); // warm
+        sharded();
+        let single_s = single();
+        let sharded_s = sharded();
+        println!(
+            "sharded front end, {workers} worker(s), 2/4/8/128 mix: single FIFO {:.1} ms \
+             ({:.1} plans/s) vs sharded {:.1} ms ({:.1} plans/s) -> {:.2}x",
+            single_s * 1e3,
+            mixed.len() as f64 / single_s,
+            sharded_s * 1e3,
+            mixed.len() as f64 / sharded_s,
+            single_s / sharded_s,
         );
     }
 }

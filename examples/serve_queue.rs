@@ -14,12 +14,20 @@
 //! is pipelined: while one chunk's fused call executes on the runtime's
 //! worker pool, the next chunk's feature tensors are filled
 //! (`PlanService::drain` — `drain_blocking` is the serial comparison).
+//!
+//! The second half runs the same traffic — now with 128-device requests
+//! mixed in — through a `ShardedFrontEnd`: one `PlanService` per serving
+//! variant behind a single submit API, each shard draining on its own
+//! thread, so the heavyweight 128-device chunks never stall the
+//! small-device stream at the head of one FIFO.
 
 use std::sync::Arc;
 
 use dreamshard::placer::{self, PlacementRequest};
 use dreamshard::runtime::Runtime;
-use dreamshard::serve::{synthetic_arrivals, PlanService, ServeConfig, WorkloadCfg};
+use dreamshard::serve::{
+    synthetic_arrivals, PlanService, ServeConfig, ShardConfig, ShardedFrontEnd, WorkloadCfg,
+};
 use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, split_pools};
 
@@ -70,5 +78,41 @@ fn main() -> dreamshard::Result<()> {
         );
     }
     println!("\n{}", svc.stats().summary());
+
+    // the same idea, sharded: add 128-device requests to the mix and
+    // serve through one PlanService per serving variant, each draining
+    // on its own thread against the shared runtime worker pool
+    let mixed = synthetic_arrivals(&pool, &WorkloadCfg {
+        n_requests: 24,
+        device_mix: vec![2, 4, 8, 128],
+        min_tables: 6,
+        max_tables: 16,
+        mean_gap_ms: 2.0,
+        seed: 2,
+    });
+    let factory = {
+        let rt = Arc::clone(&rt);
+        move || placer::by_name(&rt, "dreamshard")
+    };
+    let mut front = ShardedFrontEnd::new(&rt, factory, ShardConfig {
+        per_shard: ServeConfig { capacity: 32, chunk: 8, ..ServeConfig::default() },
+        global_cap: 32,
+    })?;
+    for a in &mixed {
+        let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim)?;
+        front.submit(req)?; // Ok(None) would mean the global cap shed it
+    }
+    println!("\nsharded front end: {} requests routed across shards ...", front.queued());
+    front.drain()?;
+    for sh in front.shards() {
+        println!(
+            "shard {:<8}  {:>2} plans in {:>2} chunks  queue {:>6.2} ms mean",
+            sh.key.label(),
+            sh.stats.planned,
+            sh.stats.chunks,
+            sh.stats.mean_queue_ms(),
+        );
+    }
+    println!("\n{}", front.stats().summary());
     Ok(())
 }

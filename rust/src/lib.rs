@@ -79,11 +79,48 @@
 //! bit-identical to the blocking
 //! [`serve::PlanService::drain_blocking`], only the waits overlap
 //! (pinned in `tests/serve.rs`). Per-request queue/plan latency and
-//! aggregate throughput land in [`serve::ServeStats`]. The
-//! `dreamshard serve-sim` CLI subcommand replays a synthetic open-loop
-//! workload ([`serve::synthetic_arrivals`]) against it, and
-//! `benches/serving.rs` reports pipelined vs blocking drains at 1/2/4
-//! workers.
+//! aggregate throughput land in [`serve::ServeStats`]:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use dreamshard::placer::{self, PlacementRequest};
+//! use dreamshard::runtime::Runtime;
+//! use dreamshard::serve::{PlanService, ServeConfig};
+//! use dreamshard::sim::{SimConfig, Simulator};
+//! use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
+//!
+//! let rt = Arc::new(Runtime::reference());
+//! let ds = gen_dlrm(60, 0);
+//! let (pool, _) = split_pools(&ds, 1);
+//! let tasks = sample_tasks(&pool, 10, 4, 4, 5);
+//! let sim = Simulator::new(SimConfig::default());
+//!
+//! let mut svc = PlanService::new(
+//!     &rt,
+//!     placer::by_name(&rt, "greedy:dim").unwrap(),
+//!     ServeConfig::default(),
+//! );
+//! for t in &tasks {
+//!     let req = PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap();
+//!     svc.submit(req).unwrap().expect("queue has room");
+//! }
+//! assert_eq!(svc.drain().unwrap().len(), 4);
+//! ```
+//!
+//! One service is one FIFO; [`serve::ShardedFrontEnd`] serves **many
+//! planning streams** at once: it routes every submit to a per-serving-
+//! variant (optionally per-tenant) `PlanService` shard, drains each
+//! shard on its own thread against the shared `Arc<Runtime>` worker
+//! pool — so a 128-device chunk never head-of-line-blocks 8-device
+//! traffic — and sheds load at a single global queued-request cap
+//! ([`serve::ShardConfig::global_cap`]). Plans and backend-call budgets
+//! are bit-identical to draining the same shards sequentially (pinned in
+//! `tests/sharded.rs`). The `dreamshard serve-sim` CLI subcommand
+//! replays a synthetic open-loop workload
+//! ([`serve::synthetic_arrivals`]) against either front end
+//! (`--sharded` picks the sharded one), and `benches/serving.rs` reports
+//! pipelined vs blocking drains at 1/2/4 workers plus sharded vs
+//! single-FIFO throughput on the mixed 2/4/8/128-device workload.
 //!
 //! ## Execution backends
 //!

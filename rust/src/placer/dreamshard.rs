@@ -197,6 +197,15 @@ impl Placer for DreamShardPlacer {
         Some((var.d, var.s))
     }
 
+    /// Create the lazily-initialized agent (sized to this request's
+    /// device count) so [`Placer::serving_variant`] can answer at
+    /// routing time instead of only after the first drain engages the
+    /// placer — the sharded front end's submit-time mirror of
+    /// `PlanService`'s drain-time key refresh.
+    fn warm_variant(&mut self, req: &PlacementRequest<'_>) -> Result<()> {
+        self.ensure_agent(req.task.n_devices)
+    }
+
     fn place_many(&mut self, reqs: &[PlacementRequest<'_>]) -> Result<Vec<PlacementPlan>> {
         if reqs.is_empty() {
             return Ok(vec![]);

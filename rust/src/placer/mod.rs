@@ -172,7 +172,16 @@ pub trait PlanSession<'a> {
 }
 
 /// One placement strategy behind a stable task -> plan interface.
-pub trait Placer {
+///
+/// `Send` is a supertrait: placers (and the [`crate::serve::PlanService`]
+/// queues wrapping them) move into per-shard drain threads — the
+/// [`crate::serve::ShardedFrontEnd`] drains every serving variant's
+/// service concurrently against the shared runtime worker pool — so every
+/// implementation, including test fixtures, must be transferable across
+/// threads. All state a placer holds is either owned plain data or an
+/// `Arc` onto the thread-safe runtime/agent, so in practice this costs
+/// implementations nothing.
+pub trait Placer: Send {
     /// Registry name (`by_name(rt, placer.name())` rebuilds it).
     fn name(&self) -> &str;
 
@@ -207,6 +216,21 @@ pub trait Placer {
     /// per device count.
     fn serving_variant(&self, _req: &PlacementRequest<'_>) -> Option<(usize, usize)> {
         None
+    }
+
+    /// Routing-time warm-up for lazily-initializing placers: create
+    /// whatever state [`Placer::serving_variant`] needs (DreamShard's
+    /// agent) so a router can key this request *now*. This mirrors the
+    /// drain-time key refresh [`crate::serve::PlanService`] performs —
+    /// the service can re-key queued requests after its first drain
+    /// engages a lazy placer, but a sharded front end cannot: a
+    /// request's key decides which shard's queue it enters, and moving
+    /// it between shards later would break per-shard FIFO order. So the
+    /// router warms the placer *before* asking for the variant instead
+    /// of re-keying after. The default is a no-op: placers with static
+    /// variants (or none at all) have nothing to create.
+    fn warm_variant(&mut self, _req: &PlacementRequest<'_>) -> Result<()> {
+        Ok(())
     }
 
     /// Open a resumable [`PlanSession`] over one chunk of requests — the
@@ -364,6 +388,21 @@ mod tests {
         let req = PlacementRequest::new(&ds, &task, &sim);
         let mut p = by_name(&rt, "greedy:dim").unwrap();
         assert!(p.open_session(&[req]).unwrap().is_none());
+    }
+
+    #[test]
+    fn warm_variant_lets_a_lazy_placer_name_its_variant() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, task, sim) = setup(); // 4-device task
+        let req = PlacementRequest::new(&ds, &task, &sim);
+        let mut p = by_name(&rt, "dreamshard").unwrap();
+        assert_eq!(p.serving_variant(&req), None, "lazy agent: no variant before warm-up");
+        p.warm_variant(&req).unwrap();
+        assert_eq!(p.serving_variant(&req), Some((4, 48)), "warmed agent names its variant");
+        // static-variant placers: warm-up is a no-op and never errors
+        let mut g = by_name(&rt, "greedy:dim").unwrap();
+        g.warm_variant(&req).unwrap();
+        assert_eq!(g.serving_variant(&req), None);
     }
 
     #[test]

@@ -33,14 +33,56 @@
 //!   in [`ServeStats`], and drained plans come back as [`Planned`]
 //!   (ticket + plan + latency split).
 //!
+//! The whole loop, compiled (any placer works; a greedy expert keeps the
+//! doctest fast):
+//!
+//! ```
+//! use std::sync::Arc;
+//! use dreamshard::placer::{self, PlacementRequest};
+//! use dreamshard::runtime::Runtime;
+//! use dreamshard::serve::{PlanService, ServeConfig};
+//! use dreamshard::sim::{SimConfig, Simulator};
+//! use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
+//!
+//! let rt = Arc::new(Runtime::reference());
+//! let ds = gen_dlrm(60, 0);
+//! let (pool, _) = split_pools(&ds, 1);
+//! let tasks = sample_tasks(&pool, 8, 4, 3, 2); // three 4-device tasks
+//! let sim = Simulator::new(SimConfig::default());
+//!
+//! let placer = placer::by_name(&rt, "greedy:size").unwrap();
+//! let mut svc = PlanService::new(&rt, placer, ServeConfig::default());
+//! for t in &tasks {
+//!     let req = PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap();
+//!     svc.submit(req).unwrap().expect("queue has room");
+//! }
+//! let done = svc.drain().unwrap();
+//! assert_eq!(done.len(), 3);
+//! assert_eq!(svc.stats().planned, 3);
+//! ```
+//!
+//! One service is still one FIFO, so a slow variant's chunk at the queue
+//! head stalls every other variant behind it. [`ShardedFrontEnd`] lifts
+//! the same API to *many* planning streams: one `PlanService` per serving
+//! variant (per tenant, optionally), a single submit that routes by
+//! variant ([`crate::placer::Placer::warm_variant`] +
+//! [`crate::placer::Placer::serving_variant`]), per-shard drain threads
+//! over the shared runtime worker pool, and a global queued-request cap
+//! as the one backpressure knob ([`ShardConfig::global_cap`]). Plans and
+//! backend-call budgets are bit-identical to draining the same shards
+//! sequentially ([`ShardedFrontEnd::drain_sequential`]).
+//!
 //! Workload generation lives in [`synthetic_arrivals`]: the open-loop
 //! arrival schedules (exponential gaps, mixed 2/4/8/128-device tasks)
 //! that the `serve-sim` CLI subcommand (`--workers` sizes the runtime
-//! pool), `benches/serving.rs` (pipelined vs blocking drain at 1/2/4
-//! workers), and `examples/serve_queue.rs` replay.
+//! pool, `--sharded` serves through the front end), `benches/serving.rs`
+//! (pipelined vs blocking drains, sharded vs single-FIFO), and
+//! `examples/serve_queue.rs` replay.
 
 mod service;
+mod sharded;
 mod workload;
 
 pub use service::{PlanService, Planned, ServeConfig, ServeStats};
+pub use sharded::{FrontStats, Routed, ShardConfig, ShardKey, ShardView, ShardedFrontEnd};
 pub use workload::{synthetic_arrivals, Arrival, WorkloadCfg};

@@ -85,14 +85,21 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
-    fn record(&mut self, queue_ms: f64, plan_ms: f64) {
-        self.planned += 1;
-        self.queue_ms_sum += queue_ms;
-        self.plan_ms_sum += plan_ms;
+    /// Push one sample into the bounded median window, evicting the
+    /// oldest at capacity (the single definition of the window policy,
+    /// shared by [`ServeStats::record`] and [`ServeStats::merge`]).
+    fn push_recent(&mut self, queue_ms: f64) {
         if self.recent_queue_ms.len() == SAMPLE_WINDOW {
             self.recent_queue_ms.pop_front();
         }
         self.recent_queue_ms.push_back(queue_ms);
+    }
+
+    fn record(&mut self, queue_ms: f64, plan_ms: f64) {
+        self.planned += 1;
+        self.queue_ms_sum += queue_ms;
+        self.plan_ms_sum += plan_ms;
+        self.push_recent(queue_ms);
     }
 
     /// Planning throughput over the time actually spent planning.
@@ -127,6 +134,30 @@ impl ServeStats {
     pub fn median_queue_ms(&self) -> f64 {
         let recent: Vec<f64> = self.recent_queue_ms.iter().copied().collect();
         median(&recent)
+    }
+
+    /// Fold another service's counters into this one — how the sharded
+    /// front end ([`crate::serve::ShardedFrontEnd`]) aggregates per-shard
+    /// stats into one view. Counts and latency means stay exact (they are
+    /// running sums); the median window concatenates the other service's
+    /// most recent samples, still bounded at the per-service window
+    /// size. Note that
+    /// [`ServeStats::busy_s`] adds up planning time across services, so
+    /// an aggregate over concurrently-draining shards can exceed wall
+    /// clock — [`ServeStats::plans_per_sec`] on a merged value is
+    /// per-shard-thread throughput, not front-end wall-clock throughput.
+    pub fn merge(&mut self, other: &ServeStats) {
+        self.submitted += other.submitted;
+        self.rejected += other.rejected;
+        self.planned += other.planned;
+        self.chunks += other.chunks;
+        self.backend_calls += other.backend_calls;
+        self.busy_s += other.busy_s;
+        self.queue_ms_sum += other.queue_ms_sum;
+        self.plan_ms_sum += other.plan_ms_sum;
+        for &q in &other.recent_queue_ms {
+            self.push_recent(q);
+        }
     }
 
     /// One-line human summary of the counters and latency aggregates.

@@ -1,0 +1,533 @@
+//! [`ShardedFrontEnd`]: one runtime, many planning streams.
+//!
+//! A single [`PlanService`] is one FIFO: a 128-device chunk at the queue
+//! head stalls every younger 8-device request behind it (head-of-line
+//! blocking), because a drain always takes the *oldest* request's serving
+//! variant. The sharded front end removes that coupling: it owns one
+//! `PlanService` per serving variant (optionally per tenant), routes
+//! every submit to its variant's shard, and drains each shard on its own
+//! thread against the shared `Arc<Runtime>` worker pool — so pool
+//! capacity, not queue order, is the single backpressure knob. A global
+//! cap on aggregate queued requests sheds excess load at the front door
+//! before any shard grows unboundedly.
+//!
+//! Routing asks the placer first ([`Placer::serving_variant`], after a
+//! [`Placer::warm_variant`] warm-up so even a lazily-initializing
+//! DreamShard agent can answer at submit time), falling back to the
+//! smallest lowered artifact variant for the request's device count.
+//! Plans are bit-identical to routing the same requests through the same
+//! per-variant services *sequentially* ([`ShardedFrontEnd::drain_sequential`]
+//! is exactly that reference), and the backend-call budgets match to the
+//! call — concurrency moves waits, never work (pinned in
+//! `tests/sharded.rs`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::Variant;
+use crate::err;
+use crate::placer::{Placer, PlacementRequest};
+use crate::runtime::Runtime;
+use crate::tables::Task;
+use crate::util::error::Result;
+
+use super::{PlanService, Planned, ServeConfig, ServeStats};
+
+/// Identity of one shard: the serving variant `(D, S)` its requests are
+/// planned with, plus an optional tenant label for per-tenant isolation
+/// (two tenants submitting the same variant get separate queues, stats,
+/// and drain threads).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ShardKey {
+    pub variant: (usize, usize),
+    pub tenant: Option<String>,
+}
+
+impl ShardKey {
+    /// Human-readable `d{D}s{S}[/tenant]` label for tables and logs.
+    pub fn label(&self) -> String {
+        match &self.tenant {
+            Some(t) => format!("d{}s{}/{t}", self.variant.0, self.variant.1),
+            None => format!("d{}s{}", self.variant.0, self.variant.1),
+        }
+    }
+}
+
+/// Front-end knobs: the per-shard service configuration plus the global
+/// backpressure cap.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    /// Configuration every shard's [`PlanService`] is created with
+    /// (per-shard queue capacity, lane-chunk size, pipeline depth).
+    pub per_shard: ServeConfig,
+    /// Aggregate queued-request cap across *all* shards: a submit
+    /// arriving while the shards already hold `global_cap` queued
+    /// requests sheds at the front door ([`ShardedFrontEnd::submit`]
+    /// returns `Ok(None)`) before routing, validation, or shard
+    /// creation — so at most `global_cap` requests are ever queued.
+    /// This is the single backpressure knob a deployment sizes against
+    /// its runtime worker pool.
+    pub global_cap: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig { per_shard: ServeConfig::default(), global_cap: 1024 }
+    }
+}
+
+/// Receipt for one accepted submit: which shard took the request and the
+/// ticket it holds *within that shard* (tickets are per-service, so the
+/// pair is the request's identity — [`Planned::ticket`] from that shard's
+/// drain matches it).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Routed {
+    pub shard: ShardKey,
+    pub ticket: u64,
+}
+
+/// Read-only view of one shard for monitoring and closed-loop control.
+pub struct ShardView<'s> {
+    pub key: &'s ShardKey,
+    /// Requests currently queued in this shard.
+    pub queued: usize,
+    /// This shard's service counters. `backend_calls` is exact when the
+    /// shard drained alone ([`ShardedFrontEnd::drain_sequential`] /
+    /// [`ShardedFrontEnd::drain_shard`]); during a concurrent
+    /// [`ShardedFrontEnd::try_drain`] its measurement window observes
+    /// the shared runtime counter while sibling shards dispatch, so it
+    /// is an upper bound there ([`ShardedFrontEnd::stats`] carries the
+    /// exact aggregate).
+    pub stats: &'s ServeStats,
+    /// When this shard's most recent drain completed — the per-shard
+    /// drain-completion clock a closed-loop arrival controller couples
+    /// to (see the ROADMAP's closed-loop serving item). `None` until the
+    /// shard has drained at least once.
+    pub last_drain: Option<Instant>,
+}
+
+/// Front-end counters plus the merged per-shard stats.
+#[derive(Clone, Debug)]
+pub struct FrontStats {
+    /// Requests accepted and routed into some shard.
+    pub routed: u64,
+    /// Requests shed by the *global* cap (per-shard queue sheds are in
+    /// [`FrontStats::aggregate`]'s `rejected` instead).
+    pub shed_global: u64,
+    /// Shards currently instantiated.
+    pub shards: usize,
+    /// Every shard's [`ServeStats`] merged ([`ServeStats::merge`]), with
+    /// `backend_calls` replaced by the front end's own exact whole-drain
+    /// measurement (see [`ShardedFrontEnd::stats`]); note that `busy_s`
+    /// sums across concurrently-draining shard threads.
+    pub aggregate: ServeStats,
+}
+
+impl FrontStats {
+    /// One-line human summary of the front door plus the aggregate.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} shards, {} routed, {} shed at the global cap; {}",
+            self.shards,
+            self.routed,
+            self.shed_global,
+            self.aggregate.summary()
+        )
+    }
+}
+
+struct Shard<'a> {
+    key: ShardKey,
+    svc: PlanService<'a>,
+    last_drain: Option<Instant>,
+}
+
+/// A routing layer over per-variant [`PlanService`]s: one submit API in,
+/// per-shard drain threads out.
+///
+/// Each serving variant (optionally each `(variant, tenant)` pair) gets
+/// its own bounded [`PlanService`] queue, so a saturated 128-device
+/// shard can never head-of-line-block 8-device traffic; all shards
+/// drain against the one shared `Arc<Runtime>` worker pool, and
+/// aggregate queued requests shed at [`ShardConfig::global_cap`]. Plans
+/// and backend-call budgets are bit-identical to draining the same
+/// shards sequentially (`tests/sharded.rs` pins both).
+///
+/// ```
+/// use std::sync::Arc;
+/// use dreamshard::placer::{self, PlacementRequest};
+/// use dreamshard::runtime::Runtime;
+/// use dreamshard::serve::{ShardConfig, ShardedFrontEnd};
+/// use dreamshard::sim::{SimConfig, Simulator};
+/// use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
+///
+/// let rt = Arc::new(Runtime::reference());
+/// let ds = gen_dlrm(80, 0);
+/// let (pool, _) = split_pools(&ds, 1);
+/// let sim = Simulator::new(SimConfig::default());
+/// let small = sample_tasks(&pool, 8, 4, 2, 1); // two 4-device tasks
+/// let large = sample_tasks(&pool, 8, 128, 2, 2); // two 128-device tasks
+///
+/// let factory = {
+///     let rt = Arc::clone(&rt);
+///     move || placer::by_name(&rt, "greedy:size")
+/// };
+/// let mut front = ShardedFrontEnd::new(&rt, factory, ShardConfig::default()).unwrap();
+/// for t in small.iter().chain(&large) {
+///     let req = PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap();
+///     front.submit(req).unwrap().expect("under the global cap");
+/// }
+/// assert_eq!(front.stats().shards, 2); // a d4s48 shard and a d128s16 shard
+/// let done = front.drain().unwrap(); // each shard drains on its own thread
+/// assert_eq!(done.len(), 4);
+/// ```
+pub struct ShardedFrontEnd<'a> {
+    rt: Arc<Runtime>,
+    cfg: ShardConfig,
+    /// Routing oracle: a placer from the same factory the shards use, so
+    /// route keys agree with the keys each shard's service would compute.
+    /// It only ever answers [`Placer::serving_variant`] (after
+    /// [`Placer::warm_variant`]) — it never plans.
+    router: Box<dyn Placer>,
+    factory: Box<dyn FnMut() -> Result<Box<dyn Placer>> + Send + 'a>,
+    /// Creation-ordered; every drain API visits shards in this order, so
+    /// sequential and concurrent drains aggregate identically.
+    shards: Vec<Shard<'a>>,
+    routed: u64,
+    shed_global: u64,
+    /// Backend executions dispatched by this front end's drains, exact:
+    /// measured as a shared-runtime call-count delta around each whole
+    /// drain operation. (Per-shard [`ServeStats`] windows overlap during
+    /// a concurrent drain — each shard measures deltas of the *shared*
+    /// runtime counter — so summing their `backend_calls` would
+    /// over-count; this field is the correct total.)
+    drained_calls: u64,
+}
+
+impl<'a> ShardedFrontEnd<'a> {
+    /// Build a front end over `factory`-made placers. The factory is
+    /// called once per shard as variants (or tenants) first appear, plus
+    /// once up front for the routing oracle; for bit-identical shards
+    /// hand it a snapshot source, e.g.
+    /// `move || Ok(Box::new(DreamShardPlacer::from_agent(&rt, &agent)))`.
+    /// `rt` must be the runtime those placers execute on (it resolves
+    /// fallback variant keys and backs every shard's call counters).
+    pub fn new<F>(rt: &Arc<Runtime>, mut factory: F, cfg: ShardConfig) -> Result<Self>
+    where
+        F: FnMut() -> Result<Box<dyn Placer>> + Send + 'a,
+    {
+        let router = factory()?;
+        Ok(ShardedFrontEnd {
+            rt: Arc::clone(rt),
+            cfg: ShardConfig { global_cap: cfg.global_cap.max(1), ..cfg },
+            router,
+            factory: Box::new(factory),
+            shards: vec![],
+            routed: 0,
+            shed_global: 0,
+            drained_calls: 0,
+        })
+    }
+
+    /// Requests queued across all shards.
+    pub fn queued(&self) -> usize {
+        self.shards.iter().map(|s| s.svc.queued()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.svc.is_empty())
+    }
+
+    /// Whether the next submit would be shed by the global cap.
+    pub fn is_full(&self) -> bool {
+        self.queued() >= self.cfg.global_cap
+    }
+
+    /// Per-shard monitoring views, in shard-creation order.
+    pub fn shards(&self) -> impl Iterator<Item = ShardView<'_>> + '_ {
+        self.shards.iter().map(|sh| ShardView {
+            key: &sh.key,
+            queued: sh.svc.queued(),
+            stats: sh.svc.stats(),
+            last_drain: sh.last_drain,
+        })
+    }
+
+    /// Front-end counters with every shard's stats merged in. The
+    /// aggregate's `backend_calls` is the front end's own exact
+    /// whole-drain measurement, not the per-shard sum: during a
+    /// concurrent drain each shard's [`ServeStats::backend_calls`]
+    /// window observes the shared runtime counter while sibling shards
+    /// dispatch too, so per-shard values are upper bounds (exact only
+    /// when a shard drains alone — [`ShardedFrontEnd::drain_sequential`]
+    /// or [`ShardedFrontEnd::drain_shard`]) and their sum over-counts.
+    pub fn stats(&self) -> FrontStats {
+        let mut aggregate = ServeStats::default();
+        for sh in &self.shards {
+            aggregate.merge(sh.svc.stats());
+        }
+        aggregate.backend_calls = self.drained_calls;
+        FrontStats {
+            routed: self.routed,
+            shed_global: self.shed_global,
+            shards: self.shards.len(),
+            aggregate,
+        }
+    }
+
+    /// Route and enqueue one request (no tenant). `Ok(Some(receipt))` on
+    /// acceptance; `Ok(None)` when the global cap — or the routed
+    /// shard's own bounded queue — sheds it; `Err` only when no lowered
+    /// artifact variant can serve the request's device count.
+    pub fn submit(&mut self, req: PlacementRequest<'a>) -> Result<Option<Routed>> {
+        self.submit_for(req, None)
+    }
+
+    /// [`ShardedFrontEnd::submit`] with per-tenant isolation: requests
+    /// with different tenant labels never share a queue, even on the
+    /// same serving variant.
+    ///
+    /// Routing: the global cap sheds first (before any other work or
+    /// validation, matching [`PlanService::submit`]'s shed-first
+    /// contract); then the router placer is warmed
+    /// ([`Placer::warm_variant`]) and asked for the serving variant,
+    /// with the smallest lowered variant for the device count as the
+    /// fallback; the `(variant, tenant)` shard is created on first use.
+    pub fn submit_for(
+        &mut self,
+        req: PlacementRequest<'a>,
+        tenant: Option<&str>,
+    ) -> Result<Option<Routed>> {
+        if self.is_full() {
+            self.shed_global += 1;
+            return Ok(None);
+        }
+        self.router.warm_variant(&req)?;
+        let variant = match self.router.serving_variant(&req) {
+            Some(v) => v,
+            None => {
+                let var = Variant::for_devices(&self.rt, req.task.n_devices)?;
+                (var.d, var.s)
+            }
+        };
+        let key = ShardKey { variant, tenant: tenant.map(String::from) };
+        let idx = match self.shards.iter().position(|s| s.key == key) {
+            Some(i) => i,
+            None => {
+                let mut placer = (self.factory)()?;
+                // warm the new shard's own placer to the *shard key's*
+                // device count, not the triggering request's: a lazily-
+                // initializing placer creates its agent sized to the
+                // variant this shard serves, so the service's internal
+                // grouping keys agree with the routing key from the very
+                // first submit. (The triggering request can be smaller
+                // than the variant the router lane-shares it under —
+                // e.g. a tenant shard opened by a 2-device request on a
+                // d=8 agent's variant — which without this warm-up would
+                // size the shard's lazy agent to d=2 and fracture the
+                // shard's chunks by device count.)
+                let warm_task =
+                    Task { table_ids: req.task.table_ids.clone(), n_devices: variant.0 };
+                placer.warm_variant(&PlacementRequest { task: &warm_task, ..req })?;
+                let svc = PlanService::new(&self.rt, placer, self.cfg.per_shard);
+                self.shards.push(Shard { key: key.clone(), svc, last_drain: None });
+                self.shards.len() - 1
+            }
+        };
+        Ok(match self.shards[idx].svc.submit(req)? {
+            Some(ticket) => {
+                self.routed += 1;
+                Some(Routed { shard: key, ticket })
+            }
+            // the shard's own bounded queue was full; its ServeStats
+            // recorded the shed
+            None => None,
+        })
+    }
+
+    /// Drain every shard **concurrently**, one thread per shard, all
+    /// executing against the shared runtime worker pool. Returns each
+    /// shard's whole-queue [`PlanService::drain`] outcome in
+    /// shard-creation order — per-shard failures stay per-shard (a
+    /// failing shard requeues its requests exactly as its service's
+    /// drain contract says; the other shards' completed plans are still
+    /// returned here).
+    pub fn try_drain(&mut self) -> Vec<(ShardKey, Result<Vec<Planned>>)> {
+        let calls_before = self.rt.run_count();
+        let reports = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter_mut()
+                .map(|sh| {
+                    scope.spawn(move || {
+                        let drained = sh.svc.drain();
+                        // the per-shard drain-completion clock
+                        // (ShardView::last_drain): stamped on the drain
+                        // thread, so it is the true completion instant —
+                        // and only on success, matching drain_sequential
+                        // and drain_shard (a failed drain completed
+                        // nothing: its requests were requeued)
+                        if drained.is_ok() {
+                            sh.last_drain = Some(Instant::now());
+                        }
+                        (sh.key.clone(), drained)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard drain thread panicked"))
+                .collect()
+        });
+        self.drained_calls += self.rt.run_count() - calls_before;
+        reports
+    }
+
+    /// [`ShardedFrontEnd::try_drain`] flattened: every shard's plans
+    /// concatenated in shard-creation order (per-shard order within).
+    /// If any shard failed, the first error is returned and the other
+    /// shards' results are dropped from the return value — though their
+    /// work is still counted in [`ShardedFrontEnd::stats`] and the
+    /// failing shard's requests are requeued. Callers needing loss-free
+    /// delivery under partial failure should use
+    /// [`ShardedFrontEnd::try_drain`] and keep each shard's batch.
+    pub fn drain(&mut self) -> Result<Vec<Planned>> {
+        let mut out = vec![];
+        for (_, drained) in self.try_drain() {
+            out.extend(drained?);
+        }
+        Ok(out)
+    }
+
+    /// The bit-identity reference for [`ShardedFrontEnd::drain`]: the
+    /// same per-variant services drained one after another on the
+    /// calling thread, in the same shard-creation order. Concurrency
+    /// moves waits, never work, so `drain` must reproduce this output —
+    /// plans and backend-call budgets — exactly (`tests/sharded.rs`).
+    pub fn drain_sequential(&mut self) -> Result<Vec<Planned>> {
+        let calls_before = self.rt.run_count();
+        let mut out = vec![];
+        let mut failure = None;
+        for sh in self.shards.iter_mut() {
+            match sh.svc.drain() {
+                Ok(drained) => {
+                    sh.last_drain = Some(Instant::now());
+                    out.extend(drained);
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        self.drained_calls += self.rt.run_count() - calls_before;
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+
+    /// Drain one shard to empty, leaving every other shard untouched —
+    /// how a caller keeps an interactive variant live while a bulk
+    /// variant's queue is saturated, without waiting on the full
+    /// [`ShardedFrontEnd::drain`].
+    pub fn drain_shard(&mut self, key: &ShardKey) -> Result<Vec<Planned>> {
+        let sh = self
+            .shards
+            .iter_mut()
+            .find(|s| &s.key == key)
+            .ok_or_else(|| err!("no shard {} in this front end", key.label()))?;
+        let calls_before = self.rt.run_count();
+        let drained = sh.svc.drain();
+        self.drained_calls += self.rt.run_count() - calls_before;
+        let drained = drained?;
+        sh.last_drain = Some(Instant::now());
+        Ok(drained)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placer;
+    use crate::sim::{SimConfig, Simulator};
+    use crate::tables::{gen_dlrm, sample_tasks, split_pools, Dataset, Task};
+
+    fn setup(n_devices: usize, n_tasks: usize) -> (Dataset, Vec<Task>, Simulator) {
+        let ds = gen_dlrm(200, 0);
+        let (pool, _) = split_pools(&ds, 1);
+        let tasks = sample_tasks(&pool, 8, n_devices, n_tasks, 2);
+        (ds, tasks, Simulator::new(SimConfig::default()))
+    }
+
+    fn greedy_front<'a>(rt: &Arc<Runtime>, cfg: ShardConfig) -> ShardedFrontEnd<'a> {
+        let rt2 = Arc::clone(rt);
+        ShardedFrontEnd::new(rt, move || placer::by_name(&rt2, "greedy:size"), cfg).unwrap()
+    }
+
+    #[test]
+    fn shard_keys_label_and_compare() {
+        let a = ShardKey { variant: (8, 48), tenant: None };
+        let b = ShardKey { variant: (8, 48), tenant: Some("acme".into()) };
+        assert_eq!(a.label(), "d8s48");
+        assert_eq!(b.label(), "d8s48/acme");
+        assert_ne!(a, b, "tenant is part of the identity");
+    }
+
+    #[test]
+    fn unknown_shard_key_is_an_error() {
+        let rt = Arc::new(Runtime::reference());
+        let mut front = greedy_front(&rt, ShardConfig::default());
+        let missing = ShardKey { variant: (8, 48), tenant: None };
+        let e = front.drain_shard(&missing).expect_err("no shards exist yet");
+        assert!(e.to_string().contains("no shard d8s48"), "{e}");
+    }
+
+    #[test]
+    fn empty_front_end_drains_to_nothing() {
+        let rt = Arc::new(Runtime::reference());
+        let mut front = greedy_front(&rt, ShardConfig::default());
+        assert!(front.is_empty());
+        assert!(front.drain().unwrap().is_empty());
+        assert!(front.drain_sequential().unwrap().is_empty());
+        assert_eq!(front.stats().shards, 0);
+    }
+
+    #[test]
+    fn unservable_device_count_errors_at_submit() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, mut tasks, sim) = setup(4, 1);
+        tasks[0].n_devices = 1000; // beyond the largest lowered variant
+        let mut front = greedy_front(&rt, ShardConfig::default());
+        let req = PlacementRequest::new(&ds, &tasks[0], &sim);
+        assert!(front.submit(req).is_err());
+        assert_eq!(front.stats().routed, 0);
+        assert_eq!(front.stats().shards, 0, "no shard created for an unroutable request");
+    }
+
+    #[test]
+    fn stats_merge_per_shard_counters() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, small, sim) = setup(4, 3);
+        let (_, large, _) = setup(128, 2);
+        let mut front = greedy_front(&rt, ShardConfig::default());
+        for t in small.iter().chain(&large) {
+            let req = PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap();
+            front.submit(req).unwrap().unwrap();
+        }
+        assert_eq!(front.queued(), 5);
+        let done = front.drain().unwrap();
+        assert_eq!(done.len(), 5);
+        let fs = front.stats();
+        assert_eq!(fs.shards, 2);
+        assert_eq!(fs.routed, 5);
+        assert_eq!(fs.aggregate.submitted, 5);
+        assert_eq!(fs.aggregate.planned, 5);
+        assert!(fs.aggregate.mean_queue_ms() >= 0.0);
+        assert!(fs.summary().contains("2 shards"), "{}", fs.summary());
+        for sh in front.shards() {
+            assert!(sh.last_drain.is_some(), "drain stamped the completion clock");
+            assert_eq!(sh.queued, 0);
+        }
+    }
+}

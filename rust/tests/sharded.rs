@@ -1,0 +1,453 @@
+//! Sharded-front-end integration tests: every request routes to its
+//! serving variant's shard (tenants isolate further), the concurrent
+//! per-shard drain is bit-identical to draining the same shards
+//! sequentially — plans *and* exact backend-call budgets — on the mixed
+//! 2/4/8/128-device workload, the global cap sheds overload at the front
+//! door, and a saturated 128-device shard cannot head-of-line-block an
+//! 8-device stream (proved two ways: structurally via `drain_shard`, and
+//! by a gated placer that would deadlock a single FIFO).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dreamshard::coordinator::{DreamShard, TrainCfg};
+use dreamshard::placer::{DreamShardPlacer, Placer, PlacementPlan, PlacementRequest};
+use dreamshard::runtime::Runtime;
+use dreamshard::serve::{
+    synthetic_arrivals, PlanService, Planned, ServeConfig, ShardConfig, ShardKey,
+    ShardedFrontEnd, WorkloadCfg,
+};
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools, Dataset, Task};
+use dreamshard::util::Rng;
+use dreamshard::Result;
+
+/// 64 heterogeneous arrivals: mixed 2/4/8/128-device tasks of 5-12
+/// tables (the same shape `tests/serve.rs` pins the single service on).
+fn mixed_workload(ds: &Dataset) -> Vec<dreamshard::serve::Arrival> {
+    let (pool, _) = split_pools(ds, 1);
+    synthetic_arrivals(&pool, &WorkloadCfg {
+        n_requests: 64,
+        device_mix: vec![2, 4, 8, 128],
+        min_tables: 5,
+        max_tables: 12,
+        mean_gap_ms: 1.0,
+        seed: 4,
+    })
+}
+
+/// Deterministic random-init weights; routing, parity, and call budgets
+/// are independent of weight quality.
+fn untrained_agent(rt: &Runtime) -> DreamShard {
+    let mut rng = Rng::new(42);
+    DreamShard::new(rt, 8, TrainCfg::default(), &mut rng).unwrap()
+}
+
+/// A front end whose shards (and router) all snapshot the same agent, so
+/// every instance routes and plans identically.
+fn agent_front<'a>(
+    rt: &Arc<Runtime>,
+    agent: &'a DreamShard,
+    cfg: ShardConfig,
+) -> ShardedFrontEnd<'a> {
+    let rt2 = Arc::clone(rt);
+    ShardedFrontEnd::new(
+        rt,
+        move || Ok(Box::new(DreamShardPlacer::from_agent(&rt2, agent)) as Box<dyn Placer>),
+        cfg,
+    )
+    .unwrap()
+}
+
+#[test]
+fn routing_lands_every_request_in_its_variant_shard() {
+    let rt = Arc::new(Runtime::reference());
+    let ds = gen_dlrm(300, 0);
+    let sim = Simulator::new(SimConfig::default());
+    let arrivals = mixed_workload(&ds);
+    let agent = untrained_agent(&rt);
+    let cfg = ShardConfig {
+        per_shard: ServeConfig { capacity: 64, chunk: 16, ..ServeConfig::default() },
+        global_cap: 64,
+    };
+    let mut front = agent_front(&rt, &agent, cfg);
+
+    let mut expected_by_shard = [0usize; 2]; // [d8s48, d128s16]
+    for a in &arrivals {
+        let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim).unwrap();
+        let routed = front.submit(req).unwrap().expect("global cap fits the workload");
+        // the d=8 agent lane-shares all 2/4/8-device traffic under its
+        // own variant; only 128-device tasks need the ultra variant
+        let expect = if a.task.n_devices <= 8 { (8, 48) } else { (128, 16) };
+        assert_eq!(routed.shard.variant, expect, "task with {} devices", a.task.n_devices);
+        assert_eq!(routed.shard.tenant, None);
+        let slot = if expect == (8, 48) { 0 } else { 1 };
+        // per-shard tickets are dense FIFO sequences: the receipt's
+        // ticket is exactly how many requests that shard took before
+        assert_eq!(routed.ticket, expected_by_shard[slot] as u64);
+        expected_by_shard[slot] += 1;
+    }
+    assert_eq!(expected_by_shard[0] + expected_by_shard[1], 64);
+    assert!(expected_by_shard[0] > 0 && expected_by_shard[1] > 0, "the mix hits both shards");
+    assert_eq!(front.stats().shards, 2);
+
+    // drained plans report the variant of the shard that served them,
+    // in the same per-shard counts the routing receipts promised
+    let reports = front.try_drain();
+    assert_eq!(reports.len(), 2);
+    for (key, drained) in &reports {
+        let done = drained.as_ref().expect("drain succeeds");
+        let slot = if key.variant == (8, 48) { 0 } else { 1 };
+        assert_eq!(done.len(), expected_by_shard[slot], "shard {}", key.label());
+        for p in done {
+            assert_eq!(p.variant, key.variant);
+            assert_eq!(p.plan.strategy, "dreamshard");
+        }
+        // FIFO within the shard
+        assert!(done.windows(2).all(|w| w[0].ticket < w[1].ticket));
+    }
+}
+
+#[test]
+fn tenants_get_their_own_shards_on_one_variant() {
+    let rt = Arc::new(Runtime::reference());
+    let ds = gen_dlrm(200, 0);
+    let (pool, _) = split_pools(&ds, 1);
+    let tasks = sample_tasks(&pool, 8, 4, 6, 2);
+    let sim = Simulator::new(SimConfig::default());
+    let rt2 = Arc::clone(&rt);
+    let mut front = ShardedFrontEnd::new(
+        &rt,
+        move || dreamshard::placer::by_name(&rt2, "greedy:size"),
+        ShardConfig::default(),
+    )
+    .unwrap();
+    for (i, t) in tasks.iter().enumerate() {
+        let req = PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap();
+        let tenant = ["acme", "globex"][i % 2];
+        let routed = front.submit_for(req, Some(tenant)).unwrap().unwrap();
+        assert_eq!(routed.shard.variant, (4, 48));
+        assert_eq!(routed.shard.tenant.as_deref(), Some(tenant));
+    }
+    assert_eq!(front.stats().shards, 2, "same variant, two tenants, two shards");
+    let acme = ShardKey { variant: (4, 48), tenant: Some("acme".into()) };
+    let done = front.drain_shard(&acme).unwrap();
+    assert_eq!(done.len(), 3);
+    assert_eq!(front.queued(), 3, "globex untouched by acme's drain");
+    assert_eq!(front.drain().unwrap().len(), 3);
+}
+
+/// A *lazily-initializing* factory (untrained `dreamshard` out of the
+/// registry, exactly what `serve-sim --sharded` and the example use):
+/// shard creation warms the shard's own placer to the shard key's device
+/// count, so the service's internal grouping agrees with the routing key
+/// even when the shard's first request is smaller than the variant the
+/// router lane-shares it under — tenant shards included. Every plan's
+/// variant matches its routing receipt, and a tenant shard's mixed
+/// 2/8-device requests share one lane-chunk instead of fracturing by
+/// device count.
+#[test]
+fn lazy_factory_shards_agree_with_routing_keys() {
+    let rt = Arc::new(Runtime::reference());
+    let ds = gen_dlrm(200, 0);
+    let (pool, _) = split_pools(&ds, 1);
+    let sim = Simulator::new(SimConfig::default());
+    let eight = sample_tasks(&pool, 6, 8, 2, 1);
+    let two = sample_tasks(&pool, 6, 2, 1, 2);
+    let rt2 = Arc::clone(&rt);
+    let mut front = ShardedFrontEnd::new(
+        &rt,
+        move || dreamshard::placer::by_name(&rt2, "dreamshard"),
+        ShardConfig::default(),
+    )
+    .unwrap();
+
+    // the first request sizes the lazy *router* agent at d=8, so the
+    // router lane-shares 2-device traffic under (8, 48) from then on
+    let r0 = front
+        .submit(PlacementRequest::for_runtime(&rt, &ds, &eight[0], &sim).unwrap())
+        .unwrap()
+        .unwrap();
+    assert_eq!(r0.shard.variant, (8, 48));
+    // tenant shard opened by a *2-device* request: without the creation
+    // warm-up its lazy agent would be sized d=2 and disagree with the key
+    let reqs = [
+        (&two[0], Some("acme")),
+        (&eight[1], Some("acme")),
+    ];
+    for (t, tenant) in reqs {
+        let routed = front
+            .submit_for(PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap(), tenant)
+            .unwrap()
+            .unwrap();
+        assert_eq!(routed.shard.variant, (8, 48), "{} devices", t.n_devices);
+        assert_eq!(routed.shard.tenant.as_deref(), tenant);
+    }
+    assert_eq!(front.stats().shards, 2);
+
+    for (key, drained) in front.try_drain() {
+        let done = drained.expect("drain succeeds");
+        for p in &done {
+            assert_eq!(
+                p.variant, key.variant,
+                "plan variant must match the routing key (ticket {})",
+                p.ticket
+            );
+        }
+    }
+    // the tenant shard's 2- and 8-device requests shared one lane-chunk
+    let acme = front
+        .shards()
+        .find(|sh| sh.key.tenant.as_deref() == Some("acme"))
+        .expect("tenant shard exists");
+    assert_eq!(acme.stats.chunks, 1, "mixed device counts lane-share one chunk");
+    assert_eq!(acme.stats.planned, 2);
+}
+
+/// The tentpole acceptance contract: draining every shard concurrently
+/// (one thread per shard, shared runtime worker pool) must reproduce
+/// draining the same per-variant services sequentially **bit-for-bit**
+/// on the mixed 2/4/8/128-device workload — same plans per (shard,
+/// ticket), same variants — and spend **exactly** the same backend
+/// calls, both in total and on the `table_cost` ordering artifact:
+/// concurrency moves waits, never work.
+#[test]
+fn concurrent_drain_matches_sequential_drain_and_call_budgets() {
+    let rt = Arc::new(Runtime::reference().with_workers(4));
+    let ds = gen_dlrm(300, 0);
+    let sim = Simulator::new(SimConfig::default());
+    let arrivals = mixed_workload(&ds);
+    let agent = untrained_agent(&rt);
+    let cfg = ShardConfig {
+        per_shard: ServeConfig { capacity: 64, chunk: 16, ..ServeConfig::default() },
+        global_cap: 64,
+    };
+
+    // sequential reference: the same shards, drained one after another
+    let mut seq_front = agent_front(&rt, &agent, cfg);
+    for a in &arrivals {
+        let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim).unwrap();
+        seq_front.submit(req).unwrap().unwrap();
+    }
+    let calls_before = rt.run_count();
+    let ordering_before = rt.run_count_for("table_cost");
+    let seq = seq_front.drain_sequential().unwrap();
+    let seq_calls = rt.run_count() - calls_before;
+    let seq_ordering = rt.run_count_for("table_cost") - ordering_before;
+    assert_eq!(seq.len(), 64);
+    assert_eq!(
+        seq_front.stats().aggregate.backend_calls,
+        seq_calls,
+        "the front end's own call accounting matches the runtime's"
+    );
+
+    // concurrent pass: fresh identical front end, per-shard drain threads
+    let mut con_front = agent_front(&rt, &agent, cfg);
+    for a in &arrivals {
+        let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim).unwrap();
+        con_front.submit(req).unwrap().unwrap();
+    }
+    let calls_before = rt.run_count();
+    let ordering_before = rt.run_count_for("table_cost");
+    let con = con_front.drain().unwrap();
+    let con_calls = rt.run_count() - calls_before;
+    let con_ordering = rt.run_count_for("table_cost") - ordering_before;
+    assert_eq!(con.len(), 64);
+    assert_eq!(con_front.stats().aggregate.planned, 64);
+    assert_eq!(
+        con_front.stats().aggregate.backend_calls,
+        con_calls,
+        "aggregate backend_calls stays exact under concurrent shard drains"
+    );
+
+    // bit-identical plans: (variant, ticket) identifies a request across
+    // both front ends, because routing is deterministic
+    let key = |p: &Planned| (p.variant, p.ticket);
+    let mut seq_sorted = seq.clone();
+    seq_sorted.sort_by_key(&key);
+    let mut con_sorted = con.clone();
+    con_sorted.sort_by_key(&key);
+    for (s, c) in seq_sorted.iter().zip(&con_sorted) {
+        assert_eq!(key(s), key(c));
+        assert_eq!(s.plan.placement, c.plan.placement, "shard {:?} ticket {}", s.variant, s.ticket);
+    }
+    // exact backend-call budgets, total and per the ordering artifact
+    assert_eq!(con_calls, seq_calls, "concurrent drain must not change the call budget");
+    assert_eq!(con_ordering, seq_ordering, "table_cost ordering budget");
+    assert_eq!(
+        con_calls - con_ordering,
+        seq_calls - seq_ordering,
+        "one fused mdp_step call per lockstep MDP step, either way"
+    );
+}
+
+#[test]
+fn global_cap_sheds_overload_across_shards() {
+    let rt = Arc::new(Runtime::reference());
+    let ds = gen_dlrm(300, 0);
+    let sim = Simulator::new(SimConfig::default());
+    let arrivals = mixed_workload(&ds); // 64 requests
+    let agent = untrained_agent(&rt);
+    let cfg = ShardConfig {
+        // roomy per-shard queues: only the global cap can shed here
+        per_shard: ServeConfig { capacity: 64, chunk: 16, ..ServeConfig::default() },
+        global_cap: 8,
+    };
+    let mut front = agent_front(&rt, &agent, cfg);
+    let mut accepted = 0;
+    let mut shed = 0;
+    for a in &arrivals {
+        let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim).unwrap();
+        match front.submit(req).unwrap() {
+            Some(_) => accepted += 1,
+            None => shed += 1,
+        }
+    }
+    assert_eq!(accepted, 8, "exactly the global cap is admitted");
+    assert_eq!(shed, 56);
+    assert!(front.is_full());
+    let fs = front.stats();
+    assert_eq!(fs.shed_global, 56);
+    assert_eq!(fs.routed, 8);
+    assert_eq!(fs.aggregate.submitted, 8);
+    assert_eq!(fs.aggregate.rejected, 0, "no per-shard queue ever filled");
+
+    // draining frees the cap: the front door admits again
+    assert_eq!(front.drain().unwrap().len(), 8);
+    assert!(!front.is_full());
+    let req = PlacementRequest::for_runtime(&rt, &ds, &arrivals[0].task, &sim).unwrap();
+    assert!(front.submit(req).unwrap().is_some());
+}
+
+/// Structural no-head-of-line-blocking proof: with every 128-device
+/// request submitted *ahead* of the 8-device stream, a single FIFO
+/// serves the 128s first — but the front end can drain the 8-device
+/// shard to completion while the 128-device shard still holds its whole
+/// queue.
+#[test]
+fn eight_device_stream_completes_while_128_shard_is_saturated() {
+    let rt = Arc::new(Runtime::reference());
+    let ds = gen_dlrm(200, 0);
+    let (pool, _) = split_pools(&ds, 1);
+    let sim = Simulator::new(SimConfig::default());
+    let large = sample_tasks(&pool, 8, 128, 3, 1);
+    let small = sample_tasks(&pool, 8, 8, 3, 2);
+    let submit_order: Vec<&Task> = large.iter().chain(&small).collect();
+
+    // the single-FIFO contrast: the head of the queue is a 128-device
+    // request, so the first drained chunk is all 128s — the 8-device
+    // stream waits behind work it does not share a variant with
+    let rt2 = Arc::clone(&rt);
+    let mut single = PlanService::new(
+        &rt,
+        dreamshard::placer::by_name(&rt2, "greedy:size").unwrap(),
+        ServeConfig { capacity: 16, chunk: 16, ..ServeConfig::default() },
+    );
+    for &t in &submit_order {
+        single.submit(PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap()).unwrap();
+    }
+    let first = single.drain_chunk().unwrap();
+    assert!(!first.is_empty());
+    assert!(
+        first.iter().all(|p| p.variant == (128, 16)),
+        "single FIFO: the 128-device group drains first"
+    );
+    assert_eq!(single.queued(), 3, "8-device requests still queued behind the 128s");
+
+    // the sharded front end: same submit order, but the 8-device shard
+    // is independently drainable while the 128 shard stays saturated
+    let rt3 = Arc::clone(&rt);
+    let mut front = ShardedFrontEnd::new(
+        &rt,
+        move || dreamshard::placer::by_name(&rt3, "greedy:size"),
+        ShardConfig::default(),
+    )
+    .unwrap();
+    for &t in &submit_order {
+        front.submit(PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap()).unwrap().unwrap();
+    }
+    let key8 = ShardKey { variant: (8, 48), tenant: None };
+    let done = front.drain_shard(&key8).unwrap();
+    assert_eq!(done.len(), 3, "the whole 8-device stream completed");
+    let view128 = front
+        .shards()
+        .find(|sh| sh.key.variant == (128, 16))
+        .expect("128 shard exists");
+    assert_eq!(view128.queued, 3, "the saturated 128 shard was never touched");
+    assert_eq!(front.drain().unwrap().len(), 3, "and drains on its own schedule");
+}
+
+/// A placer whose 128-device plans *block* until enough small-device
+/// plans have completed. Under a single FIFO with the 128s at the head
+/// this deadlocks — the gate waits on plans stuck behind it in the same
+/// queue. The sharded front end's per-shard drain threads make progress
+/// on the 8-device shard while the 128 shard waits, so the drain
+/// completes. (A timeout turns a would-be deadlock into a test failure.)
+struct GatedPlacer {
+    small_planned: Arc<AtomicUsize>,
+    need: usize,
+}
+
+impl Placer for GatedPlacer {
+    fn name(&self) -> &str {
+        "gated"
+    }
+
+    fn place(&mut self, req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
+        if req.task.n_devices == 128 {
+            let start = Instant::now();
+            while self.small_planned.load(Ordering::SeqCst) < self.need {
+                if start.elapsed() > Duration::from_secs(30) {
+                    return Err(dreamshard::err!(
+                        "gate timed out: only {}/{} small plans completed — the \
+                         128-device stream head-of-line-blocked the small stream",
+                        self.small_planned.load(Ordering::SeqCst),
+                        self.need
+                    ));
+                }
+                std::thread::yield_now();
+            }
+        }
+        let plan = PlacementPlan::new(req, vec![0; req.task.n_tables()], "gated");
+        if req.task.n_devices != 128 {
+            self.small_planned.fetch_add(1, Ordering::SeqCst);
+        }
+        Ok(plan)
+    }
+}
+
+#[test]
+fn concurrent_shard_drains_have_no_head_of_line_blocking() {
+    let rt = Arc::new(Runtime::reference());
+    let ds = gen_dlrm(200, 0);
+    let (pool, _) = split_pools(&ds, 1);
+    let sim = Simulator::new(SimConfig::default());
+    let large = sample_tasks(&pool, 8, 128, 4, 1);
+    let small = sample_tasks(&pool, 8, 8, 4, 2);
+
+    let small_planned = Arc::new(AtomicUsize::new(0));
+    let factory = {
+        let small_planned = Arc::clone(&small_planned);
+        move || {
+            Ok(Box::new(GatedPlacer { small_planned: Arc::clone(&small_planned), need: 4 })
+                as Box<dyn Placer>)
+        }
+    };
+    let mut front = ShardedFrontEnd::new(&rt, factory, ShardConfig::default()).unwrap();
+    // every 128-device request submitted before any 8-device one: a
+    // single FIFO would drain the gated 128 chunk first and deadlock
+    for t in large.iter().chain(&small) {
+        let req = PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap();
+        front.submit(req).unwrap().unwrap();
+    }
+    assert_eq!(front.stats().shards, 2);
+    let done = front.drain().expect("concurrent shard drains make progress past the gate");
+    assert_eq!(done.len(), 8);
+    assert_eq!(small_planned.load(Ordering::SeqCst), 4);
+    let fs = front.stats();
+    assert_eq!(fs.aggregate.planned, 8);
+    for sh in front.shards() {
+        assert!(sh.last_drain.is_some(), "shard {} stamped its drain clock", sh.key.label());
+    }
+}
