@@ -1,0 +1,163 @@
+//! Incremental re-placement benchmark: [`Placer::replace_many`] vs
+//! re-planning from scratch after a fleet change, on a mixed
+//! 2/4/8-device workload where every task with spare devices loses its
+//! highest-indexed one. Scratch plans look cheap until the fleet has to
+//! *adopt* them — every moved table pays its weights (and optimizer
+//! state) over the migration bandwidth — so the comparison tracks both
+//! plans/sec and the migration bill. DreamShard's warm-started replace
+//! also wins on backend calls: a rebalance chunk rolls only the moved
+//! tables through the fused `mdp_step`, so a move budget of K costs
+//! `1 + K` calls where a scratch chunk pays `1 + n_tables`.
+
+use dreamshard::coordinator::{DreamShard, TrainCfg};
+use dreamshard::placer::{
+    self, DreamShardPlacer, MigrationBudget, Placer, PlacementPlan, PlacementRequest,
+};
+use dreamshard::runtime::Runtime;
+use dreamshard::serve::{synthetic_arrivals, WorkloadCfg};
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::tables::{gen_dlrm, split_pools, Dataset, Task};
+use dreamshard::util::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// (mean latency ms, total migration ms, total moved tables) of adopting
+/// `plans` when the fleet currently runs `prevs`.
+fn adoption_bill(
+    sim: &Simulator,
+    ds: &Dataset,
+    tasks: &[Task],
+    prevs: &[PlacementPlan],
+    plans: &[PlacementPlan],
+) -> (f64, f64, usize) {
+    let mut lat = 0.0;
+    let mut mig = 0.0;
+    let mut moved = 0usize;
+    for ((t, prev), plan) in tasks.iter().zip(prevs).zip(plans) {
+        let e = sim.evaluate_migration(ds, t, &prev.placement, &plan.placement);
+        lat += e.latency;
+        mig += e.migration_ms;
+        moved += e.moved_tables;
+    }
+    (lat / tasks.len().max(1) as f64, mig, moved)
+}
+
+fn main() {
+    let rt = Arc::new(Runtime::open_default().expect("runtime"));
+    let ds = gen_dlrm(400, 0);
+    let (pool, _) = split_pools(&ds, 1);
+    let sim = Simulator::new(SimConfig::default());
+    let arrivals = synthetic_arrivals(&pool, &WorkloadCfg {
+        n_requests: 48,
+        device_mix: vec![2, 4, 8],
+        min_tables: 20,
+        max_tables: 40,
+        mean_gap_ms: 1.0,
+        seed: 3,
+    });
+    let tasks: Vec<Task> = arrivals.iter().map(|a| a.task.clone()).collect();
+    let reqs: Vec<PlacementRequest> = tasks
+        .iter()
+        .map(|t| PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap())
+        .collect();
+
+    // one failed device per task (2-device tasks keep both: their
+    // rebalance is purely budget-limited discretionary moves)
+    let perturbed: Vec<Task> = tasks
+        .iter()
+        .map(|t| Task {
+            table_ids: t.table_ids.clone(),
+            n_devices: if t.n_devices > 2 { t.n_devices - 1 } else { t.n_devices },
+        })
+        .collect();
+
+    // --- DreamShard: warm-started replace vs scratch re-rollout -------
+    let mut rng = Rng::new(0);
+    let agent = DreamShard::new(&rt, 8, TrainCfg::default(), &mut rng).unwrap();
+    let mut live = DreamShardPlacer::from_agent(&rt, &agent);
+    let prevs = live.place_many(&reqs).unwrap();
+
+    for moves in [2usize, 4, 8] {
+        let new_reqs: Vec<PlacementRequest> = perturbed
+            .iter()
+            .map(|t| {
+                PlacementRequest::for_runtime(&rt, &ds, t, &sim)
+                    .unwrap()
+                    .with_migration(MigrationBudget::moves(moves))
+            })
+            .collect();
+
+        let mut rep = DreamShardPlacer::from_agent(&rt, &agent);
+        let calls0 = rt.run_count();
+        let t0 = Instant::now();
+        let replaced = rep.replace_many(&prevs, &new_reqs).unwrap();
+        let rep_s = t0.elapsed().as_secs_f64();
+        let rep_calls = rt.run_count() - calls0;
+        let rep_lat: f64 =
+            replaced.iter().map(|p| p.eval.latency).sum::<f64>() / replaced.len() as f64;
+        let rep_mig: f64 = replaced.iter().map(|p| p.eval.migration_ms).sum();
+        let rep_moved: usize = replaced.iter().map(|p| p.eval.moved_tables).sum();
+
+        let mut scr = DreamShardPlacer::from_agent(&rt, &agent);
+        let calls0 = rt.run_count();
+        let t0 = Instant::now();
+        let scratch = scr.place_many(&new_reqs).unwrap();
+        let scr_s = t0.elapsed().as_secs_f64();
+        let scr_calls = rt.run_count() - calls0;
+        let (scr_lat, scr_mig, scr_moved) =
+            adoption_bill(&sim, &ds, &perturbed, &prevs, &scratch);
+
+        println!(
+            "dreamshard, {} plans, budget {moves}: replace {:.1} ms ({:.1} plans/s, {} calls, \
+             {rep_moved} moved, {rep_mig:.0} ms migration, {rep_lat:.2} ms latency) vs \
+             scratch {:.1} ms ({:.1} plans/s, {} calls, {scr_moved} moved, {scr_mig:.0} ms \
+             migration, {scr_lat:.2} ms latency)",
+            replaced.len(),
+            rep_s * 1e3,
+            replaced.len() as f64 / rep_s,
+            rep_calls,
+            scr_s * 1e3,
+            scratch.len() as f64 / scr_s,
+            scr_calls,
+        );
+        assert!(
+            rep_mig < scr_mig,
+            "budgeted replace must migrate less than adopting scratch plans"
+        );
+    }
+
+    // --- greedy family: migration-aware local search vs re-pack -------
+    for name in ["greedy:size", "greedy:size-lookup"] {
+        let mut live = placer::by_name(&rt, name).unwrap();
+        let prevs = live.place_many(&reqs).unwrap();
+        let new_reqs: Vec<PlacementRequest> = perturbed
+            .iter()
+            .map(|t| {
+                PlacementRequest::for_runtime(&rt, &ds, t, &sim)
+                    .unwrap()
+                    .with_migration(MigrationBudget::moves(4))
+            })
+            .collect();
+
+        let t0 = Instant::now();
+        let replaced = live.replace_many(&prevs, &new_reqs).unwrap();
+        let rep_s = t0.elapsed().as_secs_f64();
+        let rep_mig: f64 = replaced.iter().map(|p| p.eval.migration_ms).sum();
+        let rep_moved: usize = replaced.iter().map(|p| p.eval.moved_tables).sum();
+
+        let mut scr = placer::by_name(&rt, name).unwrap();
+        let t0 = Instant::now();
+        let scratch = scr.place_many(&new_reqs).unwrap();
+        let scr_s = t0.elapsed().as_secs_f64();
+        let (_, scr_mig, scr_moved) = adoption_bill(&sim, &ds, &perturbed, &prevs, &scratch);
+
+        println!(
+            "{name}, {} plans, budget 4: replace {:.1} ms ({rep_moved} moved, {rep_mig:.0} ms \
+             migration) vs scratch {:.1} ms ({scr_moved} moved, {scr_mig:.0} ms migration)",
+            replaced.len(),
+            rep_s * 1e3,
+            scr_s * 1e3,
+        );
+        assert!(rep_mig < scr_mig, "{name}: replace must migrate less than re-packing");
+    }
+}

@@ -1,0 +1,75 @@
+//! Incremental re-placement in a dozen lines: plan an embedding-table
+//! task on 4 devices, lose one, and repair the plan onto the surviving
+//! 3 with a budgeted [`Placer::replace`] instead of re-planning from
+//! scratch.
+//!
+//!     cargo run --release --example rebalance
+//!
+//! `replace` keeps every table where it was unless feasibility (the
+//! lost device, memory caps) forces a move or the migration budget
+//! allows a balance-restoring one — so the fleet copies a handful of
+//! tables' weights instead of reshuffling everything. The same seam
+//! runs through the whole stack: every registered placer answers
+//! `replace` (the `dreamshard` policy re-rolls its MDP warm-started
+//! from the previous plan), and `PlanService::rebalance` /
+//! `ShardedFrontEnd::rebalance` drain whole batches of it — see
+//! `dreamshard serve-sim --rebalance` and `benches/rebalance.rs` for
+//! the fleet-scale comparison.
+
+use std::sync::Arc;
+
+use dreamshard::placer::{self, MigrationBudget, Placer, PlacementRequest};
+use dreamshard::runtime::Runtime;
+use dreamshard::sim::{SimConfig, Simulator};
+use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools, Task};
+
+fn main() -> dreamshard::Result<()> {
+    let rt = Arc::new(Runtime::open_default()?);
+    let ds = gen_dlrm(200, 7);
+    let (pool, _) = split_pools(&ds, 1);
+    let sim = Simulator::new(SimConfig::default());
+    let task = sample_tasks(&pool, 24, 4, 1, 3).remove(0);
+
+    // day 1: a healthy 4-device fleet
+    let mut placer = placer::by_name(&rt, "greedy:size-lookup")?;
+    let req = PlacementRequest::for_runtime(&rt, &ds, &task, &sim)?;
+    let plan = placer.place(&req)?;
+    println!("{}", sim.render_trace(&plan.eval, "day 1: 24 tables on 4 devices"));
+
+    // day 2: device 3 dies. Its tables are forced moves; at most 2 more
+    // tables may move to restore balance (the migration budget).
+    let smaller = Task { table_ids: task.table_ids.clone(), n_devices: 3 };
+    let req = PlacementRequest::for_runtime(&rt, &ds, &smaller, &sim)?
+        .with_migration(MigrationBudget::moves(2));
+    let repaired = placer.replace(&plan, &req)?;
+    let stayed = plan
+        .placement
+        .iter()
+        .zip(&repaired.placement)
+        .filter(|(a, b)| a == b)
+        .count();
+    println!(
+        "{}",
+        sim.render_trace(&repaired.eval, "day 2: device 3 lost, budgeted replace")
+    );
+    println!(
+        "replace moved {} tables ({:.2} ms of weight migration); {stayed} stayed put\n",
+        repaired.eval.moved_tables, repaired.eval.migration_ms,
+    );
+
+    // the alternative: forget the old plan and re-pack from scratch —
+    // then pay to move every table that landed somewhere new
+    let scratch = placer.place(&req)?;
+    let bill = sim.evaluate_migration(&ds, &smaller, &plan.placement, &scratch.placement);
+    println!(
+        "scratch re-plan: {:.2} ms latency (vs {:.2} ms) but {} tables moved \
+         ({:.2} ms migration) -> total {:.2} ms vs replace's {:.2} ms",
+        bill.latency,
+        repaired.eval.latency,
+        bill.moved_tables,
+        bill.migration_ms,
+        bill.total_ms(),
+        repaired.eval.total_ms(),
+    );
+    Ok(())
+}

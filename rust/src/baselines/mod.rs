@@ -49,7 +49,10 @@ impl Expert {
         }
     }
 
-    fn cost(&self, t: &Table) -> f64 {
+    /// The expert's scalar load contribution of one table — public so
+    /// the migration-aware greedy `replace` can balance the same metric
+    /// its cold-start `place` balances.
+    pub fn cost(&self, t: &Table) -> f64 {
         let size = t.size_gb() as f64;
         let dim = t.dim as f64;
         let pool = t.pooling as f64;

@@ -67,6 +67,19 @@
 //! each step's CPU feature-fill and fused backend call are driven
 //! separately, which is what pipelined callers overlap.
 //!
+//! Plans age — devices fail, capacity arrives — so every strategy also
+//! answers [`placer::Placer::replace`] / [`placer::Placer::replace_many`]:
+//! re-plan against a previous [`placer::PlacementPlan`], moving at most
+//! what the request's [`placer::MigrationBudget`] allows (forced moves
+//! off lost devices are always permitted). The greedy family runs a
+//! migration-aware local search that keeps every still-valid assignment;
+//! DreamShard re-rolls its MDP warm-started from the prior plan, so only
+//! the tables it may move consume fused backend steps (a budget of `K`
+//! costs `1 + K` calls per chunk). Either way the returned plan's
+//! [`sim::Evaluation`] prices every moved table's weights over the
+//! configured copy bandwidth ([`sim::SimConfig::migration_gbps`],
+//! [`sim::Simulator::evaluate_migration`]) into `migration_ms`.
+//!
 //! ## Serving
 //!
 //! [`serve::PlanService`] turns the facade into a front end for traffic:
@@ -121,6 +134,17 @@
 //! (`--sharded` picks the sharded one), and `benches/serving.rs` reports
 //! pipelined vs blocking drains at 1/2/4 workers plus sharded vs
 //! single-FIFO throughput on the mixed 2/4/8/128-device workload.
+//!
+//! Both front ends also serve fleet *changes*:
+//! [`serve::PlanService::rebalance`] and
+//! [`serve::ShardedFrontEnd::rebalance`] drain batches of
+//! [`serve::ReplaceJob`]s (previous plan + new request) through the
+//! placer's budgeted `replace_many`, bypassing the submit FIFOs, with
+//! moved-table counts and migration cost surfaced in
+//! [`serve::ServeStats`] / [`serve::FrontStats`]. `serve-sim
+//! --rebalance` and `benches/rebalance.rs` compare that path against
+//! re-planning from scratch; `examples/rebalance.rs` is the one-task
+//! walkthrough.
 //!
 //! ## Execution backends
 //!

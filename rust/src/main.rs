@@ -34,6 +34,13 @@
 //!                  serving variant, each draining on its own thread,
 //!                  with per-shard + aggregate tables and a single-FIFO
 //!                  throughput comparison (--capacity is the global cap)
+//! --rebalance      day-2 scenario: plan the workload, fail one device
+//!                  per task, then compare the budgeted incremental
+//!                  rebalance (Placer::replace) against re-planning
+//!                  from scratch on latency + migration cost
+//!                  (--devices defaults to 2,4,8 here)
+//! --moves K        discretionary moved-table budget per rebalanced
+//!                  plan (4); forced moves off lost devices are exempt
 //! ```
 //!
 //! Without `--sharded` the run closes with a pipelined-drain vs
@@ -49,14 +56,14 @@ use dreamshard::{bail, err, Context, Result};
 use dreamshard::bench::{self, common::Ctx};
 use dreamshard::cli::parse_flags;
 use dreamshard::coordinator::TrainCfg;
-use dreamshard::placer::{self, FitRequest, Placer, PlacementRequest};
+use dreamshard::placer::{self, FitRequest, MigrationBudget, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
 use dreamshard::serve::{
-    synthetic_arrivals, PlanService, Planned, ServeConfig, ShardConfig, ShardedFrontEnd,
-    WorkloadCfg,
+    synthetic_arrivals, PlanService, Planned, ReplaceJob, ServeConfig, ShardConfig,
+    ShardedFrontEnd, WorkloadCfg,
 };
 use dreamshard::sim::{SimConfig, Simulator};
-use dreamshard::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools};
+use dreamshard::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools, Task};
 use dreamshard::util::table::TextTable;
 
 /// serve-sim helper: drain one chunk, stamp each completed request's
@@ -163,9 +170,14 @@ fn main() -> Result<()> {
             // keep the DREAMSHARD_WORKERS / built-in default)
             let workers = flags.get_usize("workers", 0);
             // --devices 2,4,8,128 (device-count-specific placers like
-            // `rnn` need a single count here, e.g. --devices 4)
+            // `rnn` need a single count here, e.g. --devices 4). The
+            // rebalance scenario drops the 128-device lane by default:
+            // its serving variant has no fused mdp_step, so `replace`
+            // there falls back to scratch planning and would not show
+            // the incremental path.
+            let rebalance = flags.has("rebalance");
             let device_mix = flags
-                .get_str("devices", "2,4,8,128")
+                .get_str("devices", if rebalance { "2,4,8" } else { "2,4,8,128" })
                 .split(',')
                 .map(|s| {
                     s.trim()
@@ -198,6 +210,137 @@ fn main() -> Result<()> {
                 );
             }
             let cfg = ServeConfig { capacity, chunk, ..ServeConfig::default() };
+            if rebalance {
+                // day-2 scenario: plan the accepted workload once, fail
+                // one device per task, then re-place every live plan two
+                // ways — the budgeted incremental rebalance
+                // (PlanService::rebalance -> Placer::replace) vs
+                // throwing the plans away and planning from scratch.
+                // Scratch plans still pay the migration cost of adopting
+                // them, so the verdict compares latency + migration.
+                let moves = flags.get_usize("moves", 4);
+                let mut svc = PlanService::new(&rt, placer, cfg);
+                let mut tasks: Vec<Task> = vec![];
+                for a in &arrivals {
+                    let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim)?;
+                    if svc.submit(req)?.is_some() {
+                        tasks.push(a.task.clone());
+                    }
+                }
+                let mut done = svc.drain()?;
+                done.sort_by_key(|p| p.ticket); // back to submission order
+                // device failure: every task with spare devices loses
+                // its highest-indexed one; 2-device tasks keep both, so
+                // the mix also exercises pure budget-limited moves
+                let perturbed: Vec<Task> = tasks
+                    .iter()
+                    .map(|t| Task {
+                        table_ids: t.table_ids.clone(),
+                        n_devices: if t.n_devices > 2 { t.n_devices - 1 } else { t.n_devices },
+                    })
+                    .collect();
+                let budget = MigrationBudget::moves(moves);
+                let jobs: Vec<ReplaceJob> = done
+                    .iter()
+                    .zip(&perturbed)
+                    .map(|(p, t)| -> Result<ReplaceJob> {
+                        Ok(ReplaceJob {
+                            prev: p.plan.clone(),
+                            req: PlacementRequest::for_runtime(&rt, &ds, t, &sim)?
+                                .with_migration(budget),
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                let n_jobs = jobs.len();
+                let t0 = Instant::now();
+                let redone = svc.rebalance(jobs)?;
+                let rebalance_s = t0.elapsed().as_secs_f64();
+
+                // scratch reference: a fresh placer re-plans the
+                // perturbed tasks with no knowledge of the prior plans
+                // (agent warm-up untimed, mirroring the service's)
+                let scratch_reqs = perturbed
+                    .iter()
+                    .map(|t| PlacementRequest::for_runtime(&rt, &ds, t, &sim))
+                    .collect::<Result<Vec<_>>>()?;
+                let mut scratch = placer::by_name_seeded(&rt, &policy, seed)?;
+                if let Some(r) = scratch_reqs.iter().max_by_key(|r| r.task.n_devices) {
+                    scratch.warm_variant(r)?;
+                }
+                let t0 = Instant::now();
+                let scratch_plans = scratch.place_many(&scratch_reqs)?;
+                let scratch_s = t0.elapsed().as_secs_f64();
+                let scratch_rows: Vec<(f64, f64, usize)> = scratch_plans
+                    .iter()
+                    .zip(&done)
+                    .zip(&perturbed)
+                    .map(|((p, prev), t)| {
+                        let e =
+                            sim.evaluate_migration(&ds, t, &prev.plan.placement, &p.placement);
+                        (e.latency, e.migration_ms, e.moved_tables)
+                    })
+                    .collect();
+                let rebalance_rows: Vec<(f64, f64, usize)> = redone
+                    .iter()
+                    .map(|p| {
+                        (p.plan.eval.latency, p.plan.eval.migration_ms, p.plan.eval.moved_tables)
+                    })
+                    .collect();
+
+                // (mean latency, total migration, total moved, mean latency+migration)
+                let agg = |rows: &[(f64, f64, usize)]| {
+                    let n = rows.len().max(1) as f64;
+                    let lat = rows.iter().map(|r| r.0).sum::<f64>() / n;
+                    let mig: f64 = rows.iter().map(|r| r.1).sum();
+                    let moved: usize = rows.iter().map(|r| r.2).sum();
+                    let total = rows.iter().map(|r| r.0 + r.1).sum::<f64>() / n;
+                    (lat, mig, moved, total)
+                };
+                let (r_lat, r_mig, r_moved, r_total) = agg(&rebalance_rows);
+                let (s_lat, s_mig, s_moved, s_total) = agg(&scratch_rows);
+
+                println!(
+                    "serve-sim --rebalance: {} arrivals, {n_jobs} live plans, one failed \
+                     device per task, move budget {moves}, policy {policy}, {} runtime workers",
+                    arrivals.len(),
+                    rt.workers(),
+                );
+                let mut table = TextTable::new(vec![
+                    "approach",
+                    "plans",
+                    "moved",
+                    "migration ms",
+                    "latency ms",
+                    "total ms",
+                    "plans/s",
+                ]);
+                table.row(vec![
+                    format!("rebalance (moves<={moves})"),
+                    redone.len().to_string(),
+                    r_moved.to_string(),
+                    format!("{r_mig:.1}"),
+                    format!("{r_lat:.2}"),
+                    format!("{r_total:.2}"),
+                    format!("{:.1}", redone.len() as f64 / rebalance_s.max(1e-9)),
+                ]);
+                table.row(vec![
+                    "scratch re-plan".to_string(),
+                    scratch_plans.len().to_string(),
+                    s_moved.to_string(),
+                    format!("{s_mig:.1}"),
+                    format!("{s_lat:.2}"),
+                    format!("{s_total:.2}"),
+                    format!("{:.1}", scratch_plans.len() as f64 / scratch_s.max(1e-9)),
+                ]);
+                println!("{}", table.render());
+                println!("service after rebalance: {}", svc.stats().summary());
+                println!(
+                    "verdict: rebalance {r_total:.2} ms vs scratch {s_total:.2} ms mean \
+                     latency+migration per plan ({:.2}x cheaper once migration is paid)",
+                    s_total / r_total.max(1e-9),
+                );
+                return Ok(());
+            }
             if flags.has("sharded") {
                 // multi-service sharding: one PlanService per serving
                 // variant, routed through a single submit API, each shard

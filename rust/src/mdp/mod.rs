@@ -28,6 +28,16 @@ pub struct PlacementState<'a> {
     pub step: usize,
     /// Max tables per device (the AOT slot count `S`).
     pub max_slots: usize,
+    /// Previous device of each table (`usize::MAX` = none). Present only
+    /// in warm-started states ([`PlacementState::warm_start`]), where it
+    /// drives the per-step "stay" legality bias once the discretionary
+    /// move budget is spent.
+    pub prev: Option<Vec<usize>>,
+    /// Discretionary moves still allowed: decremented when `apply` sends
+    /// a table anywhere but its (still valid) previous device. Forced
+    /// moves — no previous device, or a device the task no longer has —
+    /// are exempt. `usize::MAX` (the cold-start value) = unlimited.
+    pub moves_left: usize,
 }
 
 impl<'a> PlacementState<'a> {
@@ -41,7 +51,58 @@ impl<'a> PlacementState<'a> {
             placement: vec![usize::MAX; task.n_tables()],
             step: 0,
             max_slots,
+            prev: None,
+            moves_left: usize::MAX,
         }
+    }
+
+    /// Warm-start an episode from a prior assignment: every table index
+    /// NOT in `order` is pinned to its previous device (`prev[i]`, which
+    /// must be valid for pinned tables), and only the tables in `order`
+    /// are rolled out. `max_moves` bounds *discretionary* re-placements:
+    /// once spent, a table whose previous device is still legal sees its
+    /// action mask collapse to that device alone ("stay" bias), so a
+    /// rollout can express "move at most K tables". Forced moves (prev =
+    /// `usize::MAX` or a device `>= n_devices`) never consume budget.
+    ///
+    /// With `order` covering all tables and `prev` all-`usize::MAX`, the
+    /// state evolves bit-identically to [`PlacementState::new`].
+    pub fn warm_start(
+        ds: &'a Dataset,
+        task: &'a Task,
+        order: Vec<usize>,
+        max_slots: usize,
+        prev: Vec<usize>,
+        max_moves: usize,
+    ) -> Self {
+        assert_eq!(prev.len(), task.n_tables());
+        assert!(order.len() <= task.n_tables());
+        let mut st = PlacementState {
+            ds,
+            task,
+            order,
+            groups: vec![vec![]; task.n_devices],
+            placement: vec![usize::MAX; task.n_tables()],
+            step: 0,
+            max_slots,
+            prev: None,
+            moves_left: max_moves,
+        };
+        let mut in_order = vec![false; task.n_tables()];
+        for &i in &st.order {
+            assert!(!in_order[i], "duplicate index {i} in warm-start order");
+            in_order[i] = true;
+        }
+        for i in 0..task.n_tables() {
+            if !in_order[i] {
+                let p = prev[i];
+                assert!(p < task.n_devices, "pinned table {i} has no valid previous device");
+                st.groups[p].push(i);
+                st.placement[i] = p;
+            }
+        }
+        st.prev = Some(prev);
+        st
     }
 
     pub fn done(&self) -> bool {
@@ -78,10 +139,14 @@ impl<'a> PlacementState<'a> {
             .min_by(|&a, &b| mem(a).total_cmp(&mem(b)))
     }
 
-    /// Legal-action mask over devices: memory cap + free slot.
+    /// Legal-action mask over devices: memory cap + free slot. In a
+    /// warm-started state with the move budget spent, the mask of a table
+    /// whose previous device is still legal collapses to that device
+    /// alone (the "stay" bias); if staying is itself illegal the table is
+    /// a forced move and the full mask applies.
     pub fn legal(&self, sim: &Simulator) -> Vec<bool> {
         let t = &self.ds.tables[self.task.table_ids[self.current()]];
-        (0..self.task.n_devices)
+        let mut mask: Vec<bool> = (0..self.task.n_devices)
             .map(|d| {
                 if self.groups[d].len() >= self.max_slots {
                     return false;
@@ -92,14 +157,33 @@ impl<'a> PlacementState<'a> {
                     .collect();
                 sim.fits(&tables, t)
             })
-            .collect()
+            .collect();
+        if self.moves_left == 0 {
+            if let Some(prev) = &self.prev {
+                let p = prev[self.current()];
+                if p < self.task.n_devices && mask[p] {
+                    for (d, m) in mask.iter_mut().enumerate() {
+                        *m = d == p;
+                    }
+                }
+            }
+        }
+        mask
     }
 
-    /// Apply an action (device id) for the current table.
+    /// Apply an action (device id) for the current table. A discretionary
+    /// deviation from a still-valid previous device consumes one unit of
+    /// the move budget (saturating — cold-start states never run out).
     pub fn apply(&mut self, device: usize) {
         assert!(!self.done());
         assert!(device < self.task.n_devices);
         let idx = self.current();
+        if let Some(prev) = &self.prev {
+            let p = prev[idx];
+            if p < self.task.n_devices && device != p {
+                self.moves_left = self.moves_left.saturating_sub(1);
+            }
+        }
         self.groups[device].push(idx);
         self.placement[idx] = device;
         self.step += 1;
@@ -260,6 +344,101 @@ mod tests {
         assert!(tiny.fallback_device().is_none(), "4 devices x 5 slots = 20 all full");
         // and the fallback spread the load while slots lasted
         assert!(tiny.groups.iter().all(|g| g.len() == 5));
+    }
+
+    #[test]
+    fn warm_start_pins_tables_outside_the_order() {
+        let (ds, task, sim) = setup();
+        let prev: Vec<usize> = (0..20).map(|i| i % 4).collect();
+        // re-place only tables 3 and 7; everything else stays pinned
+        let mut st = PlacementState::warm_start(&ds, &task, vec![3, 7], 48, prev.clone(), usize::MAX);
+        for i in 0..20 {
+            if i == 3 || i == 7 {
+                assert_eq!(st.placement[i], usize::MAX, "table {i} must await the rollout");
+            } else {
+                assert_eq!(st.placement[i], prev[i], "table {i} must be pinned");
+            }
+        }
+        assert!(!st.done());
+        while !st.done() {
+            let legal = st.legal(&sim);
+            let d = legal.iter().position(|&l| l).expect("some legal action");
+            st.apply(d);
+        }
+        assert_eq!(st.step, 2);
+        assert!(st.placement.iter().all(|&p| p != usize::MAX));
+        // pinned groups feed fill_feats like any mid-episode state
+        let mut feats = TensorF32::zeros(&[1, 4, 48, NUM_FEATURES]);
+        let mut mask = TensorF32::zeros(&[1, 4, 48]);
+        let mut dmask = TensorF32::zeros(&[1, 4]);
+        st.fill_feats(0, 4, 48, &mut feats, &mut mask, &mut dmask).unwrap();
+        assert_eq!(mask.get(&[0, 0, 0]), 1.0);
+    }
+
+    #[test]
+    fn spent_budget_collapses_mask_to_stay() {
+        let (ds, task, sim) = setup();
+        let prev: Vec<usize> = (0..20).map(|i| i % 4).collect();
+        let order: Vec<usize> = (0..20).collect();
+        let mut st = PlacementState::warm_start(&ds, &task, order, 48, prev.clone(), 1);
+        // first table: full mask (budget not yet spent)
+        assert!(st.legal(&sim).iter().filter(|&&m| m).count() > 1);
+        // spend the single move: deviate from prev
+        let dev = (prev[st.current()] + 1) % 4;
+        st.apply(dev);
+        assert_eq!(st.moves_left, 0);
+        // every later table with a legal prev device must now stay put
+        while !st.done() {
+            let cur = st.current();
+            let legal = st.legal(&sim);
+            assert_eq!(
+                legal.iter().filter(|&&m| m).count(),
+                1,
+                "stay bias must pin table {cur}"
+            );
+            assert!(legal[prev[cur]]);
+            let d = legal.iter().position(|&l| l).unwrap();
+            st.apply(d);
+        }
+        // exactly one table ended up off its previous device
+        let moved = st.placement.iter().zip(&prev).filter(|(a, b)| a != b).count();
+        assert_eq!(moved, 1);
+    }
+
+    #[test]
+    fn forced_and_stay_moves_never_consume_budget() {
+        let (ds, task, _) = setup();
+        // prev has no placement for table 0 (forced) and a lost device
+        // for table 1 (also forced)
+        let mut prev: Vec<usize> = (0..20).map(|i| i % 4).collect();
+        prev[0] = usize::MAX;
+        prev[1] = 9; // >= n_devices: device lost
+        let order: Vec<usize> = (0..20).collect();
+        let mut st = PlacementState::warm_start(&ds, &task, order, 48, prev.clone(), 2);
+        st.apply(2); // forced (no prior): free
+        st.apply(3); // forced (lost device): free
+        assert_eq!(st.moves_left, 2);
+        st.apply(prev[2]); // staying put: free
+        assert_eq!(st.moves_left, 2);
+        st.apply((prev[3] + 1) % 4); // discretionary deviation: pays
+        assert_eq!(st.moves_left, 1);
+    }
+
+    #[test]
+    fn warm_start_with_vacant_prev_matches_cold_start() {
+        let (ds, task, sim) = setup();
+        let order = heuristic_order(&ds, &task);
+        let mut cold = PlacementState::new(&ds, &task, order.clone(), 48);
+        let mut warm =
+            PlacementState::warm_start(&ds, &task, order, 48, vec![usize::MAX; 20], usize::MAX);
+        while !cold.done() {
+            assert_eq!(cold.legal(&sim), warm.legal(&sim));
+            let d = cold.legal(&sim).iter().position(|&l| l).unwrap();
+            cold.apply(d);
+            warm.apply(d);
+        }
+        assert_eq!(cold.placement, warm.placement);
+        assert_eq!(cold.groups, warm.groups);
     }
 
     #[test]

@@ -148,6 +148,70 @@ impl DreamShardPlacer {
         }
         Ok(plans)
     }
+
+    /// Warm-started analogue of [`DreamShardPlacer::plan_batch`]: the
+    /// same chunk-batched ordering call and lockstep fused-step loop, but
+    /// each lane's state starts from its previous placement with only the
+    /// forced + budget-capped discretionary tables left to roll out. A
+    /// chunk therefore costs one `table_cost` call plus one fused call
+    /// per *remaining* MDP step — at most the cold-start budget, and with
+    /// a tight [`super::MigrationBudget`] far below it.
+    fn replace_batch(
+        &self,
+        agent: &DreamShard,
+        var: &Variant,
+        reqs: &[PlacementRequest<'_>],
+        prevs: &[Vec<usize>],
+    ) -> Result<Vec<PlacementPlan>> {
+        let Some((lanes, step_name)) = var.mdp_step_for(reqs.len()).cloned() else {
+            // no fused artifact lowered for this variant: plan from
+            // scratch and report the full migration cost (the default
+            // `replace` semantics — the budget cannot be honored here)
+            let plans = self.plan_batch(agent, var, reqs)?;
+            return Ok(plans
+                .into_iter()
+                .zip(reqs)
+                .zip(prevs)
+                .map(|((plan, r), prev)| {
+                    let eval = r.sim.evaluate_migration(r.ds, r.task, prev, &plan.placement);
+                    PlacementPlan { eval, ..plan }
+                })
+                .collect());
+        };
+        let jobs: Vec<(&Dataset, &Task)> = reqs.iter().map(|r| (r.ds, r.task)).collect();
+        let mut orders = agent.order_tables_batch(&self.rt, &jobs)?.into_iter();
+        let mut plans = Vec::with_capacity(reqs.len());
+        let mut at = 0;
+        for chunk in reqs.chunks(lanes) {
+            let chunk_prevs = &prevs[at..at + chunk.len()];
+            at += chunk.len();
+            let states: Vec<PlacementState<'_>> = chunk
+                .iter()
+                .zip(chunk_prevs)
+                .map(|(r, prev)| {
+                    let full = orders.next().expect("one order per request");
+                    let warm = warm_order(r, prev, &full);
+                    PlacementState::warm_start(
+                        r.ds,
+                        r.task,
+                        warm,
+                        var.s.min(r.max_slots),
+                        prev.clone(),
+                        r.migration.max_moves,
+                    )
+                })
+                .collect();
+            let mut lc = LaneChunk::from_states(var, lanes, chunk, states);
+            while !lc.done() {
+                let (feats, mask, dmask, cur, legal_t) = lc.fill()?;
+                let out = agent
+                    .run_fused_step(&self.rt, &step_name, &feats, &mask, &dmask, &cur, &legal_t)?;
+                lc.apply(&out)?;
+            }
+            plans.extend(lc.into_migration_plans(chunk_prevs));
+        }
+        Ok(plans)
+    }
 }
 
 impl Placer for DreamShardPlacer {
@@ -235,6 +299,66 @@ impl Placer for DreamShardPlacer {
         Ok(plans.into_iter().map(|p| p.expect("every request planned")).collect())
     }
 
+    fn replace(&mut self, prev: &PlacementPlan, req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
+        let mut plans =
+            self.replace_many(std::slice::from_ref(prev), std::slice::from_ref(req))?;
+        Ok(plans.remove(0))
+    }
+
+    /// Lane-batched incremental re-planning: requests are grouped by
+    /// serving variant exactly like [`Placer::place_many`], then each
+    /// group rolls warm-started states ([`PlacementState::warm_start`])
+    /// through the same fused-step machinery. With a vacant prev and an
+    /// unlimited budget every table is rolled out from scratch and the
+    /// result is bit-identical to `place_many` (pinned by
+    /// `tests/placer_api.rs`).
+    fn replace_many(
+        &mut self,
+        prevs: &[PlacementPlan],
+        reqs: &[PlacementRequest<'_>],
+    ) -> Result<Vec<PlacementPlan>> {
+        if prevs.len() != reqs.len() {
+            bail!("replace_many: {} prev plans for {} requests", prevs.len(), reqs.len());
+        }
+        if reqs.is_empty() {
+            return Ok(vec![]);
+        }
+        let max_dev = reqs.iter().map(|r| r.task.n_devices).max().unwrap();
+        self.ensure_agent(max_dev)?;
+        let agent = Arc::clone(self.agent.as_ref().expect("agent ensured above"));
+        // normalize prevs: an empty placement means "no prior at all"
+        let mut prev_full: Vec<Vec<usize>> = Vec::with_capacity(reqs.len());
+        for (p, r) in prevs.iter().zip(reqs) {
+            let n = r.task.n_tables();
+            if p.placement.is_empty() {
+                prev_full.push(vec![usize::MAX; n]);
+            } else if p.placement.len() == n {
+                prev_full.push(p.placement.clone());
+            } else {
+                bail!("replace: prev plan covers {} tables but the task has {n}", p.placement.len());
+            }
+        }
+        let mut groups: Vec<(Variant, Vec<usize>)> = vec![];
+        for (i, r) in reqs.iter().enumerate() {
+            let var = self.variant_for(&agent, r.task.n_devices)?;
+            match groups.iter_mut().find(|(v, _)| v.d == var.d && v.s == var.s) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((var, vec![i])),
+            }
+        }
+        let mut plans: Vec<Option<PlacementPlan>> = (0..reqs.len()).map(|_| None).collect();
+        for (var, idxs) in &groups {
+            let group_reqs: Vec<PlacementRequest<'_>> = idxs.iter().map(|&i| reqs[i]).collect();
+            let group_prevs: Vec<Vec<usize>> =
+                idxs.iter().map(|&i| prev_full[i].clone()).collect();
+            let got = self.replace_batch(&agent, var, &group_reqs, &group_prevs)?;
+            for (&i, plan) in idxs.iter().zip(got.into_iter()) {
+                plans[i] = Some(plan);
+            }
+        }
+        Ok(plans.into_iter().map(|p| p.expect("every request re-planned")).collect())
+    }
+
     /// A [`DreamShardSession`] whenever the chunk is what a
     /// variant-grouped serving drain produces: every request served by
     /// the same artifact variant, a fused step artifact lowered for it,
@@ -316,14 +440,27 @@ impl<'a> LaneChunk<'a> {
             .zip(orders)
             .map(|(r, order)| PlacementState::new(r.ds, r.task, order, s.min(r.max_slots)))
             .collect();
-        let steps = reqs.iter().map(|r| r.task.n_tables()).max().unwrap_or(0);
+        Self::from_states(var, lanes, reqs, states)
+    }
+
+    /// Lockstep over pre-built states — the warm-started `replace` path
+    /// hands in states whose orders cover only the unpinned tables, so
+    /// the chunk runs `max(order.len())` fused steps instead of
+    /// `max(n_tables)` (for cold states the two are equal).
+    fn from_states(
+        var: &Variant,
+        lanes: usize,
+        reqs: &[PlacementRequest<'a>],
+        states: Vec<PlacementState<'a>>,
+    ) -> Self {
+        let steps = states.iter().map(|st| st.order.len()).max().unwrap_or(0);
         LaneChunk {
             reqs: reqs.to_vec(),
             states,
             legal: vec![],
             lanes,
             d: var.d,
-            s,
+            s: var.s,
             step: 0,
             steps,
             rng: Rng::new(0), // unused by argmax
@@ -388,6 +525,48 @@ impl<'a> LaneChunk<'a> {
             .map(|(st, r)| PlacementPlan::new(r, st.placement.clone(), NAME))
             .collect()
     }
+
+    /// Finish a warm-started chunk: each lane evaluated against its
+    /// previous placement so the plan carries the migration charge.
+    fn into_migration_plans(self, prevs: &[Vec<usize>]) -> Vec<PlacementPlan> {
+        self.states
+            .iter()
+            .zip(self.reqs.iter())
+            .zip(prevs)
+            .map(|((st, r), prev)| {
+                let eval = r.sim.evaluate_migration(r.ds, r.task, prev, &st.placement);
+                PlacementPlan { placement: st.placement.clone(), eval, strategy: NAME.to_string() }
+            })
+            .collect()
+    }
+}
+
+/// Which tables a warm rollout re-places, in predicted-cost order: every
+/// forced table (previous device missing or lost), plus the leading
+/// discretionary tables the migration budget could afford if they all
+/// moved (a conservative reservation — an unpinned table may still stay
+/// put, and the state's own `moves_left` enforces the cap exactly).
+/// Everything else is pinned to its previous device without consuming an
+/// MDP step — which is what makes `replace` cheaper than `place`.
+fn warm_order(req: &PlacementRequest<'_>, prev: &[usize], full_order: &[usize]) -> Vec<usize> {
+    let d = req.task.n_devices;
+    let budget = req.migration;
+    let mut moves = 0usize;
+    let mut ms = 0.0f64;
+    let mut order = Vec::with_capacity(full_order.len());
+    for &i in full_order {
+        if prev[i] >= d {
+            order.push(i); // forced: rolled out regardless of budget
+            continue;
+        }
+        let t_ms = req.sim.transfer_ms(&req.ds.tables[req.task.table_ids[i]]);
+        if moves < budget.max_moves && ms + t_ms <= budget.max_migration_ms {
+            moves += 1;
+            ms += t_ms;
+            order.push(i);
+        }
+    }
+    order
 }
 
 /// The DreamShard implementation of [`PlanSession`]: one variant-grouped

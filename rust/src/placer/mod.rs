@@ -80,17 +80,26 @@ pub struct PlacementRequest<'a> {
     /// `S`). Every strategy routed through this request obeys it, so a
     /// baseline can no longer emit a placement `fill_feats` would reject.
     pub max_slots: usize,
+    /// How much a [`Placer::replace`] answering this request may migrate.
+    /// Ignored by [`Placer::place`] (a cold start moves nothing).
+    pub migration: MigrationBudget,
 }
 
 impl<'a> PlacementRequest<'a> {
     /// A request with no slot cap (memory legality only).
     pub fn new(ds: &'a Dataset, task: &'a Task, sim: &'a Simulator) -> Self {
-        PlacementRequest { ds, task, sim, max_slots: usize::MAX }
+        PlacementRequest { ds, task, sim, max_slots: usize::MAX, migration: MigrationBudget::unlimited() }
     }
 
     /// Cap the number of tables any single device may hold.
     pub fn with_max_slots(mut self, max_slots: usize) -> Self {
         self.max_slots = max_slots;
+        self
+    }
+
+    /// Bound what a [`Placer::replace`] answering this request may move.
+    pub fn with_migration(mut self, migration: MigrationBudget) -> Self {
+        self.migration = migration;
         self
     }
 
@@ -114,6 +123,41 @@ impl<'a> PlacementRequest<'a> {
     }
 }
 
+/// Cap on what one [`Placer::replace`] call may migrate. The budget
+/// bounds *discretionary* moves only: a table whose previous device is
+/// gone (or that was never placed) has to land somewhere, and evictions
+/// that restore feasibility (memory/slot caps after a perturbation) are
+/// likewise exempt — a budget of zero still yields a legal plan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MigrationBudget {
+    /// Max tables moved off a still-valid previous device.
+    pub max_moves: usize,
+    /// Max total migration time spent on discretionary moves, in ms.
+    pub max_migration_ms: f64,
+}
+
+impl MigrationBudget {
+    /// No limit on either axis (the [`Default`]).
+    pub fn unlimited() -> Self {
+        MigrationBudget { max_moves: usize::MAX, max_migration_ms: f64::INFINITY }
+    }
+
+    /// Bound the number of moved tables only.
+    pub fn moves(max_moves: usize) -> Self {
+        MigrationBudget { max_moves, max_migration_ms: f64::INFINITY }
+    }
+
+    pub fn is_unlimited(&self) -> bool {
+        self.max_moves == usize::MAX && self.max_migration_ms.is_infinite()
+    }
+}
+
+impl Default for MigrationBudget {
+    fn default() -> Self {
+        Self::unlimited()
+    }
+}
+
 /// A finished plan: the device assignment (`placement[i]` is the device
 /// of `task.table_ids[i]`), its simulated evaluation, and which strategy
 /// produced it.
@@ -130,6 +174,26 @@ impl PlacementPlan {
     pub fn new(req: &PlacementRequest<'_>, placement: Vec<usize>, strategy: &str) -> Self {
         let eval = req.sim.evaluate(req.ds, req.task, &placement);
         PlacementPlan { placement, eval, strategy: strategy.to_string() }
+    }
+
+    /// Wrap a placement that came from outside the facade (recovered
+    /// state, a hand-written assignment) as the `prev` argument of
+    /// [`Placer::replace`] — no evaluation attached, none needed.
+    pub fn prior(placement: Vec<usize>, strategy: &str) -> Self {
+        PlacementPlan { placement, eval: Evaluation::default(), strategy: strategy.to_string() }
+    }
+
+    /// The "no prior placement" plan for a task: every table unplaced
+    /// (`usize::MAX`). As `prev`, it makes [`Placer::replace`] behave
+    /// exactly like [`Placer::place`].
+    pub fn no_prior(task: &Task) -> Self {
+        Self::prior(vec![usize::MAX; task.n_tables()], "none")
+    }
+
+    /// Does this plan place nothing (empty, or every entry unplaced)?
+    /// Such a plan as `prev` carries no migration constraint at all.
+    pub fn is_vacant(&self) -> bool {
+        self.placement.iter().all(|&d| d == usize::MAX)
     }
 }
 
@@ -204,6 +268,42 @@ pub trait Placer: Send {
     /// `E` requests through one backend call per MDP step).
     fn place_many(&mut self, reqs: &[PlacementRequest<'_>]) -> Result<Vec<PlacementPlan>> {
         reqs.iter().map(|r| self.place(r)).collect()
+    }
+
+    /// Re-plan `req` against a previous placement. `prev.placement[i]` is
+    /// the previous device of `task.table_ids[i]`: `usize::MAX` marks a
+    /// table with no prior home, and a device index the task no longer
+    /// has (>= `n_devices`, e.g. after a device loss) marks a *forced*
+    /// move. The returned plan's evaluation carries the migration charge
+    /// ([`Evaluation::migration_ms`] / `moved_tables`).
+    ///
+    /// The default plans from scratch and reports the full migration
+    /// cost — always correct, but oblivious to
+    /// [`PlacementRequest::migration`]. Strategies with real incremental
+    /// paths override it and honor the budget: the greedy family runs a
+    /// migration-aware local search, DreamShard warm-starts its
+    /// lane-batched MDP re-rollout. With a vacant `prev`
+    /// ([`PlacementPlan::is_vacant`]) every implementation behaves
+    /// exactly like [`Placer::place`].
+    fn replace(&mut self, prev: &PlacementPlan, req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
+        let mut plan = self.place(req)?;
+        plan.eval = req.sim.evaluate_migration(req.ds, req.task, &prev.placement, &plan.placement);
+        Ok(plan)
+    }
+
+    /// Re-plan a batch: `prevs[i]` pairs with `reqs[i]`. The default
+    /// loops [`Placer::replace`]; DreamShard overrides it to warm-start
+    /// its lane-batched rollout with the same fused-call budget shape as
+    /// [`Placer::place_many`].
+    fn replace_many(
+        &mut self,
+        prevs: &[PlacementPlan],
+        reqs: &[PlacementRequest<'_>],
+    ) -> Result<Vec<PlacementPlan>> {
+        if prevs.len() != reqs.len() {
+            return Err(err!("replace_many: {} prev plans for {} requests", prevs.len(), reqs.len()));
+        }
+        prevs.iter().zip(reqs).map(|(p, r)| self.replace(p, r)).collect()
     }
 
     /// Scheduling hint for batch-capable placers: the artifact variant
@@ -403,6 +503,64 @@ mod tests {
         let mut g = by_name(&rt, "greedy:dim").unwrap();
         g.warm_variant(&req).unwrap();
         assert_eq!(g.serving_variant(&req), None);
+    }
+
+    #[test]
+    fn migration_budget_defaults_to_unlimited() {
+        assert!(MigrationBudget::default().is_unlimited());
+        assert!(!MigrationBudget::moves(3).is_unlimited());
+        let (ds, task, sim) = setup();
+        let req = PlacementRequest::new(&ds, &task, &sim);
+        assert!(req.migration.is_unlimited());
+        let capped = req.with_migration(MigrationBudget::moves(2));
+        assert_eq!(capped.migration.max_moves, 2);
+    }
+
+    #[test]
+    fn default_replace_reports_full_migration_cost() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, task, sim) = setup();
+        let req = PlacementRequest::new(&ds, &task, &sim);
+        let mut p = by_name(&rt, "random").unwrap();
+        // a prior that disagrees with what random will draw almost surely
+        let prev = PlacementPlan::prior(vec![0; task.n_tables()], "seed");
+        let plan = p.replace(&prev, &req).unwrap();
+        let moved =
+            plan.placement.iter().zip(&prev.placement).filter(|(a, b)| a != b).count();
+        assert_eq!(plan.eval.moved_tables, moved);
+        assert!(moved > 0, "random vs all-on-0 should differ");
+        assert!(plan.eval.migration_ms > 0.0);
+        assert!(plan.eval.total_ms() > plan.eval.latency);
+    }
+
+    #[test]
+    fn replace_with_no_prior_matches_place() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, task, sim) = setup();
+        let req = PlacementRequest::new(&ds, &task, &sim);
+        for name in ["random", "greedy:dim"] {
+            // fresh placers so stochastic streams line up draw-for-draw
+            let placed = by_name_seeded(&rt, name, 5).unwrap().place(&req).unwrap();
+            let replaced = by_name_seeded(&rt, name, 5)
+                .unwrap()
+                .replace(&PlacementPlan::no_prior(&task), &req)
+                .unwrap();
+            assert_eq!(placed.placement, replaced.placement, "{name}");
+            assert_eq!(placed.eval.latency, replaced.eval.latency, "{name}");
+            assert_eq!(replaced.eval.moved_tables, 0, "{name}");
+            assert_eq!(replaced.eval.migration_ms, 0.0, "{name}");
+        }
+        assert!(PlacementPlan::no_prior(&task).is_vacant());
+    }
+
+    #[test]
+    fn replace_many_rejects_mismatched_lengths() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, task, sim) = setup();
+        let req = PlacementRequest::new(&ds, &task, &sim);
+        let mut p = by_name(&rt, "greedy:dim").unwrap();
+        let e = p.replace_many(&[], &[req]).err().expect("length mismatch must error");
+        assert!(e.to_string().contains("replace_many"));
     }
 
     #[test]

@@ -8,6 +8,7 @@ use crate::bail;
 use crate::baselines::{greedy_placement_capped, random_placement_capped, Expert};
 use crate::coordinator::RnnBaseline;
 use crate::runtime::Runtime;
+use crate::tables::Table;
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
 
@@ -58,6 +59,151 @@ impl Placer for GreedyPlacer {
         let p = greedy_placement_capped(req.ds, req.task, req.sim, self.expert, req.max_slots);
         Ok(PlacementPlan::new(req, p, &self.name))
     }
+
+    /// Migration-aware local search: keep every table where it was, evict
+    /// only what feasibility demands, re-home the evicted/unplaced tables
+    /// greedily, then move the minimum set of further tables that
+    /// restores expert-load balance — each discretionary move debited
+    /// against [`PlacementRequest::migration`].
+    fn replace(&mut self, prev: &PlacementPlan, req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
+        if prev.is_vacant() {
+            // no prior constraint: bit-identical to a cold start
+            return self.place(req);
+        }
+        let next = greedy_replace(req, self.expert, &prev.placement)?;
+        let eval = req.sim.evaluate_migration(req.ds, req.task, &prev.placement, &next);
+        Ok(PlacementPlan { placement: next, eval, strategy: self.name.clone() })
+    }
+}
+
+/// The greedy family's incremental re-placement. Three budget-exempt
+/// phases (keep, evict-to-feasibility, re-home the homeless) and one
+/// budgeted phase (balance-restoring single-table moves).
+fn greedy_replace(req: &PlacementRequest<'_>, expert: Expert, prev: &[usize]) -> Result<Vec<usize>> {
+    let (ds, task) = (req.ds, req.task);
+    let n = task.n_tables();
+    if prev.len() != n {
+        bail!("replace: prev plan covers {} tables but the task has {n}", prev.len());
+    }
+    let d = task.n_devices;
+    let table = |i: usize| -> &Table { &ds.tables[task.table_ids[i]] };
+    let costs: Vec<f64> = (0..n).map(|i| expert.cost(table(i))).collect();
+
+    // 1) keep every assignment the perturbed task can still express;
+    //    tables on lost devices (or never placed) are forced moves
+    let mut next: Vec<usize> = prev.iter().map(|&p| if p < d { p } else { usize::MAX }).collect();
+    let mut forced: Vec<bool> = prev.iter().map(|&p| p >= d).collect();
+    let mut groups: Vec<Vec<usize>> = vec![vec![]; d];
+    for i in 0..n {
+        if next[i] != usize::MAX {
+            groups[next[i]].push(i);
+        }
+    }
+
+    // 2) evict until feasible (budget-exempt: the caps leave no choice).
+    //    Big anchors stay; the cheapest tables leave first.
+    let cap = req.sim.cfg.mem_cap_gb as f64;
+    for dev in 0..d {
+        let mut kept = std::mem::take(&mut groups[dev]);
+        kept.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]));
+        let mem = |ix: &[usize]| -> f64 {
+            ix.iter().map(|&i| table(i).size_gb() as f64 * 3.0).sum()
+        };
+        while kept.len() > req.max_slots || mem(&kept) > cap {
+            let evicted = kept.pop().expect("an over-cap group is non-empty");
+            next[evicted] = usize::MAX;
+            forced[evicted] = true;
+        }
+        groups[dev] = kept;
+    }
+
+    // 3) re-home the homeless, biggest expert cost first, onto the
+    //    lowest-load legal device (the same packing + fallbacks as
+    //    `greedy_placement_capped`)
+    let mut load: Vec<f64> = groups
+        .iter()
+        .map(|g| g.iter().map(|&i| costs[i]).sum())
+        .collect();
+    let mut pending: Vec<usize> = (0..n).filter(|&i| next[i] == usize::MAX).collect();
+    pending.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]));
+    for i in pending {
+        let t = table(i);
+        let mut best: Option<usize> = None;
+        for dev in 0..d {
+            let refs: Vec<&Table> = groups[dev].iter().map(|&j| table(j)).collect();
+            if req.device_can_take(&refs, t) && best.map_or(true, |b| load[dev] < load[b]) {
+                best = Some(dev);
+            }
+        }
+        let dev = best
+            .or_else(|| {
+                (0..d)
+                    .filter(|&dev| groups[dev].len() < req.max_slots)
+                    .min_by(|&a, &b| load[a].total_cmp(&load[b]))
+            })
+            .unwrap_or_else(|| (0..d).min_by(|&a, &b| load[a].total_cmp(&load[b])).unwrap());
+        next[i] = dev;
+        groups[dev].push(i);
+        load[dev] += costs[i];
+    }
+
+    // 4) budgeted local search: shift one table at a time off the
+    //    heaviest device onto the lightest legal one, while it strictly
+    //    improves the pair's max load. Discretionary moves (a table
+    //    leaving its still-valid previous device) debit the budget;
+    //    returning one to its previous device refunds it.
+    let budget = req.migration;
+    let mut disc_count = 0usize;
+    let mut disc_ms = 0.0f64;
+    for _ in 0..4 * n.max(1) {
+        let hi = (0..d).max_by(|&a, &b| load[a].total_cmp(&load[b])).unwrap();
+        // heaviest tables first: the biggest single improvement
+        let mut cands = groups[hi].clone();
+        cands.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]));
+        let mut committed = false;
+        'cand: for i in cands {
+            let t = table(i);
+            let dev = match (0..d)
+                .filter(|&dev| dev != hi)
+                .filter(|&dev| {
+                    let refs: Vec<&Table> = groups[dev].iter().map(|&j| table(j)).collect();
+                    req.device_can_take(&refs, t)
+                })
+                .min_by(|&a, &b| load[a].total_cmp(&load[b]))
+            {
+                Some(dev) => dev,
+                None => continue 'cand,
+            };
+            if load[dev] + costs[i] >= load[hi] {
+                continue; // no strict improvement left with this table
+            }
+            if !forced[i] {
+                // budget the end-state deviation from prev, not the hop
+                let was = next[i] != prev[i];
+                let now = dev != prev[i];
+                let count = disc_count + usize::from(now) - usize::from(was);
+                let ms = disc_ms
+                    + if now { req.sim.transfer_ms(t) } else { 0.0 }
+                    - if was { req.sim.transfer_ms(t) } else { 0.0 };
+                if count > budget.max_moves || ms > budget.max_migration_ms {
+                    continue;
+                }
+                disc_count = count;
+                disc_ms = ms;
+            }
+            groups[hi].retain(|&j| j != i);
+            groups[dev].push(i);
+            load[hi] -= costs[i];
+            load[dev] += costs[i];
+            next[i] = dev;
+            committed = true;
+            break;
+        }
+        if !committed {
+            break;
+        }
+    }
+    Ok(next)
 }
 
 /// The RNN-based RL baseline (Mirhoseini et al. 2017, section D.2) behind

@@ -72,6 +72,17 @@
 //! backend-call budgets are bit-identical to draining the same shards
 //! sequentially ([`ShardedFrontEnd::drain_sequential`]).
 //!
+//! Both layers also answer the day-2 question — the fleet *changed*
+//! (a device died, capacity was added) and live plans must follow
+//! without paying full re-plan migrations. [`PlanService::rebalance`]
+//! takes [`ReplaceJob`]s (previous plan + new request, optionally under
+//! a [`crate::placer::MigrationBudget`]) and drains them through the
+//! placer's [`crate::placer::Placer::replace_many`] in the same
+//! variant-keyed lane chunks a drain uses, bypassing the submit FIFO
+//! entirely; [`ShardedFrontEnd::rebalance`] routes jobs per variant and
+//! runs the per-shard rebalances concurrently. Moved-table counts and
+//! migration cost land in [`ServeStats`] / [`FrontStats`].
+//!
 //! Workload generation lives in [`synthetic_arrivals`]: the open-loop
 //! arrival schedules (exponential gaps, mixed 2/4/8/128-device tasks)
 //! that the `serve-sim` CLI subcommand (`--workers` sizes the runtime
@@ -83,6 +94,6 @@ mod service;
 mod sharded;
 mod workload;
 
-pub use service::{PlanService, Planned, ServeConfig, ServeStats};
+pub use service::{PlanService, Planned, ReplaceJob, ServeConfig, ServeStats};
 pub use sharded::{FrontStats, Routed, ShardConfig, ShardKey, ShardView, ShardedFrontEnd};
 pub use workload::{synthetic_arrivals, Arrival, WorkloadCfg};

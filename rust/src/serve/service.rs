@@ -79,6 +79,13 @@ pub struct ServeStats {
     /// blocking drains, and the whole pipelined burst (overlap counted
     /// once) for [`PlanService::drain`].
     pub busy_s: f64,
+    /// Requests re-planned through [`PlanService::rebalance`] (each also
+    /// counted in `planned`).
+    pub rebalanced: u64,
+    /// Tables that changed device across all rebalanced plans.
+    pub moved_tables: u64,
+    /// Total migration time charged across all rebalanced plans, ms.
+    pub migration_ms: f64,
     queue_ms_sum: f64,
     plan_ms_sum: f64,
     recent_queue_ms: VecDeque<f64>,
@@ -153,6 +160,9 @@ impl ServeStats {
         self.chunks += other.chunks;
         self.backend_calls += other.backend_calls;
         self.busy_s += other.busy_s;
+        self.rebalanced += other.rebalanced;
+        self.moved_tables += other.moved_tables;
+        self.migration_ms += other.migration_ms;
         self.queue_ms_sum += other.queue_ms_sum;
         self.plan_ms_sum += other.plan_ms_sum;
         for &q in &other.recent_queue_ms {
@@ -162,7 +172,7 @@ impl ServeStats {
 
     /// One-line human summary of the counters and latency aggregates.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} planned / {} accepted ({} shed) in {} chunks: {:.1} plans/s, \
              {} backend calls, queue {:.2}/{:.2} ms (mean/median), plan {:.2} ms mean",
             self.planned,
@@ -174,8 +184,25 @@ impl ServeStats {
             self.mean_queue_ms(),
             self.median_queue_ms(),
             self.mean_plan_ms(),
-        )
+        );
+        if self.rebalanced > 0 {
+            s.push_str(&format!(
+                ", {} rebalanced ({} tables moved, {:.1} ms migration)",
+                self.rebalanced, self.moved_tables, self.migration_ms
+            ));
+        }
+        s
     }
+}
+
+/// One rebalance job: a previously served plan plus the perturbed
+/// request (device lost/added, load shift) to re-plan it against — the
+/// unit [`PlanService::rebalance`] and
+/// [`crate::serve::ShardedFrontEnd::rebalance`] consume. The request's
+/// [`crate::placer::MigrationBudget`] bounds what the re-plan may move.
+pub struct ReplaceJob<'a> {
+    pub prev: PlacementPlan,
+    pub req: PlacementRequest<'a>,
 }
 
 struct Queued<'a> {
@@ -479,6 +506,81 @@ impl<'a> PlanService<'a> {
         Ok(out)
     }
 
+    /// Re-plan a batch of previously served streams against their
+    /// perturbed requests, draining [`Placer::replace_many`] calls
+    /// instead of `place_many`. Jobs are keyed and variant-grouped like
+    /// submits, then chunked like drains, so DreamShard's warm-started
+    /// lane batching keeps its per-chunk call budgets. The FIFO is
+    /// untouched: rebalance jobs are not new traffic, and any requests
+    /// already queued keep their places and their keys.
+    ///
+    /// Each returned [`Planned`] carries a fresh ticket and `queue_ms` 0
+    /// (jobs never queue); moved-table counts and migration cost land in
+    /// [`ServeStats`]. On error nothing is returned — the caller still
+    /// holds the previous plans, so a retry re-submits the same jobs
+    /// (nothing is lost, unlike a drained queue there is no state here
+    /// to requeue).
+    pub fn rebalance(&mut self, jobs: Vec<ReplaceJob<'a>>) -> Result<Vec<Planned>> {
+        let mut keyed: Vec<(ReplaceJob<'a>, (usize, usize))> = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let key = match self.placer.serving_variant(&job.req) {
+                Some(key) => key,
+                None => {
+                    let var = Variant::for_devices(&self.rt, job.req.task.n_devices)?;
+                    (var.d, var.s)
+                }
+            };
+            keyed.push((job, key));
+        }
+        let mut out: Vec<Planned> = Vec::with_capacity(keyed.len());
+        while !keyed.is_empty() {
+            // oldest job picks the variant; same-key jobs fill the chunk
+            let key = keyed[0].1;
+            let mut chunk: Vec<ReplaceJob<'a>> = Vec::new();
+            let mut rest: Vec<(ReplaceJob<'a>, (usize, usize))> = Vec::new();
+            for (job, k) in keyed {
+                if k == key && chunk.len() < self.cfg.chunk {
+                    chunk.push(job);
+                } else {
+                    rest.push((job, k));
+                }
+            }
+            keyed = rest;
+            let start = Instant::now();
+            let calls_before = self.rt.run_count();
+            let prevs: Vec<PlacementPlan> = chunk.iter().map(|j| j.prev.clone()).collect();
+            let reqs: Vec<PlacementRequest<'a>> = chunk.iter().map(|j| j.req).collect();
+            let result = self.placer.replace_many(&prevs, &reqs);
+            self.placer_engaged = true;
+            self.stats.backend_calls += self.rt.run_count() - calls_before;
+            let plans = match result {
+                Ok(plans) if plans.len() == reqs.len() => plans,
+                Ok(short) => {
+                    return Err(err!(
+                        "placer `{}` returned {} plans for {} rebalance jobs",
+                        self.placer.name(),
+                        short.len(),
+                        reqs.len()
+                    ))
+                }
+                Err(e) => return Err(e),
+            };
+            let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+            self.stats.chunks += 1;
+            self.stats.busy_s += wall_ms / 1e3;
+            for plan in plans {
+                self.stats.record(0.0, wall_ms);
+                self.stats.rebalanced += 1;
+                self.stats.moved_tables += plan.eval.moved_tables as u64;
+                self.stats.migration_ms += plan.eval.migration_ms;
+                let ticket = self.next_ticket;
+                self.next_ticket += 1;
+                out.push(Planned { ticket, variant: key, plan, queue_ms: 0.0, plan_ms: wall_ms });
+            }
+        }
+        Ok(out)
+    }
+
     /// Pipeline chunks through placer sessions until the queue empties or
     /// the placer declines a session (`-> (completed, declined)`).
     fn drain_pipelined_burst(&mut self) -> Result<(Vec<Planned>, bool)> {
@@ -750,6 +852,63 @@ mod tests {
         let err = svc.drain_chunk().expect_err("short batch must be an error");
         assert!(err.to_string().contains("returned 0 plans for 2"), "{err}");
         assert_eq!(svc.queued(), 2, "the chunk went back to the queue");
+        assert_eq!(svc.stats().planned, 0);
+    }
+
+    #[test]
+    fn rebalance_replans_without_touching_the_queue() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, tasks, sim) = setup(4, 4);
+        let placer = placer::by_name(&rt, "greedy:lookup").unwrap();
+        let mut svc = PlanService::new(&rt, placer, ServeConfig::default());
+        for t in &tasks {
+            svc.submit(PlacementRequest::new(&ds, t, &sim)).unwrap();
+        }
+        let planned = svc.drain().unwrap();
+        assert_eq!(planned.len(), 4);
+        // perturb: drop device 3 from every task
+        let perturbed: Vec<Task> = tasks
+            .iter()
+            .map(|t| Task { table_ids: t.table_ids.clone(), n_devices: 3 })
+            .collect();
+        // leave one request queued to prove rebalance does not drain it
+        svc.submit(PlacementRequest::new(&ds, &tasks[0], &sim)).unwrap();
+        let jobs: Vec<ReplaceJob> = planned
+            .iter()
+            .zip(&perturbed)
+            .map(|(p, t)| ReplaceJob {
+                prev: p.plan.clone(),
+                req: PlacementRequest::new(&ds, t, &sim),
+            })
+            .collect();
+        let rebal = svc.rebalance(jobs).unwrap();
+        assert_eq!(rebal.len(), 4);
+        assert_eq!(svc.queued(), 1, "the queued request must survive a rebalance");
+        let stats = svc.stats();
+        assert_eq!(stats.rebalanced, 4);
+        assert_eq!(stats.planned, 8, "rebalanced plans count as planned");
+        assert!(stats.moved_tables > 0, "device loss forces moves");
+        assert!(stats.migration_ms > 0.0);
+        assert!(stats.summary().contains("rebalanced"), "{}", stats.summary());
+        for p in &rebal {
+            assert_eq!(p.queue_ms, 0.0);
+            assert!(p.plan.placement.iter().all(|&d| d < 3), "lost device still used");
+            assert_eq!(p.plan.eval.moved_tables > 0, p.plan.eval.migration_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn failed_rebalance_is_an_error_not_a_loss() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, tasks, sim) = setup(1, 4);
+        let mut svc = PlanService::new(&rt, Box::new(FailingPlacer), ServeConfig::default());
+        let jobs = vec![ReplaceJob {
+            prev: PlacementPlan::prior(vec![0; 8], "seed"),
+            req: PlacementRequest::new(&ds, &tasks[0], &sim),
+        }];
+        let err = svc.rebalance(jobs).expect_err("failing placer must error");
+        assert!(err.to_string().contains("backend exploded"));
+        assert_eq!(svc.stats().rebalanced, 0);
         assert_eq!(svc.stats().planned, 0);
     }
 

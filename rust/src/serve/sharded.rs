@@ -31,7 +31,7 @@ use crate::runtime::Runtime;
 use crate::tables::Task;
 use crate::util::error::Result;
 
-use super::{PlanService, Planned, ServeConfig, ServeStats};
+use super::{PlanService, Planned, ReplaceJob, ServeConfig, ServeStats};
 
 /// Identity of one shard: the serving variant `(D, S)` its requests are
 /// planned with, plus an optional tenant label for per-tenant isolation
@@ -302,8 +302,26 @@ impl<'a> ShardedFrontEnd<'a> {
             self.shed_global += 1;
             return Ok(None);
         }
-        self.router.warm_variant(&req)?;
-        let variant = match self.router.serving_variant(&req) {
+        let idx = self.route(&req, tenant)?;
+        let key = self.shards[idx].key.clone();
+        Ok(match self.shards[idx].svc.submit(req)? {
+            Some(ticket) => {
+                self.routed += 1;
+                Some(Routed { shard: key, ticket })
+            }
+            // the shard's own bounded queue was full; its ServeStats
+            // recorded the shed
+            None => None,
+        })
+    }
+
+    /// Resolve (and create on first use) the shard a request belongs to,
+    /// returning its index into `self.shards`. This is the single source
+    /// of routing truth shared by [`ShardedFrontEnd::submit_for`] and
+    /// [`ShardedFrontEnd::rebalance`].
+    fn route(&mut self, req: &PlacementRequest<'a>, tenant: Option<&str>) -> Result<usize> {
+        self.router.warm_variant(req)?;
+        let variant = match self.router.serving_variant(req) {
             Some(v) => v,
             None => {
                 let var = Variant::for_devices(&self.rt, req.task.n_devices)?;
@@ -311,8 +329,8 @@ impl<'a> ShardedFrontEnd<'a> {
             }
         };
         let key = ShardKey { variant, tenant: tenant.map(String::from) };
-        let idx = match self.shards.iter().position(|s| s.key == key) {
-            Some(i) => i,
+        match self.shards.iter().position(|s| s.key == key) {
+            Some(i) => Ok(i),
             None => {
                 let mut placer = (self.factory)()?;
                 // warm the new shard's own placer to the *shard key's*
@@ -328,21 +346,12 @@ impl<'a> ShardedFrontEnd<'a> {
                 // shard's chunks by device count.)
                 let warm_task =
                     Task { table_ids: req.task.table_ids.clone(), n_devices: variant.0 };
-                placer.warm_variant(&PlacementRequest { task: &warm_task, ..req })?;
+                placer.warm_variant(&PlacementRequest { task: &warm_task, ..*req })?;
                 let svc = PlanService::new(&self.rt, placer, self.cfg.per_shard);
-                self.shards.push(Shard { key: key.clone(), svc, last_drain: None });
-                self.shards.len() - 1
+                self.shards.push(Shard { key, svc, last_drain: None });
+                Ok(self.shards.len() - 1)
             }
-        };
-        Ok(match self.shards[idx].svc.submit(req)? {
-            Some(ticket) => {
-                self.routed += 1;
-                Some(Routed { shard: key, ticket })
-            }
-            // the shard's own bounded queue was full; its ServeStats
-            // recorded the shed
-            None => None,
-        })
+        }
     }
 
     /// Drain every shard **concurrently**, one thread per shard, all
@@ -444,6 +453,55 @@ impl<'a> ShardedFrontEnd<'a> {
         sh.last_drain = Some(Instant::now());
         Ok(drained)
     }
+
+    /// Incremental re-placement across shards: route every
+    /// [`ReplaceJob`] to its variant's shard (created on first use, same
+    /// routing as [`ShardedFrontEnd::submit`]) and run each shard's
+    /// [`PlanService::rebalance`] on its own thread against the shared
+    /// runtime pool — the rebalance analogue of
+    /// [`ShardedFrontEnd::try_drain`]. Queued submits are untouched:
+    /// rebalance bypasses every shard's FIFO entirely.
+    ///
+    /// Returns the re-plans concatenated in shard-creation order
+    /// (per-shard job order within). On any shard's failure the first
+    /// error is returned; nothing is requeued — the caller still holds
+    /// every previous plan, so retrying is its decision. Per-shard
+    /// `rebalanced` / `moved_tables` / `migration_ms` counters land in
+    /// [`ShardedFrontEnd::stats`]'s aggregate, and the backend calls the
+    /// re-plans dispatched are counted in its exact `backend_calls`.
+    pub fn rebalance(&mut self, jobs: Vec<ReplaceJob<'a>>) -> Result<Vec<Planned>> {
+        // route first — creating shards mutates self.shards, so batching
+        // must finish before the scoped borrow of every shard below
+        let mut batches: Vec<Vec<ReplaceJob<'a>>> =
+            self.shards.iter().map(|_| vec![]).collect();
+        for job in jobs {
+            let idx = self.route(&job.req, None)?;
+            if idx >= batches.len() {
+                batches.resize_with(idx + 1, Vec::new);
+            }
+            batches[idx].push(job);
+        }
+        let calls_before = self.rt.run_count();
+        let reports: Vec<Result<Vec<Planned>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter_mut()
+                .zip(batches)
+                .filter(|(_, batch)| !batch.is_empty())
+                .map(|(sh, batch)| scope.spawn(move || sh.svc.rebalance(batch)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard rebalance thread panicked"))
+                .collect()
+        });
+        self.drained_calls += self.rt.run_count() - calls_before;
+        let mut out = vec![];
+        for r in reports {
+            out.extend(r?);
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -503,6 +561,62 @@ mod tests {
         assert!(front.submit(req).is_err());
         assert_eq!(front.stats().routed, 0);
         assert_eq!(front.stats().shards, 0, "no shard created for an unroutable request");
+    }
+
+    #[test]
+    fn rebalance_routes_jobs_across_shards_without_touching_queues() {
+        use crate::placer::MigrationBudget;
+
+        let rt = Arc::new(Runtime::reference());
+        let (ds, small, sim) = setup(4, 2);
+        let (_, large, _) = setup(8, 2);
+        let tasks: Vec<Task> = small.into_iter().chain(large).collect();
+        let mut front = greedy_front(&rt, ShardConfig::default());
+        for t in &tasks {
+            let req = PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap();
+            front.submit(req).unwrap().unwrap();
+        }
+        let done = front.drain().unwrap();
+        assert_eq!(done.len(), 4);
+
+        // every task loses its highest device; the incremental re-plans
+        // route back to the same two shards (3 -> d4s48, 7 -> d8s48)
+        let perturbed: Vec<Task> = tasks
+            .iter()
+            .map(|t| Task { table_ids: t.table_ids.clone(), n_devices: t.n_devices - 1 })
+            .collect();
+        // a queued submit must survive the rebalance untouched
+        let req = PlacementRequest::for_runtime(&rt, &ds, &tasks[0], &sim).unwrap();
+        front.submit(req).unwrap().unwrap();
+
+        let jobs: Vec<ReplaceJob> = done
+            .iter()
+            .zip(&perturbed)
+            .map(|(p, t)| ReplaceJob {
+                prev: p.plan.clone(),
+                req: PlacementRequest::for_runtime(&rt, &ds, t, &sim)
+                    .unwrap()
+                    .with_migration(MigrationBudget::moves(4)),
+            })
+            .collect();
+        let redone = front.rebalance(jobs).unwrap();
+        assert_eq!(redone.len(), 4, "every job re-planned");
+        // shard-creation order = job order here (smalls then larges)
+        for (p, t) in redone.iter().zip(&perturbed) {
+            assert_eq!(p.plan.placement.len(), t.n_tables());
+            assert!(p.plan.placement.iter().all(|&d| d < t.n_devices));
+        }
+        assert!(
+            redone.iter().any(|p| p.plan.eval.moved_tables > 0),
+            "losing a device forces moves"
+        );
+
+        assert_eq!(front.queued(), 1, "rebalance bypassed the queues");
+        let fs = front.stats();
+        assert_eq!(fs.shards, 2, "jobs routed to the existing shards");
+        assert_eq!(fs.aggregate.rebalanced, 4);
+        assert!(fs.aggregate.moved_tables > 0);
+        assert!(fs.aggregate.migration_ms > 0.0);
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub struct DeviceTrace {
 }
 
 /// Result of "running" a placement on the simulated cluster.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Evaluation {
     pub devices: Vec<DeviceTrace>,
     /// Overall step latency (ms) — the quantity DreamShard minimizes.
@@ -34,6 +34,20 @@ pub struct Evaluation {
     /// The paper's 3 cost features per device:
     /// [fwd comp, bwd comp, bwd comm] (section 3.1).
     pub q: Vec<[f32; 3]>,
+    /// One-off cost of migrating into this placement from a previous one
+    /// (ms) — zero unless the evaluation came through
+    /// [`Simulator::evaluate_migration`].
+    pub migration_ms: f64,
+    /// Tables that changed device relative to the previous placement.
+    pub moved_tables: usize,
+}
+
+impl Evaluation {
+    /// Step latency plus the (amortized-as-one-step) migration charge —
+    /// the quantity a re-placement strategy should minimize.
+    pub fn total_ms(&self) -> f64 {
+        self.latency + self.migration_ms
+    }
 }
 
 /// The simulated GPU cluster.
@@ -133,12 +147,58 @@ impl Simulator {
             + phase(|t| t.fwd_comm)
             + phase(|t| t.bwd_comm)
             + phase(|t| t.bwd_comp);
-        Evaluation { devices: traces, latency, q }
+        Evaluation { devices: traces, latency, q, migration_ms: 0.0, moved_tables: 0 }
+    }
+
+    /// Time to migrate one table between devices: its full device
+    /// footprint (weights + optimizer state, the same 3x accounting as
+    /// [`Simulator::mem_gb`]) over the configured migration link.
+    pub fn transfer_ms(&self, table: &Table) -> f64 {
+        table.size_gb() as f64 * 3.0 / self.cfg.migration_gbps * 1e3
+    }
+
+    /// Evaluate `next` as a *re*-placement of `prev`: the usual
+    /// [`Simulator::evaluate`] (all shared fields, including the noise
+    /// key, depend only on `next`), plus a migration charge proportional
+    /// to the bytes of every moved table.
+    ///
+    /// `prev[i]` is the previous device of `task.table_ids[i]`;
+    /// `usize::MAX` means the table had no prior placement (free to land
+    /// anywhere), and any other device the task no longer has (`>=
+    /// n_devices`, e.g. after a device loss) still charges the transfer —
+    /// the bytes must move off the lost device either way. An empty
+    /// `prev` is shorthand for "no prior placement at all".
+    pub fn evaluate_migration(
+        &self,
+        ds: &Dataset,
+        task: &Task,
+        prev: &[usize],
+        next: &[usize],
+    ) -> Evaluation {
+        let mut eval = self.evaluate(ds, task, next);
+        if prev.is_empty() {
+            return eval;
+        }
+        assert_eq!(prev.len(), next.len(), "prev/next placement length mismatch");
+        for (i, (&p, &n)) in prev.iter().zip(next).enumerate() {
+            if p != usize::MAX && p != n {
+                eval.moved_tables += 1;
+                eval.migration_ms += self.transfer_ms(&ds.tables[task.table_ids[i]]);
+            }
+        }
+        eval
     }
 
     /// Render a Fig.-1-style ASCII trace of a placement evaluation.
     pub fn render_trace(&self, eval: &Evaluation, label: &str) -> String {
-        let mut out = format!("{label}: overall {:.2} ms\n", eval.latency);
+        let mut out = if eval.moved_tables > 0 {
+            format!(
+                "{label}: overall {:.2} ms + {:.2} ms migration ({} tables moved)\n",
+                eval.latency, eval.migration_ms, eval.moved_tables
+            )
+        } else {
+            format!("{label}: overall {:.2} ms\n", eval.latency)
+        };
         let width = 60.0;
         let scale = width
             / eval
@@ -273,6 +333,81 @@ mod tests {
             assert!((qd[1] as f64 - tr.bwd_comp).abs() < 1e-4 * (1.0 + tr.bwd_comp));
             assert!((qd[2] as f64 - tr.bwd_comm).abs() < 1e-4 * (1.0 + tr.bwd_comm));
         }
+    }
+
+    #[test]
+    fn migration_zero_without_prior_placement() {
+        let (ds, task, sim) = setup();
+        let next = round_robin(&task);
+        // empty prev and all-MAX prev are both "no prior placement"
+        let a = sim.evaluate_migration(&ds, &task, &[], &next);
+        let b = sim.evaluate_migration(&ds, &task, &vec![usize::MAX; next.len()], &next);
+        let plain = sim.evaluate(&ds, &task, &next);
+        for e in [&a, &b] {
+            assert_eq!(e.moved_tables, 0);
+            assert_eq!(e.migration_ms, 0.0);
+            // shared fields bit-identical to the plain evaluation
+            assert_eq!(e.latency, plain.latency);
+            assert_eq!(e.total_ms(), plain.latency);
+        }
+    }
+
+    #[test]
+    fn migration_charges_moved_bytes() {
+        let (ds, task, sim) = setup();
+        let prev = round_robin(&task);
+        let mut next = prev.clone();
+        // move exactly tables 0 and 1
+        next[0] = (prev[0] + 1) % task.n_devices;
+        next[1] = (prev[1] + 1) % task.n_devices;
+        let eval = sim.evaluate_migration(&ds, &task, &prev, &next);
+        assert_eq!(eval.moved_tables, 2);
+        let expect = sim.transfer_ms(&ds.tables[task.table_ids[0]])
+            + sim.transfer_ms(&ds.tables[task.table_ids[1]]);
+        assert!((eval.migration_ms - expect).abs() < 1e-12);
+        assert!(eval.migration_ms > 0.0, "moving real tables costs real time");
+        assert!((eval.total_ms() - (eval.latency + eval.migration_ms)).abs() < 1e-12);
+        // identical placement -> nothing moved
+        let same = sim.evaluate_migration(&ds, &task, &prev, &prev);
+        assert_eq!((same.moved_tables, same.migration_ms), (0, 0.0));
+    }
+
+    #[test]
+    fn migration_charges_forced_moves_off_lost_devices() {
+        let (ds, task, sim) = setup();
+        // prev planned on 4 devices; the task now has 3, so every table
+        // that lived on device 3 is a forced move and still pays transfer
+        let prev = round_robin(&task);
+        let small = Task { table_ids: task.table_ids.clone(), n_devices: 3 };
+        let next: Vec<usize> = prev.iter().map(|&p| p % 3).collect();
+        let eval = sim.evaluate_migration(&ds, &small, &prev, &next);
+        let forced = prev.iter().filter(|&&p| p == 3).count();
+        assert!(forced > 0);
+        assert_eq!(eval.moved_tables, forced);
+        assert!(eval.migration_ms > 0.0);
+    }
+
+    #[test]
+    fn transfer_scales_with_bandwidth() {
+        let (ds, _, sim) = setup();
+        let mut fast = Simulator::new(SimConfig::default());
+        fast.cfg.migration_gbps *= 2.0;
+        let t = &ds.tables[0];
+        assert!((sim.transfer_ms(t) / fast.transfer_ms(t) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_trace_shows_migration() {
+        let (ds, task, sim) = setup();
+        let prev = round_robin(&task);
+        let mut next = prev.clone();
+        next[0] = (prev[0] + 1) % task.n_devices;
+        let eval = sim.evaluate_migration(&ds, &task, &prev, &next);
+        let s = sim.render_trace(&eval, "rebalance");
+        assert!(s.contains("migration") && s.contains("1 tables moved"), "{s}");
+        // and the plain path stays clean
+        let plain = sim.render_trace(&sim.evaluate(&ds, &task, &prev), "plain");
+        assert!(!plain.contains("migration"));
     }
 
     #[test]

@@ -41,11 +41,18 @@ pub struct SimConfig {
     pub noise: f32,
     /// Seed for the measurement-noise stream.
     pub seed: u64,
+    /// Effective bandwidth for live table migration between devices, in
+    /// GB/s. Moving a table charges its full device footprint (weights +
+    /// optimizer state) over this link — see
+    /// [`Simulator::evaluate_migration`].
+    /// 16 GB/s ~ PCIe-gen3-x16-era host-mediated copies, deliberately well
+    /// below the all-to-all fabric: migration is not free.
+    pub migration_gbps: f64,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { batch: 65_536, mem_cap_gb: 11.0, noise: 0.01, seed: 0 }
+        SimConfig { batch: 65_536, mem_cap_gb: 11.0, noise: 0.01, seed: 0, migration_gbps: 16.0 }
     }
 }
 

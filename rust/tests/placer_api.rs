@@ -7,7 +7,8 @@ use std::sync::Arc;
 use dreamshard::baselines::ALL_EXPERTS;
 use dreamshard::coordinator::{DreamShard, TrainCfg};
 use dreamshard::placer::{
-    self, DreamShardPlacer, GreedyPlacer, Placer, PlacementRequest, RandomPlacer,
+    self, DreamShardPlacer, GreedyPlacer, MigrationBudget, Placer, PlacementPlan,
+    PlacementRequest, RandomPlacer,
 };
 use dreamshard::runtime::Runtime;
 use dreamshard::sim::{SimConfig, Simulator};
@@ -179,6 +180,106 @@ fn registry_learned_placers_fit_then_plan() {
     for (task, plan) in tasks.iter().zip(&plans) {
         assert_eq!(plan.placement.len(), task.n_tables());
         assert!(plan.placement.iter().all(|&d| d < task.n_devices));
+    }
+}
+
+#[test]
+fn replace_with_no_prior_matches_place_for_every_strategy() {
+    // the cold-start parity contract: an all-vacant prior plus an
+    // unlimited budget must reproduce `place` bit for bit, whatever the
+    // strategy (two same-seeded placers so stateful streams align)
+    let (ds, tasks, sim) = setup(1, 12, 4);
+    let task = &tasks[0];
+    let rt = Arc::new(Runtime::reference());
+    for name in placer::PLACER_NAMES {
+        let req = PlacementRequest::for_runtime(&rt, &ds, task, &sim).unwrap();
+        let mut cold = placer::by_name_seeded(&rt, name, 5).unwrap();
+        let mut warm = placer::by_name_seeded(&rt, name, 5).unwrap();
+        let placed = cold.place(&req).unwrap();
+        let replaced = warm.replace(&PlacementPlan::no_prior(task), &req).unwrap();
+        assert_eq!(placed.placement, replaced.placement, "{name}");
+        assert_eq!(placed.strategy, replaced.strategy, "{name}");
+        assert_eq!(replaced.eval.moved_tables, 0, "{name}: nothing pre-existed to move");
+        assert_eq!(replaced.eval.migration_ms, 0.0, "{name}");
+    }
+}
+
+#[test]
+fn tight_budget_caps_discretionary_moves() {
+    // a valid prior (every device still alive -> zero forced moves), so
+    // the migration budget alone bounds what may change
+    let rt = Arc::new(Runtime::reference());
+    let (ds, tasks, sim) = setup(1, 20, 4);
+    let task = &tasks[0];
+    let req = PlacementRequest::for_runtime(&rt, &ds, task, &sim)
+        .unwrap()
+        .with_migration(MigrationBudget::moves(3));
+    let prev = placer::by_name(&rt, "greedy:size").unwrap().place(&req).unwrap();
+    for name in ["greedy:dim", "greedy:lookup", "greedy:size-lookup", "dreamshard"] {
+        let mut p = placer::by_name_seeded(&rt, name, 9).unwrap();
+        let plan = p.replace(&prev, &req).unwrap();
+        assert!(
+            plan.eval.moved_tables <= 3,
+            "{name} moved {} tables on a 3-move budget",
+            plan.eval.moved_tables
+        );
+        let diffs = plan
+            .placement
+            .iter()
+            .zip(&prev.placement)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert_eq!(diffs, plan.eval.moved_tables, "{name}: moved == placement diffs");
+        assert!(plan.placement.iter().all(|&d| d < task.n_devices), "{name}");
+    }
+    // greedy:size itself, warm-started from a different expert's plan
+    let prev = placer::by_name(&rt, "greedy:dim").unwrap().place(&req).unwrap();
+    let plan = placer::by_name(&rt, "greedy:size").unwrap().replace(&prev, &req).unwrap();
+    assert!(plan.eval.moved_tables <= 3, "greedy:size moved {}", plan.eval.moved_tables);
+}
+
+#[test]
+fn dreamshard_replace_call_budget_tracks_the_move_budget() {
+    let rt = Arc::new(Runtime::reference());
+    let (ds, tasks, sim) = setup(4, 20, 4);
+    let agent = untrained_agent(&rt, 4);
+    let mut placer = DreamShardPlacer::from_agent(&rt, &agent);
+    let reqs: Vec<PlacementRequest> = tasks
+        .iter()
+        .map(|t| PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap())
+        .collect();
+    let prevs = placer.place_many(&reqs).unwrap();
+
+    // vacant priors + unlimited budget: the full re-rollout, at exactly
+    // the cold lane-batched budget (1 ordering + one fused call per step)
+    let vacant: Vec<PlacementPlan> = tasks.iter().map(PlacementPlan::no_prior).collect();
+    let before = rt.run_count();
+    let cold = placer.replace_many(&vacant, &reqs).unwrap();
+    assert_eq!(rt.run_count() - before, 1 + 20, "vacant replace = cold call budget");
+    for (plan, prev) in cold.iter().zip(&prevs) {
+        assert_eq!(plan.placement, prev.placement, "vacant replace = place, bit for bit");
+        assert_eq!(plan.eval.moved_tables, 0);
+    }
+
+    // budget K over a valid prior with no forced moves: the warm
+    // re-rollout only rolls K tables, so the chunk costs 1 + K calls
+    let budget_reqs: Vec<PlacementRequest> =
+        reqs.iter().map(|r| r.with_migration(MigrationBudget::moves(5))).collect();
+    let before = rt.run_count();
+    let ordering_before = rt.run_count_for("table_cost");
+    let warmed = placer.replace_many(&prevs, &budget_reqs).unwrap();
+    assert_eq!(rt.run_count() - before, 1 + 5, "1 ordering + one fused call per moved slot");
+    assert_eq!(rt.run_count_for("table_cost") - ordering_before, 1, "chunk-batched ordering");
+    for (plan, prev) in warmed.iter().zip(&prevs) {
+        assert!(plan.eval.moved_tables <= 5);
+        let diffs = plan
+            .placement
+            .iter()
+            .zip(&prev.placement)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert_eq!(diffs, plan.eval.moved_tables);
+        assert!(plan.placement.iter().all(|&d| d < 4));
     }
 }
 

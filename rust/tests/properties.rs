@@ -94,6 +94,54 @@ fn prop_features_finite_and_bounded() {
     }
 }
 
+/// Smallest f32 whose f64 widening is `>= x` (x > 0).
+fn f32_at_least(x: f64) -> f32 {
+    let mut c = x as f32; // round-to-nearest: at most one ulp off
+    while (c as f64) < x {
+        c = f32::from_bits(c.to_bits() + 1);
+    }
+    c
+}
+
+/// Largest f32 whose f64 widening is `< x` (x > 0).
+fn f32_just_below(x: f64) -> f32 {
+    let mut c = x as f32;
+    while (c as f64) >= x {
+        c = f32::from_bits(c.to_bits() - 1);
+    }
+    c
+}
+
+#[test]
+fn prop_fits_is_inclusive_at_the_exact_memory_boundary() {
+    // The MDP's legality rule is `mem + table <= cap`, not `<`: a device
+    // filled to the byte is legal. Pin that at the exact f32 boundary —
+    // the tightest cap that still admits the table must fit, and one ulp
+    // under it must not.
+    let ds = gen_dlrm(400, 11);
+    let mut rng = Rng::new(12);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(10);
+        let ids = rng.sample_indices(ds.len(), n + 1);
+        let group: Vec<&dreamshard::tables::Table> =
+            ids[..n].iter().map(|&i| &ds.tables[i]).collect();
+        let t = &ds.tables[ids[n]];
+        // fp16 weights + fp32 momentum, the same 3x fits() accounts
+        let need = Simulator::mem_gb(&group) + t.size_gb() as f64 * 3.0;
+
+        let at = Simulator::new(SimConfig { mem_cap_gb: f32_at_least(need), ..SimConfig::default() });
+        assert!(at.fits(&group, t), "cap {} >= need {need} must fit (inclusive)", at.cfg.mem_cap_gb);
+
+        let under =
+            Simulator::new(SimConfig { mem_cap_gb: f32_just_below(need), ..SimConfig::default() });
+        assert!(
+            !under.fits(&group, t),
+            "cap {} one ulp under need {need} must not fit",
+            under.cfg.mem_cap_gb
+        );
+    }
+}
+
 #[test]
 fn prop_train_test_pools_never_leak() {
     for seed in 0..20u64 {

@@ -417,6 +417,66 @@ impl Placer for GatedPlacer {
     }
 }
 
+/// A placer whose first `place` call fails (the rest succeed): the
+/// drain-failure fixture. A failed drain must requeue its whole batch in
+/// FIFO order and record nothing — proven by the *next* drain returning
+/// every ticket in the original order.
+struct FlakyPlacer {
+    failures_left: usize,
+}
+
+impl Placer for FlakyPlacer {
+    fn name(&self) -> &str {
+        "flaky"
+    }
+
+    fn place(&mut self, req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
+        if self.failures_left > 0 {
+            self.failures_left -= 1;
+            return Err(dreamshard::err!("transient backend failure"));
+        }
+        Ok(PlacementPlan::new(req, vec![0; req.task.n_tables()], "flaky"))
+    }
+}
+
+#[test]
+fn failed_shard_drain_requeues_fifo_and_keeps_front_stats_clean() {
+    let rt = Arc::new(Runtime::reference());
+    let ds = gen_dlrm(200, 0);
+    let (pool, _) = split_pools(&ds, 1);
+    let sim = Simulator::new(SimConfig::default());
+    let tasks = sample_tasks(&pool, 8, 4, 3, 2);
+    let factory = || Ok(Box::new(FlakyPlacer { failures_left: 1 }) as Box<dyn Placer>);
+    let mut front = ShardedFrontEnd::new(&rt, factory, ShardConfig::default()).unwrap();
+    let mut receipts = vec![];
+    for t in &tasks {
+        let req = PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap();
+        receipts.push(front.submit(req).unwrap().unwrap());
+    }
+    assert_eq!(front.queued(), 3);
+
+    let key = receipts[0].shard.clone();
+    let e = front.drain_shard(&key).expect_err("the shard's placer fails its first call");
+    assert!(e.to_string().contains("transient backend failure"), "{e}");
+    assert_eq!(front.queued(), 3, "the failed drain requeued every request");
+    let fs = front.stats();
+    assert_eq!(fs.routed, 3, "routing receipts unaffected by the failure");
+    assert_eq!(fs.aggregate.submitted, 3);
+    assert_eq!(fs.aggregate.planned, 0, "no phantom plans recorded");
+    assert_eq!(fs.aggregate.backend_calls, 0, "no backend work was dispatched");
+    for sh in front.shards() {
+        assert!(sh.last_drain.is_none(), "a failed drain completed nothing");
+    }
+
+    // the next drain succeeds and returns the original tickets in the
+    // original order: the requeue preserved the FIFO exactly
+    let done = front.drain_shard(&key).unwrap();
+    assert_eq!(done.len(), 3);
+    let tickets: Vec<u64> = done.iter().map(|p| p.ticket).collect();
+    assert_eq!(tickets, vec![0, 1, 2], "FIFO order survived the failed drain");
+    assert_eq!(front.stats().aggregate.planned, 3);
+}
+
 #[test]
 fn concurrent_shard_drains_have_no_head_of_line_blocking() {
     let rt = Arc::new(Runtime::reference());
