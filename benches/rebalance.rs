@@ -54,6 +54,7 @@ fn main() {
         max_tables: 40,
         mean_gap_ms: 1.0,
         seed: 3,
+        ..WorkloadCfg::default()
     });
     let tasks: Vec<Task> = arrivals.iter().map(|a| a.task.clone()).collect();
     let reqs: Vec<PlacementRequest> = tasks

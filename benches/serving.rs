@@ -16,7 +16,8 @@ use dreamshard::coordinator::{DreamShard, TrainCfg};
 use dreamshard::placer::{DreamShardPlacer, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
 use dreamshard::serve::{
-    synthetic_arrivals, PlanService, ServeConfig, ShardConfig, ShardedFrontEnd, WorkloadCfg,
+    synthetic_arrivals, Clock, ControlConfig, Controller, PlanService, ServeConfig, ShardConfig,
+    ShardedFrontEnd, TestClock, WorkloadCfg,
 };
 use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, split_pools};
@@ -36,6 +37,7 @@ fn main() {
         max_tables: 40,
         mean_gap_ms: 1.0,
         seed: 3,
+        ..WorkloadCfg::default()
     });
     let mut rng = Rng::new(0);
     let agent = DreamShard::new(&rt, 8, TrainCfg::default(), &mut rng).unwrap();
@@ -137,6 +139,7 @@ fn main() {
         max_tables: 24,
         mean_gap_ms: 1.0,
         seed: 7,
+        ..WorkloadCfg::default()
     });
     for workers in [2usize, 4] {
         let rtw = Arc::new(Runtime::open_default().expect("runtime").with_workers(workers));
@@ -195,4 +198,77 @@ fn main() {
             single_s / sharded_s,
         );
     }
+
+    // closed-loop controller vs static knobs on an overdriven replay: a
+    // TestClock turns arrival gaps (and measured planning wall time)
+    // into virtual time, so the virtual tail latency and shed counts
+    // compare policies — latency-targeted admission, chunk sizing, and
+    // drain scheduling — rather than host noise.
+    let overdriven = synthetic_arrivals(&pool, &WorkloadCfg {
+        n_requests: 64,
+        device_mix: vec![2, 4, 8, 128],
+        min_tables: 10,
+        max_tables: 24,
+        mean_gap_ms: 0.5,
+        closed_loop: true,
+        batch_pct: 25,
+        seed: 7,
+    });
+    let rtw = Arc::new(Runtime::open_default().expect("runtime").with_workers(2));
+    let replay = |controlled: bool| {
+        let clock = Arc::new(TestClock::new());
+        let factory = {
+            let rtw = Arc::clone(&rtw);
+            let agent = &agent;
+            move || Ok(Box::new(DreamShardPlacer::from_agent(&rtw, agent)) as Box<dyn Placer>)
+        };
+        let mut front = ShardedFrontEnd::with_clock(
+            &rtw,
+            factory,
+            ShardConfig {
+                per_shard: ServeConfig { capacity: 16, chunk: 8, ..ServeConfig::default() },
+                global_cap: 24,
+            },
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        )
+        .unwrap();
+        let mut ctl = Controller::new(ControlConfig { target_ms: 30.0, ..Default::default() });
+        for burst in overdriven.chunks(8) {
+            for a in burst {
+                clock.advance_ms(a.at_ms);
+                let req = PlacementRequest::for_runtime(&rtw, &ds, &a.task, &sim).unwrap();
+                let _ = front.submit_slo(req, a.class, None).unwrap(); // None = shed
+            }
+            let t0 = Instant::now();
+            if controlled {
+                ctl.tick(&mut front).unwrap();
+            } else if front.shards().any(|s| s.queued >= s.chunk) {
+                front.drain().unwrap();
+            }
+            clock.advance_ms(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let mut guard = 0;
+        while !front.is_empty() && guard < 64 {
+            if controlled {
+                clock.advance_ms(ctl.config().max_idle_ms);
+                ctl.tick(&mut front).unwrap();
+            } else {
+                front.drain().unwrap();
+            }
+            guard += 1;
+        }
+        let fs = front.stats();
+        let shed = fs.shed_global + fs.aggregate.rejected;
+        let shed_interactive =
+            (fs.shed_global - fs.shed_global_batch) + (fs.aggregate.rejected - fs.aggregate.shed_batch);
+        (fs.aggregate.p95_queue_ms(), shed, shed_interactive)
+    };
+    replay(true); // warm
+    let (static_p95, static_shed, static_int) = replay(false);
+    let (ctl_p95, ctl_shed, ctl_int) = replay(true);
+    println!(
+        "closed-loop 2/4/8/128 mix, 25% batch: static knobs p95 {static_p95:.1} ms, \
+         {static_shed} shed ({static_int} interactive) vs controller p95 {ctl_p95:.1} ms, \
+         {ctl_shed} shed ({ctl_int} interactive)",
+    );
 }

@@ -20,13 +20,20 @@
 //! variant behind a single submit API, each shard draining on its own
 //! thread, so the heavyweight 128-device chunks never stall the
 //! small-device stream at the head of one FIFO.
+//!
+//! The last section closes the loop: a `Controller` ticks over that same
+//! front end while a closed-loop workload (arrivals offset from service
+//! progress, 25% batch-class) streams in — each tick observes per-shard
+//! queue-latency tails and drain ages, then resizes chunks, adapts the
+//! admission cap, and schedules drains toward its latency target.
 
 use std::sync::Arc;
 
 use dreamshard::placer::{self, PlacementRequest};
 use dreamshard::runtime::Runtime;
 use dreamshard::serve::{
-    synthetic_arrivals, PlanService, ServeConfig, ShardConfig, ShardedFrontEnd, WorkloadCfg,
+    synthetic_arrivals, ControlConfig, Controller, PlanService, ServeConfig, ShardConfig,
+    ShardedFrontEnd, WorkloadCfg,
 };
 use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, split_pools};
@@ -45,6 +52,7 @@ fn main() -> dreamshard::Result<()> {
         max_tables: 16,
         mean_gap_ms: 2.0,
         seed: 1,
+        ..WorkloadCfg::default()
     });
 
     let placer = placer::by_name(&rt, "dreamshard")?;
@@ -89,6 +97,7 @@ fn main() -> dreamshard::Result<()> {
         max_tables: 16,
         mean_gap_ms: 2.0,
         seed: 2,
+        ..WorkloadCfg::default()
     });
     let factory = {
         let rt = Arc::clone(&rt);
@@ -113,6 +122,36 @@ fn main() -> dreamshard::Result<()> {
             sh.stats.mean_queue_ms(),
         );
     }
+    println!("\n{}", front.stats().summary());
+
+    // the closed loop: the same front end, now steered by a Controller —
+    // per tick it reads each shard's queue-latency tail, queue depth,
+    // and drain-completion age, then actuates the knobs that already
+    // exist (AIMD admission cap, lane-chunk resizing, worst-tail-first
+    // drain scheduling, SLO-class pressure mode: interactive drains
+    // first, batch sheds first)
+    let closed = synthetic_arrivals(&pool, &WorkloadCfg {
+        n_requests: 24,
+        device_mix: vec![2, 4, 8, 128],
+        min_tables: 6,
+        max_tables: 16,
+        mean_gap_ms: 2.0,
+        closed_loop: true, // at_ms = gap from the last service progress
+        batch_pct: 25,
+        seed: 2,
+    });
+    let mut ctl = Controller::new(ControlConfig { target_ms: 25.0, ..Default::default() });
+    println!("\nclosed loop: controller ticks over {} arrivals (25% batch) ...", closed.len());
+    for burst in closed.chunks(8) {
+        for a in burst {
+            let req = PlacementRequest::for_runtime(&rt, &ds, &a.task, &sim)?;
+            front.submit_slo(req, a.class, None)?; // Ok(None) = admission shed
+        }
+        println!("  {}", ctl.tick(&mut front)?.summary());
+    }
+    // flush the tail directly — the example exits rather than waiting
+    // out the controller's idle floor in real time
+    front.drain()?;
     println!("\n{}", front.stats().summary());
     Ok(())
 }

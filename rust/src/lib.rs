@@ -135,6 +135,54 @@
 //! pipelined vs blocking drains at 1/2/4 workers plus sharded vs
 //! single-FIFO throughput on the mixed 2/4/8/128-device workload.
 //!
+//! The serving layer closes its own loop: [`serve::Controller`] watches
+//! the signals each shard already exposes ([`serve::ShardView`]:
+//! queue-latency percentiles over a bounded window, queue depths,
+//! drain-completion ages — all read off a swappable [`serve::Clock`])
+//! and steers the existing knobs toward a
+//! [`serve::ControlConfig::target_ms`] tail-latency target: lane-chunk
+//! resizing, AIMD admission-cap adaptation, worst-tail-first drain
+//! scheduling, SLO-class pressure mode ([`serve::SloClass`]: interactive
+//! drains first, batch sheds first), and headroom-sized
+//! [`placer::MigrationBudget`]s for rebalances. Under a
+//! [`serve::TestClock`] a whole control trajectory is deterministic
+//! (`tests/control.rs`); `serve-sim --closed-loop` replays one and
+//! prints the static-vs-controlled comparison:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use dreamshard::placer::{self, PlacementRequest};
+//! use dreamshard::runtime::Runtime;
+//! use dreamshard::serve::{
+//!     ControlConfig, Controller, ShardConfig, ShardedFrontEnd, TestClock,
+//! };
+//! use dreamshard::sim::{SimConfig, Simulator};
+//! use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
+//!
+//! let rt = Arc::new(Runtime::reference());
+//! let ds = gen_dlrm(60, 0);
+//! let (pool, _) = split_pools(&ds, 1);
+//! let task = sample_tasks(&pool, 10, 4, 1, 5).remove(0);
+//! let sim = Simulator::new(SimConfig::default());
+//!
+//! let clock = Arc::new(TestClock::new()); // deterministic time
+//! let factory = {
+//!     let rt = Arc::clone(&rt);
+//!     move || placer::by_name(&rt, "greedy:dim")
+//! };
+//! let mut front =
+//!     ShardedFrontEnd::with_clock(&rt, factory, ShardConfig::default(), clock.clone())
+//!         .unwrap();
+//! let req = PlacementRequest::for_runtime(&rt, &ds, &task, &sim).unwrap();
+//! front.submit(req).unwrap().expect("under the global cap");
+//! clock.advance_ms(5.0);
+//!
+//! let mut ctl = Controller::new(ControlConfig { target_ms: 50.0, ..Default::default() });
+//! let report = ctl.tick(&mut front).unwrap(); // observe -> actuate -> drain
+//! assert_eq!(report.planned.len(), 1);
+//! assert!(!report.pressure, "5 ms of queueing is far under a 50 ms target");
+//! ```
+//!
 //! Both front ends also serve fleet *changes*:
 //! [`serve::PlanService::rebalance`] and
 //! [`serve::ShardedFrontEnd::rebalance`] drain batches of

@@ -41,6 +41,17 @@
 //!                  (--devices defaults to 2,4,8 here)
 //! --moves K        discretionary moved-table budget per rebalanced
 //!                  plan (4); forced moves off lost devices are exempt
+//! --closed-loop    closed-loop mode: arrivals couple to drain
+//!                  completions (each gap offsets from the last service
+//!                  progress) and the workload replays twice through the
+//!                  sharded front end — once with static knobs, once
+//!                  steered by the serve::Controller — then prints the
+//!                  static-vs-controlled tail-latency/shed comparison
+//! --target-ms T    controller queue-latency target, ms (50); the
+//!                  controller steers each shard's p95 toward it
+//! --slo P          percent of arrivals tagged batch-class (20); under
+//!                  pressure the controller drains interactive first
+//!                  and sheds/evicts batch first
 //! ```
 //!
 //! Without `--sharded` the run closes with a pipelined-drain vs
@@ -59,11 +70,11 @@ use dreamshard::coordinator::TrainCfg;
 use dreamshard::placer::{self, FitRequest, MigrationBudget, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
 use dreamshard::serve::{
-    synthetic_arrivals, PlanService, Planned, ReplaceJob, ServeConfig, ShardConfig,
-    ShardedFrontEnd, WorkloadCfg,
+    synthetic_arrivals, Arrival, Clock, ControlConfig, Controller, PlanService, Planned,
+    ReplaceJob, ServeConfig, ShardConfig, ShardedFrontEnd, TestClock, WorkloadCfg,
 };
 use dreamshard::sim::{SimConfig, Simulator};
-use dreamshard::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools, Task};
+use dreamshard::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools, Dataset, Task};
 use dreamshard::util::table::TextTable;
 
 /// serve-sim helper: drain one chunk, stamp each completed request's
@@ -84,6 +95,106 @@ fn drain_once(
     }
     *clock_ms += wall_ms;
     Ok(())
+}
+
+/// serve-sim `--closed-loop` outcome of one replay (static or
+/// controlled) — the numbers the comparison table prints.
+struct LoopOutcome {
+    planned: u64,
+    shed: u64,
+    shed_interactive: u64,
+    p95_ms: f64,
+    mean_ms: f64,
+    ticks: u64,
+    final_cap: usize,
+    wall_s: f64,
+}
+
+/// Replay a closed-loop workload through the sharded front end on a
+/// virtual clock ([`TestClock`]): each arrival's gap advances the clock
+/// from the last service progress (drain completions advance it by
+/// their measured planning wall time), so arrivals throttle with the
+/// service instead of piling onto a wall schedule. `controlled` replays
+/// through a [`Controller`] tick per arrival burst; static mode drains
+/// only when some shard fills a lane-chunk — the hand-tuned baseline
+/// the controller is compared against.
+#[allow(clippy::too_many_arguments)]
+fn replay_closed_loop<'a>(
+    rt: &Arc<Runtime>,
+    ds: &'a Dataset,
+    sim: &'a Simulator,
+    arrivals: &'a [Arrival],
+    policy: &str,
+    seed: u64,
+    cfg: ServeConfig,
+    capacity: usize,
+    target_ms: f64,
+    controlled: bool,
+) -> Result<LoopOutcome> {
+    let clock = Arc::new(TestClock::new());
+    let factory = {
+        let rt = Arc::clone(rt);
+        let policy = policy.to_string();
+        move || placer::by_name_seeded(&rt, &policy, seed)
+    };
+    let mut front = ShardedFrontEnd::with_clock(
+        rt,
+        factory,
+        ShardConfig { per_shard: cfg, global_cap: capacity },
+        Arc::clone(&clock) as Arc<dyn Clock>,
+    )?;
+    let mut ctl = Controller::new(ControlConfig { target_ms, ..Default::default() });
+    let wall0 = Instant::now();
+    let mut ticks = 0u64;
+    // release arrivals in bursts of one control interval each
+    const BURST: usize = 8;
+    let mut idx = 0usize;
+    while idx < arrivals.len() {
+        for a in arrivals.iter().skip(idx).take(BURST) {
+            // closed-loop coupling: the gap offsets from the clock's
+            // current position, which the last drain advanced
+            clock.advance_ms(a.at_ms);
+            let req = PlacementRequest::for_runtime(rt, ds, &a.task, sim)?;
+            front.submit_slo(req, a.class, None)?;
+        }
+        idx = (idx + BURST).min(arrivals.len());
+        let t0 = Instant::now();
+        if controlled {
+            let report = ctl.tick(&mut front)?;
+            ticks = report.tick;
+        } else if front.shards().any(|s| s.queued >= s.chunk) {
+            front.drain()?;
+        }
+        // planning occupies the replay clock for its measured wall time
+        clock.advance_ms(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    // flush: keep ticking (aging the idle floor so trickles drain) with
+    // a guard against a pathological policy, then a final hard drain
+    let mut guard = 0usize;
+    while !front.is_empty() {
+        let t0 = Instant::now();
+        if controlled && guard < 256 {
+            clock.advance_ms(ctl.config().max_idle_ms);
+            let report = ctl.tick(&mut front)?;
+            ticks = report.tick;
+            guard += 1;
+        } else {
+            front.drain()?;
+        }
+        clock.advance_ms(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let fs = front.stats();
+    Ok(LoopOutcome {
+        planned: fs.aggregate.planned,
+        shed: fs.shed_global + fs.aggregate.rejected,
+        shed_interactive: (fs.shed_global - fs.shed_global_batch)
+            + (fs.aggregate.rejected - fs.aggregate.shed_batch),
+        p95_ms: fs.aggregate.p95_queue_ms(),
+        mean_ms: fs.aggregate.mean_queue_ms(),
+        ticks,
+        final_cap: front.global_cap(),
+        wall_s: wall0.elapsed().as_secs_f64(),
+    })
 }
 
 fn main() -> Result<()> {
@@ -193,12 +304,15 @@ fn main() -> Result<()> {
             let ds = gen_dlrm(856, 42);
             let (pool, _) = split_pools(&ds, 1007);
             let sim = Simulator::new(SimConfig::default());
+            let closed_loop = flags.has("closed-loop");
             let wl = WorkloadCfg {
                 n_requests: flags.get_usize("requests", 64),
                 device_mix,
                 min_tables: flags.get_usize("min-tables", 10),
                 max_tables: flags.get_usize("max-tables", 40),
                 mean_gap_ms: flags.get_usize("gap-ms", 5) as f64,
+                closed_loop,
+                batch_pct: flags.get_usize("slo", 20).min(100),
                 seed,
             };
             let arrivals = synthetic_arrivals(&pool, &wl);
@@ -210,6 +324,80 @@ fn main() -> Result<()> {
                 );
             }
             let cfg = ServeConfig { capacity, chunk, ..ServeConfig::default() };
+            if closed_loop {
+                // the acceptance run: the same coupled workload replayed
+                // twice at equal load — static knobs vs the Controller
+                // steering chunk sizes, admission, drain order, and SLO
+                // pressure toward --target-ms
+                let target_ms = flags.get_usize("target-ms", 50) as f64;
+                let run = |controlled: bool| {
+                    replay_closed_loop(
+                        &rt, &ds, &sim, &arrivals, &policy, seed, cfg, capacity, target_ms,
+                        controlled,
+                    )
+                };
+                let fixed = run(false)?;
+                let steered = run(true)?;
+                println!(
+                    "serve-sim --closed-loop: {} arrivals ({}% batch-class), target p95 \
+                     {target_ms:.0} ms, policy {policy}, chunk {chunk}, cap {capacity}, \
+                     {} runtime workers",
+                    arrivals.len(),
+                    wl.batch_pct,
+                    rt.workers(),
+                );
+                let mut table = TextTable::new(vec![
+                    "mode",
+                    "plans",
+                    "shed",
+                    "shed interactive",
+                    "queue p95 ms",
+                    "queue mean ms",
+                    "final cap",
+                    "wall s",
+                ]);
+                table.row(vec![
+                    "static".to_string(),
+                    fixed.planned.to_string(),
+                    fixed.shed.to_string(),
+                    fixed.shed_interactive.to_string(),
+                    format!("{:.2}", fixed.p95_ms),
+                    format!("{:.2}", fixed.mean_ms),
+                    fixed.final_cap.to_string(),
+                    format!("{:.2}", fixed.wall_s),
+                ]);
+                table.row(vec![
+                    format!("controlled ({} ticks)", steered.ticks),
+                    steered.planned.to_string(),
+                    steered.shed.to_string(),
+                    steered.shed_interactive.to_string(),
+                    format!("{:.2}", steered.p95_ms),
+                    format!("{:.2}", steered.mean_ms),
+                    steered.final_cap.to_string(),
+                    format!("{:.2}", steered.wall_s),
+                ]);
+                println!("{}", table.render());
+                let better_tail = steered.p95_ms <= fixed.p95_ms;
+                let fewer_shed = steered.shed_interactive <= fixed.shed_interactive;
+                println!(
+                    "verdict: controlled p95 {:.2} ms vs static {:.2} ms, interactive shed \
+                     {} vs {} -> controller {}",
+                    steered.p95_ms,
+                    fixed.p95_ms,
+                    steered.shed_interactive,
+                    fixed.shed_interactive,
+                    if better_tail && fewer_shed {
+                        "wins on tail latency and interactive shed"
+                    } else if better_tail {
+                        "wins on tail latency"
+                    } else if fewer_shed {
+                        "wins on interactive shed"
+                    } else {
+                        "loses on this replay (timing-sensitive; rerun or raise --requests)"
+                    },
+                );
+                return Ok(());
+            }
             if rebalance {
                 // day-2 scenario: plan the accepted workload once, fail
                 // one device per task, then re-place every live plan two

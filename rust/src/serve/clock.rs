@@ -1,0 +1,139 @@
+//! The serving stack's time source, as a seam.
+//!
+//! Every latency the serving layer measures — queue wait, chunk wall
+//! time, the per-shard drain-completion clock
+//! ([`crate::serve::ShardView::last_drain`]) — and every decision the
+//! closed-loop [`crate::serve::Controller`] makes off those measurements
+//! flows through one [`Clock`]. Production uses [`SystemClock`]
+//! (`Instant::now()`); tests use [`TestClock`], which only moves when the
+//! test calls [`TestClock::advance_ms`] — so "a shard sat queued for
+//! 400 ms" is two method calls, not a real sleep, and controller
+//! convergence is a deterministic assertion instead of a timing race.
+//!
+//! The clock hands out real `Instant`s (a fixed base plus the advanced
+//! offset) rather than raw floats, so the rest of the serving code keeps
+//! ordinary `Instant`/`Duration` arithmetic and nothing downstream can
+//! tell the difference.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A monotonic time source. `Send + Sync` because drain threads stamp
+/// completion times concurrently ([`crate::serve::ShardedFrontEnd`]
+/// drains every shard on its own thread).
+pub trait Clock: Send + Sync {
+    /// The current instant on this clock. Must be monotonic:
+    /// successive calls never go backwards.
+    fn now(&self) -> Instant;
+}
+
+/// The real wall clock: [`Instant::now`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+}
+
+/// A deterministic test clock: frozen at construction, moved only by
+/// explicit [`TestClock::advance_ms`] calls. Share it (`Arc`) between
+/// the service under test and the test body:
+///
+/// ```
+/// use std::sync::Arc;
+/// use dreamshard::serve::{Clock, TestClock};
+///
+/// let clock = Arc::new(TestClock::new());
+/// let t0 = clock.now();
+/// clock.advance_ms(250.0);
+/// assert_eq!(clock.now().duration_since(t0).as_millis(), 250);
+/// ```
+#[derive(Debug)]
+pub struct TestClock {
+    base: Instant,
+    /// Offset since `base`, in microseconds (atomic so drain threads and
+    /// the test body can share the clock without locks).
+    offset_us: AtomicU64,
+}
+
+impl TestClock {
+    pub fn new() -> Self {
+        TestClock { base: Instant::now(), offset_us: AtomicU64::new(0) }
+    }
+
+    /// Move the clock forward. Negative or non-finite advances are
+    /// rejected — the clock, like the trait, is monotonic.
+    pub fn advance_ms(&self, ms: f64) {
+        assert!(ms.is_finite() && ms >= 0.0, "TestClock::advance_ms({ms}): clock is monotonic");
+        self.offset_us.fetch_add((ms * 1e3) as u64, Ordering::SeqCst);
+    }
+
+    /// Milliseconds advanced since construction.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.offset_us.load(Ordering::SeqCst) as f64 / 1e3
+    }
+}
+
+impl Default for TestClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for TestClock {
+    fn now(&self) -> Instant {
+        self.base + Duration::from_micros(self.offset_us.load(Ordering::SeqCst))
+    }
+}
+
+/// The default clock services are built with ([`SystemClock`]).
+pub fn system_clock() -> Arc<dyn Clock> {
+    Arc::new(SystemClock)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_is_monotonic() {
+        let c = SystemClock;
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn test_clock_only_moves_when_advanced() {
+        let c = TestClock::new();
+        let a = c.now();
+        assert_eq!(c.now(), a, "frozen until advanced");
+        c.advance_ms(1.5);
+        assert_eq!(c.now().duration_since(a).as_micros(), 1500);
+        assert_eq!(c.elapsed_ms(), 1.5);
+        c.advance_ms(0.0); // a no-op advance is legal
+        assert_eq!(c.elapsed_ms(), 1.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "monotonic")]
+    fn test_clock_rejects_backward_advance() {
+        TestClock::new().advance_ms(-1.0);
+    }
+
+    #[test]
+    fn test_clock_is_shareable_across_threads() {
+        let c = Arc::new(TestClock::new());
+        let t0 = c.now();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = Arc::clone(&c);
+                s.spawn(move || c.advance_ms(10.0));
+            }
+        });
+        assert_eq!(c.now().duration_since(t0).as_millis(), 40);
+    }
+}

@@ -1,0 +1,398 @@
+//! [`Controller`]: the closed loop over the sharded front end.
+//!
+//! Everything below observes signals the front end already exposes and
+//! actuates knobs that already exist — the controller adds no new
+//! mechanism to the serving stack, only the policy that connects
+//! measurement to actuation:
+//!
+//! * **observe** — per-shard queue-latency percentiles
+//!   ([`ServeStats::percentile_queue_ms`] on the bounded window), queue
+//!   depths ([`ShardView::queued`]), and drain-completion ages
+//!   ([`ShardView::last_drain`] against the front end's [`Clock`]);
+//! * **compare** — against the [`ControlConfig::target_ms`] tail-latency
+//!   target, with hysteresis (`pressure_enter` / `pressure_exit`) so the
+//!   loop does not chatter around the threshold;
+//! * **actuate** — resize per-shard lane-chunks
+//!   ([`ShardedFrontEnd::set_chunk`]: bigger chunks amortize more
+//!   planning per fused backend call when a shard falls behind, smaller
+//!   chunks complete sooner when it is comfortably ahead), adapt the
+//!   global admission cap AIMD-style
+//!   ([`ShardedFrontEnd::set_global_cap`]: multiplicative decrease under
+//!   pressure, additive recovery when healthy), toggle SLO-class
+//!   pressure mode ([`ShardedFrontEnd::set_class_order`]: interactive
+//!   drains first, batch sheds first), and schedule which shards drain
+//!   this tick ([`ShardedFrontEnd::drain_shard`], worst tail first);
+//! * **rebalance** — size a [`MigrationBudget`] to measured headroom
+//!   ([`Controller::migration_budget`]): the farther under target the
+//!   fleet is, the more tables a re-plan may move.
+//!
+//! Every decision reads the front end's clock, so under a
+//! [`super::TestClock`] a whole control trajectory — overload, pressure
+//! entry, convergence back under target — is a deterministic unit test
+//! (`tests/control.rs`), not a timing race.
+
+use crate::placer::MigrationBudget;
+use crate::util::error::Result;
+
+use super::clock::Clock;
+use super::{Planned, ReplaceJob, ServeStats, ShardKey, ShardView, ShardedFrontEnd};
+
+/// Closed-loop policy knobs. The defaults steer toward a 50 ms queue
+/// p95; deployments mostly only change [`ControlConfig::target_ms`].
+#[derive(Clone, Debug)]
+pub struct ControlConfig {
+    /// Queue-latency target, ms: the controller steers every shard's
+    /// tail percentile toward (and under) this.
+    pub target_ms: f64,
+    /// Which tail to target (`0.95` = p95), evaluated per shard on the
+    /// bounded recent window ([`ServeStats::percentile_queue_ms`]).
+    pub percentile: f64,
+    /// Lane-chunk resize bounds ([`ShardedFrontEnd::set_chunk`]).
+    pub min_chunk: usize,
+    pub max_chunk: usize,
+    /// Global admission-cap bounds ([`ShardedFrontEnd::set_global_cap`]).
+    pub min_cap: usize,
+    pub max_cap: usize,
+    /// Enter pressure mode when the worst shard's tail exceeds
+    /// `target_ms * pressure_enter`; leave it only when the worst tail
+    /// falls below `target_ms * pressure_exit`. `exit < enter` is the
+    /// hysteresis band that keeps the mode from chattering.
+    pub pressure_enter: f64,
+    pub pressure_exit: f64,
+    /// How many shards [`Controller::tick`] drains per tick (worst tail
+    /// first) — bounds per-tick work so one tick never becomes a full
+    /// front-end drain under wide fan-out.
+    pub drains_per_tick: usize,
+    /// Drain a queued shard regardless of other signals once its last
+    /// drain completion is this old, ms (freshness floor: a trickle of
+    /// requests on a quiet shard must not wait forever).
+    pub max_idle_ms: f64,
+    /// Migration-budget ceiling: at full headroom (worst tail at 0)
+    /// [`Controller::migration_budget`] grants this many moves per
+    /// re-planned stream; at or above target it grants none.
+    pub max_moves: usize,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            target_ms: 50.0,
+            percentile: 0.95,
+            min_chunk: 1,
+            max_chunk: 64,
+            min_cap: 16,
+            max_cap: 1024,
+            pressure_enter: 1.0,
+            pressure_exit: 0.5,
+            drains_per_tick: 2,
+            max_idle_ms: 100.0,
+            max_moves: 16,
+        }
+    }
+}
+
+/// What [`Controller::tick`] observed and decided for one shard.
+#[derive(Clone, Debug)]
+pub struct ShardDecision {
+    pub key: ShardKey,
+    /// The shard's tail queue latency this tick, ms
+    /// ([`ControlConfig::percentile`] over the bounded window).
+    pub p_queue_ms: f64,
+    /// Requests queued when the tick observed the shard.
+    pub queued: usize,
+    /// Lane-chunk size after this tick's resize (if any).
+    pub chunk: usize,
+    /// Whether this tick drained the shard.
+    pub drained: bool,
+}
+
+/// One tick's full observation/actuation record — what a dashboard (or
+/// the `serve-sim --closed-loop` replay) prints per control interval.
+#[derive(Clone, Debug)]
+pub struct TickReport {
+    /// Monotonic tick counter (1-based: set before observation).
+    pub tick: u64,
+    /// Worst per-shard tail queue latency observed this tick, ms.
+    pub worst_p_ms: f64,
+    /// Pressure mode after this tick's hysteresis update.
+    pub pressure: bool,
+    /// Global admission cap after this tick's AIMD update.
+    pub global_cap: usize,
+    /// Per-shard observations and decisions, in shard-creation order.
+    pub shards: Vec<ShardDecision>,
+    /// Everything the tick's scheduled drains planned.
+    pub planned: Vec<Planned>,
+}
+
+impl TickReport {
+    /// One-line human summary for logs.
+    pub fn summary(&self) -> String {
+        let drained: Vec<String> = self
+            .shards
+            .iter()
+            .filter(|d| d.drained)
+            .map(|d| d.key.label())
+            .collect();
+        format!(
+            "tick {}: worst p{:.0} ms, pressure {}, cap {}, {} planned (drained: {})",
+            self.tick,
+            self.worst_p_ms,
+            if self.pressure { "ON" } else { "off" },
+            self.global_cap,
+            self.planned.len(),
+            if drained.is_empty() { "-".into() } else { drained.join(", ") },
+        )
+    }
+}
+
+/// Per-shard signals one tick reads, captured before any actuation (the
+/// observation and the mutation phases must not interleave: decisions
+/// within a tick are all made against the same snapshot).
+struct Observed {
+    key: ShardKey,
+    p_queue_ms: f64,
+    queued: usize,
+    chunk: usize,
+    idle_ms: f64,
+}
+
+/// The closed-loop serving controller. Pure policy over
+/// [`ShardedFrontEnd`]'s observation and actuation surface; owns no
+/// threads and keeps almost no state (a tick counter and the pressure
+/// latch), so a caller ticks it from whatever cadence it likes — a
+/// replay loop, a timer thread, a test.
+pub struct Controller {
+    cfg: ControlConfig,
+    ticks: u64,
+    pressure: bool,
+}
+
+impl Controller {
+    pub fn new(cfg: ControlConfig) -> Self {
+        let cfg = ControlConfig {
+            target_ms: cfg.target_ms.max(f64::MIN_POSITIVE),
+            percentile: cfg.percentile.clamp(0.0, 1.0),
+            min_chunk: cfg.min_chunk.max(1),
+            max_chunk: cfg.max_chunk.max(cfg.min_chunk.max(1)),
+            min_cap: cfg.min_cap.max(1),
+            max_cap: cfg.max_cap.max(cfg.min_cap.max(1)),
+            drains_per_tick: cfg.drains_per_tick.max(1),
+            ..cfg
+        };
+        Controller { cfg, ticks: 0, pressure: false }
+    }
+
+    pub fn config(&self) -> &ControlConfig {
+        &self.cfg
+    }
+
+    /// Whether the loop is currently in pressure mode (worst tail above
+    /// target, not yet recovered below the exit threshold).
+    pub fn pressure(&self) -> bool {
+        self.pressure
+    }
+
+    /// Ticks run so far.
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// The shard's tail latency signal: the configured percentile when
+    /// the window has samples, else 0 (a never-drained shard has no
+    /// latency evidence yet — its `queued`/idle signals drive instead).
+    fn tail_ms(&self, stats: &ServeStats) -> f64 {
+        if stats.window_len() == 0 {
+            0.0
+        } else {
+            stats.percentile_queue_ms(self.cfg.percentile)
+        }
+    }
+
+    /// Run one control interval: observe every shard, update the
+    /// pressure latch and admission cap, resize lane-chunks, then drain
+    /// up to [`ControlConfig::drains_per_tick`] shards (worst tail
+    /// first). Returns the full [`TickReport`]; its `planned` carries
+    /// whatever the scheduled drains completed. Errors are the drained
+    /// shards' errors (an observation/actuation pass itself cannot
+    /// fail).
+    pub fn tick<'a>(&mut self, front: &mut ShardedFrontEnd<'a>) -> Result<TickReport> {
+        self.ticks += 1;
+        let cfg = self.cfg.clone();
+        let now = front.clock().now();
+
+        // -------- observe (immutable snapshot) --------
+        let observed: Vec<Observed> = front
+            .shards()
+            .map(|v: ShardView<'_>| Observed {
+                key: v.key.clone(),
+                p_queue_ms: self.tail_ms(v.stats),
+                queued: v.queued,
+                chunk: v.chunk,
+                idle_ms: v
+                    .last_drain
+                    // never-drained shards read as infinitely idle, so
+                    // the freshness floor fires on the first tick
+                    .map_or(f64::INFINITY, |at| {
+                        now.duration_since(at).as_secs_f64() * 1e3
+                    }),
+            })
+            .collect();
+        let worst_p_ms =
+            observed.iter().map(|o| o.p_queue_ms).fold(0.0, f64::max);
+
+        // -------- pressure latch (hysteresis) --------
+        if worst_p_ms > cfg.target_ms * cfg.pressure_enter {
+            self.pressure = true;
+        } else if worst_p_ms < cfg.target_ms * cfg.pressure_exit {
+            self.pressure = false;
+        }
+        front.set_class_order(self.pressure);
+
+        // -------- admission cap (AIMD) --------
+        let cap = front.global_cap();
+        let cap = if self.pressure {
+            // multiplicative decrease: shed harder while over target
+            (cap * 3 / 4).max(cfg.min_cap)
+        } else {
+            // additive recovery toward the ceiling
+            (cap + (cfg.max_cap / 8).max(1)).min(cfg.max_cap)
+        };
+        front.set_global_cap(cap);
+
+        // -------- per-shard chunk resize --------
+        let mut decisions: Vec<ShardDecision> = Vec::with_capacity(observed.len());
+        for o in &observed {
+            let chunk = if o.p_queue_ms > cfg.target_ms {
+                // behind target: bigger chunks amortize more planning
+                // per fused backend call, raising drain throughput
+                (o.chunk * 2).min(cfg.max_chunk)
+            } else if o.p_queue_ms < cfg.target_ms * 0.5 && o.queued <= o.chunk / 2 {
+                // comfortably ahead with a shallow queue: smaller chunks
+                // complete sooner, trading spare throughput for latency
+                (o.chunk / 2).max(cfg.min_chunk)
+            } else {
+                o.chunk
+            };
+            if chunk != o.chunk {
+                front.set_chunk(&o.key, chunk).expect("observed shard exists");
+            }
+            decisions.push(ShardDecision {
+                key: o.key.clone(),
+                p_queue_ms: o.p_queue_ms,
+                queued: o.queued,
+                chunk,
+                drained: false,
+            });
+        }
+
+        // -------- drain scheduling --------
+        // candidates: queued work that is worth a drain now — a full
+        // chunk to batch, a stale shard past the freshness floor, or a
+        // shard already over target (always drain everything under
+        // pressure: the backlog *is* the latency)
+        let mut candidates: Vec<usize> = observed
+            .iter()
+            .enumerate()
+            .filter(|(i, o)| {
+                o.queued > 0
+                    && (o.queued >= decisions[*i].chunk
+                        || o.idle_ms >= cfg.max_idle_ms
+                        || o.p_queue_ms > cfg.target_ms
+                        || self.pressure)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        candidates.sort_by(|&a, &b| {
+            observed[b]
+                .p_queue_ms
+                .total_cmp(&observed[a].p_queue_ms)
+                .then(observed[b].queued.cmp(&observed[a].queued))
+        });
+        let mut planned: Vec<Planned> = vec![];
+        for &i in candidates.iter().take(cfg.drains_per_tick) {
+            planned.extend(front.drain_shard(&observed[i].key)?);
+            decisions[i].drained = true;
+        }
+
+        Ok(TickReport {
+            tick: self.ticks,
+            worst_p_ms,
+            pressure: self.pressure,
+            global_cap: cap,
+            shards: decisions,
+            planned,
+        })
+    }
+
+    /// Fraction of the latency target currently unused, in `[0, 1]`:
+    /// 1 when the worst shard's tail is 0, 0 when it is at or over
+    /// target.
+    pub fn headroom(&self, front: &ShardedFrontEnd<'_>) -> f64 {
+        let worst = front
+            .shards()
+            .map(|v| self.tail_ms(v.stats))
+            .fold(0.0, f64::max);
+        ((self.cfg.target_ms - worst) / self.cfg.target_ms).clamp(0.0, 1.0)
+    }
+
+    /// Size a migration budget to measured headroom: at full headroom a
+    /// re-plan may move up to [`ControlConfig::max_moves`] tables per
+    /// stream; at zero headroom none (forced moves — a vanished device —
+    /// are always exempt, see [`MigrationBudget`]). This is the knob the
+    /// ROADMAP asked the closed loop to own: migration work rides in
+    /// whatever latency slack the fleet actually has.
+    pub fn migration_budget(&self, front: &ShardedFrontEnd<'_>) -> MigrationBudget {
+        let moves = (self.headroom(front) * self.cfg.max_moves as f64).round() as usize;
+        MigrationBudget::moves(moves)
+    }
+
+    /// [`ShardedFrontEnd::rebalance`] under a controller-sized budget:
+    /// every job's request gets [`Controller::migration_budget`] before
+    /// the re-plans fan out. Call it when the fleet changed; the budget
+    /// makes the migration cost proportional to available headroom.
+    pub fn rebalance<'a>(
+        &mut self,
+        front: &mut ShardedFrontEnd<'a>,
+        jobs: Vec<ReplaceJob<'a>>,
+    ) -> Result<Vec<Planned>> {
+        let budget = self.migration_budget(front);
+        let jobs: Vec<ReplaceJob<'a>> = jobs
+            .into_iter()
+            .map(|j| ReplaceJob { prev: j.prev, req: j.req.with_migration(budget) })
+            .collect();
+        front.rebalance(jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_sanitizes_degenerate_bounds() {
+        let ctl = Controller::new(ControlConfig {
+            target_ms: 0.0,
+            min_chunk: 0,
+            max_chunk: 0,
+            min_cap: 0,
+            max_cap: 0,
+            drains_per_tick: 0,
+            ..Default::default()
+        });
+        let cfg = ctl.config();
+        assert!(cfg.target_ms > 0.0);
+        assert_eq!((cfg.min_chunk, cfg.max_chunk), (1, 1));
+        assert_eq!((cfg.min_cap, cfg.max_cap), (1, 1));
+        assert_eq!(cfg.drains_per_tick, 1);
+        assert!(!ctl.pressure());
+        assert_eq!(ctl.ticks(), 0);
+    }
+
+    #[test]
+    fn defaults_form_a_valid_hysteresis_band() {
+        let cfg = ControlConfig::default();
+        assert!(cfg.pressure_exit < cfg.pressure_enter);
+        assert!(cfg.min_chunk <= cfg.max_chunk);
+        assert!(cfg.min_cap <= cfg.max_cap);
+    }
+}

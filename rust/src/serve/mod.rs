@@ -83,17 +83,75 @@
 //! runs the per-shard rebalances concurrently. Moved-table counts and
 //! migration cost land in [`ServeStats`] / [`FrontStats`].
 //!
-//! Workload generation lives in [`synthetic_arrivals`]: the open-loop
-//! arrival schedules (exponential gaps, mixed 2/4/8/128-device tasks)
-//! that the `serve-sim` CLI subcommand (`--workers` sizes the runtime
-//! pool, `--sharded` serves through the front end), `benches/serving.rs`
+//! Workload generation lives in [`synthetic_arrivals`]: arrival
+//! schedules (exponential gaps, mixed 2/4/8/128-device tasks) that the
+//! `serve-sim` CLI subcommand (`--workers` sizes the runtime pool,
+//! `--sharded` serves through the front end), `benches/serving.rs`
 //! (pipelined vs blocking drains, sharded vs single-FIFO), and
-//! `examples/serve_queue.rs` replay.
+//! `examples/serve_queue.rs` replay — open-loop (wall schedule) or
+//! closed-loop ([`WorkloadCfg::closed_loop`]: each arrival offset from
+//! the previous drain completion).
+//!
+//! Finally, the **closed loop**: nobody should hand-tune chunk sizes and
+//! admission caps against live traffic. [`Controller`] watches the
+//! per-shard signals the front end already exposes ([`ShardView`]:
+//! queue-latency percentiles, queue depths, drain-completion ages) and
+//! steers the existing knobs toward a [`ControlConfig`] tail-latency
+//! target — resizing lane-chunks, adapting the global admission cap
+//! (AIMD), scheduling which shards drain, toggling SLO-class pressure
+//! mode ([`SloClass`]: interactive traffic drains first, batch sheds
+//! first), and sizing [`crate::placer::MigrationBudget`]s for
+//! [`ShardedFrontEnd::rebalance`] to measured headroom. One tick,
+//! compiled (the [`TestClock`] keeps it deterministic):
+//!
+//! ```
+//! use std::sync::Arc;
+//! use dreamshard::placer::{self, PlacementRequest};
+//! use dreamshard::runtime::Runtime;
+//! use dreamshard::serve::{
+//!     ControlConfig, Controller, ShardConfig, ShardedFrontEnd, TestClock,
+//! };
+//! use dreamshard::sim::{SimConfig, Simulator};
+//! use dreamshard::tables::{gen_dlrm, sample_tasks, split_pools};
+//!
+//! let rt = Arc::new(Runtime::reference());
+//! let ds = gen_dlrm(60, 0);
+//! let (pool, _) = split_pools(&ds, 1);
+//! let tasks = sample_tasks(&pool, 8, 4, 3, 2);
+//! let sim = Simulator::new(SimConfig::default());
+//!
+//! let clock = Arc::new(TestClock::new());
+//! let factory = {
+//!     let rt = Arc::clone(&rt);
+//!     move || placer::by_name(&rt, "greedy:size")
+//! };
+//! let mut front =
+//!     ShardedFrontEnd::with_clock(&rt, factory, ShardConfig::default(), clock.clone())
+//!         .unwrap();
+//! for t in &tasks {
+//!     let req = PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap();
+//!     front.submit(req).unwrap().expect("under the global cap");
+//! }
+//! clock.advance_ms(10.0);
+//!
+//! let mut ctl = Controller::new(ControlConfig { target_ms: 50.0, ..Default::default() });
+//! let report = ctl.tick(&mut front).unwrap(); // observe, actuate, drain
+//! assert_eq!(report.planned.len(), 3, "the queued shard was drained");
+//! assert!(!report.pressure, "10 ms of queueing is well under a 50 ms target");
+//! ```
+//!
+//! The `serve-sim --closed-loop --target-ms T` CLI mode replays a
+//! closed-loop workload through this controller and prints a
+//! static-vs-controlled comparison.
 
+mod clock;
+mod control;
 mod service;
 mod sharded;
 mod workload;
 
-pub use service::{PlanService, Planned, ReplaceJob, ServeConfig, ServeStats};
+pub use clock::{system_clock, Clock, SystemClock, TestClock};
+pub use control::{ControlConfig, Controller, ShardDecision, TickReport};
+pub use service::{PlanService, Planned, ReplaceJob, ServeConfig, ServeStats, SloClass};
 pub use sharded::{FrontStats, Routed, ShardConfig, ShardKey, ShardView, ShardedFrontEnd};
 pub use workload::{synthetic_arrivals, Arrival, WorkloadCfg};

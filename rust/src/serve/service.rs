@@ -11,7 +11,34 @@ use crate::err;
 use crate::placer::{Placer, PlacementPlan, PlacementRequest, PlanSession};
 use crate::runtime::{Runtime, Ticket};
 use crate::util::error::{Error, Result};
-use crate::util::median;
+use crate::util::{median, percentile};
+
+use super::clock::{system_clock, Clock};
+
+/// Service-level objective class of one request. Classes order by
+/// urgency: under pressure ([`PlanService::set_class_order`]) shards
+/// drain `Interactive` traffic before `Batch`, and the admission path
+/// sheds or evicts `Batch` first — batch replanning can wait out an
+/// overload, a user-facing placement cannot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SloClass {
+    /// User-facing traffic: drained first under pressure, evicts queued
+    /// batch work rather than shed at a full queue. The default class.
+    #[default]
+    Interactive,
+    /// Deferrable replanning traffic: shed or deferred first.
+    Batch,
+}
+
+impl SloClass {
+    /// Short label for tables and logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+        }
+    }
+}
 
 /// Service knobs.
 #[derive(Clone, Copy, Debug)]
@@ -44,6 +71,9 @@ pub struct Planned {
     pub ticket: u64,
     /// Serving-variant key `(D, S)` the scheduler grouped this request by.
     pub variant: (usize, usize),
+    /// SLO class the request was submitted under (rebalance re-plans are
+    /// [`SloClass::Batch`]: they are deferrable replanning by nature).
+    pub class: SloClass,
     pub plan: PlacementPlan,
     /// Time spent queued (submit to drain start), ms.
     pub queue_ms: f64,
@@ -65,8 +95,17 @@ const SAMPLE_WINDOW: usize = 1024;
 pub struct ServeStats {
     /// Requests accepted into the queue.
     pub submitted: u64,
-    /// Requests shed because the bounded queue was full.
+    /// Requests shed because the bounded queue was full (including
+    /// queued batch requests evicted in favor of interactive traffic —
+    /// see `shed_batch`).
     pub rejected: u64,
+    /// The [`SloClass::Batch`] share of `rejected`: batch requests shed
+    /// at a full queue plus queued batch requests evicted to admit
+    /// interactive traffic under pressure
+    /// ([`PlanService::evict_newest_batch`]). `rejected - shed_batch` is
+    /// therefore the interactive shed count — the number a latency
+    /// controller actually answers for.
+    pub shed_batch: u64,
     /// Requests planned and returned.
     pub planned: u64,
     /// Chunks drained (one `place_many` call or one planning session
@@ -143,6 +182,34 @@ impl ServeStats {
         median(&recent)
     }
 
+    /// Nearest-rank queue-latency percentile (`q` in `[0, 1]`) over the
+    /// most recent requests — the same bounded window the median reads,
+    /// so a long-lived service stays O(1) memory while still answering
+    /// tail-latency questions. 0.0 before anything has been planned.
+    /// This is the signal the closed-loop controller
+    /// ([`crate::serve::Controller`]) steers against.
+    pub fn percentile_queue_ms(&self, q: f64) -> f64 {
+        let recent: Vec<f64> = self.recent_queue_ms.iter().copied().collect();
+        percentile(&recent, q)
+    }
+
+    /// p95 queue latency over the bounded recent window, ms.
+    pub fn p95_queue_ms(&self) -> f64 {
+        self.percentile_queue_ms(0.95)
+    }
+
+    /// p99 queue latency over the bounded recent window, ms.
+    pub fn p99_queue_ms(&self) -> f64 {
+        self.percentile_queue_ms(0.99)
+    }
+
+    /// Samples currently in the bounded latency window (at most the
+    /// window size, no matter how much traffic was served or how many
+    /// stats were [`ServeStats::merge`]d in).
+    pub fn window_len(&self) -> usize {
+        self.recent_queue_ms.len()
+    }
+
     /// Fold another service's counters into this one — how the sharded
     /// front end ([`crate::serve::ShardedFrontEnd`]) aggregates per-shard
     /// stats into one view. Counts and latency means stay exact (they are
@@ -156,6 +223,7 @@ impl ServeStats {
     pub fn merge(&mut self, other: &ServeStats) {
         self.submitted += other.submitted;
         self.rejected += other.rejected;
+        self.shed_batch += other.shed_batch;
         self.planned += other.planned;
         self.chunks += other.chunks;
         self.backend_calls += other.backend_calls;
@@ -173,16 +241,19 @@ impl ServeStats {
     /// One-line human summary of the counters and latency aggregates.
     pub fn summary(&self) -> String {
         let mut s = format!(
-            "{} planned / {} accepted ({} shed) in {} chunks: {:.1} plans/s, \
-             {} backend calls, queue {:.2}/{:.2} ms (mean/median), plan {:.2} ms mean",
+            "{} planned / {} accepted ({} shed, {} batch) in {} chunks: {:.1} plans/s, \
+             {} backend calls, queue {:.2}/{:.2}/{:.2} ms (mean/median/p95), \
+             plan {:.2} ms mean",
             self.planned,
             self.submitted,
             self.rejected,
+            self.shed_batch,
             self.chunks,
             self.plans_per_sec(),
             self.backend_calls,
             self.mean_queue_ms(),
             self.median_queue_ms(),
+            self.p95_queue_ms(),
             self.mean_plan_ms(),
         );
         if self.rebalanced > 0 {
@@ -209,6 +280,7 @@ struct Queued<'a> {
     ticket: u64,
     req: PlacementRequest<'a>,
     key: (usize, usize),
+    class: SloClass,
     submitted: Instant,
 }
 
@@ -229,6 +301,12 @@ pub struct PlanService<'a> {
     rt: Arc<Runtime>,
     placer: Box<dyn Placer>,
     cfg: ServeConfig,
+    /// Time source for queue/plan latencies (the closed-loop seam: a
+    /// [`super::TestClock`] makes every latency deterministic).
+    clock: Arc<dyn Clock>,
+    /// Drain in SLO-class order (interactive before batch) instead of
+    /// pure FIFO — the pressure mode a controller toggles.
+    class_order: bool,
     queue: VecDeque<Queued<'a>>,
     next_ticket: u64,
     stats: ServeStats,
@@ -254,6 +332,19 @@ impl<'a> PlanService<'a> {
     /// keys from its manifest) and for the backend-call counters the
     /// stats report; a different handle would mis-key and count nothing.
     pub fn new(rt: &Arc<Runtime>, placer: Box<dyn Placer>, cfg: ServeConfig) -> Self {
+        Self::with_clock(rt, placer, cfg, system_clock())
+    }
+
+    /// [`PlanService::new`] on an explicit time source — the clock seam
+    /// that makes queue/plan latencies (and everything a closed-loop
+    /// controller reads off them) deterministic under a
+    /// [`super::TestClock`].
+    pub fn with_clock(
+        rt: &Arc<Runtime>,
+        placer: Box<dyn Placer>,
+        cfg: ServeConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Self {
         PlanService {
             rt: Arc::clone(rt),
             placer,
@@ -262,6 +353,8 @@ impl<'a> PlanService<'a> {
                 chunk: cfg.chunk.max(1),
                 inflight: cfg.inflight.max(1),
             },
+            clock,
+            class_order: false,
             queue: VecDeque::new(),
             next_ticket: 0,
             stats: ServeStats::default(),
@@ -274,6 +367,36 @@ impl<'a> PlanService<'a> {
     /// Registry name of the wrapped strategy.
     pub fn placer_name(&self) -> &str {
         self.placer.name()
+    }
+
+    /// Current lane-chunk size ([`ServeConfig::chunk`]).
+    pub fn chunk(&self) -> usize {
+        self.cfg.chunk
+    }
+
+    /// Resize the lane-chunk (clamped to at least 1) — a live actuator:
+    /// the next [`PlanService::drain_chunk`] picks up the new size, and
+    /// nothing already queued is touched. Larger chunks amortize more
+    /// planning per fused backend call (throughput), smaller chunks
+    /// complete sooner (latency); the closed-loop controller trades
+    /// between them.
+    pub fn set_chunk(&mut self, chunk: usize) {
+        self.cfg.chunk = chunk.max(1);
+    }
+
+    /// Whether drains pick SLO-class order over pure FIFO.
+    pub fn class_order(&self) -> bool {
+        self.class_order
+    }
+
+    /// Toggle class-ordered draining: when on, the oldest request of the
+    /// most urgent queued class picks each chunk (interactive before
+    /// batch; FIFO *within* a class and variant), and a full queue
+    /// prefers evicting queued batch work over shedding an interactive
+    /// submit. When off (the default) the queue is one class-blind FIFO
+    /// and behavior is bit-identical to a service without SLO classes.
+    pub fn set_class_order(&mut self, on: bool) {
+        self.class_order = on;
     }
 
     /// Requests currently queued.
@@ -305,9 +428,32 @@ impl<'a> PlanService<'a> {
     /// covers, so mixed 2/4/8-device traffic shares one lane-chunk —
     /// falling back to the smallest lowered variant for the device count.
     pub fn submit(&mut self, req: PlacementRequest<'a>) -> Result<Option<u64>> {
+        self.submit_class(req, SloClass::default())
+    }
+
+    /// [`PlanService::submit`] with an explicit [`SloClass`]. Under
+    /// class-ordered pressure ([`PlanService::set_class_order`]) a full
+    /// queue treats the classes differently: an interactive submit first
+    /// tries to evict the youngest queued batch request
+    /// ([`PlanService::evict_newest_batch`]) and takes its place; a
+    /// batch submit is simply shed (and counted in
+    /// [`ServeStats::shed_batch`]).
+    pub fn submit_class(
+        &mut self,
+        req: PlacementRequest<'a>,
+        class: SloClass,
+    ) -> Result<Option<u64>> {
         if self.is_full() {
-            self.stats.rejected += 1;
-            return Ok(None);
+            let evicted = class == SloClass::Interactive
+                && self.class_order
+                && self.evict_newest_batch().is_some();
+            if !evicted {
+                self.stats.rejected += 1;
+                if class == SloClass::Batch {
+                    self.stats.shed_batch += 1;
+                }
+                return Ok(None);
+            }
         }
         let key = match self.placer.serving_variant(&req) {
             Some(key) => key,
@@ -319,9 +465,37 @@ impl<'a> PlanService<'a> {
         };
         let ticket = self.next_ticket;
         self.next_ticket += 1;
-        self.queue.push_back(Queued { ticket, req, key, submitted: Instant::now() });
+        let submitted = self.clock.now();
+        self.queue.push_back(Queued { ticket, req, key, class, submitted });
         self.stats.submitted += 1;
         Ok(Some(ticket))
+    }
+
+    /// Drop the youngest queued [`SloClass::Batch`] request to make room
+    /// for interactive traffic, returning its ticket (`None` when no
+    /// batch work is queued). The eviction is deferral, not loss, from
+    /// the traffic source's point of view: the caller that submitted it
+    /// learns nothing here, but the counters do —
+    /// [`ServeStats::rejected`] and [`ServeStats::shed_batch`] both
+    /// record it, exactly as if the batch request had been shed at
+    /// submit time.
+    pub fn evict_newest_batch(&mut self) -> Option<u64> {
+        let idx = self.queue.iter().rposition(|q| q.class == SloClass::Batch)?;
+        let evicted = self.queue.remove(idx).expect("rposition is in range");
+        self.stats.rejected += 1;
+        self.stats.shed_batch += 1;
+        Some(evicted.ticket)
+    }
+
+    /// When the youngest queued batch request was submitted (`None` when
+    /// none is queued) — how a front end picks *which* shard's batch
+    /// work to evict first.
+    pub(super) fn newest_batch_submitted(&self) -> Option<Instant> {
+        self.queue
+            .iter()
+            .filter(|q| q.class == SloClass::Batch)
+            .map(|q| q.submitted)
+            .max()
     }
 
     /// Refresh stale grouping keys when they can be stale: some key came
@@ -362,16 +536,33 @@ impl<'a> PlanService<'a> {
     /// variant are collected in FIFO order (younger requests of other
     /// variants keep their place in the queue). `None` when the queue is
     /// empty.
+    ///
+    /// Under class-ordered pressure ([`PlanService::set_class_order`])
+    /// the *lead* request is the oldest of the most urgent queued class
+    /// instead of the queue head, and the chunk collects only that
+    /// class — so interactive traffic drains first even with older batch
+    /// work ahead of it, while FIFO order still holds within each
+    /// `(class, variant)` stream.
     fn pick_chunk(&mut self) -> Option<((usize, usize), Vec<Queued<'a>>)> {
         if self.queue.is_empty() {
             return None;
         }
         self.refresh_keys();
-        let key = self.queue.front().expect("checked non-empty").key;
+        // min_by_key returns the first minimum, so ties go to the oldest
+        // queued request of the winning class
+        let lead = if self.class_order {
+            self.queue.iter().min_by_key(|q| q.class).expect("checked non-empty")
+        } else {
+            self.queue.front().expect("checked non-empty")
+        };
+        let (key, class) = (lead.key, self.class_order.then_some(lead.class));
         let mut picked: Vec<Queued<'a>> = Vec::new();
         let mut rest: VecDeque<Queued<'a>> = VecDeque::with_capacity(self.queue.len());
         while let Some(q) = self.queue.pop_front() {
-            if q.key == key && picked.len() < self.cfg.chunk {
+            if q.key == key
+                && class.map_or(true, |c| q.class == c)
+                && picked.len() < self.cfg.chunk
+            {
                 picked.push(q);
             } else {
                 rest.push_back(q);
@@ -401,7 +592,7 @@ impl<'a> PlanService<'a> {
         start: Instant,
         count_busy: bool,
     ) -> Vec<Planned> {
-        let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+        let wall_ms = self.clock.now().duration_since(start).as_secs_f64() * 1e3;
         self.stats.chunks += 1;
         if count_busy {
             self.stats.busy_s += wall_ms / 1e3;
@@ -410,7 +601,14 @@ impl<'a> PlanService<'a> {
         for (q, plan) in picked.into_iter().zip(plans.into_iter()) {
             let queue_ms = start.duration_since(q.submitted).as_secs_f64() * 1e3;
             self.stats.record(queue_ms, wall_ms);
-            done.push(Planned { ticket: q.ticket, variant: key, plan, queue_ms, plan_ms: wall_ms });
+            done.push(Planned {
+                ticket: q.ticket,
+                variant: key,
+                class: q.class,
+                plan,
+                queue_ms,
+                plan_ms: wall_ms,
+            });
         }
         done
     }
@@ -429,7 +627,7 @@ impl<'a> PlanService<'a> {
         let Some((key, picked)) = self.pick_chunk() else {
             return Ok(vec![]);
         };
-        let start = Instant::now();
+        let start = self.clock.now();
         let calls_before = self.rt.run_count();
         let reqs: Vec<PlacementRequest<'a>> = picked.iter().map(|q| q.req).collect();
         let result = self.placer.place_many(&reqs);
@@ -546,7 +744,7 @@ impl<'a> PlanService<'a> {
                 }
             }
             keyed = rest;
-            let start = Instant::now();
+            let start = self.clock.now();
             let calls_before = self.rt.run_count();
             let prevs: Vec<PlacementPlan> = chunk.iter().map(|j| j.prev.clone()).collect();
             let reqs: Vec<PlacementRequest<'a>> = chunk.iter().map(|j| j.req).collect();
@@ -565,7 +763,7 @@ impl<'a> PlanService<'a> {
                 }
                 Err(e) => return Err(e),
             };
-            let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+            let wall_ms = self.clock.now().duration_since(start).as_secs_f64() * 1e3;
             self.stats.chunks += 1;
             self.stats.busy_s += wall_ms / 1e3;
             for plan in plans {
@@ -575,7 +773,15 @@ impl<'a> PlanService<'a> {
                 self.stats.migration_ms += plan.eval.migration_ms;
                 let ticket = self.next_ticket;
                 self.next_ticket += 1;
-                out.push(Planned { ticket, variant: key, plan, queue_ms: 0.0, plan_ms: wall_ms });
+                out.push(Planned {
+                    ticket,
+                    variant: key,
+                    // a rebalance is replanning by definition: batch class
+                    class: SloClass::Batch,
+                    plan,
+                    queue_ms: 0.0,
+                    plan_ms: wall_ms,
+                });
             }
         }
         Ok(out)
@@ -585,7 +791,7 @@ impl<'a> PlanService<'a> {
     /// the placer declines a session (`-> (completed, declined)`).
     fn drain_pipelined_burst(&mut self) -> Result<(Vec<Planned>, bool)> {
         let depth = self.cfg.inflight;
-        let burst_start = Instant::now();
+        let burst_start = self.clock.now();
         let calls_before = self.rt.run_count();
         let mut active: VecDeque<InFlight<'a>> = VecDeque::new();
         let mut out: Vec<Planned> = vec![];
@@ -599,7 +805,7 @@ impl<'a> PlanService<'a> {
             {
                 let Some((key, picked)) = self.pick_chunk() else { break };
                 let reqs: Vec<PlacementRequest<'a>> = picked.iter().map(|q| q.req).collect();
-                let start = Instant::now();
+                let start = self.clock.now();
                 let opened = self.placer.open_session(&reqs);
                 self.placer_engaged = true;
                 match opened {
@@ -696,7 +902,8 @@ impl<'a> PlanService<'a> {
             Some(e) => Err(e),
             None => {
                 if !out.is_empty() {
-                    self.stats.busy_s += burst_start.elapsed().as_secs_f64();
+                    self.stats.busy_s +=
+                        self.clock.now().duration_since(burst_start).as_secs_f64();
                 }
                 Ok((out, declined))
             }
@@ -951,6 +1158,173 @@ mod tests {
         ) -> Result<Option<Box<dyn PlanSession<'b> + 'b>>> {
             Ok(Some(Box::new(ExplodingSession)))
         }
+    }
+
+    #[test]
+    fn stats_percentiles_read_the_bounded_window() {
+        let mut stats = ServeStats::default();
+        for i in 1..=100 {
+            stats.record(i as f64, 0.0);
+        }
+        assert_eq!(stats.percentile_queue_ms(0.95), 95.0);
+        assert_eq!(stats.p95_queue_ms(), 95.0);
+        assert_eq!(stats.p99_queue_ms(), 99.0);
+        assert_eq!(stats.window_len(), 100);
+        assert_eq!(ServeStats::default().p95_queue_ms(), 0.0, "empty window reads 0");
+        // the window is bounded: old samples age out, percentiles follow
+        for _ in 0..SAMPLE_WINDOW {
+            stats.record(1.0, 0.0);
+        }
+        assert_eq!(stats.window_len(), SAMPLE_WINDOW);
+        assert_eq!(stats.p99_queue_ms(), 1.0, "the 1..=100 samples aged out");
+    }
+
+    #[test]
+    fn merge_of_non_empty_windows_stays_bounded() {
+        // regression: merge must fold the other window's samples in while
+        // keeping O(1) memory — at most SAMPLE_WINDOW samples retained
+        let mut a = ServeStats::default();
+        let mut b = ServeStats::default();
+        for _ in 0..700 {
+            a.record(10.0, 1.0);
+            b.record(90.0, 1.0);
+        }
+        a.merge(&b);
+        assert_eq!(a.planned, 1400);
+        assert_eq!(a.window_len(), SAMPLE_WINDOW, "window stays bounded across merge");
+        // b's 700 samples arrived last, so they dominate the tail: the
+        // merged window is 324×10ms then 700×90ms
+        assert_eq!(a.p99_queue_ms(), 90.0);
+        assert_eq!(a.percentile_queue_ms(0.2), 10.0, "a's newest samples survive too");
+        assert!((a.mean_queue_ms() - 50.0).abs() < 1e-9, "means stay exact (running sums)");
+        // merging an empty window changes nothing
+        let before = a.window_len();
+        a.merge(&ServeStats::default());
+        assert_eq!(a.window_len(), before);
+    }
+
+    #[test]
+    fn class_order_drains_interactive_before_batch() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, tasks, sim) = setup(4, 4);
+        let placer = placer::by_name(&rt, "greedy:dim").unwrap();
+        let mut svc = PlanService::new(&rt, placer, ServeConfig::default());
+        // batch first, interactive second: FIFO would plan batch first
+        svc.submit_class(PlacementRequest::new(&ds, &tasks[0], &sim), SloClass::Batch).unwrap();
+        svc.submit_class(PlacementRequest::new(&ds, &tasks[1], &sim), SloClass::Batch).unwrap();
+        svc.submit_class(PlacementRequest::new(&ds, &tasks[2], &sim), SloClass::Interactive)
+            .unwrap();
+        svc.submit_class(PlacementRequest::new(&ds, &tasks[3], &sim), SloClass::Interactive)
+            .unwrap();
+        svc.set_class_order(true);
+        let done = svc.drain_blocking().unwrap();
+        let order: Vec<(u64, SloClass)> = done.iter().map(|p| (p.ticket, p.class)).collect();
+        assert_eq!(
+            order,
+            vec![
+                (2, SloClass::Interactive),
+                (3, SloClass::Interactive),
+                (0, SloClass::Batch),
+                (1, SloClass::Batch),
+            ],
+            "interactive drains first, FIFO within each class"
+        );
+    }
+
+    #[test]
+    fn without_class_order_the_queue_is_fifo_regardless_of_class() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, tasks, sim) = setup(2, 4);
+        let placer = placer::by_name(&rt, "greedy:dim").unwrap();
+        let mut svc = PlanService::new(&rt, placer, ServeConfig::default());
+        svc.submit_class(PlacementRequest::new(&ds, &tasks[0], &sim), SloClass::Batch).unwrap();
+        svc.submit_class(PlacementRequest::new(&ds, &tasks[1], &sim), SloClass::Interactive)
+            .unwrap();
+        let done = svc.drain_blocking().unwrap();
+        let tickets: Vec<u64> = done.iter().map(|p| p.ticket).collect();
+        assert_eq!(tickets, vec![0, 1], "class-blind FIFO is the default");
+    }
+
+    #[test]
+    fn full_queue_evicts_newest_batch_for_interactive_under_pressure() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, tasks, sim) = setup(4, 4);
+        let placer = placer::by_name(&rt, "greedy:dim").unwrap();
+        let mut svc = PlanService::new(&rt, placer, ServeConfig {
+            capacity: 2,
+            ..ServeConfig::default()
+        });
+        svc.set_class_order(true);
+        svc.submit_class(PlacementRequest::new(&ds, &tasks[0], &sim), SloClass::Batch).unwrap();
+        svc.submit_class(PlacementRequest::new(&ds, &tasks[1], &sim), SloClass::Batch).unwrap();
+        assert!(svc.is_full());
+        // a batch submit at a full queue is shed outright
+        let shed =
+            svc.submit_class(PlacementRequest::new(&ds, &tasks[2], &sim), SloClass::Batch);
+        assert_eq!(shed.unwrap(), None);
+        assert_eq!((svc.stats().rejected, svc.stats().shed_batch), (1, 1));
+        // an interactive submit evicts the *youngest* batch request instead
+        let t = svc
+            .submit_class(PlacementRequest::new(&ds, &tasks[3], &sim), SloClass::Interactive)
+            .unwrap();
+        assert_eq!(t, Some(2), "interactive was admitted");
+        assert_eq!((svc.stats().rejected, svc.stats().shed_batch), (2, 2));
+        assert_eq!(svc.queued(), 2);
+        let done = svc.drain_blocking().unwrap();
+        let order: Vec<(u64, SloClass)> = done.iter().map(|p| (p.ticket, p.class)).collect();
+        assert_eq!(
+            order,
+            vec![(2, SloClass::Interactive), (0, SloClass::Batch)],
+            "ticket 1 (youngest batch) was evicted, ticket 0 survived"
+        );
+    }
+
+    #[test]
+    fn full_queue_of_interactive_sheds_interactive_even_under_pressure() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, tasks, sim) = setup(3, 4);
+        let placer = placer::by_name(&rt, "greedy:dim").unwrap();
+        let mut svc = PlanService::new(&rt, placer, ServeConfig {
+            capacity: 2,
+            ..ServeConfig::default()
+        });
+        svc.set_class_order(true);
+        for t in tasks.iter().take(2) {
+            svc.submit_class(PlacementRequest::new(&ds, t, &sim), SloClass::Interactive)
+                .unwrap();
+        }
+        // nothing batch to evict: the interactive submit sheds normally
+        let shed = svc
+            .submit_class(PlacementRequest::new(&ds, &tasks[2], &sim), SloClass::Interactive)
+            .unwrap();
+        assert_eq!(shed, None);
+        assert_eq!((svc.stats().rejected, svc.stats().shed_batch), (1, 0));
+    }
+
+    #[test]
+    fn test_clock_makes_queue_latency_deterministic() {
+        use super::super::clock::TestClock;
+        let rt = Arc::new(Runtime::reference());
+        let (ds, tasks, sim) = setup(2, 4);
+        let clock = Arc::new(TestClock::new());
+        let placer = placer::by_name(&rt, "greedy:dim").unwrap();
+        let mut svc = PlanService::with_clock(
+            &rt,
+            placer,
+            ServeConfig::default(),
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        );
+        svc.submit(PlacementRequest::new(&ds, &tasks[0], &sim)).unwrap();
+        clock.advance_ms(40.0);
+        svc.submit(PlacementRequest::new(&ds, &tasks[1], &sim)).unwrap();
+        clock.advance_ms(10.0);
+        let done = svc.drain_blocking().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].queue_ms, 50.0, "first request queued exactly 50 ms");
+        assert_eq!(done[1].queue_ms, 10.0, "second request queued exactly 10 ms");
+        assert_eq!(done[0].plan_ms, 0.0, "frozen clock: the drain took zero test-time");
+        assert_eq!(svc.stats().p95_queue_ms(), 50.0);
+        assert_eq!(svc.stats().median_queue_ms(), 30.0);
     }
 
     #[test]

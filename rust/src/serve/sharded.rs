@@ -31,7 +31,8 @@ use crate::runtime::Runtime;
 use crate::tables::Task;
 use crate::util::error::Result;
 
-use super::{PlanService, Planned, ReplaceJob, ServeConfig, ServeStats};
+use super::clock::{system_clock, Clock};
+use super::{PlanService, Planned, ReplaceJob, ServeConfig, ServeStats, SloClass};
 
 /// Identity of one shard: the serving variant `(D, S)` its requests are
 /// planned with, plus an optional tenant label for per-tenant isolation
@@ -91,6 +92,9 @@ pub struct ShardView<'s> {
     pub key: &'s ShardKey,
     /// Requests currently queued in this shard.
     pub queued: usize,
+    /// This shard's current lane-chunk size ([`ServeConfig::chunk`],
+    /// possibly resized live via [`ShardedFrontEnd::set_chunk`]).
+    pub chunk: usize,
     /// This shard's service counters. `backend_calls` is exact when the
     /// shard drained alone ([`ShardedFrontEnd::drain_sequential`] /
     /// [`ShardedFrontEnd::drain_shard`]); during a concurrent
@@ -114,6 +118,11 @@ pub struct FrontStats {
     /// Requests shed by the *global* cap (per-shard queue sheds are in
     /// [`FrontStats::aggregate`]'s `rejected` instead).
     pub shed_global: u64,
+    /// The [`SloClass::Batch`] share of `shed_global` — under SLO-aware
+    /// admission ([`ShardedFrontEnd::submit_slo`]) batch traffic absorbs
+    /// the cap first, so `shed_global - shed_global_batch` is the
+    /// interactive loss at the front door.
+    pub shed_global_batch: u64,
     /// Shards currently instantiated.
     pub shards: usize,
     /// Every shard's [`ServeStats`] merged ([`ServeStats::merge`]), with
@@ -127,10 +136,11 @@ impl FrontStats {
     /// One-line human summary of the front door plus the aggregate.
     pub fn summary(&self) -> String {
         format!(
-            "{} shards, {} routed, {} shed at the global cap; {}",
+            "{} shards, {} routed, {} shed at the global cap ({} batch); {}",
             self.shards,
             self.routed,
             self.shed_global,
+            self.shed_global_batch,
             self.aggregate.summary()
         )
     }
@@ -193,8 +203,15 @@ pub struct ShardedFrontEnd<'a> {
     /// Creation-ordered; every drain API visits shards in this order, so
     /// sequential and concurrent drains aggregate identically.
     shards: Vec<Shard<'a>>,
+    /// Time source shared with every shard's service and used for
+    /// [`ShardView::last_drain`] stamps — the closed-loop testing seam.
+    clock: Arc<dyn Clock>,
+    /// Propagated to every shard ([`PlanService::set_class_order`]),
+    /// existing and future — the pressure mode the controller toggles.
+    class_order: bool,
     routed: u64,
     shed_global: u64,
+    shed_global_batch: u64,
     /// Backend executions dispatched by this front end's drains, exact:
     /// measured as a shared-runtime call-count delta around each whole
     /// drain operation. (Per-shard [`ServeStats`] windows overlap during
@@ -212,7 +229,24 @@ impl<'a> ShardedFrontEnd<'a> {
     /// `move || Ok(Box::new(DreamShardPlacer::from_agent(&rt, &agent)))`.
     /// `rt` must be the runtime those placers execute on (it resolves
     /// fallback variant keys and backs every shard's call counters).
-    pub fn new<F>(rt: &Arc<Runtime>, mut factory: F, cfg: ShardConfig) -> Result<Self>
+    pub fn new<F>(rt: &Arc<Runtime>, factory: F, cfg: ShardConfig) -> Result<Self>
+    where
+        F: FnMut() -> Result<Box<dyn Placer>> + Send + 'a,
+    {
+        Self::with_clock(rt, factory, cfg, system_clock())
+    }
+
+    /// [`ShardedFrontEnd::new`] on an explicit time source. Every shard's
+    /// service shares this clock, and every [`ShardView::last_drain`]
+    /// stamp reads it — so under a [`super::TestClock`] the complete
+    /// closed-loop signal set (queue latencies, drain-completion ages) is
+    /// deterministic.
+    pub fn with_clock<F>(
+        rt: &Arc<Runtime>,
+        mut factory: F,
+        cfg: ShardConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Result<Self>
     where
         F: FnMut() -> Result<Box<dyn Placer>> + Send + 'a,
     {
@@ -223,10 +257,61 @@ impl<'a> ShardedFrontEnd<'a> {
             router,
             factory: Box::new(factory),
             shards: vec![],
+            clock,
+            class_order: false,
             routed: 0,
             shed_global: 0,
+            shed_global_batch: 0,
             drained_calls: 0,
         })
+    }
+
+    /// The front end's time source (the same clock every shard measures
+    /// with) — what a controller reads to age [`ShardView::last_drain`].
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.clock
+    }
+
+    /// Current global admission cap ([`ShardConfig::global_cap`]).
+    pub fn global_cap(&self) -> usize {
+        self.cfg.global_cap
+    }
+
+    /// Retune the global admission cap live (clamped to at least 1) —
+    /// the controller's admission actuator. Already-queued requests are
+    /// never dropped by a shrink; the new cap only gates future submits.
+    pub fn set_global_cap(&mut self, cap: usize) {
+        self.cfg.global_cap = cap.max(1);
+    }
+
+    /// Whether shards drain in SLO-class order (see
+    /// [`PlanService::set_class_order`]).
+    pub fn class_order(&self) -> bool {
+        self.class_order
+    }
+
+    /// Toggle class-ordered draining on every shard, existing and
+    /// future — the pressure mode: interactive traffic drains (and is
+    /// admitted) ahead of batch. Off by default, where behavior is
+    /// bit-identical to a class-blind front end.
+    pub fn set_class_order(&mut self, on: bool) {
+        self.class_order = on;
+        for sh in self.shards.iter_mut() {
+            sh.svc.set_class_order(on);
+        }
+    }
+
+    /// Resize one shard's lane-chunk live (see
+    /// [`PlanService::set_chunk`]) — the controller's latency/throughput
+    /// actuator. `Err` when no such shard exists.
+    pub fn set_chunk(&mut self, key: &ShardKey, chunk: usize) -> Result<()> {
+        let sh = self
+            .shards
+            .iter_mut()
+            .find(|s| &s.key == key)
+            .ok_or_else(|| err!("no shard {} in this front end", key.label()))?;
+        sh.svc.set_chunk(chunk);
+        Ok(())
     }
 
     /// Requests queued across all shards.
@@ -248,6 +333,7 @@ impl<'a> ShardedFrontEnd<'a> {
         self.shards.iter().map(|sh| ShardView {
             key: &sh.key,
             queued: sh.svc.queued(),
+            chunk: sh.svc.chunk(),
             stats: sh.svc.stats(),
             last_drain: sh.last_drain,
         })
@@ -270,6 +356,7 @@ impl<'a> ShardedFrontEnd<'a> {
         FrontStats {
             routed: self.routed,
             shed_global: self.shed_global,
+            shed_global_batch: self.shed_global_batch,
             shards: self.shards.len(),
             aggregate,
         }
@@ -298,13 +385,40 @@ impl<'a> ShardedFrontEnd<'a> {
         req: PlacementRequest<'a>,
         tenant: Option<&str>,
     ) -> Result<Option<Routed>> {
+        self.submit_slo(req, SloClass::default(), tenant)
+    }
+
+    /// [`ShardedFrontEnd::submit_for`] with an explicit [`SloClass`] —
+    /// the SLO-aware front door. At the global cap the classes part
+    /// ways: a batch submit is shed (counted in
+    /// [`FrontStats::shed_global_batch`]); an interactive submit under
+    /// class-ordered pressure ([`ShardedFrontEnd::set_class_order`])
+    /// first tries to evict the youngest queued batch request across
+    /// *all* shards ([`ShardedFrontEnd::evict_newest_batch`]) and takes
+    /// the freed slot. With class ordering off (the default) every class
+    /// sheds alike and behavior matches [`ShardedFrontEnd::submit_for`]
+    /// exactly.
+    pub fn submit_slo(
+        &mut self,
+        req: PlacementRequest<'a>,
+        class: SloClass,
+        tenant: Option<&str>,
+    ) -> Result<Option<Routed>> {
         if self.is_full() {
-            self.shed_global += 1;
-            return Ok(None);
+            let evicted = class == SloClass::Interactive
+                && self.class_order
+                && self.evict_newest_batch().is_some();
+            if !evicted {
+                self.shed_global += 1;
+                if class == SloClass::Batch {
+                    self.shed_global_batch += 1;
+                }
+                return Ok(None);
+            }
         }
         let idx = self.route(&req, tenant)?;
         let key = self.shards[idx].key.clone();
-        Ok(match self.shards[idx].svc.submit(req)? {
+        Ok(match self.shards[idx].svc.submit_class(req, class)? {
             Some(ticket) => {
                 self.routed += 1;
                 Some(Routed { shard: key, ticket })
@@ -313,6 +427,27 @@ impl<'a> ShardedFrontEnd<'a> {
             // recorded the shed
             None => None,
         })
+    }
+
+    /// Evict the youngest queued [`SloClass::Batch`] request anywhere in
+    /// the front end, returning `(shard, ticket)` (`None` when no batch
+    /// work is queued). "Youngest" is global — the shard holding the
+    /// most recently submitted batch request gives it up — so under
+    /// sustained interactive pressure batch work drains out
+    /// newest-first, preserving the oldest (closest to service) batch
+    /// requests longest. The evicting shard's [`ServeStats`] records the
+    /// shed exactly as a submit-time rejection would.
+    pub fn evict_newest_batch(&mut self) -> Option<(ShardKey, u64)> {
+        let idx = self
+            .shards
+            .iter()
+            .enumerate()
+            .filter_map(|(i, sh)| sh.svc.newest_batch_submitted().map(|at| (i, at)))
+            .max_by_key(|&(_, at)| at)
+            .map(|(i, _)| i)?;
+        let sh = &mut self.shards[idx];
+        let ticket = sh.svc.evict_newest_batch().expect("shard reported queued batch work");
+        Some((sh.key.clone(), ticket))
     }
 
     /// Resolve (and create on first use) the shard a request belongs to,
@@ -347,7 +482,13 @@ impl<'a> ShardedFrontEnd<'a> {
                 let warm_task =
                     Task { table_ids: req.task.table_ids.clone(), n_devices: variant.0 };
                 placer.warm_variant(&PlacementRequest { task: &warm_task, ..*req })?;
-                let svc = PlanService::new(&self.rt, placer, self.cfg.per_shard);
+                let mut svc = PlanService::with_clock(
+                    &self.rt,
+                    placer,
+                    self.cfg.per_shard,
+                    Arc::clone(&self.clock),
+                );
+                svc.set_class_order(self.class_order);
                 self.shards.push(Shard { key, svc, last_drain: None });
                 Ok(self.shards.len() - 1)
             }
@@ -363,6 +504,7 @@ impl<'a> ShardedFrontEnd<'a> {
     /// returned here).
     pub fn try_drain(&mut self) -> Vec<(ShardKey, Result<Vec<Planned>>)> {
         let calls_before = self.rt.run_count();
+        let clock = &self.clock;
         let reports = std::thread::scope(|scope| {
             let handles: Vec<_> = self
                 .shards
@@ -377,7 +519,7 @@ impl<'a> ShardedFrontEnd<'a> {
                         // and drain_shard (a failed drain completed
                         // nothing: its requests were requeued)
                         if drained.is_ok() {
-                            sh.last_drain = Some(Instant::now());
+                            sh.last_drain = Some(clock.now());
                         }
                         (sh.key.clone(), drained)
                     })
@@ -420,7 +562,7 @@ impl<'a> ShardedFrontEnd<'a> {
         for sh in self.shards.iter_mut() {
             match sh.svc.drain() {
                 Ok(drained) => {
-                    sh.last_drain = Some(Instant::now());
+                    sh.last_drain = Some(self.clock.now());
                     out.extend(drained);
                 }
                 Err(e) => {
@@ -450,7 +592,7 @@ impl<'a> ShardedFrontEnd<'a> {
         let drained = sh.svc.drain();
         self.drained_calls += self.rt.run_count() - calls_before;
         let drained = drained?;
-        sh.last_drain = Some(Instant::now());
+        sh.last_drain = Some(self.clock.now());
         Ok(drained)
     }
 
@@ -617,6 +759,82 @@ mod tests {
         assert_eq!(fs.aggregate.rebalanced, 4);
         assert!(fs.aggregate.moved_tables > 0);
         assert!(fs.aggregate.migration_ms > 0.0);
+    }
+
+    #[test]
+    fn slo_admission_sheds_batch_and_evicts_for_interactive_at_the_cap() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, tasks, sim) = setup(4, 5);
+        let mut front = greedy_front(&rt, ShardConfig { global_cap: 2, ..Default::default() });
+        front.set_class_order(true);
+        for t in tasks.iter().take(2) {
+            let req = PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap();
+            front.submit_slo(req, SloClass::Batch, None).unwrap().unwrap();
+        }
+        assert!(front.is_full());
+        // batch at the cap: shed, and attributed to the batch class
+        let req = PlacementRequest::for_runtime(&rt, &ds, &tasks[2], &sim).unwrap();
+        assert!(front.submit_slo(req, SloClass::Batch, None).unwrap().is_none());
+        // interactive at the cap: the youngest queued batch request
+        // (ticket 1) is evicted and the submit is admitted
+        let req = PlacementRequest::for_runtime(&rt, &ds, &tasks[3], &sim).unwrap();
+        let routed = front.submit_slo(req, SloClass::Interactive, None).unwrap();
+        assert!(routed.is_some(), "interactive admitted via eviction");
+        let fs = front.stats();
+        assert_eq!((fs.shed_global, fs.shed_global_batch), (1, 1));
+        assert_eq!(fs.aggregate.shed_batch, 1, "the eviction landed in shard stats");
+        assert!(fs.summary().contains("(1 batch)"), "{}", fs.summary());
+        // without class ordering, interactive sheds at the cap like anyone
+        front.set_class_order(false);
+        let req = PlacementRequest::for_runtime(&rt, &ds, &tasks[4], &sim).unwrap();
+        assert!(front.submit_slo(req, SloClass::Interactive, None).unwrap().is_none());
+        let fs = front.stats();
+        assert_eq!((fs.shed_global, fs.shed_global_batch), (2, 1));
+    }
+
+    #[test]
+    fn live_actuators_resize_cap_and_chunk() {
+        let rt = Arc::new(Runtime::reference());
+        let (ds, tasks, sim) = setup(4, 2);
+        let mut front = greedy_front(&rt, ShardConfig::default());
+        assert_eq!(front.global_cap(), 1024);
+        front.set_global_cap(0);
+        assert_eq!(front.global_cap(), 1, "cap clamps to at least 1");
+        front.set_global_cap(8);
+        let req = PlacementRequest::for_runtime(&rt, &ds, &tasks[0], &sim).unwrap();
+        let routed = front.submit(req).unwrap().unwrap();
+        assert_eq!(front.shards().next().unwrap().chunk, ServeConfig::default().chunk);
+        front.set_chunk(&routed.shard, 3).unwrap();
+        assert_eq!(front.shards().next().unwrap().chunk, 3);
+        let missing = ShardKey { variant: (9, 9), tenant: None };
+        assert!(front.set_chunk(&missing, 4).is_err());
+    }
+
+    #[test]
+    fn test_clock_drives_last_drain_stamps() {
+        use super::super::clock::TestClock;
+        let rt = Arc::new(Runtime::reference());
+        let (ds, tasks, sim) = setup(4, 2);
+        let clock = Arc::new(TestClock::new());
+        let rt2 = Arc::clone(&rt);
+        let mut front = ShardedFrontEnd::with_clock(
+            &rt,
+            move || placer::by_name(&rt2, "greedy:size"),
+            ShardConfig::default(),
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        )
+        .unwrap();
+        let t0 = clock.now();
+        for t in &tasks {
+            let req = PlacementRequest::for_runtime(&rt, &ds, t, &sim).unwrap();
+            front.submit(req).unwrap().unwrap();
+        }
+        clock.advance_ms(75.0);
+        front.drain().unwrap();
+        let view = front.shards().next().unwrap();
+        let stamp = view.last_drain.expect("drain stamped the clock");
+        assert_eq!(stamp.duration_since(t0).as_millis(), 75, "stamp reads the test clock");
+        assert_eq!(view.stats.p95_queue_ms(), 75.0, "queue latency reads the same clock");
     }
 
     #[test]

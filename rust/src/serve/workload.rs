@@ -1,10 +1,14 @@
-//! Synthetic open-loop serving workloads: Poisson arrivals of
-//! heterogeneous placement tasks (mixed table counts and device counts),
-//! replayed by the `serve-sim` CLI subcommand, `benches/serving.rs`, and
-//! `examples/serve_queue.rs`.
+//! Synthetic serving workloads: Poisson arrivals of heterogeneous
+//! placement tasks (mixed table counts and device counts), replayed by
+//! the `serve-sim` CLI subcommand, `benches/serving.rs`, and
+//! `examples/serve_queue.rs` — open-loop (wall-clock schedule) or
+//! closed-loop (each arrival offset from the previous drain completion,
+//! the mode the [`crate::serve::Controller`] steers).
 
 use crate::tables::Task;
 use crate::util::Rng;
+
+use super::SloClass;
 
 /// Workload shape knobs.
 #[derive(Clone, Debug)]
@@ -16,8 +20,22 @@ pub struct WorkloadCfg {
     /// Tables per task, drawn uniformly in `[min_tables, max_tables]`.
     pub min_tables: usize,
     pub max_tables: usize,
-    /// Mean exponential inter-arrival gap, ms (open-loop arrival clock).
+    /// Mean exponential inter-arrival gap, ms.
     pub mean_gap_ms: f64,
+    /// Arrival-clock coupling. Open-loop (`false`, the default):
+    /// [`Arrival::at_ms`] is a fixed wall schedule (cumulative gaps since
+    /// the workload started), blind to how the service keeps up.
+    /// Closed-loop (`true`): `at_ms` is each arrival's *offset from the
+    /// last drain completion* ([`crate::serve::ShardView::last_drain`]) —
+    /// the replayer releases the next request that many ms after service
+    /// progress, so arrivals throttle with the service instead of piling
+    /// onto a schedule. The sampled tasks are identical in both modes
+    /// (same RNG stream); only the meaning of `at_ms` changes.
+    pub closed_loop: bool,
+    /// Percent of requests tagged [`SloClass::Batch`] (0-100); drawn from
+    /// an independent RNG stream so the task sequence is identical at any
+    /// mix.
+    pub batch_pct: usize,
     pub seed: u64,
 }
 
@@ -29,17 +47,22 @@ impl Default for WorkloadCfg {
             min_tables: 10,
             max_tables: 40,
             mean_gap_ms: 5.0,
+            closed_loop: false,
+            batch_pct: 0,
             seed: 0,
         }
     }
 }
 
-/// One arriving request: the sampled task plus its arrival time on the
-/// open-loop clock (ms since the workload started).
+/// One arriving request: the sampled task, its arrival offset, and its
+/// SLO class. `at_ms` is ms since the workload started (open-loop) or ms
+/// since the previous drain completion (closed-loop) — see
+/// [`WorkloadCfg::closed_loop`].
 #[derive(Clone, Debug)]
 pub struct Arrival {
     pub task: Task,
     pub at_ms: f64,
+    pub class: SloClass,
 }
 
 /// Generate a deterministic open-loop arrival schedule from a table pool
@@ -59,21 +82,35 @@ pub fn synthetic_arrivals(pool: &[usize], cfg: &WorkloadCfg) -> Vec<Arrival> {
         pool.len(),
         cfg.max_tables
     );
+    assert!(cfg.batch_pct <= 100, "batch_pct is a percentage (0-100)");
     let mut rng = Rng::new(cfg.seed).fork(0x5E47E);
+    // classes come from their own stream so the task sequence is
+    // identical at any batch mix (and to pre-SLO workloads)
+    let mut class_rng = Rng::new(cfg.seed).fork(0xC1A55);
     let mut clock_ms = 0.0;
     (0..cfg.n_requests)
         .map(|_| {
             // exponential gaps -> Poisson arrival process
-            clock_ms += -cfg.mean_gap_ms * (1.0 - rng.f64()).ln();
+            let gap_ms = -cfg.mean_gap_ms * (1.0 - rng.f64()).ln();
+            clock_ms += gap_ms;
             let n_tables = cfg.min_tables + rng.below(cfg.max_tables - cfg.min_tables + 1);
             let n_devices = cfg.device_mix[rng.below(cfg.device_mix.len())];
             let picks = rng.sample_indices(pool.len(), n_tables);
+            let class = if class_rng.below(100) < cfg.batch_pct {
+                SloClass::Batch
+            } else {
+                SloClass::Interactive
+            };
             Arrival {
                 task: Task {
                     table_ids: picks.into_iter().map(|i| pool[i]).collect(),
                     n_devices,
                 },
-                at_ms: clock_ms,
+                // closed-loop: the raw gap, to be offset from the last
+                // drain completion by the replayer; open-loop: the
+                // cumulative wall schedule
+                at_ms: if cfg.closed_loop { gap_ms } else { clock_ms },
+                class,
             }
         })
         .collect()
@@ -92,6 +129,7 @@ mod tests {
             max_tables: 20,
             mean_gap_ms: 3.0,
             seed: 9,
+            ..WorkloadCfg::default()
         }
     }
 
@@ -134,5 +172,47 @@ mod tests {
             a.iter().zip(other.iter()).any(|(x, y)| x.task.table_ids != y.task.table_ids),
             "different seeds should draw different workloads"
         );
+    }
+
+    #[test]
+    fn closed_loop_keeps_the_task_stream_and_reinterprets_at_ms() {
+        let ds = gen_dlrm(120, 0);
+        let (pool, _) = split_pools(&ds, 1);
+        let open = synthetic_arrivals(&pool, &cfg());
+        let closed = synthetic_arrivals(&pool, &WorkloadCfg { closed_loop: true, ..cfg() });
+        let mut cumulative = 0.0;
+        for (o, c) in open.iter().zip(closed.iter()) {
+            assert_eq!(o.task.table_ids, c.task.table_ids, "identical tasks in both modes");
+            assert_eq!(o.task.n_devices, c.task.n_devices);
+            assert!(c.at_ms > 0.0, "closed-loop at_ms is a per-arrival gap");
+            cumulative += c.at_ms;
+            assert!(
+                (o.at_ms - cumulative).abs() < 1e-9,
+                "closed-loop gaps cumulate to the open-loop schedule"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_pct_tags_classes_without_perturbing_tasks() {
+        let ds = gen_dlrm(120, 0);
+        let (pool, _) = split_pools(&ds, 1);
+        let plain = synthetic_arrivals(&pool, &cfg());
+        assert!(
+            plain.iter().all(|a| a.class == SloClass::Interactive),
+            "batch_pct 0 tags nothing"
+        );
+        let mixed = synthetic_arrivals(&pool, &WorkloadCfg { batch_pct: 40, ..cfg() });
+        let n_batch = mixed.iter().filter(|a| a.class == SloClass::Batch).count();
+        assert!((1..mixed.len()).contains(&n_batch), "40% of 50 draws hits both classes");
+        for (p, m) in plain.iter().zip(mixed.iter()) {
+            assert_eq!(p.task.table_ids, m.task.table_ids, "class stream is independent");
+            assert_eq!(p.at_ms, m.at_ms);
+        }
+        // the class sequence is part of the fixed-seed determinism
+        let again = synthetic_arrivals(&pool, &WorkloadCfg { batch_pct: 40, ..cfg() });
+        for (a, b) in mixed.iter().zip(again.iter()) {
+            assert_eq!(a.class, b.class);
+        }
     }
 }

@@ -10,4 +10,4 @@ pub mod table;
 
 pub use error::{Context, Error, Result};
 pub use rng::Rng;
-pub use stats::{mean, mean_std, median};
+pub use stats::{mean, mean_std, median, percentile};

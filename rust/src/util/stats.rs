@@ -35,6 +35,21 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
+/// Nearest-rank percentile: the smallest sample such that at least
+/// `q` (in `[0, 1]`) of the data is `<=` it. Sorts a copy; 0.0 for an
+/// empty slice; NaN inputs sort to the ends (`total_cmp`) instead of
+/// panicking the sort. `q` outside `[0, 1]` clamps to the extremes, so
+/// `percentile(xs, 1.0)` is the max and `percentile(xs, 0.0)` the min.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    let rank = (q * s.len() as f64).ceil() as usize;
+    s[rank.clamp(1, s.len()) - 1]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,5 +79,23 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(mean_std(&[]), (0.0, 0.0));
         assert_eq!(median(&[]), 0.0);
+        assert_eq!(percentile(&[], 0.95), 0.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.95), 95.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 0.5), 50.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0, "q=0 clamps to the min");
+        assert_eq!(percentile(&xs, 2.0), 100.0, "q>1 clamps to the max");
+        // order-independent: percentile sorts its own copy
+        assert_eq!(percentile(&[9.0, 1.0, 5.0], 0.95), 9.0);
+        assert_eq!(percentile(&[9.0, 1.0, 5.0], 0.34), 5.0);
+        // a single sample answers every quantile
+        assert_eq!(percentile(&[7.0], 0.01), 7.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
     }
 }

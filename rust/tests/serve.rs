@@ -9,9 +9,11 @@
 use std::sync::Arc;
 
 use dreamshard::coordinator::{CostNet, DreamShard, TrainCfg};
-use dreamshard::placer::{DreamShardPlacer, Placer, PlacementRequest};
+use dreamshard::placer::{self, DreamShardPlacer, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
-use dreamshard::serve::{synthetic_arrivals, PlanService, Planned, ServeConfig, WorkloadCfg};
+use dreamshard::serve::{
+    synthetic_arrivals, Clock, PlanService, Planned, ServeConfig, TestClock, WorkloadCfg,
+};
 use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, split_pools, Dataset};
 use dreamshard::util::Rng;
@@ -26,6 +28,7 @@ fn mixed_workload(ds: &Dataset) -> Vec<dreamshard::serve::Arrival> {
         max_tables: 12,
         mean_gap_ms: 1.0,
         seed: 4,
+        ..WorkloadCfg::default()
     })
 }
 
@@ -34,6 +37,78 @@ fn mixed_workload(ds: &Dataset) -> Vec<dreamshard::serve::Arrival> {
 fn untrained_agent(rt: &Runtime) -> DreamShard {
     let mut rng = Rng::new(42);
     DreamShard::new(rt, 8, TrainCfg::default(), &mut rng).unwrap()
+}
+
+/// The closed-loop satellite's determinism pin: a fixed seed fully
+/// determines the closed-loop arrival stream (tasks, gap offsets, SLO
+/// classes — bit-for-bit), and replaying it through a `TestClock`ed
+/// service yields bit-identical plans *and* queue latencies run to run —
+/// the property every controller convergence assertion stands on.
+#[test]
+fn closed_loop_workload_replays_deterministically_under_a_fixed_seed() {
+    let ds = gen_dlrm(300, 0);
+    let (pool, _) = split_pools(&ds, 1);
+    let sim = Simulator::new(SimConfig::default());
+    let cfg = WorkloadCfg {
+        n_requests: 64,
+        device_mix: vec![2, 4, 8, 128],
+        min_tables: 5,
+        max_tables: 12,
+        mean_gap_ms: 1.0,
+        closed_loop: true,
+        batch_pct: 25,
+        seed: 4,
+        ..WorkloadCfg::default()
+    };
+    let a = synthetic_arrivals(&pool, &cfg);
+    let b = synthetic_arrivals(&pool, &cfg);
+    assert_eq!(a.len(), 64);
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.task.table_ids, y.task.table_ids);
+        assert_eq!(x.task.n_devices, y.task.n_devices);
+        assert_eq!(x.at_ms.to_bits(), y.at_ms.to_bits(), "gaps are bit-deterministic");
+        assert_eq!(x.class, y.class);
+        assert!(x.at_ms > 0.0, "closed-loop at_ms is a strictly positive gap");
+    }
+    // the same tasks as the open-loop stream, in the same order
+    let open = synthetic_arrivals(&pool, &WorkloadCfg { closed_loop: false, ..cfg.clone() });
+    for (c, o) in a.iter().zip(open.iter()) {
+        assert_eq!(c.task.table_ids, o.task.table_ids);
+    }
+
+    // replay twice on frozen test clocks: everything the serving layer
+    // measures must reproduce bit-for-bit
+    let replay = || {
+        let rt = Arc::new(Runtime::reference());
+        let clock = Arc::new(TestClock::new());
+        let placer = placer::by_name(&rt, "greedy:size").unwrap();
+        let mut svc = PlanService::with_clock(
+            &rt,
+            placer,
+            ServeConfig { capacity: 64, chunk: 8, ..ServeConfig::default() },
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        );
+        let mut done: Vec<Planned> = vec![];
+        for arr in &a {
+            clock.advance_ms(arr.at_ms); // the gap from the last progress
+            let req = PlacementRequest::for_runtime(&rt, &ds, &arr.task, &sim).unwrap();
+            svc.submit_class(req, arr.class).unwrap().unwrap();
+            if svc.queued() >= 8 {
+                done.extend(svc.drain().unwrap());
+            }
+        }
+        done.extend(svc.drain().unwrap());
+        done
+    };
+    let r1 = replay();
+    let r2 = replay();
+    assert_eq!(r1.len(), 64);
+    for (x, y) in r1.iter().zip(r2.iter()) {
+        assert_eq!(x.ticket, y.ticket);
+        assert_eq!(x.plan.placement, y.plan.placement);
+        assert_eq!(x.class, y.class);
+        assert_eq!(x.queue_ms.to_bits(), y.queue_ms.to_bits(), "latencies reproduce exactly");
+    }
 }
 
 #[test]

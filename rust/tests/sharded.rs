@@ -34,6 +34,7 @@ fn mixed_workload(ds: &Dataset) -> Vec<dreamshard::serve::Arrival> {
         max_tables: 12,
         mean_gap_ms: 1.0,
         seed: 4,
+        ..WorkloadCfg::default()
     })
 }
 
