@@ -1,0 +1,9 @@
+// Bad: env reads outside runtime/mod.rs and bench/.
+
+pub fn workers() -> Option<String> {
+    std::env::var("DREAMSHARD_WORKERS").ok()
+}
+
+pub fn artifacts() -> Option<std::ffi::OsString> {
+    std::env::var_os("DREAMSHARD_ARTIFACTS")
+}

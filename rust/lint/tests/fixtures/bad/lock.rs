@@ -1,0 +1,13 @@
+// Bad: lock guards held across pool dispatch.
+
+pub fn wait_with_guard(m: &std::sync::Mutex<u32>, t: &Ticket) -> u32 {
+    let g = m.lock().unwrap_or_else(|e| e.into_inner());
+    let r = t.wait();
+    *g + r
+}
+
+pub fn submit_with_guard(m: &std::sync::Mutex<u32>, rt: &Runtime) {
+    let mut g = m.lock().unwrap_or_else(|e| e.into_inner());
+    let t = rt.submit("step", vec![]);
+    *g += t.id();
+}

@@ -1,0 +1,23 @@
+// Bad: every nan-ordering shape the rule must catch.
+
+pub fn cmp_split(a: f64, b: f64) -> std::cmp::Ordering {
+    a.partial_cmp(&b).unwrap()
+}
+
+pub fn cmp_multiline(a: f64, b: f64) -> std::cmp::Ordering {
+    a
+        .partial_cmp(&b)
+        .unwrap()
+}
+
+pub fn cmp_expect(a: f64, b: f64) -> std::cmp::Ordering {
+    a.partial_cmp(&b).expect("comparable")
+}
+
+pub fn sort_floats(v: &mut [f64]) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn max_float(v: &[f64]) -> Option<&f64> {
+    v.iter().max_by(|a, b| a.partial_cmp(b).unwrap())
+}

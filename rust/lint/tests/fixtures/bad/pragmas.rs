@@ -1,0 +1,11 @@
+// Bad: malformed pragma escapes are themselves violations.
+
+pub fn no_reason(a: f64, b: f64) -> std::cmp::Ordering {
+    // lint: allow(nan-ordering)
+    a.partial_cmp(&b).unwrap()
+}
+
+pub fn unknown_rule(a: f64, b: f64) -> std::cmp::Ordering {
+    // lint: allow(no-such-rule) — not a rule
+    a.partial_cmp(&b).unwrap()
+}

@@ -1,0 +1,9 @@
+// Bad: raw clock reads inside serve/ outside the Clock seam.
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+pub fn wall() -> std::time::SystemTime {
+    std::time::SystemTime::now()
+}

@@ -1,0 +1,13 @@
+// Bad: panic-policy violations in a serve/ library path.
+
+pub fn take(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn must(v: Option<u32>) -> u32 {
+    v.expect("present")
+}
+
+pub fn boom() {
+    panic!("library hot path");
+}

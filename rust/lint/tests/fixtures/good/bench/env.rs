@@ -1,0 +1,5 @@
+// Good: the bench/ harness is a sanctioned env read site.
+
+pub fn samples() -> Option<String> {
+    std::env::var("BENCH_SAMPLES").ok()
+}

@@ -1,0 +1,16 @@
+// Good: guards are dropped or scope-closed before pool dispatch.
+
+pub fn drop_then_wait(m: &std::sync::Mutex<u32>, t: &Ticket) -> u32 {
+    let g = m.lock().unwrap_or_else(|e| e.into_inner());
+    let held = *g;
+    drop(g);
+    t.wait() + held
+}
+
+pub fn scope_then_submit(m: &std::sync::Mutex<u32>, rt: &Runtime) {
+    {
+        let mut g = m.lock().unwrap_or_else(|e| e.into_inner());
+        *g += 1;
+    }
+    rt.submit("step", vec![]);
+}

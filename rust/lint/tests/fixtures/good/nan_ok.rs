@@ -1,0 +1,23 @@
+// Good: NaN-safe orderings, plus traps that must not match.
+
+pub fn sort_floats(v: &mut [f64]) {
+    v.sort_by(|a, b| a.total_cmp(b));
+}
+
+pub fn in_prose() -> &'static str {
+    // a.partial_cmp(&b).unwrap() in a comment is fine
+    "a.partial_cmp(&b).unwrap() in a string is fine"
+}
+
+pub fn raw_trap() -> &'static str {
+    r#"v.sort_by(|a, b| a.partial_cmp(b).unwrap())"#
+}
+
+pub fn justified(a: f64, b: f64) -> std::cmp::Ordering {
+    // lint: allow(nan-ordering) — inputs are clamped upstream, NaN impossible
+    a.partial_cmp(&b).unwrap()
+}
+
+pub fn partial_no_unwrap(a: f64, b: f64) -> Option<std::cmp::Ordering> {
+    a.partial_cmp(&b)
+}

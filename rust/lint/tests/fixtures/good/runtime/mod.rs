@@ -1,0 +1,5 @@
+// Good: runtime/mod.rs is a sanctioned env read site.
+
+pub fn workers() -> Option<String> {
+    std::env::var("DREAMSHARD_WORKERS").ok()
+}

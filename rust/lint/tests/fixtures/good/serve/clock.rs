@@ -1,0 +1,5 @@
+// Good: serve/clock.rs is the sanctioned home of raw clock reads.
+
+pub fn now() -> std::time::Instant {
+    std::time::Instant::now()
+}

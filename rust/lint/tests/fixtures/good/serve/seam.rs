@@ -1,0 +1,10 @@
+// Good: serve code reads time through the Clock seam.
+
+pub fn stamp(clock: &dyn Clock) -> Instant {
+    clock.now()
+}
+
+pub fn justified() -> std::time::Instant {
+    // lint: allow(clock-discipline) — diagnostics only, never replayed
+    std::time::Instant::now()
+}

@@ -1,0 +1,14 @@
+// Good: test code inside a serve/ path is exempt from panic-policy.
+
+pub fn lib_path(v: Option<u32>) -> Option<u32> {
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwraps_freely() {
+        Some(1u32).unwrap();
+        assert!(std::panic::catch_unwind(|| panic!("in a test")).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! End-to-end tests of the compiled `dreamshard-lint` binary: every rule
+//! has a known-bad fixture asserted down to the exact `(file, line,
+//! rule)` triples it must report, a known-good fixture that must stay
+//! silent (string/comment traps, path exemptions, pragma escapes), and
+//! the real sources must lint clean — the same contract CI gates with
+//! `cargo run -p dreamshard-lint`.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::process::Command;
+
+fn fixture(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(rel)
+}
+
+/// Run the binary on `paths`, returning its exit code plus the
+/// fixture-relative `(file, line, rule)` triples parsed from stdout.
+fn lint(paths: &[PathBuf]) -> (Option<i32>, BTreeSet<(String, u32, String)>) {
+    let out = Command::new(env!("CARGO_BIN_EXE_dreamshard-lint"))
+        .args(paths)
+        .output()
+        .expect("spawn dreamshard-lint");
+    let mut hits = BTreeSet::new();
+    for l in String::from_utf8_lossy(&out.stdout).lines() {
+        // `<path>:<line>: <rule>: <message>`
+        let mut parts = l.splitn(3, ": ");
+        let file_line = parts.next().expect("file:line field");
+        let rule = parts.next().expect("rule field").to_string();
+        assert!(parts.next().is_some(), "missing message in `{l}`");
+        let (file, line) = file_line.rsplit_once(':').expect("line suffix");
+        let file = file.replace('\\', "/");
+        let rel = file
+            .rsplit_once("tests/fixtures/")
+            .map(|(_, r)| r.to_string())
+            .unwrap_or(file);
+        hits.insert((rel, line.parse().expect("numeric line"), rule));
+    }
+    (out.status.code(), hits)
+}
+
+fn expected(entries: &[(&str, u32, &str)]) -> BTreeSet<(String, u32, String)> {
+    entries.iter().map(|&(f, l, r)| (f.to_string(), l, r.to_string())).collect()
+}
+
+#[test]
+fn bad_fixtures_flag_exact_lines() {
+    let (code, hits) = lint(&[fixture("bad")]);
+    assert_eq!(code, Some(1), "bad fixtures must fail the gate");
+    assert_eq!(
+        hits,
+        expected(&[
+            ("bad/envy.rs", 4, "env-discipline"),
+            ("bad/envy.rs", 8, "env-discipline"),
+            ("bad/lock.rs", 5, "lock-across-wait"),
+            ("bad/lock.rs", 11, "lock-across-wait"),
+            ("bad/nan.rs", 4, "nan-ordering"),
+            ("bad/nan.rs", 9, "nan-ordering"),
+            ("bad/nan.rs", 14, "nan-ordering"),
+            ("bad/nan.rs", 18, "nan-ordering"),
+            ("bad/nan.rs", 22, "nan-ordering"),
+            ("bad/pragmas.rs", 4, "pragma"),
+            ("bad/pragmas.rs", 5, "nan-ordering"),
+            ("bad/pragmas.rs", 9, "pragma"),
+            ("bad/pragmas.rs", 10, "nan-ordering"),
+            ("bad/serve/clocky.rs", 4, "clock-discipline"),
+            ("bad/serve/clocky.rs", 8, "clock-discipline"),
+            ("bad/serve/panics.rs", 4, "panic-policy"),
+            ("bad/serve/panics.rs", 8, "panic-policy"),
+            ("bad/serve/panics.rs", 12, "panic-policy"),
+        ]),
+    );
+}
+
+#[test]
+fn good_fixtures_are_clean() {
+    let (code, hits) = lint(&[fixture("good")]);
+    assert_eq!(hits, BTreeSet::new(), "good fixtures must produce no violations");
+    assert_eq!(code, Some(0));
+}
+
+#[test]
+fn each_bad_fixture_fails_alone() {
+    let files =
+        ["nan.rs", "serve/clocky.rs", "envy.rs", "serve/panics.rs", "lock.rs", "pragmas.rs"];
+    for f in files {
+        let (code, hits) = lint(&[fixture("bad").join(f)]);
+        assert_eq!(code, Some(1), "{f} must fail on its own");
+        assert!(!hits.is_empty(), "{f} must report at least one violation");
+    }
+}
+
+#[test]
+fn missing_path_is_a_usage_error() {
+    let (code, hits) = lint(&[fixture("no/such/path")]);
+    assert_eq!(code, Some(2), "unknown roots are an IO error, not a lint pass");
+    assert!(hits.is_empty());
+}
+
+/// The gate CI enforces, from inside the test suite: the real sources
+/// (including this crate's own) carry zero violations.
+#[test]
+fn real_tree_is_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let (code, hits) = lint(&[root.join("../src"), root.join("src")]);
+    assert_eq!(hits, BTreeSet::new(), "rust/src and rust/lint/src must lint clean");
+    assert_eq!(code, Some(0));
+}

@@ -79,13 +79,21 @@ impl DreamShardPlacer {
         self.agent.as_deref()
     }
 
-    fn ensure_agent(&mut self, n_devices: usize) -> Result<()> {
-        if self.agent.is_none() {
-            let mut rng = Rng::new(self.seed).fork(0xD5);
-            self.agent =
-                Some(Arc::new(DreamShard::new(&self.rt, n_devices, self.cfg.clone(), &mut rng)?));
+    /// The lazily-created agent, handed back as the `Arc` the caller
+    /// plans with — so every `place_many`-family entry point gets its
+    /// agent from the one fallible site instead of re-unwrapping the
+    /// option it just filled.
+    fn ensure_agent(&mut self, n_devices: usize) -> Result<Arc<DreamShard>> {
+        match &self.agent {
+            Some(agent) => Ok(Arc::clone(agent)),
+            None => {
+                let mut rng = Rng::new(self.seed).fork(0xD5);
+                let agent =
+                    Arc::new(DreamShard::new(&self.rt, n_devices, self.cfg.clone(), &mut rng)?);
+                self.agent = Some(Arc::clone(&agent));
+                Ok(agent)
+            }
         }
-        Ok(())
     }
 
     /// The artifact variant serving one task: the agent's own (matching
@@ -189,18 +197,20 @@ impl DreamShardPlacer {
                 .iter()
                 .zip(chunk_prevs)
                 .map(|(r, prev)| {
-                    let full = orders.next().expect("one order per request");
+                    let full = orders
+                        .next()
+                        .context("order_tables_batch yields one order per request")?;
                     let warm = warm_order(r, prev, &full);
-                    PlacementState::warm_start(
+                    Ok(PlacementState::warm_start(
                         r.ds,
                         r.task,
                         warm,
                         var.s.min(r.max_slots),
                         prev.clone(),
                         r.migration.max_moves,
-                    )
+                    ))
                 })
-                .collect();
+                .collect::<Result<_>>()?;
             let mut lc = LaneChunk::from_states(var, lanes, chunk, states);
             while !lc.done() {
                 let (feats, mask, dmask, cur, legal_t) = lc.fill()?;
@@ -267,16 +277,16 @@ impl Placer for DreamShardPlacer {
     /// placer — the sharded front end's submit-time mirror of
     /// `PlanService`'s drain-time key refresh.
     fn warm_variant(&mut self, req: &PlacementRequest<'_>) -> Result<()> {
-        self.ensure_agent(req.task.n_devices)
+        self.ensure_agent(req.task.n_devices)?;
+        Ok(())
     }
 
     fn place_many(&mut self, reqs: &[PlacementRequest<'_>]) -> Result<Vec<PlacementPlan>> {
-        if reqs.is_empty() {
+        // max() is None exactly when the batch is empty
+        let Some(max_dev) = reqs.iter().map(|r| r.task.n_devices).max() else {
             return Ok(vec![]);
-        }
-        let max_dev = reqs.iter().map(|r| r.task.n_devices).max().unwrap();
-        self.ensure_agent(max_dev)?;
-        let agent = Arc::clone(self.agent.as_ref().expect("agent ensured above"));
+        };
+        let agent = self.ensure_agent(max_dev)?;
         // group lanes by serving variant: tasks with different device
         // counts share the agent's variant (masking covers the gap), so
         // heterogeneous batches still fill the same lanes
@@ -296,7 +306,10 @@ impl Placer for DreamShardPlacer {
                 plans[i] = Some(plan);
             }
         }
-        Ok(plans.into_iter().map(|p| p.expect("every request planned")).collect())
+        plans
+            .into_iter()
+            .map(|p| p.context("every request belongs to exactly one variant group"))
+            .collect()
     }
 
     fn replace(&mut self, prev: &PlacementPlan, req: &PlacementRequest<'_>) -> Result<PlacementPlan> {
@@ -320,12 +333,10 @@ impl Placer for DreamShardPlacer {
         if prevs.len() != reqs.len() {
             bail!("replace_many: {} prev plans for {} requests", prevs.len(), reqs.len());
         }
-        if reqs.is_empty() {
+        let Some(max_dev) = reqs.iter().map(|r| r.task.n_devices).max() else {
             return Ok(vec![]);
-        }
-        let max_dev = reqs.iter().map(|r| r.task.n_devices).max().unwrap();
-        self.ensure_agent(max_dev)?;
-        let agent = Arc::clone(self.agent.as_ref().expect("agent ensured above"));
+        };
+        let agent = self.ensure_agent(max_dev)?;
         // normalize prevs: an empty placement means "no prior at all"
         let mut prev_full: Vec<Vec<usize>> = Vec::with_capacity(reqs.len());
         for (p, r) in prevs.iter().zip(reqs) {
@@ -356,7 +367,10 @@ impl Placer for DreamShardPlacer {
                 plans[i] = Some(plan);
             }
         }
-        Ok(plans.into_iter().map(|p| p.expect("every request re-planned")).collect())
+        plans
+            .into_iter()
+            .map(|p| p.context("every request belongs to exactly one variant group"))
+            .collect()
     }
 
     /// A [`DreamShardSession`] whenever the chunk is what a
@@ -370,12 +384,10 @@ impl Placer for DreamShardPlacer {
         &mut self,
         reqs: &[PlacementRequest<'a>],
     ) -> Result<Option<Box<dyn PlanSession<'a> + 'a>>> {
-        if reqs.is_empty() {
+        let Some(max_dev) = reqs.iter().map(|r| r.task.n_devices).max() else {
             return Ok(None);
-        }
-        let max_dev = reqs.iter().map(|r| r.task.n_devices).max().unwrap();
-        self.ensure_agent(max_dev)?;
-        let agent = Arc::clone(self.agent.as_ref().expect("agent ensured above"));
+        };
+        let agent = self.ensure_agent(max_dev)?;
         let var = self.variant_for(&agent, reqs[0].task.n_devices)?;
         for r in &reqs[1..] {
             let v = self.variant_for(&agent, r.task.n_devices)?;

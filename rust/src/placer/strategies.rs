@@ -110,7 +110,7 @@ fn greedy_replace(req: &PlacementRequest<'_>, expert: Expert, prev: &[usize]) ->
             ix.iter().map(|&i| table(i).size_gb() as f64 * 3.0).sum()
         };
         while kept.len() > req.max_slots || mem(&kept) > cap {
-            let evicted = kept.pop().expect("an over-cap group is non-empty");
+            let Some(evicted) = kept.pop() else { break };
             next[evicted] = usize::MAX;
             forced[evicted] = true;
         }
@@ -141,7 +141,8 @@ fn greedy_replace(req: &PlacementRequest<'_>, expert: Expert, prev: &[usize]) ->
                     .filter(|&dev| groups[dev].len() < req.max_slots)
                     .min_by(|&a, &b| load[a].total_cmp(&load[b]))
             })
-            .unwrap_or_else(|| (0..d).min_by(|&a, &b| load[a].total_cmp(&load[b])).unwrap());
+            .or_else(|| (0..d).min_by(|&a, &b| load[a].total_cmp(&load[b])))
+            .context("replace: task has no devices to re-home onto")?;
         next[i] = dev;
         groups[dev].push(i);
         load[dev] += costs[i];
@@ -156,7 +157,7 @@ fn greedy_replace(req: &PlacementRequest<'_>, expert: Expert, prev: &[usize]) ->
     let mut disc_count = 0usize;
     let mut disc_ms = 0.0f64;
     for _ in 0..4 * n.max(1) {
-        let hi = (0..d).max_by(|&a, &b| load[a].total_cmp(&load[b])).unwrap();
+        let Some(hi) = (0..d).max_by(|&a, &b| load[a].total_cmp(&load[b])) else { break };
         // heaviest tables first: the biggest single improvement
         let mut cands = groups[hi].clone();
         cands.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]));
@@ -272,7 +273,7 @@ impl Placer for RnnPlacer {
             let mut rng = Rng::new(self.seed).fork(0x9A11);
             self.model = Some(RnnBaseline::new(&self.rt, req.task.n_devices, &mut rng)?);
         }
-        let model = self.model.as_ref().unwrap();
+        let model = self.model.as_ref().context("rnn model is initialized above")?;
         if model.d != req.task.n_devices {
             bail!(
                 "rnn placer was fitted for {} devices but the task has {} \

@@ -49,8 +49,8 @@ impl Manifest {
                 continue;
             }
             let mut it = line.split_whitespace();
-            let kind = it.next().unwrap();
             let ctx = || format!("manifest line {}: {line}", lineno + 1);
+            let kind = it.next().ok_or_else(|| err!(ctx()))?;
             match kind {
                 "const" => {
                     let k = it.next().ok_or_else(|| err!(ctx()))?;

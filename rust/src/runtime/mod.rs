@@ -128,6 +128,7 @@ fn default_workers() -> usize {
     match std::env::var("DREAMSHARD_WORKERS") {
         Ok(v) => match v.parse::<usize>() {
             Ok(n) if n >= 1 => n,
+            // lint: allow(panic-policy) — the documented no-silent-substitution policy: an explicitly set but unusable DREAMSHARD_WORKERS must abort rather than green-light an unexercised configuration
             _ => panic!(
                 "DREAMSHARD_WORKERS={v} is not a valid worker count (want an integer >= 1); \
                  unset it to use the default pool size"

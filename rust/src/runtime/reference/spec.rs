@@ -58,6 +58,7 @@ impl Spec {
             .segs
             .iter()
             .position(|(n, ..)| *n == wname)
+            // lint: allow(panic-policy) — layer names are compile-time constants in the reference-backend builders; a miss is a construction bug caught by every test, not a runtime condition
             .unwrap_or_else(|| panic!("no layer {name} in spec"));
         let (_, w_off, w_len, _) = &self.segs[wi];
         let (_, b_off, b_len, _) = &self.segs[wi + 1];

@@ -79,6 +79,7 @@ impl Pool {
                 thread::Builder::new()
                     .name(format!("dreamshard-exec-{i}"))
                     .spawn(move || worker(&rx, &dispatch))
+                    // lint: allow(panic-policy) — Pool::spawn sits under the infallible Runtime constructors (Runtime::reference() -> Self); an OS that cannot spawn a thread at startup has no recovery path worth plumbing
                     .expect("spawn runtime worker thread")
             })
             .collect();

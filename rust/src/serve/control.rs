@@ -274,7 +274,7 @@ impl Controller {
                 o.chunk
             };
             if chunk != o.chunk {
-                front.set_chunk(&o.key, chunk).expect("observed shard exists");
+                front.set_chunk(&o.key, chunk)?;
             }
             decisions.push(ShardDecision {
                 key: o.key.clone(),

@@ -481,7 +481,7 @@ impl<'a> PlanService<'a> {
     /// submit time.
     pub fn evict_newest_batch(&mut self) -> Option<u64> {
         let idx = self.queue.iter().rposition(|q| q.class == SloClass::Batch)?;
-        let evicted = self.queue.remove(idx).expect("rposition is in range");
+        let evicted = self.queue.remove(idx)?;
         self.stats.rejected += 1;
         self.stats.shed_batch += 1;
         Some(evicted.ticket)
@@ -551,9 +551,9 @@ impl<'a> PlanService<'a> {
         // min_by_key returns the first minimum, so ties go to the oldest
         // queued request of the winning class
         let lead = if self.class_order {
-            self.queue.iter().min_by_key(|q| q.class).expect("checked non-empty")
+            self.queue.iter().min_by_key(|q| q.class)?
         } else {
-            self.queue.front().expect("checked non-empty")
+            self.queue.front()?
         };
         let (key, class) = (lead.key, self.class_order.then_some(lead.class));
         let mut picked: Vec<Queued<'a>> = Vec::new();
@@ -835,8 +835,10 @@ impl<'a> PlanService<'a> {
             // emit chunks completed at the pipeline head, preserving pick
             // order (a shorter younger chunk waits for its elders)
             while active.front().map_or(false, |c| c.ticket.is_none()) {
-                let InFlight { session, picked, key, start, .. } =
-                    active.pop_front().expect("checked non-empty");
+                let Some(InFlight { session, picked, key, start, .. }) = active.pop_front()
+                else {
+                    break;
+                };
                 match session.finish() {
                     Ok(plans) if plans.len() == picked.len() => {
                         out.extend(self.finish_chunk(key, picked, plans, start, false));

@@ -446,7 +446,7 @@ impl<'a> ShardedFrontEnd<'a> {
             .max_by_key(|&(_, at)| at)
             .map(|(i, _)| i)?;
         let sh = &mut self.shards[idx];
-        let ticket = sh.svc.evict_newest_batch().expect("shard reported queued batch work");
+        let ticket = sh.svc.evict_newest_batch()?;
         Some((sh.key.clone(), ticket))
     }
 
@@ -505,7 +505,11 @@ impl<'a> ShardedFrontEnd<'a> {
     pub fn try_drain(&mut self) -> Vec<(ShardKey, Result<Vec<Planned>>)> {
         let calls_before = self.rt.run_count();
         let clock = &self.clock;
-        let reports = std::thread::scope(|scope| {
+        // keys are cloned before the scope so a panicking drain thread
+        // still yields a keyed per-shard Err instead of poisoning the
+        // whole front end
+        let keys: Vec<ShardKey> = self.shards.iter().map(|sh| sh.key.clone()).collect();
+        let reports: Vec<Result<Vec<Planned>>> = std::thread::scope(|scope| {
             let handles: Vec<_> = self
                 .shards
                 .iter_mut()
@@ -521,17 +525,17 @@ impl<'a> ShardedFrontEnd<'a> {
                         if drained.is_ok() {
                             sh.last_drain = Some(clock.now());
                         }
-                        (sh.key.clone(), drained)
+                        drained
                     })
                 })
                 .collect();
             handles
                 .into_iter()
-                .map(|h| h.join().expect("shard drain thread panicked"))
+                .map(|h| h.join().unwrap_or_else(|_| Err(err!("shard drain thread panicked"))))
                 .collect()
         });
         self.drained_calls += self.rt.run_count() - calls_before;
-        reports
+        keys.into_iter().zip(reports).collect()
     }
 
     /// [`ShardedFrontEnd::try_drain`] flattened: every shard's plans
@@ -634,7 +638,9 @@ impl<'a> ShardedFrontEnd<'a> {
                 .collect();
             handles
                 .into_iter()
-                .map(|h| h.join().expect("shard rebalance thread panicked"))
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| Err(err!("shard rebalance thread panicked")))
+                })
                 .collect()
         });
         self.drained_calls += self.rt.run_count() - calls_before;
