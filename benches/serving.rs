@@ -52,7 +52,7 @@ fn main() {
         seq.place(r).unwrap(); // warm
     }
     let calls_before = rt.run_count();
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint: allow(clock-transitive) — wall-clock timing section is what this bench measures
     for r in &reqs {
         seq.place(r).unwrap();
     }
@@ -70,7 +70,7 @@ fn main() {
             svc.submit(*r).unwrap();
         }
         let calls_before = rt.run_count();
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // lint: allow(clock-transitive) — wall-clock timing section is what this bench measures
         let done = svc.drain_blocking().unwrap();
         assert_eq!(done.len(), reqs.len());
         (t0.elapsed().as_secs_f64(), rt.run_count() - calls_before)
@@ -107,7 +107,7 @@ fn main() {
             for r in &reqs {
                 svc.submit(*r).unwrap();
             }
-            let t0 = Instant::now();
+            let t0 = Instant::now(); // lint: allow(clock-transitive) — wall-clock timing section is what this bench measures
             let done = if pipelined { svc.drain().unwrap() } else { svc.drain_blocking().unwrap() };
             assert_eq!(done.len(), reqs.len());
             t0.elapsed().as_secs_f64()
@@ -156,7 +156,7 @@ fn main() {
             for r in &mixed_reqs {
                 svc.submit(*r).unwrap();
             }
-            let t0 = Instant::now();
+            let t0 = Instant::now(); // lint: allow(clock-transitive) — wall-clock timing section is what this bench measures
             let done = svc.drain().unwrap();
             assert_eq!(done.len(), mixed_reqs.len());
             t0.elapsed().as_secs_f64()
@@ -179,7 +179,7 @@ fn main() {
             for r in &mixed_reqs {
                 front.submit(*r).unwrap();
             }
-            let t0 = Instant::now();
+            let t0 = Instant::now(); // lint: allow(clock-transitive) — wall-clock timing section is what this bench measures
             let done = front.drain().unwrap();
             assert_eq!(done.len(), mixed_reqs.len());
             t0.elapsed().as_secs_f64()
@@ -239,7 +239,7 @@ fn main() {
                 let req = PlacementRequest::for_runtime(&rtw, &ds, &a.task, &sim).unwrap();
                 let _ = front.submit_slo(req, a.class, None).unwrap(); // None = shed
             }
-            let t0 = Instant::now();
+            let t0 = Instant::now(); // lint: allow(clock-transitive) — wall-clock timing section is what this bench measures
             if controlled {
                 ctl.tick(&mut front).unwrap();
             } else if front.shards().any(|s| s.queued >= s.chunk) {

@@ -7,7 +7,7 @@ use std::time::Instant;
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     f();
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint: allow(clock-transitive) — wall-clock timing section is what this bench measures
     for _ in 0..iters {
         f();
     }

@@ -46,7 +46,7 @@ fn main() -> Result<()> {
     );
 
     let req = PlacementRequest::for_runtime(&rt, &ds, &task, &sim)?;
-    let t0 = std::time::Instant::now();
+    let t0 = std::time::Instant::now(); // lint: allow(clock-transitive) — example prints wall-clock timings, not replayed
     let ours = agent.place(&req)?;
     let plan_s = t0.elapsed().as_secs_f64();
     let dim = placer::by_name(&rt, "greedy:dim")?.place(&req)?;

@@ -127,14 +127,14 @@ fn main() -> Result<()> {
     println!("  {:<12} {:.2} ms", "DreamShard", p_ds.eval.latency);
 
     // ---- 2. actually train the model through the AOT artifact ------------
-    let steps: usize = std::env::var("DLRM_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(300);
+    let steps: usize = std::env::var("DLRM_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(300); // lint: allow(env-discipline) — example-local step-count knob, not library config
     let mut theta = rt.init_params("dlrm", &mut Rng::new(7))?;
     let mut m = vec![0.0f32; n_params];
     let mut v = vec![0.0f32; n_params];
     let mut gen = BatchGen { hash: hash.clone(), b, n_dense: nd, pool, rng: Rng::new(11) };
     let mut curve = vec![];
     println!("\ntraining DLRM for {steps} steps via the dlrm_train artifact ...");
-    let t0 = std::time::Instant::now();
+    let t0 = std::time::Instant::now(); // lint: allow(clock-transitive) — example prints wall-clock timings, not replayed
     for step in 0..steps {
         let (dense, idx, w, labels) = gen.next();
         let out = rt.run("dlrm_train", &[

@@ -1,0 +1,157 @@
+//! The two-phase driver: lex + phase-1 symbols per file, local rules
+//! under the per-path policy, then the crate-wide graph and the
+//! interprocedural rules, then pragma suppression and dedup.
+
+use std::collections::HashSet;
+
+use crate::graph::{in_dir, Program};
+use crate::interproc;
+use crate::lexer::{lex, Lexed};
+use crate::report::Violation;
+use crate::rules;
+use crate::symbols::{parse_file, test_spans, FileSyms};
+
+/// Path policy: which local rules run on a file (forward-slash paths;
+/// the interprocedural rules carry their own scopes in
+/// [`crate::interproc`]).
+pub fn applies(rule: &str, path: &str) -> bool {
+    match rule {
+        "nan-ordering" | "lock-across-wait" => true,
+        "env-discipline" => {
+            !path.replace('\\', "/").ends_with("runtime/mod.rs") && !in_dir(path, "bench")
+        }
+        "panic-policy" => in_dir(path, "serve") || in_dir(path, "placer") || in_dir(path, "runtime"),
+        _ => false,
+    }
+}
+
+/// Lint a set of in-memory sources as one program. Returns violations
+/// sorted by `(file, line, rule)`, pragma-suppressed and deduped.
+pub fn lint_sources(files: &[(String, String)]) -> Vec<Violation> {
+    let lexed: Vec<Lexed> = files.iter().map(|(_, src)| lex(src)).collect();
+    let syms: Vec<FileSyms> = lexed.iter().map(parse_file).collect();
+    let paths: Vec<String> = files.iter().map(|(p, _)| p.clone()).collect();
+
+    let mut found: Vec<Violation> = Vec::new();
+    let mut viols: Vec<Violation> = Vec::new();
+    let mut allowed: HashSet<(String, u32, String)> = HashSet::new();
+
+    for (i, (path, _)) in files.iter().enumerate() {
+        let lx = &lexed[i];
+        let (file_allowed, mut pragma_viols) = rules::parse_pragmas(path, lx);
+        for (line, rule) in file_allowed {
+            allowed.insert((path.clone(), line, rule));
+        }
+        viols.append(&mut pragma_viols);
+        if applies("nan-ordering", path) {
+            rules::rule_nan_ordering(path, &lx.toks, &mut found);
+        }
+        if applies("env-discipline", path) {
+            rules::rule_env_discipline(path, &lx.toks, &mut found);
+        }
+        if applies("panic-policy", path) {
+            let spans = test_spans(&lx.toks);
+            rules::rule_panic_policy(path, &lx.toks, &spans, &mut found);
+        }
+        if applies("lock-across-wait", path) {
+            rules::rule_lock_across_wait(path, &lx.toks, &mut found);
+        }
+    }
+
+    let prog = Program::build(paths, &syms);
+    interproc::rule_lock_order(&prog, &mut found);
+    interproc::rule_clock_transitive(&prog, &mut found);
+    interproc::rule_map_iter_determinism(&prog, &mut found);
+    interproc::rule_swallowed_result(&prog, &mut found);
+
+    // suppress pragma'd lines, then dedup repeated (file, line, rule)
+    found.retain(|v| !allowed.contains(&(v.file.clone(), v.line, v.rule.to_string())));
+    let mut seen: HashSet<(String, u32, &'static str)> = HashSet::new();
+    for v in found {
+        if seen.insert((v.file.clone(), v.line, v.rule)) {
+            viols.push(v);
+        }
+    }
+    viols.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    viols
+}
+
+#[cfg(test)]
+pub fn lint_one(path: &str, src: &str) -> Vec<Violation> {
+    lint_sources(&[(path.to_string(), src.to_string())])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lines_of(viols: &[Violation], rule: &str) -> Vec<u32> {
+        viols.iter().filter(|v| v.rule == rule).map(|v| v.line).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_never_match() {
+        let src = r#"
+// a.partial_cmp(&b).unwrap() in a comment
+/* Instant::now() in a block comment */
+fn f() {
+    let s = "x.partial_cmp(&y).unwrap() and Instant::now()";
+    let r = r"std::env::var and panic!";
+}
+"#;
+        let v = lint_one("rust/src/serve/x.rs", src);
+        assert!(v.is_empty(), "{:?}", v.iter().map(|v| (v.line, v.rule)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn multiline_partial_cmp_matches() {
+        let src = "fn f(v: &mut Vec<f32>) {\n    let o = a\n        .partial_cmp(&b)\n        .unwrap();\n}\n";
+        let v = lint_one("rust/src/sim/x.rs", src);
+        assert_eq!(lines_of(&v, "nan-ordering"), vec![3]);
+    }
+
+    #[test]
+    fn pragma_suppresses_next_line_and_requires_reason() {
+        let good = "fn f() {\n    // lint: allow(clock-transitive) — test fixture timing\n    let t = Instant::now();\n}\n";
+        let v = lint_one("rust/src/serve/x.rs", good);
+        assert!(v.is_empty(), "{:?}", v.iter().map(|v| (v.line, v.rule)).collect::<Vec<_>>());
+        let bad = "fn f() {\n    let t = Instant::now(); // lint: allow(clock-transitive)\n}\n";
+        let v = lint_one("rust/src/serve/x.rs", bad);
+        assert_eq!(lines_of(&v, "pragma"), vec![2]);
+        assert_eq!(lines_of(&v, "clock-transitive"), vec![2]);
+    }
+
+    #[test]
+    fn cfg_test_is_exempt_from_panic_policy() {
+        let src = "fn lib() -> u32 {\n    x.unwrap()\n}\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\n";
+        let v = lint_one("rust/src/runtime/x.rs", src);
+        assert_eq!(lines_of(&v, "panic-policy"), vec![2]);
+    }
+
+    #[test]
+    fn lock_guard_across_wait_flags() {
+        let src = "fn f() {\n    let g = m.lock().unwrap_or_else(|e| e.into_inner());\n    let r = t.wait();\n}\n";
+        let v = lint_one("rust/src/util/x.rs", src);
+        assert_eq!(lines_of(&v, "lock-across-wait"), vec![3]);
+        let dropped = "fn f() {\n    let g = m.lock().unwrap_or_else(|e| e.into_inner());\n    drop(g);\n    let r = t.wait();\n}\n";
+        let v = lint_one("rust/src/util/x.rs", dropped);
+        assert!(lines_of(&v, "lock-across-wait").is_empty());
+    }
+
+    #[test]
+    fn interprocedural_rules_run_through_the_engine() {
+        let files = vec![
+            (
+                "rust/src/serve/s.rs".to_string(),
+                "fn drain() { let t = stamp(); }".to_string(),
+            ),
+            (
+                "rust/src/util/t.rs".to_string(),
+                "pub fn stamp() -> u64 { let t = Instant::now(); 0 }".to_string(),
+            ),
+        ];
+        let v = lint_sources(&files);
+        assert_eq!(v.len(), 1);
+        assert_eq!((v[0].file.as_str(), v[0].line, v[0].rule), ("rust/src/serve/s.rs", 1, "clock-transitive"));
+    }
+}

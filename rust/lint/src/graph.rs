@@ -1,0 +1,435 @@
+//! Phase 2: the crate-wide symbol graph.
+//!
+//! Merges every file's [`FileSyms`](crate::symbols::FileSyms) into one
+//! [`Program`], resolves call sites by name (bare calls to free
+//! functions, method calls to any `impl`/`trait` method of that name,
+//! `Type::f` to the matching impl — `Self::f` through the caller's impl
+//! type), and computes the two whole-program summaries the
+//! interprocedural rules consume:
+//!
+//! * **lock summaries** — for every function, the set of lock identities
+//!   it may acquire directly or through any call chain (monotone
+//!   fixpoint, so recursion converges);
+//! * **clock taint** — whether a function reaches a literal
+//!   `Instant::now`/`SystemTime::now` through any call chain, with the
+//!   first step of a witness chain kept for diagnostics. Functions
+//!   defined in `serve/clock.rs` are the sanctioned seam: they neither
+//!   carry nor propagate taint.
+//!
+//! Resolution is deliberately name-based (no types): linking a call to
+//! every same-named candidate over-approximates, which is the right
+//! direction for deadlock/determinism rules — a missed link hides a bug,
+//! an extra link costs at worst a justified pragma.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::symbols::{Callee, FileSyms};
+
+/// `true` when `path` has a directory component exactly named `seg`.
+pub fn in_dir(path: &str, seg: &str) -> bool {
+    let p = format!("/{}", path.replace('\\', "/"));
+    p.contains(&format!("/{seg}/"))
+}
+
+/// The sanctioned raw-clock module: the `serve::Clock` seam itself.
+pub fn is_clock_seam(path: &str) -> bool {
+    in_dir(path, "serve") && path.replace('\\', "/").ends_with("/clock.rs")
+}
+
+/// Link unit of a file: which other files its calls may bind to.
+///
+/// Name-based resolution must not cross binary boundaries: a helper in a
+/// bench, example, or integration-test file can never be linked into the
+/// library, so a `fn place` defined in `rust/tests/` must not taint the
+/// library's `.place(..)` call sites. Unit 0 is the library (`rust/src`
+/// plus anything unclassified, e.g. lint fixtures, which form a
+/// self-contained pretend tree); unit 1 is the lint crate's own sources
+/// (zero-dep: they see neither the library nor the fixtures); each
+/// bench/example/test FILE is its own binary unit (`2 + file index`).
+fn unit_of(path: &str, file_idx: usize) -> usize {
+    if in_dir(path, "benches")
+        || in_dir(path, "examples")
+        || (in_dir(path, "tests") && !in_dir(path, "fixtures"))
+    {
+        return 2 + file_idx;
+    }
+    if in_dir(path, "lint") && !in_dir(path, "fixtures") {
+        return 1;
+    }
+    0
+}
+
+/// One function in the crate-wide graph.
+pub struct GFn {
+    pub file: usize,
+    /// Index into that file's `FileSyms::fns`.
+    pub local: usize,
+    pub name: String,
+    pub self_type: Option<String>,
+    pub returns_result: bool,
+}
+
+/// How a tainted function first reaches the raw clock, for diagnostics.
+#[derive(Clone)]
+pub enum ClockWitness {
+    Direct { what: &'static str, line: u32 },
+    Call { callee: usize, line: u32 },
+}
+
+pub struct Program<'a> {
+    pub paths: Vec<String>,
+    pub files: &'a [FileSyms],
+    /// Per-file link unit (see [`unit_of`]).
+    units: Vec<usize>,
+    pub fns: Vec<GFn>,
+    /// fn name -> indices into `fns`.
+    by_name: HashMap<String, Vec<usize>>,
+    /// (file, local fn idx) -> global fn idx.
+    by_site: HashMap<(usize, usize), usize>,
+    /// Per-fn resolved callees (global indices), deduped.
+    pub callees: Vec<Vec<usize>>,
+    /// Per-fn may-acquire lock identities (transitive).
+    pub lock_summary: Vec<BTreeSet<String>>,
+    /// Per-fn clock taint witness (None = clean or sanctioned).
+    pub clock_taint: Vec<Option<ClockWitness>>,
+}
+
+impl<'a> Program<'a> {
+    pub fn build(paths: Vec<String>, files: &'a [FileSyms]) -> Program<'a> {
+        let mut fns = Vec::new();
+        let mut by_name: HashMap<String, Vec<usize>> = HashMap::new();
+        let mut by_site = HashMap::new();
+        for (fi, fsym) in files.iter().enumerate() {
+            for (li, f) in fsym.fns.iter().enumerate() {
+                let gid = fns.len();
+                by_name.entry(f.name.clone()).or_default().push(gid);
+                by_site.insert((fi, li), gid);
+                fns.push(GFn {
+                    file: fi,
+                    local: li,
+                    name: f.name.clone(),
+                    self_type: f.self_type.clone(),
+                    returns_result: f.returns_result,
+                });
+            }
+        }
+        let units = (0..files.len()).map(|fi| unit_of(&paths[fi], fi)).collect();
+        let mut prog = Program {
+            paths,
+            files,
+            units,
+            fns,
+            by_name,
+            by_site,
+            callees: Vec::new(),
+            lock_summary: Vec::new(),
+            clock_taint: Vec::new(),
+        };
+        prog.link();
+        prog.summarize_locks();
+        prog.summarize_clock();
+        prog
+    }
+
+    pub fn global_id(&self, file: usize, local: usize) -> usize {
+        self.by_site[&(file, local)]
+    }
+
+    /// A call in `caller_file` may only bind to symbols its binary can
+    /// link: its own unit, or the library from a downstream unit.
+    fn visible(&self, caller_file: usize, callee_file: usize) -> bool {
+        let (cu, ce) = (self.units[caller_file], self.units[callee_file]);
+        cu == ce || (ce == 0 && cu >= 2)
+    }
+
+    /// All in-crate candidates a call from `caller_file` could bind to.
+    /// `caller_self` is the caller's impl type, for `Self::f` qualifiers.
+    pub fn resolve(&self, callee: &Callee, caller_self: Option<&str>, caller_file: usize) -> Vec<usize> {
+        let ids = |name: &str| -> Vec<usize> {
+            self.by_name
+                .get(name)
+                .map(|v| v.as_slice())
+                .unwrap_or(&[])
+                .iter()
+                .copied()
+                .filter(|&g| self.visible(caller_file, self.fns[g].file))
+                .collect()
+        };
+        match callee {
+            // a bare call is a free function (methods always go through
+            // `self.` / `Type::` in Rust)
+            Callee::Bare(n) => {
+                ids(n).into_iter().filter(|&g| self.fns[g].self_type.is_none()).collect()
+            }
+            // a method call binds to any impl/trait method of that name
+            Callee::Method(n) => {
+                ids(n).into_iter().filter(|&g| self.fns[g].self_type.is_some()).collect()
+            }
+            Callee::Qualified(q, n) => {
+                let q = if q == "Self" { caller_self.unwrap_or("Self") } else { q.as_str() };
+                let typed: Vec<usize> = ids(n)
+                    .into_iter()
+                    .filter(|&g| self.fns[g].self_type.as_deref() == Some(q))
+                    .collect();
+                if !typed.is_empty() {
+                    return typed;
+                }
+                // `module::f(..)`: fall back to free functions by name
+                ids(n).into_iter().filter(|&g| self.fns[g].self_type.is_none()).collect()
+            }
+        }
+    }
+
+    fn link(&mut self) {
+        let mut callees: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); self.fns.len()];
+        for (fi, fsym) in self.files.iter().enumerate() {
+            for call in &fsym.calls {
+                let caller = self.global_id(fi, call.fn_idx);
+                let self_ty = self.fns[caller].self_type.clone();
+                for g in self.resolve(&call.callee, self_ty.as_deref(), fi) {
+                    callees[caller].insert(g);
+                }
+            }
+        }
+        self.callees = callees.into_iter().map(|s| s.into_iter().collect()).collect();
+    }
+
+    fn summarize_locks(&mut self) {
+        let mut summary: Vec<BTreeSet<String>> = vec![BTreeSet::new(); self.fns.len()];
+        for (fi, fsym) in self.files.iter().enumerate() {
+            for acq in &fsym.acqs {
+                let g = self.global_id(fi, acq.fn_idx);
+                summary[g].insert(acq.lock.clone());
+            }
+        }
+        // monotone fixpoint over the call graph (bounded by the finite
+        // set of lock identities, so this terminates on recursion too)
+        loop {
+            let mut changed = false;
+            for f in 0..self.fns.len() {
+                for &c in &self.callees[f] {
+                    if c == f {
+                        continue;
+                    }
+                    let add: Vec<String> =
+                        summary[c].iter().filter(|l| !summary[f].contains(*l)).cloned().collect();
+                    if !add.is_empty() {
+                        summary[f].extend(add);
+                        changed = true;
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        self.lock_summary = summary;
+    }
+
+    fn summarize_clock(&mut self) {
+        let sanctioned: Vec<bool> =
+            self.fns.iter().map(|f| is_clock_seam(&self.paths[f.file])).collect();
+        let mut taint: Vec<Option<ClockWitness>> = vec![None; self.fns.len()];
+        for (fi, fsym) in self.files.iter().enumerate() {
+            for cu in &fsym.clock_uses {
+                if let Some(local) = cu.fn_idx {
+                    let g = self.global_id(fi, local);
+                    if !sanctioned[g] {
+                        taint[g] = Some(ClockWitness::Direct { what: cu.what, line: cu.line });
+                    }
+                }
+            }
+        }
+        loop {
+            let mut changed = false;
+            for (fi, fsym) in self.files.iter().enumerate() {
+                for call in &fsym.calls {
+                    let caller = self.global_id(fi, call.fn_idx);
+                    if taint[caller].is_some() || sanctioned[caller] {
+                        continue;
+                    }
+                    let self_ty = self.fns[caller].self_type.clone();
+                    for g in self.resolve(&call.callee, self_ty.as_deref(), fi) {
+                        if g != caller && taint[g].is_some() && !sanctioned[g] {
+                            taint[caller] = Some(ClockWitness::Call { callee: g, line: call.line });
+                            changed = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        self.clock_taint = taint;
+    }
+
+    /// Render a witness chain `f -> g -> Instant::now` for diagnostics.
+    pub fn clock_chain(&self, mut f: usize) -> String {
+        let mut parts = vec![self.fns[f].name.clone()];
+        for _ in 0..32 {
+            match &self.clock_taint[f] {
+                Some(ClockWitness::Call { callee, .. }) => {
+                    parts.push(self.fns[*callee].name.clone());
+                    f = *callee;
+                }
+                Some(ClockWitness::Direct { what, .. }) => {
+                    parts.push((*what).to_string());
+                    break;
+                }
+                None => break,
+            }
+        }
+        parts.join(" -> ")
+    }
+
+    /// Strongly connected components of the crate-wide lock-acquisition
+    /// graph given its edge set, as `lock id -> component id`. An edge's
+    /// endpoints sharing a component (or a self-edge) means a cycle.
+    pub fn lock_sccs(edges: &[(String, String)]) -> HashMap<String, usize> {
+        // iterative Kosaraju: small graphs, zero recursion depth risk
+        let mut nodes: Vec<String> = Vec::new();
+        let mut id: HashMap<String, usize> = HashMap::new();
+        for (a, b) in edges {
+            for n in [a, b] {
+                if !id.contains_key(n) {
+                    id.insert(n.clone(), nodes.len());
+                    nodes.push(n.clone());
+                }
+            }
+        }
+        let n = nodes.len();
+        let mut fwd: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut rev: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (a, b) in edges {
+            fwd[id[a]].push(id[b]);
+            rev[id[b]].push(id[a]);
+        }
+        let mut order = Vec::with_capacity(n);
+        let mut seen = vec![false; n];
+        for s in 0..n {
+            if seen[s] {
+                continue;
+            }
+            let mut stack = vec![(s, 0usize)];
+            seen[s] = true;
+            while let Some(&mut (v, ref mut ei)) = stack.last_mut() {
+                if *ei < fwd[v].len() {
+                    let w = fwd[v][*ei];
+                    *ei += 1;
+                    if !seen[w] {
+                        seen[w] = true;
+                        stack.push((w, 0));
+                    }
+                } else {
+                    order.push(v);
+                    stack.pop();
+                }
+            }
+        }
+        let mut comp = vec![usize::MAX; n];
+        let mut next = 0usize;
+        for &s in order.iter().rev() {
+            if comp[s] != usize::MAX {
+                continue;
+            }
+            let mut stack = vec![s];
+            comp[s] = next;
+            while let Some(v) = stack.pop() {
+                for &w in &rev[v] {
+                    if comp[w] == usize::MAX {
+                        comp[w] = next;
+                        stack.push(w);
+                    }
+                }
+            }
+            next += 1;
+        }
+        nodes.into_iter().enumerate().map(|(i, name)| (name, comp[i])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+    use crate::symbols::parse_file;
+
+    fn build(files: &[(&str, &str)]) -> (Vec<String>, Vec<FileSyms>) {
+        let paths: Vec<String> = files.iter().map(|(p, _)| p.to_string()).collect();
+        let syms: Vec<FileSyms> = files.iter().map(|(_, s)| parse_file(&lex(s))).collect();
+        (paths, syms)
+    }
+
+    #[test]
+    fn cross_file_clock_taint_with_chain() {
+        let (paths, syms) = build(&[
+            ("rust/src/serve/service.rs", "fn drain() { helper(); }"),
+            ("rust/src/util/t.rs", "fn helper() { let t = Instant::now(); }"),
+        ]);
+        let p = Program::build(paths, &syms);
+        let drain = p.global_id(0, 0);
+        assert!(p.clock_taint[drain].is_some());
+        assert_eq!(p.clock_chain(drain), "drain -> helper -> Instant::now");
+    }
+
+    #[test]
+    fn clock_seam_is_sanctioned_and_does_not_propagate() {
+        let (paths, syms) = build(&[
+            ("rust/src/serve/service.rs", "fn drain(c: &C) { c.now(); }"),
+            (
+                "rust/src/serve/clock.rs",
+                "impl Clock for SystemClock { fn now(&self) -> Instant { Instant::now() } }",
+            ),
+        ]);
+        let p = Program::build(paths, &syms);
+        assert!(p.clock_taint[p.global_id(0, 0)].is_none());
+        assert!(p.clock_taint[p.global_id(1, 0)].is_none());
+    }
+
+    #[test]
+    fn lock_summary_is_transitive() {
+        let (paths, syms) = build(&[(
+            "rust/src/a.rs",
+            "fn outer(s: &S) { inner(s); }\nfn inner(s: &S) { let g = s.tx.lock(); }",
+        )]);
+        let p = Program::build(paths, &syms);
+        let outer = p.global_id(0, 0);
+        assert!(p.lock_summary[outer].contains("tx"));
+    }
+
+    #[test]
+    fn integration_test_fns_do_not_taint_the_library() {
+        // a `fn place` with a raw clock inside rust/tests/ (its own
+        // binary) must not taint the library's `.place(..)` sites
+        let (paths, syms) = build(&[
+            ("rust/src/serve/service.rs", "fn drain(p: &P) { p.place(0); }"),
+            (
+                "rust/tests/sharded.rs",
+                "impl Placer for GatedPlacer { fn place(&self, i: usize) { let t = Instant::now(); } }",
+            ),
+        ]);
+        let p = Program::build(paths, &syms);
+        assert!(p.clock_taint[p.global_id(0, 0)].is_none(), "cross-unit call must not bind");
+        // but the test binary itself still sees the library
+        let (paths, syms) = build(&[
+            ("rust/src/util/t.rs", "pub fn stamp() -> u64 { Instant::now(); 0 }"),
+            ("rust/tests/sharded.rs", "fn t() { let s = stamp(); }"),
+        ]);
+        let p = Program::build(paths, &syms);
+        assert!(p.clock_taint[p.global_id(1, 0)].is_some(), "test -> lib call must bind");
+    }
+
+    #[test]
+    fn sccs_find_two_lock_cycle() {
+        let edges = vec![
+            ("a".to_string(), "b".to_string()),
+            ("b".to_string(), "a".to_string()),
+            ("a".to_string(), "c".to_string()),
+        ];
+        let comp = Program::lock_sccs(&edges);
+        assert_eq!(comp["a"], comp["b"]);
+        assert_ne!(comp["a"], comp["c"]);
+    }
+}

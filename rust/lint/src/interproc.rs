@@ -1,0 +1,316 @@
+//! Phase-2 rules: interprocedural analyses over the crate-wide
+//! [`Program`] graph. Each rule's invariant is documented in the rustdoc
+//! header of `main.rs` (the user-facing rule table).
+
+use std::collections::BTreeSet;
+
+use crate::graph::{in_dir, is_clock_seam, ClockWitness, Program};
+use crate::report::Violation;
+
+fn path_of<'a>(prog: &'a Program<'_>, file: usize) -> &'a str {
+    &prog.paths[file]
+}
+
+// ---------------------------------------------------------------------
+// lock-order
+// ---------------------------------------------------------------------
+
+/// Build the global lock-acquisition-order graph — `a -> b` when a
+/// `.lock()` of `b` is reachable (directly or through any call chain)
+/// while a guard on `a` is live — and flag every acquisition site whose
+/// edge participates in a cycle. A cycle means two threads interleaving
+/// those paths can each hold one lock and wait for the other: a static
+/// deadlock, independent of timing.
+pub fn rule_lock_order(prog: &Program<'_>, out: &mut Vec<Violation>) {
+    // edge -> sites: (held, acquired) with the file/line that creates it
+    let mut edges: Vec<(String, String, usize, u32, String)> = Vec::new();
+    for (fi, fsym) in prog.files.iter().enumerate() {
+        for e in &fsym.edges {
+            edges.push((e.held.clone(), e.lock.clone(), fi, e.line, "directly".to_string()));
+        }
+        for hc in &fsym.held_calls {
+            let caller = prog.global_id(fi, hc.fn_idx);
+            let self_ty = prog.fns[caller].self_type.clone();
+            let mut locks: BTreeSet<&String> = BTreeSet::new();
+            for g in prog.resolve(&hc.callee, self_ty.as_deref(), fi) {
+                locks.extend(prog.lock_summary[g].iter());
+            }
+            for l in locks {
+                edges.push((
+                    hc.held.clone(),
+                    l.clone(),
+                    fi,
+                    hc.line,
+                    format!("through `{}(..)`", hc.callee.name()),
+                ));
+            }
+        }
+    }
+    let plain: Vec<(String, String)> =
+        edges.iter().map(|(a, b, _, _, _)| (a.clone(), b.clone())).collect();
+    let comp = Program::lock_sccs(&plain);
+    for (held, lock, fi, line, how) in &edges {
+        let cyclic = (held == lock) || comp.get(held) == comp.get(lock);
+        if cyclic {
+            let shape = if held == lock {
+                format!("re-acquires `{held}` while already held")
+            } else {
+                format!("`{held}` -> `{lock}` closes a cycle with the reverse ordering elsewhere")
+            };
+            out.push(Violation {
+                file: path_of(prog, *fi).to_string(),
+                line: *line,
+                rule: "lock-order",
+                msg: format!(
+                    "lock `{lock}` acquired {how} while guard on `{held}` is live; {shape} \
+                     in the global lock-acquisition graph — impose one acquisition order \
+                     or drop the guard first"
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// clock-transitive
+// ---------------------------------------------------------------------
+
+/// Where direct raw-clock reads are forbidden: all of `serve/` except
+/// the `serve::Clock` seam itself, plus the root `benches/` and
+/// `examples/` trees (their wall-clock timing sections must be visibly
+/// pragma-justified, not ambient).
+fn clock_direct_scope(path: &str) -> bool {
+    (in_dir(path, "serve") && !is_clock_seam(path)) || in_dir(path, "benches") || in_dir(path, "examples")
+}
+
+/// Supersedes the v1 direct-only `clock-discipline`: flags every literal
+/// `Instant::now`/`SystemTime::now` in scope, and — the interprocedural
+/// half — every call site in `serve/` whose callee reaches a raw clock
+/// through any in-crate call chain, with the witness chain in the
+/// message.
+pub fn rule_clock_transitive(prog: &Program<'_>, out: &mut Vec<Violation>) {
+    for (fi, fsym) in prog.files.iter().enumerate() {
+        let path = path_of(prog, fi);
+        if clock_direct_scope(path) {
+            for cu in &fsym.clock_uses {
+                let where_ = if in_dir(path, "serve") {
+                    "inside serve/ breaks TestClock replay determinism; read time through \
+                     the serve::Clock seam (serve/clock.rs)"
+                } else {
+                    "in benches/examples must be a justified timing site; pragma it \
+                     (`lint: allow(clock-transitive) — <why>`) or read through serve::Clock"
+                };
+                out.push(Violation {
+                    file: path.to_string(),
+                    line: cu.line,
+                    rule: "clock-transitive",
+                    msg: format!("{}() {where_}", cu.what),
+                });
+            }
+        }
+        // the transitive half: serve/ call sites reaching a raw clock
+        if !in_dir(path, "serve") || is_clock_seam(path) {
+            continue;
+        }
+        for call in &fsym.calls {
+            let caller = prog.global_id(fi, call.fn_idx);
+            let self_ty = prog.fns[caller].self_type.clone();
+            for g in prog.resolve(&call.callee, self_ty.as_deref(), fi) {
+                if g == caller {
+                    continue;
+                }
+                if prog.clock_taint[g].is_some() {
+                    out.push(Violation {
+                        file: path.to_string(),
+                        line: call.line,
+                        rule: "clock-transitive",
+                        msg: format!(
+                            "`{}(..)` reaches a raw clock through an in-crate call chain \
+                             ({}); serve/ time must flow through the serve::Clock seam",
+                            call.callee.name(),
+                            prog.clock_chain(g)
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// map-iter-determinism
+// ---------------------------------------------------------------------
+
+fn map_iter_scope(path: &str) -> bool {
+    in_dir(path, "placer") || in_dir(path, "serve") || in_dir(path, "sim") || in_dir(path, "mdp")
+}
+
+/// Iterating a `HashMap`/`HashSet` yields a randomized order per process
+/// (`RandomState`); in plan-producing code that order can leak into
+/// device assignments and break the bit-identity guarantees
+/// (`place_many` == sequential `place`, deterministic `TestClock`
+/// trajectories). Identifiers are classified as hash containers by any
+/// declaration anywhere in the walked tree (fields, params, lets), so a
+/// `HashMap` field declared in one file is still caught when iterated
+/// from another.
+pub fn rule_map_iter_determinism(prog: &Program<'_>, out: &mut Vec<Violation>) {
+    let mut maps: BTreeSet<&str> = BTreeSet::new();
+    for fsym in prog.files {
+        maps.extend(fsym.map_names.iter().map(|s| s.as_str()));
+    }
+    for (fi, fsym) in prog.files.iter().enumerate() {
+        let path = path_of(prog, fi);
+        if !map_iter_scope(path) {
+            continue;
+        }
+        for iu in &fsym.iter_uses {
+            if iu.in_test || !maps.contains(iu.name.as_str()) {
+                continue;
+            }
+            out.push(Violation {
+                file: path.to_string(),
+                line: iu.line,
+                rule: "map-iter-determinism",
+                msg: format!(
+                    "iterating `{}` (declared as a HashMap/HashSet) has randomized order \
+                     that can leak into plans and break bit-identity; use a BTreeMap/Vec, \
+                     sort first, or pragma-justify an order-insensitive fold",
+                    iu.name
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// swallowed-result
+// ---------------------------------------------------------------------
+
+fn swallowed_scope(path: &str) -> bool {
+    in_dir(path, "serve") || in_dir(path, "placer") || in_dir(path, "runtime")
+}
+
+/// `let _ = f(..);` or a bare `f(..);` statement where every in-crate
+/// candidate for `f` returns a `Result` silently drops an error on a
+/// library hot path — the failure mode that turns a requeue/drain bug
+/// into corrupted serving stats instead of an `Err`. Route the value
+/// through `?`/match, or pragma-justify a genuinely fire-and-forget
+/// call.
+pub fn rule_swallowed_result(prog: &Program<'_>, out: &mut Vec<Violation>) {
+    for (fi, fsym) in prog.files.iter().enumerate() {
+        let path = path_of(prog, fi);
+        if !swallowed_scope(path) {
+            continue;
+        }
+        for d in &fsym.discards {
+            if d.in_test {
+                continue;
+            }
+            let cands = prog.resolve(&d.callee, d.self_type.as_deref(), fi);
+            if cands.is_empty() || !cands.iter().all(|&g| prog.fns[g].returns_result) {
+                continue;
+            }
+            out.push(Violation {
+                file: path.to_string(),
+                line: d.line,
+                rule: "swallowed-result",
+                msg: format!(
+                    "discarded Result of in-crate `{}(..)`; handle the error (`?`, match) \
+                     or pragma-justify the drop",
+                    d.callee.name()
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+    use crate::symbols::{parse_file, FileSyms};
+
+    fn run(files: &[(&str, &str)], rule: fn(&Program<'_>, &mut Vec<Violation>)) -> Vec<(String, u32)> {
+        let paths: Vec<String> = files.iter().map(|(p, _)| p.to_string()).collect();
+        let syms: Vec<FileSyms> = files.iter().map(|(_, s)| parse_file(&lex(s))).collect();
+        let prog = Program::build(paths, &syms);
+        let mut out = Vec::new();
+        rule(&prog, &mut out);
+        out.into_iter().map(|v| (v.file, v.line)).collect()
+    }
+
+    #[test]
+    fn lock_order_cycle_across_two_fns() {
+        let src = "
+fn fwd(s: &S) {
+    let ga = s.a.lock().unwrap_or_else(p);
+    let gb = s.b.lock().unwrap_or_else(p);
+}
+fn bwd(s: &S) {
+    let gb = s.b.lock().unwrap_or_else(p);
+    take_a(s);
+}
+fn take_a(s: &S) {
+    let ga = s.a.lock().unwrap_or_else(p);
+}
+";
+        let hits = run(&[("rust/src/x.rs", src)], rule_lock_order);
+        let lines: Vec<u32> = hits.iter().map(|(_, l)| *l).collect();
+        assert_eq!(lines, vec![4, 8], "a->b direct edge and b->a held-call edge");
+    }
+
+    #[test]
+    fn lock_order_consistent_is_clean() {
+        let src = "
+fn fwd(s: &S) {
+    let ga = s.a.lock().unwrap_or_else(p);
+    let gb = s.b.lock().unwrap_or_else(p);
+}
+fn also_fwd(s: &S) {
+    let ga = s.a.lock().unwrap_or_else(p);
+    take_b(s);
+}
+fn take_b(s: &S) {
+    let gb = s.b.lock().unwrap_or_else(p);
+}
+";
+        assert!(run(&[("rust/src/x.rs", src)], rule_lock_order).is_empty());
+    }
+
+    #[test]
+    fn clock_transitive_cross_file_leak() {
+        let files = [
+            ("rust/src/serve/service.rs", "fn drain() { let t = stamp(); }"),
+            ("rust/src/util/t.rs", "fn stamp() -> u64 { Instant::now(); 0 }"),
+        ];
+        let hits = run(&files, rule_clock_transitive);
+        assert_eq!(hits, vec![("rust/src/serve/service.rs".to_string(), 1)]);
+    }
+
+    #[test]
+    fn map_iter_flags_cross_file_field() {
+        let files = [
+            ("rust/src/util/tbl.rs", "struct S { by_dev: HashMap<usize, f32> }"),
+            ("rust/src/placer/p.rs", "fn f(s: &S) { for v in s.by_dev { touch(v); } }"),
+        ];
+        let hits = run(&files, rule_map_iter_determinism);
+        assert_eq!(hits, vec![("rust/src/placer/p.rs".to_string(), 1)]);
+    }
+
+    #[test]
+    fn swallowed_result_needs_result_signature() {
+        let src = "
+impl S {
+    fn flush(&mut self) -> Result<usize> { Ok(0) }
+    fn poke(&mut self) { }
+    fn go(&mut self) {
+        let _ = self.flush();
+        self.poke();
+    }
+}
+";
+        let hits = run(&[("rust/src/serve/s.rs", src)], rule_swallowed_result);
+        assert_eq!(hits, vec![("rust/src/serve/s.rs".to_string(), 6)]);
+    }
+}

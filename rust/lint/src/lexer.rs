@@ -1,0 +1,362 @@
+//! The comment/string-aware Rust lexer both analysis phases share.
+//!
+//! Produces a flat token stream (identifiers, punctuation, literal
+//! markers) with 1-based lines **and** char-index spans, plus the line
+//! comments (kept for pragma parsing) and block-comment spans. Literal
+//! bodies are not kept: a rule can never match inside a string, char, or
+//! lifetime — that is the point. Spans exist so the fuzz test can prove
+//! the lexer consumes every non-whitespace char exactly once (tokens,
+//! comments, and whitespace tile the input) on arbitrary byte soup.
+
+/// One lexical token kind. `Str` covers plain, raw, and byte strings.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Punct(char),
+    Num,
+    Str,
+    CharLit,
+    Lifetime,
+}
+
+/// A token with its 1-based start line and `[start, end)` char span.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: Tok,
+    pub line: u32,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// A line comment, kept for pragma parsing. `own_line` is true when no
+/// code token precedes it on its line.
+#[derive(Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+    pub own_line: bool,
+    pub start: usize,
+    pub end: usize,
+}
+
+pub struct Lexed {
+    /// Tokens with non-decreasing start lines.
+    pub toks: Vec<Token>,
+    pub comments: Vec<Comment>,
+    /// `[start, end)` char spans of block comments (not pragma-bearing).
+    pub blocks: Vec<(usize, usize)>,
+}
+
+fn scan_string(cs: &[char], open: usize, line: &mut u32) -> usize {
+    let mut i = open + 1;
+    while i < cs.len() {
+        match cs[i] {
+            // an escape may hide a newline (`\<newline>` continuation)
+            '\\' => {
+                if i + 1 < cs.len() && cs[i + 1] == '\n' {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i.min(cs.len())
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut blocks: Vec<(usize, usize)> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut last_tok_line: u32 = 0;
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (also covers /// and //! doc comments)
+        if c == '/' && i + 1 < cs.len() && cs[i + 1] == '/' {
+            let open = i;
+            let start = i + 2;
+            let mut j = start;
+            while j < cs.len() && cs[j] != '\n' {
+                j += 1;
+            }
+            let text: String = cs[start..j].iter().collect();
+            comments.push(Comment {
+                line,
+                text,
+                own_line: last_tok_line != line,
+                start: open,
+                end: j,
+            });
+            i = j;
+            continue;
+        }
+        // block comment, nesting-aware
+        if c == '/' && i + 1 < cs.len() && cs[i + 1] == '*' {
+            let open = i;
+            let mut depth = 1u32;
+            let mut j = i + 2;
+            while j < cs.len() && depth > 0 {
+                if cs[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if cs[j] == '/' && j + 1 < cs.len() && cs[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if cs[j] == '*' && j + 1 < cs.len() && cs[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blocks.push((open, j.min(cs.len())));
+            i = j;
+            continue;
+        }
+        let tline = line;
+        let tstart = i;
+        if c == '"' {
+            i = scan_string(&cs, i, &mut line);
+            toks.push(Token { kind: Tok::Str, line: tline, start: tstart, end: i });
+            last_tok_line = tline;
+            continue;
+        }
+        if c == '\'' {
+            // lifetime vs char literal
+            if i + 1 < cs.len() && cs[i + 1] == '\\' {
+                // escaped char: '\n', '\'', '\u{1F}', ...
+                let mut j = i + 3; // past the escape introducer + one char
+                while j < cs.len() && cs[j] != '\'' {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                i = (j + 1).min(cs.len());
+                toks.push(Token { kind: Tok::CharLit, line: tline, start: tstart, end: i });
+            } else if i + 1 < cs.len()
+                && (cs[i + 1].is_alphabetic() || cs[i + 1] == '_')
+                && !(i + 2 < cs.len() && cs[i + 2] == '\'')
+            {
+                let mut j = i + 1;
+                while j < cs.len() && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                    j += 1;
+                }
+                i = j;
+                toks.push(Token { kind: Tok::Lifetime, line: tline, start: tstart, end: i });
+            } else {
+                let mut j = i + 1;
+                while j < cs.len() && cs[j] != '\'' {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                i = (j + 1).min(cs.len());
+                toks.push(Token { kind: Tok::CharLit, line: tline, start: tstart, end: i });
+            }
+            last_tok_line = tline;
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            let mut j = i;
+            while j < cs.len() && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            let word: String = cs[start..j].iter().collect();
+            // raw / byte string prefixes: r"..", r#".."#, b"..", br#".."#
+            if (word == "r" || word == "b" || word == "br" || word == "rb")
+                && j < cs.len()
+                && (cs[j] == '"' || cs[j] == '#')
+            {
+                let mut hashes = 0usize;
+                let mut k = j;
+                while k < cs.len() && cs[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < cs.len() && cs[k] == '"' {
+                    if word == "b" && hashes == 0 {
+                        // byte string: normal escape rules
+                        i = scan_string(&cs, k, &mut line);
+                    } else {
+                        // raw string: ends at `"` followed by `hashes` #s
+                        k += 1;
+                        while k < cs.len() {
+                            if cs[k] == '\n' {
+                                line += 1;
+                                k += 1;
+                                continue;
+                            }
+                            if cs[k] == '"' {
+                                let mut h = 0usize;
+                                let mut m = k + 1;
+                                while m < cs.len() && cs[m] == '#' && h < hashes {
+                                    h += 1;
+                                    m += 1;
+                                }
+                                if h == hashes {
+                                    k = m;
+                                    break;
+                                }
+                            }
+                            k += 1;
+                        }
+                        i = k.min(cs.len());
+                    }
+                    toks.push(Token { kind: Tok::Str, line: tline, start: tstart, end: i });
+                    last_tok_line = tline;
+                    continue;
+                }
+                // `r#ident` raw identifier or stray hash: fall through
+            }
+            toks.push(Token { kind: Tok::Ident(word), line: tline, start: tstart, end: j });
+            last_tok_line = tline;
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < cs.len() && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            // fractional part — but not `0..n` ranges or `x.0` that follow
+            if j + 1 < cs.len() && cs[j] == '.' && cs[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < cs.len() && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                    j += 1;
+                }
+            }
+            toks.push(Token { kind: Tok::Num, line: tline, start: tstart, end: j });
+            last_tok_line = tline;
+            i = j;
+            continue;
+        }
+        toks.push(Token { kind: Tok::Punct(c), line: tline, start: tstart, end: i + 1 });
+        last_tok_line = tline;
+        i += 1;
+    }
+    Lexed { toks, comments, blocks }
+}
+
+// ---------------------------------------------------------------------
+// Token helpers shared by every rule and the symbol parser
+// ---------------------------------------------------------------------
+
+pub fn ident_at(toks: &[Token], i: usize) -> Option<&str> {
+    match toks.get(i) {
+        Some(Token { kind: Tok::Ident(s), .. }) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+pub fn punct_at(toks: &[Token], i: usize, c: char) -> bool {
+    matches!(toks.get(i), Some(Token { kind: Tok::Punct(p), .. }) if *p == c)
+}
+
+/// Index of the `)`/`]`/`}` matching the opener at `open`, if any.
+pub fn match_delim(toks: &[Token], open: usize, oc: char, cc: char) -> Option<usize> {
+    let mut depth = 0i64;
+    let mut i = open;
+    while i < toks.len() {
+        if punct_at(toks, i, oc) {
+            depth += 1;
+        } else if punct_at(toks, i, cc) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_tile_simple_source() {
+        let src = "fn f() { let s = \"a b\"; /* x */ s.len() } // tail\n";
+        assert_tiles(src);
+    }
+
+    /// Deterministic LCG-driven fuzz: random soups of lexer-hostile chars
+    /// must lex without panicking, with in-bounds, non-overlapping,
+    /// ordered spans whose complement is pure whitespace — i.e. tokens,
+    /// comments, and whitespace tile the input exactly.
+    #[test]
+    fn fuzz_byte_soup_tiles_and_never_panics() {
+        let alphabet: Vec<char> = "ab_ \"'\\/*#r!{}()<>:;.,0129 \n\t-=&|éλ\u{1F600}"
+            .chars()
+            .collect();
+        let mut state: u64 = 0x5EED_CAFE_F00D_0001;
+        let mut next = move || {
+            // Knuth MMIX LCG — deterministic across runs and platforms
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as usize
+        };
+        for case in 0..300 {
+            let len = next() % 160;
+            let src: String = (0..len).map(|_| alphabet[next() % alphabet.len()]).collect();
+            let lx = lex(&src); // must not panic
+            check_tiles(&src, &lx, case);
+        }
+    }
+
+    fn assert_tiles(src: &str) {
+        let lx = lex(src);
+        check_tiles(src, &lx, usize::MAX);
+    }
+
+    fn check_tiles(src: &str, lx: &Lexed, case: usize) {
+        let cs: Vec<char> = src.chars().collect();
+        let mut spans: Vec<(usize, usize)> = lx.toks.iter().map(|t| (t.start, t.end)).collect();
+        spans.extend(lx.comments.iter().map(|c| (c.start, c.end)));
+        spans.extend(lx.blocks.iter().copied());
+        spans.sort();
+        let mut covered = vec![false; cs.len()];
+        let mut prev_end = 0usize;
+        for &(s, e) in &spans {
+            assert!(s <= e && e <= cs.len(), "case {case}: span ({s},{e}) out of bounds");
+            assert!(s >= prev_end, "case {case}: span ({s},{e}) overlaps previous");
+            prev_end = e;
+            for slot in covered.iter_mut().take(e).skip(s) {
+                *slot = true;
+            }
+        }
+        for (i, &c) in cs.iter().enumerate() {
+            if !covered[i] {
+                assert!(
+                    c.is_whitespace(),
+                    "case {case}: uncovered non-whitespace char {c:?} at {i} in {src:?}"
+                );
+            }
+        }
+        // token start lines are non-decreasing and 1-based
+        let mut prev = 1u32;
+        for t in &lx.toks {
+            assert!(t.line >= prev && t.line >= 1, "case {case}: line order broke");
+            prev = t.line;
+        }
+    }
+}

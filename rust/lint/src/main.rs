@@ -1,19 +1,34 @@
-//! `dreamshard-lint` — the tree's executable invariants.
+//! `dreamshard-lint` — the tree's executable invariants, v2.
 //!
-//! A zero-dependency static-analysis pass over `rust/src` (and this
-//! crate's own `src`, so the linter lints itself). It lexes every `.rs`
-//! file with a small comment/string-aware Rust lexer — so text inside
-//! string literals, doc comments, and `/* */` blocks never trips a rule,
-//! and patterns split across lines still match — then runs a fixed rule
-//! set, printing `file:line: rule: message` per violation and exiting
-//! nonzero if any survive.
+//! A zero-dependency two-phase static analyzer. **Phase 1** lexes every
+//! `.rs` file with a comment/string-aware Rust lexer (text inside string
+//! literals, doc comments, and `/* */` blocks never trips a rule;
+//! patterns split across lines still match) and parses each token stream
+//! into a lightweight symbol table: `fn` items with their enclosing
+//! `impl`/`trait` type, call sites, lock acquisitions with live guards,
+//! raw-clock uses, hash-container declarations, and discarded-call
+//! statements. **Phase 2** merges the tables into one crate-wide call
+//! graph and runs the interprocedural rules over it, so a helper that
+//! takes a second lock or reads the wall clock is caught across any
+//! number of function and file boundaries. Violations print as
+//! `file:line: rule: message` and fail the run.
 //!
 //! Run it from the repo root (CI runs exactly this as a hard gate):
 //!
 //! ```text
-//! cargo run -p dreamshard-lint            # walk rust/src + rust/lint/src
-//! cargo run -p dreamshard-lint -- <path>  # walk explicit files/dirs
+//! cargo run -p dreamshard-lint                 # default walk (see below)
+//! cargo run -p dreamshard-lint -- <paths>      # lint explicit files/dirs
+//! cargo run -p dreamshard-lint -- --json       # machine-readable report
+//! cargo run -p dreamshard-lint -- --github     # ::error workflow annotations
+//! cargo run -p dreamshard-lint -- --quiet      # summary line only
 //! ```
+//!
+//! The default walk covers `rust/src`, `rust/lint/src`, `benches/`,
+//! `examples/`, and `rust/tests/` — every path-scoped rule applies only
+//! where its invariant lives (table below). Exit codes: **0** clean,
+//! **1** findings, **2** I/O or usage error (unreadable paths are an
+//! error, never a panic or a silent skip). The `--json` schema is
+//! documented in [`report`] and pinned by an integration test.
 //!
 //! # Escaping a rule
 //!
@@ -31,25 +46,18 @@
 //!
 //! # The rules
 //!
-//! ## `nan-ordering`
+//! ## Local (single-file) rules
+//!
+//! ### `nan-ordering`
 //!
 //! The cost features driving every placement are raw floats (PAPER.md
 //! §4); one corrupt table feature must not panic a serving drain. The
 //! crate's ordering convention is `total_cmp`, so this rule forbids
 //! `partial_cmp(..).unwrap()` / `.expect(..)` chains (multi-line aware)
 //! and any `sort_by` / `sort_unstable_by` / `max_by` / `min_by`
-//! comparator built on `partial_cmp`. Supersedes the single-line CI grep
-//! that used to guard this.
+//! comparator built on `partial_cmp`. Applies everywhere.
 //!
-//! ## `clock-discipline`
-//!
-//! The serving controller's trajectories are deterministic because every
-//! timestamp in `serve/` flows through the swappable `serve::Clock` seam
-//! (`tests/control.rs` replays whole control runs on a `TestClock`). A
-//! single `Instant::now()` / `SystemTime::now()` inside `serve/` outside
-//! `serve/clock.rs` silently breaks that replay, so it is forbidden.
-//!
-//! ## `env-discipline`
+//! ### `env-discipline`
 //!
 //! Environment variables are configuration read at two sanctioned
 //! places: `runtime/mod.rs` (`DREAMSHARD_WORKERS`, `DREAMSHARD_ARTIFACTS`
@@ -57,7 +65,7 @@
 //! harness. `std::env::var` anywhere else creates untracked config
 //! surface that CI matrices cannot see, so it is forbidden.
 //!
-//! ## `panic-policy`
+//! ### `panic-policy`
 //!
 //! `serve/`, `placer/`, and `runtime/` are library hot paths shared by
 //! every drain thread: a panic there takes down a shard, not a test. In
@@ -66,675 +74,105 @@
 //! (`Result`, `Context`, `bail!`), or justify the true invariants with a
 //! pragma. `#[cfg(test)]` modules and `#[test]` functions are exempt.
 //!
-//! ## `lock-across-wait`
+//! ### `lock-across-wait`
 //!
 //! The runtime is shared as `Arc<Runtime>` over a small worker pool;
 //! `submit`/`Ticket::wait` is the dispatch path. Holding a `.lock()`
 //! guard across a `.submit(..)` or `.wait(..)` in the same scope is the
 //! deadlock shape that stalls every shard at once (the pool cannot make
-//! progress the guard is waiting on). The rule tracks `let`-bound lock
-//! guards (including `if let`/`while let`) until their scope closes or
-//! an explicit `drop(guard)`, and flags any `submit`/`wait` call made
-//! while one is live. Heuristic by design: a `match m.lock()` guard is
-//! not tracked — keep lock scopes small enough that this never matters.
+//! progress the guard is waiting on). Tracks `let`-bound guards until
+//! their scope closes or an explicit `drop(guard)`. Applies everywhere.
+//!
+//! ## Interprocedural (crate-graph) rules
+//!
+//! ### `lock-order`
+//!
+//! Builds the global lock-acquisition graph: an edge `a -> b` wherever a
+//! `.lock()` of `b` is reached — directly or transitively through any
+//! in-crate call chain — while a guard on `a` is live. A cycle in that
+//! graph is a static deadlock (two threads interleaving those paths each
+//! hold one lock and wait for the other); every acquisition site on a
+//! cyclic edge is flagged, including same-lock re-entry. Applies
+//! everywhere. Pragma: `lint: allow(lock-order) — <why the orders can
+//! never interleave>`.
+//!
+//! ### `clock-transitive`
+//!
+//! Supersedes v1's direct-only `clock-discipline`. The serving
+//! controller's trajectories are deterministic because every timestamp
+//! in `serve/` flows through the swappable `serve::Clock` seam
+//! (`tests/control.rs` replays whole control runs on a `TestClock`).
+//! This rule flags every literal `Instant::now()`/`SystemTime::now()` in
+//! `serve/` (outside `serve/clock.rs`, the sanctioned seam), **and**
+//! every `serve/` call site whose callee reaches a raw clock through any
+//! in-crate call chain — the witness chain is printed. Direct raw-clock
+//! reads in `benches/` and `examples/` are also flagged so wall-clock
+//! timing sections are visibly pragma-justified rather than ambient.
+//!
+//! ### `map-iter-determinism`
+//!
+//! `HashMap`/`HashSet` iteration order is randomized per process; in
+//! `placer/`, `serve/`, `sim/`, and `mdp/` non-test code that order can
+//! leak into plans and break the bit-identity guarantees (`place_many`
+//! identical to sequential `place`). Identifiers are classified as hash
+//! containers by any declaration in the walked tree — a `HashMap` field
+//! declared in one file is caught when iterated from another. Use
+//! `BTreeMap`, sort first, or pragma-justify an order-insensitive fold.
+//!
+//! ### `swallowed-result`
+//!
+//! In `serve/`, `placer/`, and `runtime/` non-test code, `let _ = f(..);`
+//! or a bare `f(..);` statement whose in-crate callee returns `Result`
+//! silently drops an error on a library hot path. Handle it (`?`,
+//! match), or pragma-justify a genuinely fire-and-forget call.
 
-use std::collections::HashSet;
+mod engine;
+mod graph;
+mod interproc;
+mod lexer;
+mod report;
+mod rules;
+mod symbols;
+
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::process::ExitCode;
 
-/// The five enforced rules (the `pragma` meta-rule reports malformed
-/// escapes and is not itself escapable).
-const RULES: [&str; 5] = [
-    "nan-ordering",
-    "clock-discipline",
-    "env-discipline",
-    "panic-policy",
-    "lock-across-wait",
-];
+use report::Format;
 
-// ---------------------------------------------------------------------
-// Lexer
-// ---------------------------------------------------------------------
-
-/// One lexical token. Literal bodies are not kept: a rule can never
-/// match inside a string, char, or lifetime — that is the point.
-#[derive(Clone, Debug, PartialEq)]
-enum Tok {
-    Ident(String),
-    Punct(char),
-    Num,
-    Str,
-    CharLit,
-    Lifetime,
+struct Options {
+    roots: Vec<PathBuf>,
+    format: Format,
+    quiet: bool,
 }
 
-/// A line comment, kept for pragma parsing. `own_line` is true when no
-/// code token precedes it on its line.
-#[derive(Debug)]
-struct Comment {
-    line: u32,
-    text: String,
-    own_line: bool,
+fn parse_args(args: &[String]) -> Result<Options, String> {
+    let mut opts = Options { roots: Vec::new(), format: Format::Text, quiet: false };
+    for a in args {
+        match a.as_str() {
+            "--json" => opts.format = Format::Json,
+            "--github" => opts.format = Format::Github,
+            "--quiet" => opts.quiet = true,
+            "--help" | "-h" => {
+                return Err("usage: dreamshard-lint [--json|--github] [--quiet] [paths..]"
+                    .to_string())
+            }
+            f if f.starts_with('-') => return Err(format!("unknown flag `{f}` (try --help)")),
+            p => opts.roots.push(PathBuf::from(p)),
+        }
+    }
+    if opts.roots.is_empty() {
+        opts.roots = ["rust/src", "rust/lint/src", "benches", "examples", "rust/tests"]
+            .iter()
+            .map(PathBuf::from)
+            .collect();
+    }
+    Ok(opts)
 }
 
-struct Lexed {
-    /// Tokens with their 1-based start line (non-decreasing).
-    toks: Vec<(Tok, u32)>,
-    comments: Vec<Comment>,
-}
-
-fn scan_string(cs: &[char], open: usize, line: &mut u32) -> usize {
-    let mut i = open + 1;
-    while i < cs.len() {
-        match cs[i] {
-            // an escape may hide a newline (`\<newline>` continuation)
-            '\\' => {
-                if i + 1 < cs.len() && cs[i + 1] == '\n' {
-                    *line += 1;
-                }
-                i += 2;
-            }
-            '"' => return i + 1,
-            '\n' => {
-                *line += 1;
-                i += 1;
-            }
-            _ => i += 1,
-        }
-    }
-    i
-}
-
-fn lex(src: &str) -> Lexed {
-    let cs: Vec<char> = src.chars().collect();
-    let mut toks: Vec<(Tok, u32)> = Vec::new();
-    let mut comments: Vec<Comment> = Vec::new();
-    let mut i = 0usize;
-    let mut line: u32 = 1;
-    let mut last_tok_line: u32 = 0;
-    while i < cs.len() {
-        let c = cs[i];
-        if c == '\n' {
-            line += 1;
-            i += 1;
-            continue;
-        }
-        if c.is_whitespace() {
-            i += 1;
-            continue;
-        }
-        // line comment (also covers /// and //! doc comments)
-        if c == '/' && i + 1 < cs.len() && cs[i + 1] == '/' {
-            let start = i + 2;
-            let mut j = start;
-            while j < cs.len() && cs[j] != '\n' {
-                j += 1;
-            }
-            let text: String = cs[start..j].iter().collect();
-            comments.push(Comment { line, text, own_line: last_tok_line != line });
-            i = j;
-            continue;
-        }
-        // block comment, nesting-aware
-        if c == '/' && i + 1 < cs.len() && cs[i + 1] == '*' {
-            let mut depth = 1u32;
-            let mut j = i + 2;
-            while j < cs.len() && depth > 0 {
-                if cs[j] == '\n' {
-                    line += 1;
-                    j += 1;
-                } else if cs[j] == '/' && j + 1 < cs.len() && cs[j + 1] == '*' {
-                    depth += 1;
-                    j += 2;
-                } else if cs[j] == '*' && j + 1 < cs.len() && cs[j + 1] == '/' {
-                    depth -= 1;
-                    j += 2;
-                } else {
-                    j += 1;
-                }
-            }
-            i = j;
-            continue;
-        }
-        let tline = line;
-        if c == '"' {
-            i = scan_string(&cs, i, &mut line);
-            toks.push((Tok::Str, tline));
-            last_tok_line = tline;
-            continue;
-        }
-        if c == '\'' {
-            // lifetime vs char literal
-            if i + 1 < cs.len() && cs[i + 1] == '\\' {
-                // escaped char: '\n', '\'', '\u{1F}', ...
-                let mut j = i + 3; // past the escape introducer + one char
-                while j < cs.len() && cs[j] != '\'' {
-                    if cs[j] == '\n' {
-                        line += 1;
-                    }
-                    j += 1;
-                }
-                i = j + 1;
-                toks.push((Tok::CharLit, tline));
-            } else if i + 1 < cs.len()
-                && (cs[i + 1].is_alphabetic() || cs[i + 1] == '_')
-                && !(i + 2 < cs.len() && cs[i + 2] == '\'')
-            {
-                let mut j = i + 1;
-                while j < cs.len() && (cs[j].is_alphanumeric() || cs[j] == '_') {
-                    j += 1;
-                }
-                i = j;
-                toks.push((Tok::Lifetime, tline));
-            } else {
-                let mut j = i + 1;
-                while j < cs.len() && cs[j] != '\'' {
-                    if cs[j] == '\n' {
-                        line += 1;
-                    }
-                    j += 1;
-                }
-                i = j + 1;
-                toks.push((Tok::CharLit, tline));
-            }
-            last_tok_line = tline;
-            continue;
-        }
-        if c.is_alphabetic() || c == '_' {
-            let start = i;
-            let mut j = i;
-            while j < cs.len() && (cs[j].is_alphanumeric() || cs[j] == '_') {
-                j += 1;
-            }
-            let word: String = cs[start..j].iter().collect();
-            // raw / byte string prefixes: r"..", r#".."#, b"..", br#".."#
-            if (word == "r" || word == "b" || word == "br" || word == "rb")
-                && j < cs.len()
-                && (cs[j] == '"' || cs[j] == '#')
-            {
-                let mut hashes = 0usize;
-                let mut k = j;
-                while k < cs.len() && cs[k] == '#' {
-                    hashes += 1;
-                    k += 1;
-                }
-                if k < cs.len() && cs[k] == '"' {
-                    if word == "b" && hashes == 0 {
-                        // byte string: normal escape rules
-                        i = scan_string(&cs, k, &mut line);
-                    } else {
-                        // raw string: ends at `"` followed by `hashes` #s
-                        k += 1;
-                        while k < cs.len() {
-                            if cs[k] == '\n' {
-                                line += 1;
-                                k += 1;
-                                continue;
-                            }
-                            if cs[k] == '"' {
-                                let mut h = 0usize;
-                                let mut m = k + 1;
-                                while m < cs.len() && cs[m] == '#' && h < hashes {
-                                    h += 1;
-                                    m += 1;
-                                }
-                                if h == hashes {
-                                    k = m;
-                                    break;
-                                }
-                            }
-                            k += 1;
-                        }
-                        i = k;
-                    }
-                    toks.push((Tok::Str, tline));
-                    last_tok_line = tline;
-                    continue;
-                }
-                // `r#ident` raw identifier or stray hash: fall through
-            }
-            toks.push((Tok::Ident(word), tline));
-            last_tok_line = tline;
-            i = j;
-            continue;
-        }
-        if c.is_ascii_digit() {
-            let mut j = i;
-            while j < cs.len() && (cs[j].is_alphanumeric() || cs[j] == '_') {
-                j += 1;
-            }
-            // fractional part — but not `0..n` ranges or `x.0` that follow
-            if j + 1 < cs.len() && cs[j] == '.' && cs[j + 1].is_ascii_digit() {
-                j += 1;
-                while j < cs.len() && (cs[j].is_alphanumeric() || cs[j] == '_') {
-                    j += 1;
-                }
-            }
-            toks.push((Tok::Num, tline));
-            last_tok_line = tline;
-            i = j;
-            continue;
-        }
-        toks.push((Tok::Punct(c), tline));
-        last_tok_line = tline;
-        i += 1;
-    }
-    Lexed { toks, comments }
-}
-
-// ---------------------------------------------------------------------
-// Token helpers
-// ---------------------------------------------------------------------
-
-fn ident_at<'a>(toks: &'a [(Tok, u32)], i: usize) -> Option<&'a str> {
-    match toks.get(i) {
-        Some((Tok::Ident(s), _)) => Some(s.as_str()),
-        _ => None,
-    }
-}
-
-fn punct_at(toks: &[(Tok, u32)], i: usize, c: char) -> bool {
-    matches!(toks.get(i), Some((Tok::Punct(p), _)) if *p == c)
-}
-
-/// Index of the `)`/`]`/`}` matching the opener at `open`, if any.
-fn match_delim(toks: &[(Tok, u32)], open: usize, oc: char, cc: char) -> Option<usize> {
-    let mut depth = 0i64;
-    let mut i = open;
-    while i < toks.len() {
-        if punct_at(toks, i, oc) {
-            depth += 1;
-        } else if punct_at(toks, i, cc) {
-            depth -= 1;
-            if depth == 0 {
-                return Some(i);
-            }
-        }
-        i += 1;
-    }
-    None
-}
-
-// ---------------------------------------------------------------------
-// Test-code spans (panic-policy exemption)
-// ---------------------------------------------------------------------
-
-/// Token-index ranges `[start, end)` covering `#[test]` functions and
-/// `#[cfg(test)]` / `#[cfg(all(test, ..))]` items (`#[cfg(not(test))]`
-/// is deliberately NOT a test span).
-fn test_spans(toks: &[(Tok, u32)]) -> Vec<(usize, usize)> {
-    let mut spans: Vec<(usize, usize)> = Vec::new();
-    let mut i = 0usize;
-    while i < toks.len() {
-        if punct_at(toks, i, '#') && punct_at(toks, i + 1, '[') {
-            let Some(close) = match_delim(toks, i + 1, '[', ']') else {
-                i += 1;
-                continue;
-            };
-            let attr = &toks[i + 2..close];
-            let has = |w: &str| attr.iter().any(|(t, _)| matches!(t, Tok::Ident(s) if s == w));
-            let exact_test = attr.len() == 1 && has("test");
-            let cfg_test = ident_at(toks, i + 2) == Some("cfg") && has("test") && !has("not");
-            if exact_test || cfg_test {
-                // skip the attributed item: to the matching `}` of its
-                // first brace, or to a top-level `;` (e.g. a `use`)
-                let mut depth = 0i64;
-                let mut j = close + 1;
-                while j < toks.len() {
-                    if punct_at(toks, j, '{') {
-                        depth += 1;
-                    } else if punct_at(toks, j, '}') {
-                        depth -= 1;
-                        if depth == 0 {
-                            j += 1;
-                            break;
-                        }
-                    } else if punct_at(toks, j, ';') && depth == 0 {
-                        j += 1;
-                        break;
-                    }
-                    j += 1;
-                }
-                spans.push((i, j));
-                i = j;
-                continue;
-            }
-            i = close + 1;
-            continue;
-        }
-        i += 1;
-    }
-    spans
-}
-
-// ---------------------------------------------------------------------
-// Pragmas
-// ---------------------------------------------------------------------
-
-struct Violation {
-    line: u32,
-    rule: &'static str,
-    msg: String,
-}
-
-/// Parse `lint: allow(<rule>) — <reason>` comments. Returns the set of
-/// `(target_line, rule)` suppressions plus violations for malformed
-/// pragmas (missing reason, unknown rule, unparseable body).
-fn parse_pragmas(lx: &Lexed) -> (HashSet<(u32, String)>, Vec<Violation>) {
-    let mut allowed: HashSet<(u32, String)> = HashSet::new();
-    let mut viols: Vec<Violation> = Vec::new();
-    for c in &lx.comments {
-        let t = c.text.trim_start_matches(['/', '!']).trim();
-        let Some(rest) = t.strip_prefix("lint:") else { continue };
-        let rest = rest.trim();
-        let body = rest.strip_prefix("allow").map(str::trim_start);
-        let parsed = body.and_then(|b| {
-            let inner = b.strip_prefix('(')?;
-            let close = inner.find(')')?;
-            Some((inner[..close].to_string(), inner[close + 1..].to_string()))
-        });
-        let Some((rules, reason)) = parsed else {
-            viols.push(Violation {
-                line: c.line,
-                rule: "pragma",
-                msg: format!("unparseable lint pragma `{t}`; use `lint: allow(<rule>) — <reason>`"),
-            });
-            continue;
-        };
-        if !reason.chars().any(|ch| ch.is_alphanumeric()) {
-            viols.push(Violation {
-                line: c.line,
-                rule: "pragma",
-                msg: "lint pragma has no justification; append `— <reason>`".to_string(),
-            });
-            continue;
-        }
-        // own-line pragmas target the next line that has code on it
-        let target = if c.own_line {
-            lx.toks
-                .iter()
-                .map(|&(_, l)| l)
-                .find(|&l| l > c.line)
-                .unwrap_or(c.line)
-        } else {
-            c.line
-        };
-        for r in rules.split(',') {
-            let r = r.trim();
-            if RULES.contains(&r) {
-                allowed.insert((target, r.to_string()));
-            } else {
-                viols.push(Violation {
-                    line: c.line,
-                    rule: "pragma",
-                    msg: format!("unknown rule `{r}` in lint pragma (rules: {})", RULES.join(", ")),
-                });
-            }
-        }
-    }
-    (allowed, viols)
-}
-
-// ---------------------------------------------------------------------
-// Rules
-// ---------------------------------------------------------------------
-
-fn rule_nan_ordering(toks: &[(Tok, u32)], out: &mut Vec<Violation>) {
-    for i in 0..toks.len() {
-        if ident_at(toks, i) == Some("partial_cmp") && punct_at(toks, i + 1, '(') {
-            if let Some(close) = match_delim(toks, i + 1, '(', ')') {
-                if punct_at(toks, close + 1, '.')
-                    && matches!(ident_at(toks, close + 2), Some("unwrap") | Some("expect"))
-                    && punct_at(toks, close + 3, '(')
-                {
-                    out.push(Violation {
-                        line: toks[i].1,
-                        rule: "nan-ordering",
-                        msg: "partial_cmp(..).unwrap()/.expect(..) panics on NaN; \
-                              use total_cmp for a NaN-safe total order"
-                            .to_string(),
-                    });
-                }
-            }
-        }
-        if let Some(name) = ident_at(toks, i) {
-            if matches!(name, "sort_by" | "sort_unstable_by" | "max_by" | "min_by")
-                && punct_at(toks, i + 1, '(')
-            {
-                if let Some(close) = match_delim(toks, i + 1, '(', ')') {
-                    if (i + 2..close).any(|j| ident_at(toks, j) == Some("partial_cmp")) {
-                        out.push(Violation {
-                            line: toks[i].1,
-                            rule: "nan-ordering",
-                            msg: format!(
-                                "`{name}` comparator built on partial_cmp; \
-                                 use total_cmp for a NaN-safe total order"
-                            ),
-                        });
-                    }
-                }
-            }
-        }
-    }
-}
-
-fn rule_clock_discipline(toks: &[(Tok, u32)], out: &mut Vec<Violation>) {
-    for i in 0..toks.len() {
-        if let Some(ty) = ident_at(toks, i) {
-            if (ty == "Instant" || ty == "SystemTime")
-                && punct_at(toks, i + 1, ':')
-                && punct_at(toks, i + 2, ':')
-                && ident_at(toks, i + 3) == Some("now")
-            {
-                out.push(Violation {
-                    line: toks[i].1,
-                    rule: "clock-discipline",
-                    msg: format!(
-                        "{ty}::now() inside serve/ breaks TestClock replay determinism; \
-                         read time through the serve::Clock seam (serve/clock.rs)"
-                    ),
-                });
-            }
-        }
-    }
-}
-
-fn rule_env_discipline(toks: &[(Tok, u32)], out: &mut Vec<Violation>) {
-    for i in 0..toks.len() {
-        if ident_at(toks, i) == Some("env")
-            && punct_at(toks, i + 1, ':')
-            && punct_at(toks, i + 2, ':')
-            && matches!(ident_at(toks, i + 3), Some("var") | Some("var_os"))
-        {
-            out.push(Violation {
-                line: toks[i].1,
-                rule: "env-discipline",
-                msg: "std::env::var outside runtime/mod.rs and bench/ creates untracked \
-                      config surface; plumb the setting through an explicit parameter"
-                    .to_string(),
-            });
-        }
-    }
-}
-
-fn rule_panic_policy(toks: &[(Tok, u32)], spans: &[(usize, usize)], out: &mut Vec<Violation>) {
-    let in_test = |i: usize| spans.iter().any(|&(a, b)| a <= i && i < b);
-    for i in 0..toks.len() {
-        if in_test(i) {
-            continue;
-        }
-        if punct_at(toks, i, '.')
-            && matches!(ident_at(toks, i + 1), Some("unwrap") | Some("expect"))
-            && punct_at(toks, i + 2, '(')
-        {
-            let what = ident_at(toks, i + 1).unwrap_or("unwrap");
-            out.push(Violation {
-                line: toks[i + 1].1,
-                rule: "panic-policy",
-                msg: format!(
-                    ".{what}(..) in a library hot path panics the shard; route through \
-                     util::error (Result/Context/bail!) or justify with a lint pragma"
-                ),
-            });
-        }
-        if ident_at(toks, i) == Some("panic") && punct_at(toks, i + 1, '!') {
-            out.push(Violation {
-                line: toks[i].1,
-                rule: "panic-policy",
-                msg: "panic! in a library hot path takes down the shard; route through \
-                      util::error (Result/Context/bail!) or justify with a lint pragma"
-                    .to_string(),
-            });
-        }
-    }
-}
-
-fn rule_lock_across_wait(toks: &[(Tok, u32)], out: &mut Vec<Violation>) {
-    struct Guard {
-        name: String,
-        depth: i64,
-    }
-    let mut depth: i64 = 0;
-    let mut guards: Vec<Guard> = Vec::new();
-    let mut stmt_has_let = false;
-    let mut stmt_let_name: Option<String> = None;
-    let mut stmt_lock = false;
-    let mut expect_let_name = false;
-    for i in 0..toks.len() {
-        match &toks[i].0 {
-            Tok::Punct('{') => {
-                depth += 1;
-                // `if let` / `while let` guard: scoped to this block
-                if stmt_has_let && stmt_lock {
-                    if let Some(n) = stmt_let_name.take() {
-                        guards.push(Guard { name: n, depth });
-                    }
-                }
-                stmt_has_let = false;
-                stmt_lock = false;
-                stmt_let_name = None;
-                expect_let_name = false;
-            }
-            Tok::Punct('}') => {
-                depth -= 1;
-                guards.retain(|g| g.depth <= depth);
-                stmt_has_let = false;
-                stmt_lock = false;
-                stmt_let_name = None;
-                expect_let_name = false;
-            }
-            Tok::Punct(';') => {
-                // plain `let g = ...lock()...;` guard: lives to scope end
-                if stmt_has_let && stmt_lock {
-                    if let Some(n) = stmt_let_name.take() {
-                        guards.push(Guard { name: n, depth });
-                    }
-                }
-                stmt_has_let = false;
-                stmt_lock = false;
-                stmt_let_name = None;
-                expect_let_name = false;
-            }
-            Tok::Ident(w) => {
-                if expect_let_name {
-                    if w != "mut" {
-                        stmt_let_name = Some(w.clone());
-                        expect_let_name = false;
-                    }
-                } else if w == "let" && !stmt_has_let {
-                    stmt_has_let = true;
-                    expect_let_name = true;
-                } else if w == "lock" && i > 0 && punct_at(toks, i - 1, '.') && punct_at(toks, i + 1, '(')
-                {
-                    stmt_lock = true;
-                } else if (w == "wait" || w == "submit")
-                    && i > 0
-                    && punct_at(toks, i - 1, '.')
-                    && punct_at(toks, i + 1, '(')
-                {
-                    if !guards.is_empty() || stmt_lock {
-                        let held = guards
-                            .last()
-                            .map(|g| g.name.clone())
-                            .unwrap_or_else(|| "<temporary>".to_string());
-                        out.push(Violation {
-                            line: toks[i].1,
-                            rule: "lock-across-wait",
-                            msg: format!(
-                                ".{w}(..) while lock guard `{held}` is live can deadlock \
-                                 the worker pool; drop the guard before dispatching"
-                            ),
-                        });
-                    }
-                } else if w == "drop" && punct_at(toks, i + 1, '(') {
-                    if let Some(n) = ident_at(toks, i + 2) {
-                        if punct_at(toks, i + 3, ')') {
-                            guards.retain(|g| g.name != n);
-                        }
-                    }
-                }
-            }
-            _ => {}
-        }
-    }
-}
-
-// ---------------------------------------------------------------------
-// Engine
-// ---------------------------------------------------------------------
-
-/// Path policy: which rules run on a file (forward-slash paths).
-fn applies(rule: &str, path: &str) -> bool {
-    match rule {
-        "nan-ordering" | "lock-across-wait" => true,
-        "clock-discipline" => path.contains("/serve/") && !path.ends_with("serve/clock.rs"),
-        "env-discipline" => !path.ends_with("runtime/mod.rs") && !path.contains("/bench/"),
-        "panic-policy" => {
-            path.contains("/serve/") || path.contains("/placer/") || path.contains("/runtime/")
-        }
-        _ => false,
-    }
-}
-
-fn lint_source(path: &str, src: &str) -> Vec<Violation> {
-    let lx = lex(src);
-    let (allowed, mut viols) = parse_pragmas(&lx);
-    let mut found: Vec<Violation> = Vec::new();
-    if applies("nan-ordering", path) {
-        rule_nan_ordering(&lx.toks, &mut found);
-    }
-    if applies("clock-discipline", path) {
-        rule_clock_discipline(&lx.toks, &mut found);
-    }
-    if applies("env-discipline", path) {
-        rule_env_discipline(&lx.toks, &mut found);
-    }
-    if applies("panic-policy", path) {
-        let spans = test_spans(&lx.toks);
-        rule_panic_policy(&lx.toks, &spans, &mut found);
-    }
-    if applies("lock-across-wait", path) {
-        rule_lock_across_wait(&lx.toks, &mut found);
-    }
-    // suppress pragma'd lines, then dedup repeated (line, rule) reports
-    found.retain(|v| !allowed.contains(&(v.line, v.rule.to_string())));
-    let mut seen: HashSet<(u32, &'static str)> = HashSet::new();
-    for v in found {
-        if seen.insert((v.line, v.rule)) {
-            viols.push(v);
-        }
-    }
-    viols.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
-    viols
-}
-
-// ---------------------------------------------------------------------
-// Walk + main
-// ---------------------------------------------------------------------
-
-fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
-    let mut entries: Vec<PathBuf> =
-        fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("error walking {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
     entries.sort();
     for p in entries {
         if p.is_dir() {
@@ -746,109 +184,53 @@ fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
     Ok(())
 }
 
-fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let roots: Vec<PathBuf> = if args.is_empty() {
-        vec![PathBuf::from("rust/src"), PathBuf::from("rust/lint/src")]
-    } else {
-        args.iter().map(PathBuf::from).collect()
-    };
+/// The fallible core `main` delegates to: collects files, lints them as
+/// one program, emits the report. `Ok(n)` is the number of violations;
+/// `Err` is an I/O or usage failure (exit code 2).
+fn run(args: &[String]) -> Result<usize, String> {
+    let opts = parse_args(args)?;
     let mut files: Vec<PathBuf> = Vec::new();
-    for root in &roots {
+    for root in &opts.roots {
         if root.is_file() {
             files.push(root.clone());
         } else if root.is_dir() {
-            if let Err(e) = walk(root, &mut files) {
-                eprintln!("dreamshard-lint: error walking {}: {e}", root.display());
-                std::process::exit(2);
-            }
+            walk(root, &mut files)?;
         } else {
-            eprintln!(
-                "dreamshard-lint: {} not found (run from the repo root, or pass paths)",
+            return Err(format!(
+                "{} not found (run from the repo root, or pass paths)",
                 root.display()
-            );
-            std::process::exit(2);
+            ));
         }
     }
-    let mut total = 0usize;
+    let mut sources: Vec<(String, String)> = Vec::with_capacity(files.len());
     for f in &files {
         let display = f.to_string_lossy().replace('\\', "/");
-        let src = match fs::read_to_string(f) {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("dreamshard-lint: error reading {display}: {e}");
-                std::process::exit(2);
-            }
-        };
-        for v in lint_source(&display, &src) {
-            println!("{display}:{}: {}: {}", v.line, v.rule, v.msg);
-            total += 1;
-        }
+        let src =
+            fs::read_to_string(f).map_err(|e| format!("error reading {display}: {e}"))?;
+        sources.push((display, src));
     }
-    if total > 0 {
+    let viols = engine::lint_sources(&sources);
+    report::emit(&viols, files.len(), opts.format, opts.quiet);
+    if viols.is_empty() {
+        eprintln!("dreamshard-lint: {} file(s) clean", files.len());
+    } else {
         eprintln!(
-            "dreamshard-lint: {total} violation(s) in {} file(s) checked",
+            "dreamshard-lint: {} violation(s) in {} file(s) checked",
+            viols.len(),
             files.len()
         );
-        std::process::exit(1);
     }
-    eprintln!("dreamshard-lint: {} file(s) clean", files.len());
+    Ok(viols.len())
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn lines_of(viols: &[Violation], rule: &str) -> Vec<u32> {
-        viols.iter().filter(|v| v.rule == rule).map(|v| v.line).collect()
-    }
-
-    #[test]
-    fn strings_and_comments_never_match() {
-        let src = r#"
-// a.partial_cmp(&b).unwrap() in a comment
-/* Instant::now() in a block comment */
-fn f() {
-    let s = "x.partial_cmp(&y).unwrap() and Instant::now()";
-    let r = r"std::env::var and panic!";
-}
-"#;
-        let v = lint_source("rust/src/serve/x.rs", src);
-        assert!(v.is_empty(), "{:?}", v.iter().map(|v| (v.line, v.rule)).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn multiline_partial_cmp_matches() {
-        let src = "fn f(v: &mut Vec<f32>) {\n    let o = a\n        .partial_cmp(&b)\n        .unwrap();\n}\n";
-        let v = lint_source("rust/src/sim/x.rs", src);
-        assert_eq!(lines_of(&v, "nan-ordering"), vec![3]);
-    }
-
-    #[test]
-    fn pragma_suppresses_next_line_and_requires_reason() {
-        let good = "fn f() {\n    // lint: allow(clock-discipline) — test fixture timing\n    let t = Instant::now();\n}\n";
-        let v = lint_source("rust/src/serve/x.rs", good);
-        assert!(v.is_empty());
-        let bad = "fn f() {\n    let t = Instant::now(); // lint: allow(clock-discipline)\n}\n";
-        let v = lint_source("rust/src/serve/x.rs", bad);
-        assert_eq!(lines_of(&v, "pragma"), vec![2]);
-        assert_eq!(lines_of(&v, "clock-discipline"), vec![2]);
-    }
-
-    #[test]
-    fn cfg_test_is_exempt_from_panic_policy() {
-        let src = "fn lib() -> u32 {\n    x.unwrap()\n}\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\n";
-        let v = lint_source("rust/src/runtime/x.rs", src);
-        assert_eq!(lines_of(&v, "panic-policy"), vec![2]);
-    }
-
-    #[test]
-    fn lock_guard_across_wait_flags() {
-        let src = "fn f() {\n    let g = m.lock().unwrap_or_else(|e| e.into_inner());\n    let r = t.wait();\n}\n";
-        let v = lint_source("rust/src/util/x.rs", src);
-        assert_eq!(lines_of(&v, "lock-across-wait"), vec![3]);
-        let dropped = "fn f() {\n    let g = m.lock().unwrap_or_else(|e| e.into_inner());\n    drop(g);\n    let r = t.wait();\n}\n";
-        let v = lint_source("rust/src/util/x.rs", dropped);
-        assert!(lines_of(&v, "lock-across-wait").is_empty());
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(0) => ExitCode::SUCCESS,
+        Ok(_) => ExitCode::from(1),
+        Err(msg) => {
+            eprintln!("dreamshard-lint: {msg}");
+            ExitCode::from(2)
+        }
     }
 }

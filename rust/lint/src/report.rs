@@ -1,0 +1,137 @@
+//! Violation type and the three output encoders.
+//!
+//! * text (default): `file:line: rule: message`, one line per finding;
+//! * `--json`: one machine-readable document on stdout — schema below,
+//!   round-tripped by `rust/lint/tests/rules.rs`;
+//! * `--github`: GitHub Actions workflow commands (`::error
+//!   file=..,line=..,title=..::message`) so CI findings render as inline
+//!   annotations in the PR diff.
+//!
+//! JSON schema (`version` gates future changes):
+//!
+//! ```text
+//! {
+//!   "version": 1,
+//!   "files_checked": <int>,
+//!   "violations": [
+//!     { "file": <string>, "line": <int>, "rule": <string>, "message": <string> },
+//!     ...
+//!   ]
+//! }
+//! ```
+
+#[derive(Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+pub enum Format {
+    Text,
+    Json,
+    Github,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// GitHub workflow commands percent-escape their property/data fields.
+fn gh_escape(s: &str, property: bool) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '%' => out.push_str("%25"),
+            '\r' => out.push_str("%0D"),
+            '\n' => out.push_str("%0A"),
+            ':' if property => out.push_str("%3A"),
+            ',' if property => out.push_str("%2C"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render all findings to stdout in the chosen format. `quiet`
+/// suppresses the per-violation lines (the summary still goes to
+/// stderr, and `--json` output is machine-consumed, so it stays).
+pub fn emit(viols: &[Violation], files_checked: usize, fmt: Format, quiet: bool) {
+    match fmt {
+        Format::Text => {
+            if !quiet {
+                for v in viols {
+                    println!("{}:{}: {}: {}", v.file, v.line, v.rule, v.msg);
+                }
+            }
+        }
+        Format::Github => {
+            if !quiet {
+                for v in viols {
+                    println!(
+                        "::error file={},line={},title=dreamshard-lint {}::{}",
+                        gh_escape(&v.file, true),
+                        v.line,
+                        gh_escape(v.rule, true),
+                        gh_escape(&v.msg, false)
+                    );
+                }
+            }
+        }
+        Format::Json => {
+            let mut out = String::new();
+            out.push_str("{\n");
+            out.push_str("  \"version\": 1,\n");
+            out.push_str(&format!("  \"files_checked\": {files_checked},\n"));
+            out.push_str("  \"violations\": [");
+            for (i, v) in viols.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "\n    {{ \"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\" }}",
+                    json_escape(&v.file),
+                    v.line,
+                    json_escape(v.rule),
+                    json_escape(&v.msg)
+                ));
+            }
+            if !viols.is_empty() {
+                out.push_str("\n  ");
+            }
+            out.push_str("]\n}");
+            println!("{out}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escaping_covers_quotes_and_control() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn github_escaping_covers_separators() {
+        assert_eq!(gh_escape("a,b:c%d", true), "a%2Cb%3Ac%25d");
+        assert_eq!(gh_escape("m: x, y %", false), "m: x, y %25");
+    }
+}

@@ -1,0 +1,280 @@
+//! The local (single-file) rules and the pragma engine.
+//!
+//! These run on one file's token stream alone: `nan-ordering`,
+//! `env-discipline`, `panic-policy`, and `lock-across-wait`. The
+//! interprocedural rules live in [`crate::interproc`]. Pragma parsing is
+//! here because suppression is a per-file, per-line concern regardless
+//! of which phase produced the finding.
+
+use std::collections::HashSet;
+
+use crate::lexer::{ident_at, match_delim, punct_at, Lexed, Token};
+use crate::report::Violation;
+
+/// The enforced rules (the `pragma` meta-rule reports malformed escapes
+/// and is not itself escapable).
+pub const RULES: [&str; 8] = [
+    "nan-ordering",
+    "env-discipline",
+    "panic-policy",
+    "lock-across-wait",
+    "lock-order",
+    "clock-transitive",
+    "map-iter-determinism",
+    "swallowed-result",
+];
+
+// ---------------------------------------------------------------------
+// Pragmas
+// ---------------------------------------------------------------------
+
+/// Parse `lint: allow(<rule>) — <reason>` comments. Returns the set of
+/// `(target_line, rule)` suppressions plus violations for malformed
+/// pragmas (missing reason, unknown rule, unparseable body).
+pub fn parse_pragmas(path: &str, lx: &Lexed) -> (HashSet<(u32, String)>, Vec<Violation>) {
+    let mut allowed: HashSet<(u32, String)> = HashSet::new();
+    let mut viols: Vec<Violation> = Vec::new();
+    for c in &lx.comments {
+        let t = c.text.trim_start_matches(['/', '!']).trim();
+        let Some(rest) = t.strip_prefix("lint:") else { continue };
+        let rest = rest.trim();
+        let body = rest.strip_prefix("allow").map(str::trim_start);
+        let parsed = body.and_then(|b| {
+            let inner = b.strip_prefix('(')?;
+            let close = inner.find(')')?;
+            Some((inner[..close].to_string(), inner[close + 1..].to_string()))
+        });
+        let Some((rules, reason)) = parsed else {
+            viols.push(Violation {
+                file: path.to_string(),
+                line: c.line,
+                rule: "pragma",
+                msg: format!("unparseable lint pragma `{t}`; use `lint: allow(<rule>) — <reason>`"),
+            });
+            continue;
+        };
+        if !reason.chars().any(|ch| ch.is_alphanumeric()) {
+            viols.push(Violation {
+                file: path.to_string(),
+                line: c.line,
+                rule: "pragma",
+                msg: "lint pragma has no justification; append `— <reason>`".to_string(),
+            });
+            continue;
+        }
+        // own-line pragmas target the next line that has code on it
+        let target = if c.own_line {
+            lx.toks.iter().map(|t| t.line).find(|&l| l > c.line).unwrap_or(c.line)
+        } else {
+            c.line
+        };
+        for r in rules.split(',') {
+            let r = r.trim();
+            if RULES.contains(&r) {
+                allowed.insert((target, r.to_string()));
+            } else {
+                viols.push(Violation {
+                    file: path.to_string(),
+                    line: c.line,
+                    rule: "pragma",
+                    msg: format!("unknown rule `{r}` in lint pragma (rules: {})", RULES.join(", ")),
+                });
+            }
+        }
+    }
+    (allowed, viols)
+}
+
+// ---------------------------------------------------------------------
+// Local rules
+// ---------------------------------------------------------------------
+
+pub fn rule_nan_ordering(path: &str, toks: &[Token], out: &mut Vec<Violation>) {
+    for i in 0..toks.len() {
+        if ident_at(toks, i) == Some("partial_cmp") && punct_at(toks, i + 1, '(') {
+            if let Some(close) = match_delim(toks, i + 1, '(', ')') {
+                if punct_at(toks, close + 1, '.')
+                    && matches!(ident_at(toks, close + 2), Some("unwrap") | Some("expect"))
+                    && punct_at(toks, close + 3, '(')
+                {
+                    out.push(Violation {
+                        file: path.to_string(),
+                        line: toks[i].line,
+                        rule: "nan-ordering",
+                        msg: "partial_cmp(..).unwrap()/.expect(..) panics on NaN; \
+                              use total_cmp for a NaN-safe total order"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+        if let Some(name) = ident_at(toks, i) {
+            if matches!(name, "sort_by" | "sort_unstable_by" | "max_by" | "min_by")
+                && punct_at(toks, i + 1, '(')
+            {
+                if let Some(close) = match_delim(toks, i + 1, '(', ')') {
+                    if (i + 2..close).any(|j| ident_at(toks, j) == Some("partial_cmp")) {
+                        out.push(Violation {
+                            file: path.to_string(),
+                            line: toks[i].line,
+                            rule: "nan-ordering",
+                            msg: format!(
+                                "`{name}` comparator built on partial_cmp; \
+                                 use total_cmp for a NaN-safe total order"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+pub fn rule_env_discipline(path: &str, toks: &[Token], out: &mut Vec<Violation>) {
+    for i in 0..toks.len() {
+        if ident_at(toks, i) == Some("env")
+            && punct_at(toks, i + 1, ':')
+            && punct_at(toks, i + 2, ':')
+            && matches!(ident_at(toks, i + 3), Some("var") | Some("var_os"))
+        {
+            out.push(Violation {
+                file: path.to_string(),
+                line: toks[i].line,
+                rule: "env-discipline",
+                msg: "std::env::var outside runtime/mod.rs and bench/ creates untracked \
+                      config surface; plumb the setting through an explicit parameter"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+pub fn rule_panic_policy(
+    path: &str,
+    toks: &[Token],
+    spans: &[(usize, usize)],
+    out: &mut Vec<Violation>,
+) {
+    let in_test = |i: usize| spans.iter().any(|&(a, b)| a <= i && i < b);
+    for i in 0..toks.len() {
+        if in_test(i) {
+            continue;
+        }
+        if punct_at(toks, i, '.')
+            && matches!(ident_at(toks, i + 1), Some("unwrap") | Some("expect"))
+            && punct_at(toks, i + 2, '(')
+        {
+            let what = ident_at(toks, i + 1).unwrap_or("unwrap");
+            out.push(Violation {
+                file: path.to_string(),
+                line: toks[i + 1].line,
+                rule: "panic-policy",
+                msg: format!(
+                    ".{what}(..) in a library hot path panics the shard; route through \
+                     util::error (Result/Context/bail!) or justify with a lint pragma"
+                ),
+            });
+        }
+        if ident_at(toks, i) == Some("panic") && punct_at(toks, i + 1, '!') {
+            out.push(Violation {
+                file: path.to_string(),
+                line: toks[i].line,
+                rule: "panic-policy",
+                msg: "panic! in a library hot path takes down the shard; route through \
+                      util::error (Result/Context/bail!) or justify with a lint pragma"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+pub fn rule_lock_across_wait(path: &str, toks: &[Token], out: &mut Vec<Violation>) {
+    struct Guard {
+        name: String,
+        depth: i64,
+    }
+    let mut depth: i64 = 0;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut stmt_has_let = false;
+    let mut stmt_let_name: Option<String> = None;
+    let mut stmt_lock = false;
+    let mut expect_let_name = false;
+    for i in 0..toks.len() {
+        match &toks[i].kind {
+            crate::lexer::Tok::Punct('{') => {
+                depth += 1;
+                // `if let` / `while let` guard: scoped to this block
+                if stmt_has_let && stmt_lock {
+                    if let Some(n) = stmt_let_name.take() {
+                        guards.push(Guard { name: n, depth });
+                    }
+                }
+                stmt_has_let = false;
+                stmt_lock = false;
+                stmt_let_name = None;
+                expect_let_name = false;
+            }
+            crate::lexer::Tok::Punct('}') => {
+                depth -= 1;
+                guards.retain(|g| g.depth <= depth);
+                stmt_has_let = false;
+                stmt_lock = false;
+                stmt_let_name = None;
+                expect_let_name = false;
+            }
+            crate::lexer::Tok::Punct(';') => {
+                // plain `let g = ...lock()...;` guard: lives to scope end
+                if stmt_has_let && stmt_lock {
+                    if let Some(n) = stmt_let_name.take() {
+                        guards.push(Guard { name: n, depth });
+                    }
+                }
+                stmt_has_let = false;
+                stmt_lock = false;
+                stmt_let_name = None;
+                expect_let_name = false;
+            }
+            crate::lexer::Tok::Ident(w) => {
+                if expect_let_name {
+                    if w != "mut" {
+                        stmt_let_name = Some(w.clone());
+                        expect_let_name = false;
+                    }
+                } else if w == "let" && !stmt_has_let {
+                    stmt_has_let = true;
+                    expect_let_name = true;
+                } else if w == "lock" && i > 0 && punct_at(toks, i - 1, '.') && punct_at(toks, i + 1, '(')
+                {
+                    stmt_lock = true;
+                } else if (w == "wait" || w == "submit")
+                    && i > 0
+                    && punct_at(toks, i - 1, '.')
+                    && punct_at(toks, i + 1, '(')
+                {
+                    if !guards.is_empty() || stmt_lock {
+                        let held = guards
+                            .last()
+                            .map(|g| g.name.clone())
+                            .unwrap_or_else(|| "<temporary>".to_string());
+                        out.push(Violation {
+                            file: path.to_string(),
+                            line: toks[i].line,
+                            rule: "lock-across-wait",
+                            msg: format!(
+                                ".{w}(..) while lock guard `{held}` is live can deadlock \
+                                 the worker pool; drop the guard before dispatching"
+                            ),
+                        });
+                    }
+                } else if w == "drop" && punct_at(toks, i + 1, '(') {
+                    if let Some(n) = ident_at(toks, i + 2) {
+                        if punct_at(toks, i + 3, ')') {
+                            guards.retain(|g| g.name != n);
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}

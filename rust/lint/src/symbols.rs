@@ -1,0 +1,861 @@
+//! Phase 1: per-file symbol tables.
+//!
+//! One linear walk over a file's token stream collects everything the
+//! interprocedural phase needs: `fn` items (with their enclosing
+//! `impl`/`trait` type, body span, and whether the signature returns a
+//! `Result`), call sites (bare, method, and `Type::`-qualified), lock
+//! acquisitions with the guards live at each point, raw-clock uses,
+//! identifiers declared as `HashMap`/`HashSet`, hash-iteration sites,
+//! and discarded-call statements. No name resolution happens here —
+//! [`crate::graph::Program`] merges the per-file tables and resolves
+//! calls crate-wide in phase 2.
+
+use crate::lexer::{ident_at, match_delim, punct_at, Lexed, Tok, Token};
+
+/// Reserved words that can precede `(` without being a call.
+const KEYWORDS: &[&str] = &[
+    "if", "else", "while", "for", "loop", "match", "return", "in", "as", "ref", "move", "let",
+    "break", "continue", "unsafe", "dyn", "impl", "where", "use", "pub", "mod", "struct", "enum",
+    "union", "trait", "type", "const", "static", "crate", "super", "await", "async", "yield",
+    "fn", "extern", "box",
+];
+
+/// Iterator-producing methods whose order is the backing map's.
+const ITER_METHODS: &[&str] =
+    &["iter", "iter_mut", "into_iter", "keys", "values", "values_mut", "drain", "into_keys", "into_values"];
+
+/// How a call site names its callee.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Callee {
+    /// `foo(..)` — a free function.
+    Bare(String),
+    /// `recv.foo(..)` — a method on some value.
+    Method(String),
+    /// `Qualifier::foo(..)` — an associated function or a module path.
+    Qualified(String, String),
+}
+
+impl Callee {
+    pub fn name(&self) -> &str {
+        match self {
+            Callee::Bare(n) | Callee::Method(n) | Callee::Qualified(_, n) => n,
+        }
+    }
+}
+
+/// One `fn` item (including bodyless trait signatures).
+pub struct FnItem {
+    pub name: String,
+    /// Innermost enclosing `impl`/`trait` type, if any.
+    pub self_type: Option<String>,
+    pub line: u32,
+    /// Token range `[open, close]` of the braced body, if there is one.
+    pub body: Option<(usize, usize)>,
+    /// The signature's return type mentions `Result`.
+    pub returns_result: bool,
+    /// Defined inside a `#[test]` fn or `#[cfg(test)]` item.
+    pub in_test: bool,
+}
+
+/// A call site inside some function body. `fn_idx` is the index of the
+/// innermost enclosing [`FnItem`]; top-level call-shaped tokens outside
+/// any body (e.g. in const initializers) are dropped.
+pub struct CallSite {
+    pub fn_idx: usize,
+    pub callee: Callee,
+    pub line: u32,
+}
+
+/// A `.lock()` acquisition. `lock` is the receiver identity: the
+/// identifier immediately left of `.lock` (`self.tx.lock()` → `tx`).
+pub struct LockAcq {
+    pub fn_idx: usize,
+    pub lock: String,
+    pub line: u32,
+}
+
+/// A `.lock()` of `lock` reached while a guard on `held` is live in the
+/// same function — a direct edge of the lock-acquisition graph.
+pub struct LockEdge {
+    pub fn_idx: usize,
+    pub held: String,
+    pub lock: String,
+    pub line: u32,
+}
+
+/// An in-crate-resolvable call made while a guard on `held` is live —
+/// the transitive edges come from the callee's lock summary.
+pub struct HeldCall {
+    pub fn_idx: usize,
+    pub held: String,
+    pub callee: Callee,
+    pub line: u32,
+}
+
+/// A literal `Instant::now` / `SystemTime::now` token sequence.
+pub struct ClockUse {
+    /// Innermost enclosing fn, if inside one.
+    pub fn_idx: Option<usize>,
+    pub line: u32,
+    pub what: &'static str,
+}
+
+/// An iteration over an identifier (`for .. in x`, `x.keys()`, ...)
+/// whose map-ness is decided crate-wide in phase 2.
+pub struct IterUse {
+    pub name: String,
+    pub line: u32,
+    pub in_test: bool,
+}
+
+/// A statement that discards a call's value: `let _ = f(..);` or a bare
+/// `f(..);`.
+pub struct Discard {
+    pub callee: Callee,
+    pub line: u32,
+    pub in_test: bool,
+    /// Self type of the enclosing fn (for `Self::` resolution parity).
+    pub self_type: Option<String>,
+}
+
+/// Everything phase 1 knows about one file.
+pub struct FileSyms {
+    pub fns: Vec<FnItem>,
+    pub calls: Vec<CallSite>,
+    pub acqs: Vec<LockAcq>,
+    pub edges: Vec<LockEdge>,
+    pub held_calls: Vec<HeldCall>,
+    pub clock_uses: Vec<ClockUse>,
+    /// Identifiers declared with a `HashMap`/`HashSet` type or
+    /// initializer anywhere in this file (fields, params, lets).
+    pub map_names: Vec<String>,
+    pub iter_uses: Vec<IterUse>,
+    pub discards: Vec<Discard>,
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+// ---------------------------------------------------------------------
+// Test-code spans
+// ---------------------------------------------------------------------
+
+/// Token-index ranges `[start, end)` covering `#[test]` functions and
+/// `#[cfg(test)]` / `#[cfg(all(test, ..))]` items (`#[cfg(not(test))]`
+/// is deliberately NOT a test span).
+pub fn test_spans(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if punct_at(toks, i, '#') && punct_at(toks, i + 1, '[') {
+            let Some(close) = match_delim(toks, i + 1, '[', ']') else {
+                i += 1;
+                continue;
+            };
+            let attr = &toks[i + 2..close];
+            let has = |w: &str| attr.iter().any(|t| matches!(&t.kind, Tok::Ident(s) if s == w));
+            let exact_test = attr.len() == 1 && has("test");
+            let cfg_test = ident_at(toks, i + 2) == Some("cfg") && has("test") && !has("not");
+            if exact_test || cfg_test {
+                // skip the attributed item: to the matching `}` of its
+                // first brace, or to a top-level `;` (e.g. a `use`)
+                let mut depth = 0i64;
+                let mut j = close + 1;
+                while j < toks.len() {
+                    if punct_at(toks, j, '{') {
+                        depth += 1;
+                    } else if punct_at(toks, j, '}') {
+                        depth -= 1;
+                        if depth == 0 {
+                            j += 1;
+                            break;
+                        }
+                    } else if punct_at(toks, j, ';') && depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                    j += 1;
+                }
+                spans.push((i, j));
+                i = j;
+                continue;
+            }
+            i = close + 1;
+            continue;
+        }
+        i += 1;
+    }
+    spans
+}
+
+fn in_spans(spans: &[(usize, usize)], i: usize) -> bool {
+    spans.iter().any(|&(a, b)| a <= i && i < b)
+}
+
+// ---------------------------------------------------------------------
+// Items: impl / trait regions, fn items
+// ---------------------------------------------------------------------
+
+/// Skip a balanced generic-argument list starting at `<`, treating `->`
+/// as an arrow (its `>` does not close a bracket).
+fn skip_generics(toks: &[Token], mut i: usize) -> usize {
+    if !punct_at(toks, i, '<') {
+        return i;
+    }
+    let mut depth = 0i64;
+    while i < toks.len() {
+        if punct_at(toks, i, '-') && punct_at(toks, i + 1, '>') {
+            i += 2;
+            continue;
+        }
+        if punct_at(toks, i, '<') {
+            depth += 1;
+        } else if punct_at(toks, i, '>') {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Last identifier of a `::`-separated path starting at `i`; returns
+/// `(name, next_index)` or `None` if `i` is not an identifier.
+fn path_tail(toks: &[Token], mut i: usize) -> Option<(String, usize)> {
+    let mut last = ident_at(toks, i)?.to_string();
+    i += 1;
+    loop {
+        let i2 = skip_generics(toks, i);
+        if punct_at(toks, i2, ':') && punct_at(toks, i2 + 1, ':') {
+            if let Some(n) = ident_at(toks, i2 + 2) {
+                last = n.to_string();
+                i = i2 + 3;
+                continue;
+            }
+        }
+        return Some((last, i2));
+    }
+}
+
+/// `impl`/`trait` regions: token span of the braced body + the type name
+/// whose methods it holds.
+fn impl_regions(toks: &[Token]) -> Vec<(usize, usize, String)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        match ident_at(toks, i) {
+            Some("impl") => {
+                let mut j = skip_generics(toks, i + 1);
+                // skip `&`, `mut`, `dyn` decorations on the first path
+                while punct_at(toks, j, '&') || matches!(ident_at(toks, j), Some("mut" | "dyn")) {
+                    j += 1;
+                }
+                let Some((first, mut k)) = path_tail(toks, j) else {
+                    i += 1;
+                    continue;
+                };
+                let mut ty = first;
+                // `impl Trait for Type { .. }`: the type follows `for`
+                while k < toks.len() && !punct_at(toks, k, '{') && !punct_at(toks, k, ';') {
+                    if ident_at(toks, k) == Some("for") {
+                        let mut m = k + 1;
+                        while punct_at(toks, m, '&') || matches!(ident_at(toks, m), Some("mut" | "dyn")) {
+                            m += 1;
+                        }
+                        if let Some((t, m2)) = path_tail(toks, m) {
+                            ty = t;
+                            k = m2;
+                            continue;
+                        }
+                    }
+                    k += 1;
+                }
+                if punct_at(toks, k, '{') {
+                    if let Some(close) = match_delim(toks, k, '{', '}') {
+                        out.push((k, close, ty));
+                        i = k + 1;
+                        continue;
+                    }
+                }
+                i = k + 1;
+            }
+            Some("trait") => {
+                if let Some(name) = ident_at(toks, i + 1) {
+                    let name = name.to_string();
+                    let mut k = i + 2;
+                    while k < toks.len() && !punct_at(toks, k, '{') && !punct_at(toks, k, ';') {
+                        k += 1;
+                    }
+                    if punct_at(toks, k, '{') {
+                        if let Some(close) = match_delim(toks, k, '{', '}') {
+                            out.push((k, close, name));
+                            i = k + 1;
+                            continue;
+                        }
+                    }
+                    i = k + 1;
+                } else {
+                    i += 1;
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    out
+}
+
+fn fn_items(toks: &[Token], regions: &[(usize, usize, String)], tests: &[(usize, usize)]) -> Vec<FnItem> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if ident_at(toks, i) != Some("fn") {
+            i += 1;
+            continue;
+        }
+        let Some(name) = ident_at(toks, i + 1) else {
+            i += 1; // `fn(..)` pointer type
+            continue;
+        };
+        let name = name.to_string();
+        let line = toks[i + 1].line;
+        let mut j = skip_generics(toks, i + 2);
+        if !punct_at(toks, j, '(') {
+            i += 1;
+            continue;
+        }
+        let Some(args_close) = match_delim(toks, j, '(', ')') else {
+            i += 1;
+            continue;
+        };
+        // return type: tokens between `)` and the body `{` / `;` /
+        // `where` — generics-aware so `-> Result<Vec<T>, E>` scans whole
+        let mut returns_result = false;
+        j = args_close + 1;
+        while j < toks.len() {
+            if punct_at(toks, j, '{') || punct_at(toks, j, ';') || ident_at(toks, j) == Some("where")
+            {
+                break;
+            }
+            if ident_at(toks, j) == Some("Result") {
+                returns_result = true;
+            }
+            j = if punct_at(toks, j, '<') { skip_generics(toks, j) } else { j + 1 };
+        }
+        // body open: first `{` before a `;` (where-clauses carry none)
+        while j < toks.len() && !punct_at(toks, j, '{') && !punct_at(toks, j, ';') {
+            j += 1;
+        }
+        let body = if punct_at(toks, j, '{') { match_delim(toks, j, '{', '}').map(|c| (j, c)) } else { None };
+        let self_type = regions
+            .iter()
+            .filter(|&&(a, b, _)| a <= i && i <= b)
+            .min_by_key(|&&(a, b, _)| b - a)
+            .map(|(_, _, t)| t.clone());
+        out.push(FnItem {
+            name,
+            self_type,
+            line,
+            body,
+            returns_result,
+            in_test: in_spans(tests, i),
+        });
+        i += 1; // keep scanning inside the body: nested fns are items too
+    }
+    out
+}
+
+/// Innermost fn whose body contains token `i`.
+fn owner_of(fns: &[FnItem], i: usize) -> Option<usize> {
+    fns.iter()
+        .enumerate()
+        .filter(|(_, f)| f.body.map(|(a, b)| a < i && i < b).unwrap_or(false))
+        .min_by_key(|(_, f)| {
+            let (a, b) = f.body.unwrap_or((0, usize::MAX));
+            b - a
+        })
+        .map(|(idx, _)| idx)
+}
+
+// ---------------------------------------------------------------------
+// Call sites and effects
+// ---------------------------------------------------------------------
+
+/// Classify the call-shaped token at `i` (`Ident` followed by `(`).
+fn classify_call(toks: &[Token], i: usize) -> Option<Callee> {
+    let name = ident_at(toks, i)?;
+    if KEYWORDS.contains(&name) || !punct_at(toks, i + 1, '(') {
+        return None;
+    }
+    if i >= 1 && punct_at(toks, i - 1, '.') {
+        return Some(Callee::Method(name.to_string()));
+    }
+    if i >= 3 && punct_at(toks, i - 1, ':') && punct_at(toks, i - 2, ':') {
+        if let Some(q) = ident_at(toks, i - 3) {
+            return Some(Callee::Qualified(q.to_string(), name.to_string()));
+        }
+        return None; // `<T as Trait>::f(..)` and friends: unresolvable
+    }
+    if i >= 1 && matches!(ident_at(toks, i - 1), Some("fn")) {
+        return None; // a definition, not a call
+    }
+    Some(Callee::Bare(name.to_string()))
+}
+
+/// Collect identifiers declared as `HashMap`/`HashSet`: `name: HashMap`
+/// type annotations (fields, params, lets) and `let name = HashMap::new()`
+/// style initializers.
+fn map_names(toks: &[Token]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for i in 0..toks.len() {
+        if !matches!(ident_at(toks, i), Some("HashMap" | "HashSet")) {
+            continue;
+        }
+        // walk back over a `std::collections::` style path prefix
+        let mut j = i;
+        while j >= 3 && punct_at(toks, j - 1, ':') && punct_at(toks, j - 2, ':') && ident_at(toks, j - 3).is_some()
+        {
+            j -= 3;
+        }
+        // `name : HashMap` — a type annotation
+        if j >= 2 && punct_at(toks, j - 1, ':') && !(j >= 2 && punct_at(toks, j - 2, ':')) {
+            if let Some(name) = ident_at(toks, j - 2) {
+                if name != "_" {
+                    out.push(name.to_string());
+                    continue;
+                }
+            }
+        }
+        // `let [mut] name [: ..] = [path::]HashMap::..` — an initializer
+        if punct_at(toks, i + 1, ':') && punct_at(toks, i + 2, ':') {
+            let mut k = j;
+            while k > 0 {
+                k -= 1;
+                if punct_at(toks, k, ';') || punct_at(toks, k, '{') || punct_at(toks, k, '}') {
+                    break;
+                }
+                if ident_at(toks, k) == Some("let") {
+                    let mut m = k + 1;
+                    if ident_at(toks, m) == Some("mut") {
+                        m += 1;
+                    }
+                    if let Some(name) = ident_at(toks, m) {
+                        if name != "_" {
+                            out.push(name.to_string());
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// Iteration sites: `recv.iter()`-family calls and `for .. in recv {`.
+fn iter_uses(toks: &[Token], tests: &[(usize, usize)]) -> Vec<IterUse> {
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if let Some(m) = ident_at(toks, i) {
+            if ITER_METHODS.contains(&m)
+                && i >= 2
+                && punct_at(toks, i - 1, '.')
+                && punct_at(toks, i + 1, '(')
+            {
+                if let Some(recv) = ident_at(toks, i - 2) {
+                    out.push(IterUse {
+                        name: recv.to_string(),
+                        line: toks[i].line,
+                        in_test: in_spans(tests, i),
+                    });
+                }
+            }
+            // `for pat in [&][mut] a.b.c {` — the chain's last ident
+            if m == "in" {
+                let mut j = i + 1;
+                while punct_at(toks, j, '&') || ident_at(toks, j) == Some("mut") {
+                    j += 1;
+                }
+                let mut last: Option<(String, usize)> = None;
+                while let Some(id) = ident_at(toks, j) {
+                    last = Some((id.to_string(), j));
+                    if punct_at(toks, j + 1, '.') && ident_at(toks, j + 2).is_some() {
+                        j += 2;
+                    } else {
+                        j += 1;
+                        break;
+                    }
+                }
+                if let Some((name, at)) = last {
+                    if punct_at(toks, j, '{') {
+                        out.push(IterUse {
+                            name,
+                            line: toks[at].line,
+                            in_test: in_spans(tests, at),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Discarded-call statements: `let _ = <expr ending in a call>;` and
+/// bare `recv.f(..);` / `f(..);` statements.
+fn discards(toks: &[Token], fns: &[FnItem], tests: &[(usize, usize)]) -> Vec<Discard> {
+    let mut out = Vec::new();
+    let self_ty = |i: usize| owner_of(fns, i).and_then(|f| fns[f].self_type.clone());
+    for i in 0..toks.len() {
+        // `let _ = ...;` — the value of the trailing top-level call
+        if ident_at(toks, i) == Some("let")
+            && ident_at(toks, i + 1) == Some("_")
+            && punct_at(toks, i + 2, '=')
+        {
+            let mut depth = 0i64;
+            let mut j = i + 3;
+            let mut last_call: Option<usize> = None;
+            while j < toks.len() {
+                if punct_at(toks, j, '(') || punct_at(toks, j, '[') || punct_at(toks, j, '{') {
+                    depth += 1;
+                } else if punct_at(toks, j, ')') || punct_at(toks, j, ']') || punct_at(toks, j, '}') {
+                    depth -= 1;
+                } else if punct_at(toks, j, ';') && depth == 0 {
+                    break;
+                } else if depth == 0 && ident_at(toks, j).is_some() && punct_at(toks, j + 1, '(') {
+                    last_call = Some(j);
+                }
+                j += 1;
+            }
+            if let Some(c) = last_call {
+                if let Some(callee) = classify_call(toks, c) {
+                    out.push(Discard {
+                        callee,
+                        line: toks[i].line,
+                        in_test: in_spans(tests, i),
+                        self_type: self_ty(i),
+                    });
+                }
+            }
+            continue;
+        }
+        // bare call statement: starts a statement, is nothing but a
+        // field/path/method chain ending in a call, ends with `;`
+        let starts_stmt = i == 0
+            || punct_at(toks, i - 1, ';')
+            || punct_at(toks, i - 1, '{')
+            || punct_at(toks, i - 1, '}');
+        if !starts_stmt {
+            continue;
+        }
+        let Some(first) = ident_at(toks, i) else { continue };
+        if KEYWORDS.contains(&first) || first == "_" {
+            continue;
+        }
+        let mut j = i;
+        let mut last_call: Option<usize> = None;
+        loop {
+            if punct_at(toks, j + 1, '(') {
+                last_call = Some(j);
+                let Some(close) = match_delim(toks, j + 1, '(', ')') else { break };
+                if punct_at(toks, close + 1, ';') {
+                    if let Some(c) = last_call {
+                        if let Some(callee) = classify_call(toks, c) {
+                            out.push(Discard {
+                                callee,
+                                line: toks[c].line,
+                                in_test: in_spans(tests, c),
+                                self_type: self_ty(c),
+                            });
+                        }
+                    }
+                    break;
+                }
+                // continue a method chain: `).f(` — anything else ends it
+                if punct_at(toks, close + 1, '.') && ident_at(toks, close + 2).is_some() {
+                    j = close + 2;
+                    continue;
+                }
+                break;
+            }
+            if punct_at(toks, j + 1, '.') && ident_at(toks, j + 2).is_some() {
+                j += 2;
+                continue;
+            }
+            if punct_at(toks, j + 1, ':') && punct_at(toks, j + 2, ':') && ident_at(toks, j + 3).is_some()
+            {
+                j += 3;
+                continue;
+            }
+            break;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Lock-acquisition walk (per fn body)
+// ---------------------------------------------------------------------
+
+struct LockWalkOut {
+    acqs: Vec<LockAcq>,
+    edges: Vec<LockEdge>,
+    held_calls: Vec<HeldCall>,
+}
+
+/// Walk one fn body tracking live lock guards (the same state machine
+/// the local `lock-across-wait` rule uses), recording every acquisition,
+/// every direct held-while-locking edge, and every in-crate-shaped call
+/// made while a guard is live.
+fn walk_locks(toks: &[Token], fn_idx: usize, body: (usize, usize), out: &mut LockWalkOut) {
+    struct Guard {
+        name: Option<String>,
+        lock: String,
+        depth: i64,
+    }
+    let (open, close) = body;
+    let mut depth: i64 = 0;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut stmt_let_name: Option<String> = None;
+    let mut stmt_has_let = false;
+    let mut expect_let_name = false;
+    let mut stmt_lock: Option<String> = None;
+    let mut i = open;
+    while i <= close {
+        match &toks[i].kind {
+            Tok::Punct('{') => {
+                depth += 1;
+                // `if let` / `while let` guard: scoped to this block
+                if stmt_has_let {
+                    if let (Some(n), Some(l)) = (stmt_let_name.take(), stmt_lock.take()) {
+                        guards.push(Guard { name: Some(n), lock: l, depth });
+                    }
+                }
+                stmt_has_let = false;
+                stmt_let_name = None;
+                stmt_lock = None;
+                expect_let_name = false;
+            }
+            Tok::Punct('}') => {
+                depth -= 1;
+                guards.retain(|g| g.depth <= depth);
+                stmt_has_let = false;
+                stmt_let_name = None;
+                stmt_lock = None;
+                expect_let_name = false;
+            }
+            Tok::Punct(';') => {
+                // plain `let g = ..lock()..;`: guard lives to scope end
+                if stmt_has_let {
+                    if let (Some(n), Some(l)) = (stmt_let_name.take(), stmt_lock.take()) {
+                        guards.push(Guard { name: Some(n), lock: l, depth });
+                    }
+                }
+                stmt_has_let = false;
+                stmt_let_name = None;
+                stmt_lock = None;
+                expect_let_name = false;
+            }
+            Tok::Ident(w) => {
+                if expect_let_name {
+                    if w != "mut" {
+                        stmt_let_name = Some(w.clone());
+                        expect_let_name = false;
+                    }
+                } else if w == "let" && !stmt_has_let {
+                    stmt_has_let = true;
+                    expect_let_name = true;
+                } else if w == "lock" && i > open && punct_at(toks, i - 1, '.') && punct_at(toks, i + 1, '(')
+                {
+                    let id = (i >= 2)
+                        .then(|| ident_at(toks, i - 2))
+                        .flatten()
+                        .unwrap_or("<anon>")
+                        .to_string();
+                    out.acqs.push(LockAcq { fn_idx, lock: id.clone(), line: toks[i].line });
+                    for g in guards.iter().map(|g| &g.lock).chain(stmt_lock.iter()) {
+                        out.edges.push(LockEdge {
+                            fn_idx,
+                            held: g.clone(),
+                            lock: id.clone(),
+                            line: toks[i].line,
+                        });
+                    }
+                    stmt_lock = Some(id);
+                } else if w == "drop" && punct_at(toks, i + 1, '(') {
+                    if let Some(n) = ident_at(toks, i + 2) {
+                        if punct_at(toks, i + 3, ')') {
+                            guards.retain(|g| g.name.as_deref() != Some(n));
+                        }
+                    }
+                } else if let Some(callee) = classify_call(toks, i) {
+                    for g in guards.iter().map(|g| &g.lock).chain(stmt_lock.iter()) {
+                        out.held_calls.push(HeldCall {
+                            fn_idx,
+                            held: g.clone(),
+                            callee: callee.clone(),
+                            line: toks[i].line,
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Entry point
+// ---------------------------------------------------------------------
+
+pub fn parse_file(lx: &Lexed) -> FileSyms {
+    let toks = &lx.toks;
+    let tests = test_spans(toks);
+    let regions = impl_regions(toks);
+    let fns = fn_items(toks, &regions, &tests);
+
+    let mut calls = Vec::new();
+    let mut clock_uses = Vec::new();
+    for i in 0..toks.len() {
+        if let Some(callee) = classify_call(toks, i) {
+            if let Some(fn_idx) = owner_of(&fns, i) {
+                calls.push(CallSite { fn_idx, callee, line: toks[i].line });
+            }
+        }
+        if let Some(ty) = ident_at(toks, i) {
+            if (ty == "Instant" || ty == "SystemTime")
+                && punct_at(toks, i + 1, ':')
+                && punct_at(toks, i + 2, ':')
+                && ident_at(toks, i + 3) == Some("now")
+            {
+                clock_uses.push(ClockUse {
+                    fn_idx: owner_of(&fns, i),
+                    line: toks[i].line,
+                    what: if ty == "Instant" { "Instant::now" } else { "SystemTime::now" },
+                });
+            }
+        }
+    }
+
+    let mut lw = LockWalkOut { acqs: Vec::new(), edges: Vec::new(), held_calls: Vec::new() };
+    for (idx, f) in fns.iter().enumerate() {
+        if let Some(body) = f.body {
+            // nested fns get their own walk; the outer walk crossing the
+            // nested body is harmless (guards are scoped by depth)
+            walk_locks(toks, idx, body, &mut lw);
+        }
+    }
+
+    FileSyms {
+        map_names: map_names(toks),
+        iter_uses: iter_uses(toks, &tests),
+        discards: discards(toks, &fns, &tests),
+        fns,
+        calls,
+        acqs: lw.acqs,
+        edges: lw.edges,
+        held_calls: lw.held_calls,
+        clock_uses,
+        test_spans: tests,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    #[test]
+    fn fn_items_capture_impl_type_and_result() {
+        let src = "
+impl Pool {
+    pub fn submit(&self, n: usize) -> Result<Ticket, E> { helper(n) }
+}
+fn helper(n: usize) -> usize { n }
+trait Clock { fn now(&self) -> Instant; }
+";
+        let s = parse_file(&lex(src));
+        let names: Vec<(String, Option<String>, bool)> =
+            s.fns.iter().map(|f| (f.name.clone(), f.self_type.clone(), f.returns_result)).collect();
+        assert_eq!(
+            names,
+            vec![
+                ("submit".into(), Some("Pool".into()), true),
+                ("helper".into(), None, false),
+                ("now".into(), Some("Clock".into()), false),
+            ]
+        );
+        assert_eq!(s.calls.len(), 1);
+        assert_eq!(s.calls[0].callee, Callee::Bare("helper".into()));
+        assert_eq!(s.calls[0].fn_idx, 0);
+    }
+
+    #[test]
+    fn impl_trait_for_type_resolves_to_type() {
+        let src = "impl Clock for SystemClock { fn now(&self) -> Instant { Instant::now() } }";
+        let s = parse_file(&lex(src));
+        assert_eq!(s.fns[0].self_type.as_deref(), Some("SystemClock"));
+        assert_eq!(s.clock_uses.len(), 1);
+        assert_eq!(s.clock_uses[0].fn_idx, Some(0));
+    }
+
+    #[test]
+    fn map_names_and_iter_uses() {
+        let src = "
+struct S { by_dev: std::collections::HashMap<usize, Vec<usize>> }
+fn f(m: HashMap<String, f32>) {
+    let mut seen = HashSet::new();
+    for (k, _) in &m { touch(k); }
+    let n: Vec<_> = seen.iter().collect();
+    for v in self.by_dev { use_it(v); }
+}
+";
+        let s = parse_file(&lex(src));
+        assert_eq!(s.map_names, vec!["by_dev".to_string(), "m".into(), "seen".into()]);
+        let iters: Vec<&str> = s.iter_uses.iter().map(|u| u.name.as_str()).collect();
+        assert_eq!(iters, vec!["m", "seen", "by_dev"]);
+    }
+
+    #[test]
+    fn discard_shapes() {
+        let src = "
+fn f(s: &mut S) {
+    let _ = s.flush();
+    s.flush();
+    requeue(s);
+    let n = s.flush();
+    s.flush()?;
+    self.stats.count += grow(s);
+}
+";
+        let s = parse_file(&lex(src));
+        let got: Vec<(&str, u32)> = s.discards.iter().map(|d| (d.callee.name(), d.line)).collect();
+        assert_eq!(got, vec![("flush", 3), ("flush", 4), ("requeue", 5)]);
+    }
+
+    #[test]
+    fn lock_walk_edges_and_held_calls() {
+        let src = "
+fn f(s: &S) {
+    let ga = s.a.lock().unwrap_or_else(poison);
+    let gb = s.b.lock().unwrap_or_else(poison);
+    helper(s);
+    drop(gb);
+    drop(ga);
+    tail(s);
+}
+";
+        let s = parse_file(&lex(src));
+        assert_eq!(s.acqs.iter().map(|a| a.lock.as_str()).collect::<Vec<_>>(), vec!["a", "b"]);
+        assert_eq!(s.edges.len(), 1);
+        assert_eq!((s.edges[0].held.as_str(), s.edges[0].lock.as_str()), ("a", "b"));
+        // helper(s) runs under both guards; unwrap_or_else(poison) under
+        // the just-taken temp; tail(s) under none
+        let held: Vec<(&str, &str)> =
+            s.held_calls.iter().map(|h| (h.held.as_str(), h.callee.name())).collect();
+        assert!(held.contains(&("a", "helper")) && held.contains(&("b", "helper")));
+        assert!(!held.iter().any(|&(_, c)| c == "tail"));
+    }
+}

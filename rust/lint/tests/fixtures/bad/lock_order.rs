@@ -1,0 +1,16 @@
+// Bad: the global lock graph has a cycle — `forward` takes alpha then
+// beta directly; `backward` takes beta then alpha through a helper.
+
+pub fn forward(s: &S) {
+    let ga = s.alpha.lock().unwrap_or_else(|e| e.into_inner());
+    let gb = s.beta.lock().unwrap_or_else(|e| e.into_inner());
+}
+
+pub fn backward(s: &S) {
+    let gb = s.beta.lock().unwrap_or_else(|e| e.into_inner());
+    grab_alpha(s);
+}
+
+fn grab_alpha(s: &S) {
+    let ga = s.alpha.lock().unwrap_or_else(|e| e.into_inner());
+}

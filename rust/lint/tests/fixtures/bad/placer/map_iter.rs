@@ -1,0 +1,14 @@
+// Bad: iterating a HashMap in plan-producing placer/ code — the
+// randomized order can leak into device assignments.
+
+pub struct Loads {
+    by_dev: HashMap<usize, f32>,
+}
+
+pub fn spread(l: &Loads) -> f32 {
+    let mut acc = 0.0;
+    for (_, v) in l.by_dev.iter() {
+        acc += v;
+    }
+    acc
+}

@@ -1,0 +1,6 @@
+// Bad: this serve/ call site reaches a raw clock through the helper in
+// ../timeutil.rs — clean alone, flagged when linted with its pair.
+
+pub fn drain_tick() -> u64 {
+    monotonic_ms()
+}

@@ -1,0 +1,10 @@
+// Bad: serve/ drops the Result of an in-crate call on the floor.
+
+impl Dispatcher {
+    fn requeue_all(&mut self) -> Result<usize> {
+        Ok(0)
+    }
+    fn on_tick(&mut self) {
+        let _ = self.requeue_all();
+    }
+}

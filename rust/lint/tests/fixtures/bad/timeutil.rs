@@ -1,0 +1,8 @@
+// Bad half of a cross-file pair: a raw clock behind a helper. Not in
+// serve/, so never flagged directly — the violation appears at the
+// serve/leak.rs call site that reaches it.
+
+pub fn monotonic_ms() -> u64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_millis() as u64
+}

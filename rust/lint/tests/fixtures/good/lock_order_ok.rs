@@ -1,0 +1,16 @@
+// Good: every path takes alpha before beta — one global acquisition
+// order, directly or through a helper, so the lock graph is acyclic.
+
+pub fn forward(s: &S) {
+    let ga = s.alpha.lock().unwrap_or_else(|e| e.into_inner());
+    let gb = s.beta.lock().unwrap_or_else(|e| e.into_inner());
+}
+
+pub fn also_forward(s: &S) {
+    let ga = s.alpha.lock().unwrap_or_else(|e| e.into_inner());
+    grab_beta(s);
+}
+
+fn grab_beta(s: &S) {
+    let gb = s.beta.lock().unwrap_or_else(|e| e.into_inner());
+}

@@ -1,0 +1,19 @@
+// Good: deterministic containers iterate freely; a HashSet fold is
+// pragma-justified as order-insensitive.
+
+pub struct Loads {
+    by_dev: BTreeMap<usize, f32>,
+    seen: HashSet<usize>,
+}
+
+pub fn spread(l: &Loads) -> f32 {
+    let mut acc = 0.0;
+    for (_, v) in l.by_dev.iter() {
+        acc += v;
+    }
+    // lint: allow(map-iter-determinism) — order-insensitive sum
+    for d in l.seen.iter() {
+        acc += *d as f32;
+    }
+    acc
+}

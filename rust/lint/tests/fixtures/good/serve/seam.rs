@@ -5,6 +5,6 @@ pub fn stamp(clock: &dyn Clock) -> Instant {
 }
 
 pub fn justified() -> std::time::Instant {
-    // lint: allow(clock-discipline) — diagnostics only, never replayed
+    // lint: allow(clock-transitive) — diagnostics only, never replayed
     std::time::Instant::now()
 }

@@ -1,0 +1,17 @@
+// Good: serve/ routes in-crate Results through `?` (or justifies the
+// drop); discarding a unit-returning call is not a violation.
+
+impl Dispatcher {
+    fn requeue_all(&mut self) -> Result<usize> {
+        Ok(0)
+    }
+    fn log_tick(&mut self) {
+    }
+    fn on_tick(&mut self) -> Result<usize> {
+        self.log_tick();
+        let n = self.requeue_all()?;
+        // lint: allow(swallowed-result) — best-effort refresh, retried next tick
+        let _ = self.requeue_all();
+        Ok(n)
+    }
+}

@@ -1,9 +1,11 @@
 //! End-to-end tests of the compiled `dreamshard-lint` binary: every rule
 //! has a known-bad fixture asserted down to the exact `(file, line,
 //! rule)` triples it must report, a known-good fixture that must stay
-//! silent (string/comment traps, path exemptions, pragma escapes), and
-//! the real sources must lint clean — the same contract CI gates with
-//! `cargo run -p dreamshard-lint`.
+//! silent (string/comment traps, path exemptions, pragma escapes), the
+//! interprocedural rules have a cross-file pair that only fails when
+//! linted together, the `--json` document round-trips through a real
+//! parser, and the real tree must lint clean under the full default walk
+//! — the same contract CI gates with `cargo run -p dreamshard-lint`.
 
 use std::collections::BTreeSet;
 use std::path::PathBuf;
@@ -13,29 +15,36 @@ fn fixture(rel: &str) -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(rel)
 }
 
-/// Run the binary on `paths`, returning its exit code plus the
-/// fixture-relative `(file, line, rule)` triples parsed from stdout.
-fn lint(paths: &[PathBuf]) -> (Option<i32>, BTreeSet<(String, u32, String)>) {
+/// Run the binary with `flags` + `paths`, returning the exit code and
+/// raw stdout.
+fn run_lint(flags: &[&str], paths: &[PathBuf]) -> (Option<i32>, String) {
     let out = Command::new(env!("CARGO_BIN_EXE_dreamshard-lint"))
+        .args(flags)
         .args(paths)
         .output()
         .expect("spawn dreamshard-lint");
+    (out.status.code(), String::from_utf8_lossy(&out.stdout).into_owned())
+}
+
+fn rel_fixture(file: &str) -> String {
+    let file = file.replace('\\', "/");
+    file.rsplit_once("tests/fixtures/").map(|(_, r)| r.to_string()).unwrap_or(file)
+}
+
+/// Text-mode run, parsed into fixture-relative `(file, line, rule)`.
+fn lint(paths: &[PathBuf]) -> (Option<i32>, BTreeSet<(String, u32, String)>) {
+    let (code, stdout) = run_lint(&[], paths);
     let mut hits = BTreeSet::new();
-    for l in String::from_utf8_lossy(&out.stdout).lines() {
+    for l in stdout.lines() {
         // `<path>:<line>: <rule>: <message>`
         let mut parts = l.splitn(3, ": ");
         let file_line = parts.next().expect("file:line field");
         let rule = parts.next().expect("rule field").to_string();
         assert!(parts.next().is_some(), "missing message in `{l}`");
         let (file, line) = file_line.rsplit_once(':').expect("line suffix");
-        let file = file.replace('\\', "/");
-        let rel = file
-            .rsplit_once("tests/fixtures/")
-            .map(|(_, r)| r.to_string())
-            .unwrap_or(file);
-        hits.insert((rel, line.parse().expect("numeric line"), rule));
+        hits.insert((rel_fixture(file), line.parse().expect("numeric line"), rule));
     }
-    (out.status.code(), hits)
+    (code, hits)
 }
 
 fn expected(entries: &[(&str, u32, &str)]) -> BTreeSet<(String, u32, String)> {
@@ -53,20 +62,25 @@ fn bad_fixtures_flag_exact_lines() {
             ("bad/envy.rs", 8, "env-discipline"),
             ("bad/lock.rs", 5, "lock-across-wait"),
             ("bad/lock.rs", 11, "lock-across-wait"),
+            ("bad/lock_order.rs", 6, "lock-order"),
+            ("bad/lock_order.rs", 11, "lock-order"),
             ("bad/nan.rs", 4, "nan-ordering"),
             ("bad/nan.rs", 9, "nan-ordering"),
             ("bad/nan.rs", 14, "nan-ordering"),
             ("bad/nan.rs", 18, "nan-ordering"),
             ("bad/nan.rs", 22, "nan-ordering"),
+            ("bad/placer/map_iter.rs", 10, "map-iter-determinism"),
             ("bad/pragmas.rs", 4, "pragma"),
             ("bad/pragmas.rs", 5, "nan-ordering"),
             ("bad/pragmas.rs", 9, "pragma"),
             ("bad/pragmas.rs", 10, "nan-ordering"),
-            ("bad/serve/clocky.rs", 4, "clock-discipline"),
-            ("bad/serve/clocky.rs", 8, "clock-discipline"),
+            ("bad/serve/clocky.rs", 4, "clock-transitive"),
+            ("bad/serve/clocky.rs", 8, "clock-transitive"),
+            ("bad/serve/leak.rs", 5, "clock-transitive"),
             ("bad/serve/panics.rs", 4, "panic-policy"),
             ("bad/serve/panics.rs", 8, "panic-policy"),
             ("bad/serve/panics.rs", 12, "panic-policy"),
+            ("bad/serve/swallow.rs", 8, "swallowed-result"),
         ]),
     );
 }
@@ -80,13 +94,41 @@ fn good_fixtures_are_clean() {
 
 #[test]
 fn each_bad_fixture_fails_alone() {
-    let files =
-        ["nan.rs", "serve/clocky.rs", "envy.rs", "serve/panics.rs", "lock.rs", "pragmas.rs"];
+    // the cross-file pair (serve/leak.rs + timeutil.rs) is deliberately
+    // absent: each half is clean alone (see the pair test below)
+    let files = [
+        "nan.rs",
+        "serve/clocky.rs",
+        "envy.rs",
+        "serve/panics.rs",
+        "serve/swallow.rs",
+        "lock.rs",
+        "lock_order.rs",
+        "placer/map_iter.rs",
+        "pragmas.rs",
+    ];
     for f in files {
         let (code, hits) = lint(&[fixture("bad").join(f)]);
         assert_eq!(code, Some(1), "{f} must fail on its own");
         assert!(!hits.is_empty(), "{f} must report at least one violation");
     }
+}
+
+/// The interprocedural contract in one test: a serve/ caller and the
+/// raw-clock helper it reaches are each clean in isolation, and the
+/// violation appears — at the call site — only when the analyzer sees
+/// both files as one program.
+#[test]
+fn cross_file_leak_needs_both_halves() {
+    let leak = fixture("bad/serve/leak.rs");
+    let util = fixture("bad/timeutil.rs");
+    let (code, hits) = lint(&[leak.clone()]);
+    assert_eq!((code, hits.len()), (Some(0), 0), "caller half must be clean alone");
+    let (code, hits) = lint(&[util.clone()]);
+    assert_eq!((code, hits.len()), (Some(0), 0), "helper half must be clean alone");
+    let (code, hits) = lint(&[leak, util]);
+    assert_eq!(code, Some(1));
+    assert_eq!(hits, expected(&[("bad/serve/leak.rs", 5, "clock-transitive")]));
 }
 
 #[test]
@@ -96,6 +138,225 @@ fn missing_path_is_a_usage_error() {
     assert!(hits.is_empty());
 }
 
+#[test]
+fn unknown_flag_is_a_usage_error() {
+    let (code, stdout) = run_lint(&["--no-such-flag"], &[]);
+    assert_eq!(code, Some(2));
+    assert!(stdout.is_empty());
+}
+
+#[test]
+fn quiet_suppresses_findings_but_not_the_exit_code() {
+    let (code, stdout) = run_lint(&["--quiet"], &[fixture("bad")]);
+    assert_eq!(code, Some(1), "--quiet must not change the verdict");
+    assert!(stdout.is_empty(), "--quiet must print no per-violation lines");
+}
+
+// ---------------------------------------------------------------------
+// --json round trip
+// ---------------------------------------------------------------------
+
+/// Just enough JSON to parse the documented schema (objects, arrays,
+/// escaped strings, non-negative integers) — so the round trip proves
+/// the emitter produces real JSON, not something JSON-shaped.
+#[derive(Debug, PartialEq)]
+enum Json {
+    Num(u64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+    fn eat(&mut self, c: u8) {
+        self.ws();
+        assert_eq!(self.s.get(self.i), Some(&c), "expected `{}` at byte {}", c as char, self.i);
+        self.i += 1;
+    }
+    fn peek(&mut self) -> u8 {
+        self.ws();
+        *self.s.get(self.i).expect("unexpected end of JSON")
+    }
+    fn value(&mut self) -> Json {
+        match self.peek() {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Json::Str(self.string()),
+            _ => self.number(),
+        }
+    }
+    fn object(&mut self) -> Json {
+        self.eat(b'{');
+        let mut kv = Vec::new();
+        if self.peek() != b'}' {
+            loop {
+                let k = self.string();
+                self.eat(b':');
+                kv.push((k, self.value()));
+                if self.peek() != b',' {
+                    break;
+                }
+                self.eat(b',');
+            }
+        }
+        self.eat(b'}');
+        Json::Obj(kv)
+    }
+    fn array(&mut self) -> Json {
+        self.eat(b'[');
+        let mut items = Vec::new();
+        if self.peek() != b']' {
+            loop {
+                items.push(self.value());
+                if self.peek() != b',' {
+                    break;
+                }
+                self.eat(b',');
+            }
+        }
+        self.eat(b']');
+        Json::Arr(items)
+    }
+    fn string(&mut self) -> String {
+        self.eat(b'"');
+        let mut out = String::new();
+        loop {
+            let c = self.s[self.i];
+            self.i += 1;
+            match c {
+                b'"' => break,
+                b'\\' => {
+                    let e = self.s[self.i];
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(&self.s[self.i..self.i + 4]).unwrap();
+                            self.i += 4;
+                            let cp = u32::from_str_radix(hex, 16).expect("hex escape");
+                            out.push(char::from_u32(cp).expect("scalar escape"));
+                        }
+                        other => panic!("unsupported escape `\\{}`", other as char),
+                    }
+                }
+                c => {
+                    // re-assemble multi-byte UTF-8 sequences
+                    let len = match c {
+                        0x00..=0x7f => 0,
+                        0xc0..=0xdf => 1,
+                        0xe0..=0xef => 2,
+                        _ => 3,
+                    };
+                    let bytes = &self.s[self.i - 1..self.i + len];
+                    self.i += len;
+                    out.push_str(std::str::from_utf8(bytes).expect("utf8 string"));
+                }
+            }
+        }
+        out
+    }
+    fn number(&mut self) -> Json {
+        self.ws();
+        let start = self.i;
+        while self.i < self.s.len() && self.s[self.i].is_ascii_digit() {
+            self.i += 1;
+        }
+        assert!(self.i > start, "expected a number at byte {start}");
+        Json::Num(std::str::from_utf8(&self.s[start..self.i]).unwrap().parse().unwrap())
+    }
+}
+
+fn parse_json(s: &str) -> Json {
+    let mut p = Parser { s: s.as_bytes(), i: 0 };
+    let v = p.value();
+    p.ws();
+    assert_eq!(p.i, s.len(), "trailing bytes after JSON document");
+    v
+}
+
+fn field<'j>(obj: &'j Json, key: &str) -> &'j Json {
+    match obj {
+        Json::Obj(kv) => {
+            &kv.iter().find(|(k, _)| k == key).unwrap_or_else(|| panic!("missing key `{key}`")).1
+        }
+        other => panic!("expected object for `{key}`, got {other:?}"),
+    }
+}
+
+fn count_rs(dir: &PathBuf) -> usize {
+    let mut n = 0;
+    for e in std::fs::read_dir(dir).expect("read fixture dir") {
+        let p = e.expect("dir entry").path();
+        if p.is_dir() {
+            n += count_rs(&p);
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            n += 1;
+        }
+    }
+    n
+}
+
+/// `--json` must agree with text mode finding-for-finding, carry the
+/// documented `version`/`files_checked` fields, and parse as real JSON.
+#[test]
+fn json_output_round_trips() {
+    let (text_code, text_hits) = lint(&[fixture("bad")]);
+    let (json_code, stdout) = run_lint(&["--json"], &[fixture("bad")]);
+    assert_eq!(json_code, text_code);
+
+    let doc = parse_json(&stdout);
+    assert_eq!(field(&doc, "version"), &Json::Num(1));
+    assert_eq!(field(&doc, "files_checked"), &Json::Num(count_rs(&fixture("bad")) as u64));
+
+    let Json::Arr(viols) = field(&doc, "violations") else { panic!("violations not an array") };
+    let mut json_hits = BTreeSet::new();
+    for v in viols {
+        let Json::Str(file) = field(v, "file") else { panic!("file not a string") };
+        let Json::Num(line) = field(v, "line") else { panic!("line not a number") };
+        let Json::Str(rule) = field(v, "rule") else { panic!("rule not a string") };
+        let Json::Str(msg) = field(v, "message") else { panic!("message not a string") };
+        assert!(!msg.is_empty(), "every violation carries a message");
+        json_hits.insert((rel_fixture(file), *line as u32, rule.clone()));
+    }
+    assert_eq!(json_hits, text_hits, "--json and text mode must agree");
+}
+
+/// `--github` renders one workflow command per finding, in the
+/// `::error file=..,line=..,title=..::message` shape CI annotates with.
+#[test]
+fn github_annotations_format() {
+    let (code, stdout) = run_lint(&["--github"], &[fixture("bad/serve/clocky.rs")]);
+    assert_eq!(code, Some(1));
+    let lines: Vec<&str> = stdout.lines().collect();
+    assert_eq!(lines.len(), 2, "one annotation per finding: {stdout}");
+    for (l, want_line) in lines.iter().zip([4, 8]) {
+        assert!(l.starts_with("::error file="), "workflow command prefix: {l}");
+        assert!(l.contains(&format!(",line={want_line},")), "line property: {l}");
+        assert!(l.contains("title=dreamshard-lint clock-transitive::"), "title + separator: {l}");
+        let msg = l.split_once("::").and_then(|(_, r)| r.split_once("::")).map(|(_, m)| m);
+        assert!(!msg.unwrap_or("").is_empty(), "annotation message survives escaping: {l}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// The real tree
+// ---------------------------------------------------------------------
+
 /// The gate CI enforces, from inside the test suite: the real sources
 /// (including this crate's own) carry zero violations.
 #[test]
@@ -104,4 +365,19 @@ fn real_tree_is_clean() {
     let (code, hits) = lint(&[root.join("../src"), root.join("src")]);
     assert_eq!(hits, BTreeSet::new(), "rust/src and rust/lint/src must lint clean");
     assert_eq!(code, Some(0));
+}
+
+/// Regression pin for the v2 widening: the full default walk —
+/// `rust/src`, `rust/lint/src`, `benches/`, `examples/`, `rust/tests/`
+/// — lints clean from the repo root, interprocedural rules included.
+#[test]
+fn full_default_walk_is_clean() {
+    let repo_root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let out = Command::new(env!("CARGO_BIN_EXE_dreamshard-lint"))
+        .current_dir(&repo_root)
+        .output()
+        .expect("spawn dreamshard-lint");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(stdout.as_ref(), "", "default walk must report nothing");
+    assert_eq!(out.status.code(), Some(0));
 }

@@ -895,7 +895,7 @@ impl<'a> PlanService<'a> {
         // drain's delta.
         while let Some(c) = active.pop_back() {
             if let Some(t) = c.ticket {
-                let _ = t.wait();
+                let _ = t.wait(); // lint: allow(swallowed-result) — teardown join for the backend_calls delta; failure already recorded
             }
             self.requeue(c.picked);
         }
