@@ -1,13 +1,21 @@
-//! Micro-bench: per-artifact PJRT call latency on the placement hot path.
+//! Micro-bench: per-artifact PJRT call latency on the placement hot path,
+//! plus two kernel-level sections for the blocked reference kernels: the
+//! blocked-vs-naive linear chain (the table-MLP shape) and the intra-op
+//! row split of the chunk-concatenated `[N, F]` `table_cost` batch at
+//! widths 1/2/4. Headline numbers are also emitted as `BENCH_JSON` lines
+//! (see `bench::common::emit_json`).
 //! (hand-rolled harness: the offline dependency closure has no criterion)
-use dreamshard::bench::common::{make_suite, Which};
+use dreamshard::bench::common::{emit_json, make_suite, Which};
 use dreamshard::coordinator::{CostNet, DreamShard, PolicyNet, TrainCfg, Variant};
-use dreamshard::runtime::{Runtime, TensorF32};
+use dreamshard::runtime::reference::math::{self, Lin};
+use dreamshard::runtime::reference::reference_manifest;
+use dreamshard::runtime::{ReferenceBackend, Runtime, TensorF32, Value};
 use dreamshard::tables::NUM_FEATURES;
 use dreamshard::util::Rng;
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+/// Times `f` over `iters` calls (after one warmup); returns secs/call.
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     // warmup
     f();
     let t0 = Instant::now(); // lint: allow(clock-transitive) — wall-clock timing section is what this bench measures
@@ -16,6 +24,7 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     }
     let per = t0.elapsed().as_secs_f64() / iters as f64;
     println!("{name}: {:.2} ms/call", per * 1e3);
+    per
 }
 
 fn main() {
@@ -28,15 +37,19 @@ fn main() {
     let feats = TensorF32::zeros(&[e, d, s, f]);
     let mask = TensorF32::ones(&[e, d, s]);
     let dmask = TensorF32::ones(&[e, d]);
-    bench("cost_fwd (E=16,D=4,S=48)", 50, || {
+    let calls0 = rt.run_count();
+    let per = bench("cost_fwd (E=16,D=4,S=48)", 50, || {
         cost.predict_tensors(&rt, &var, &feats, &mask, &dmask, 16).unwrap();
     });
+    emit_json("cost_fwd", 1.0 / per, rt.run_count() - calls0);
     let q = TensorF32::zeros(&[e, d, 3]);
     let cur = TensorF32::zeros(&[e, f]);
     let legal = TensorF32::ones(&[e, d]);
-    bench("policy_fwd", 50, || {
+    let calls0 = rt.run_count();
+    let per = bench("policy_fwd", 50, || {
         policy.logits(&rt, &var, &feats, &mask, &q, &cur, &legal, 16).unwrap();
     });
+    emit_json("policy_fwd", 1.0 / per, rt.run_count() - calls0);
     // cost_train
     let mut cost2 = cost.clone();
     let bf = TensorF32::zeros(&[var.b_cost, d, s, f]);
@@ -44,9 +57,11 @@ fn main() {
     let bd = TensorF32::ones(&[var.b_cost, d]);
     let bq = TensorF32::zeros(&[var.b_cost, d, 3]);
     let bc = TensorF32::zeros(&[var.b_cost]);
-    bench("cost_train (B=64)", 30, || {
+    let calls0 = rt.run_count();
+    let per = bench("cost_train (B=64)", 30, || {
         cost2.train_batch(&rt, &var, &bf, &bm, &bd, &bq, &bc, 5e-4).unwrap();
     });
+    emit_json("cost_train", 1.0 / per, rt.run_count() - calls0);
     // policy_train b512
     let steps: Vec<dreamshard::coordinator::StepRec> = (0..500)
         .map(|_| dreamshard::coordinator::StepRec {
@@ -60,9 +75,11 @@ fn main() {
         .collect();
     let adv = vec![0.0f32; 500];
     let mut pol2 = policy.clone();
-    bench("policy_train (500 steps -> b512)", 10, || {
+    let calls0 = rt.run_count();
+    let per = bench("policy_train (500 steps -> b512)", 10, || {
         pol2.train_steps(&rt, &var, &steps, &adv, 5e-4).unwrap();
     });
+    emit_json("policy_train", 1.0 / per, rt.run_count() - calls0);
     // full placement inference
     let suite = make_suite(Which::Dlrm, 50, 4, 2, 7);
     let agent = {
@@ -72,7 +89,68 @@ fn main() {
         a.policy = policy;
         a
     };
-    bench("place (50 tables, 4 devices)", 5, || {
+    let calls0 = rt.run_count();
+    let per = bench("place (50 tables, 4 devices)", 5, || {
         agent.place(&rt, &suite.sim, &suite.ds, &suite.test[0]).unwrap();
     });
+    emit_json("place_50x4", 1.0 / per, rt.run_count() - calls0);
+
+    // blocked vs naive reference kernels on the table-MLP chain
+    // [256, F] -> 128 -> 32 (the kept `_naive` kernels are the
+    // bit-identity oracles — see tests/kernels.rs)
+    let mut krng = Rng::new(7);
+    let rows = 256usize;
+    let l1 = Lin { w: 0, b: NUM_FEATURES * 128, n_in: NUM_FEATURES, n_out: 128 };
+    let l2 = Lin { w: 0, b: 128 * 32, n_in: 128, n_out: 32 };
+    let th1 = math::rand_vec(l1.b + l1.n_out, 0.5, &mut krng);
+    let th2 = math::rand_vec(l2.b + l2.n_out, 0.5, &mut krng);
+    let x = math::rand_vec(rows * NUM_FEATURES, 1.0, &mut krng);
+    let naive_per = bench("linear naive ([256,F]->128->32)", 400, || {
+        let h = math::linear_fwd_naive(&th1, l1, &x, rows, true);
+        let y = math::linear_fwd_naive(&th2, l2, &h, rows, false);
+        std::hint::black_box(&y);
+    });
+    let blocked_per = bench("linear blocked ([256,F]->128->32)", 400, || {
+        let h = math::linear_fwd(&th1, l1, &x, rows, true);
+        let y = math::linear_fwd(&th2, l2, &h, rows, false);
+        std::hint::black_box(&y);
+    });
+    println!("blocked vs naive linear chain: {:.2}x", naive_per / blocked_per);
+    emit_json("linear_naive_256xF", 1.0 / naive_per, 0);
+    emit_json("linear_blocked_256xF", 1.0 / blocked_per, 0);
+
+    // intra-op row split of one large concatenated `table_cost` batch:
+    // bit-identical across widths (tests/kernels.rs pins it), so only
+    // the wall clock may move. One submit stays ONE counted dispatch.
+    let n = 1024usize;
+    let mut serial_per = f64::NAN;
+    for intra in [1usize, 2, 4] {
+        let rtw = Runtime::with_backend(
+            reference_manifest(),
+            Box::new(ReferenceBackend::with_intra_op(intra)),
+        );
+        let mut rng2 = Rng::new(5);
+        let theta = rtw.init_params("cost", &mut rng2).unwrap();
+        let fdim = rtw.manifest.consts["F"] as usize;
+        let mut feats = TensorF32::zeros(&[n, fdim]);
+        for v in feats.data.iter_mut() {
+            *v = rng2.uniform(0.0, 1.0) as f32;
+        }
+        let inputs: Vec<Value> = vec![
+            TensorF32::from_vec(theta, &[rtw.manifest.params["cost"].total]).value(),
+            feats.value(),
+            TensorF32::ones(&[fdim]).value(),
+        ];
+        let calls0 = rtw.run_count();
+        let per = bench(&format!("table_cost [{n}, F] intra={intra}"), 50, || {
+            rtw.run("table_cost", &inputs).unwrap();
+        });
+        let calls = rtw.run_count() - calls0;
+        if intra == 1 {
+            serial_per = per;
+        } else {
+            println!("  table_cost intra={intra}: {:.2}x vs serial", serial_per / per);
+        }
+        emit_json(&format!("table_cost_{n}_intra{intra}"), 1.0 / per, calls);
+    }
 }

@@ -2,7 +2,7 @@
 //! paper's headline "hundreds of tables in less than a second", Fig. 8),
 //! lane-batched vs sequential multi-task planning through the `Placer`
 //! facade, and one full Algorithm-1 training iteration.
-use dreamshard::bench::common::{make_suite, Which};
+use dreamshard::bench::common::{emit_json, make_suite, Which};
 use dreamshard::coordinator::{DreamShard, TrainCfg};
 use dreamshard::placer::{DreamShardPlacer, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
@@ -18,15 +18,15 @@ fn main() {
         let agent = DreamShard::new(&rt, d, TrainCfg::default(), &mut rng).unwrap();
         let task = &suite.test[0];
         agent.place(&rt, &suite.sim, &suite.ds, task).unwrap(); // warm
+        let calls0 = rt.run_count();
         let t0 = Instant::now(); // lint: allow(clock-transitive) — wall-clock timing section is what this bench measures
         let reps = 5;
         for _ in 0..reps {
             agent.place(&rt, &suite.sim, &suite.ds, task).unwrap();
         }
-        println!(
-            "place {n} tables x {d} devices: {:.1} ms",
-            t0.elapsed().as_secs_f64() / reps as f64 * 1e3
-        );
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        println!("place {n} tables x {d} devices: {:.1} ms", per * 1e3);
+        emit_json(&format!("place_{n}x{d}"), 1.0 / per, rt.run_count() - calls0);
     }
 
     // multi-task planning: sequential episodes vs lane-batched place_many
@@ -48,11 +48,13 @@ fn main() {
         }
     }
     let seq_s = t0.elapsed().as_secs_f64() / reps as f64;
+    let calls0 = rt.run_count();
     let t0 = Instant::now(); // lint: allow(clock-transitive) — wall-clock timing section is what this bench measures
     for _ in 0..reps {
         placer.place_many(&reqs).unwrap();
     }
     let batched_s = t0.elapsed().as_secs_f64() / reps as f64;
+    emit_json("plan_lane_batched", reqs.len() as f64 / batched_s, rt.run_count() - calls0);
     println!(
         "plan {} tasks (50 tables x 4 devices): sequential {:.1} ms ({:.1} tasks/s), \
          lane-batched {:.1} ms ({:.1} tasks/s), speedup {:.2}x",

@@ -9,6 +9,7 @@
 //! tables through the fused `mdp_step`, so a move budget of K costs
 //! `1 + K` calls where a scratch chunk pays `1 + n_tables`.
 
+use dreamshard::bench::common::emit_json;
 use dreamshard::coordinator::{DreamShard, TrainCfg};
 use dreamshard::placer::{
     self, DreamShardPlacer, MigrationBudget, Placer, PlacementPlan, PlacementRequest,
@@ -118,6 +119,16 @@ fn main() {
             replaced.len() as f64 / rep_s,
             rep_calls,
             scr_s * 1e3,
+            scratch.len() as f64 / scr_s,
+            scr_calls,
+        );
+        emit_json(
+            &format!("rebalance_replace_budget{moves}"),
+            replaced.len() as f64 / rep_s,
+            rep_calls,
+        );
+        emit_json(
+            &format!("rebalance_scratch_budget{moves}"),
             scratch.len() as f64 / scr_s,
             scr_calls,
         );

@@ -12,6 +12,7 @@
 //! its own thread so a 128-device chunk never stalls 8-device traffic
 //! at the head of one FIFO.
 
+use dreamshard::bench::common::emit_json;
 use dreamshard::coordinator::{DreamShard, TrainCfg};
 use dreamshard::placer::{DreamShardPlacer, Placer, PlacementRequest};
 use dreamshard::runtime::Runtime;
@@ -76,8 +77,10 @@ fn main() {
         (t0.elapsed().as_secs_f64(), rt.run_count() - calls_before)
     };
     run(16); // warm
+    emit_json("serve_sequential", reqs.len() as f64 / seq_s, seq_calls);
     for chunk in [4usize, 16] {
         let (bat_s, bat_calls) = run(chunk);
+        emit_json(&format!("serve_batched_chunk{chunk}"), reqs.len() as f64 / bat_s, bat_calls);
         println!(
             "serve {} mixed-device requests, chunk {chunk:>2}: \
              batched drain {:.1} ms ({:.1} plans/s, {} backend calls) vs \
@@ -114,7 +117,13 @@ fn main() {
         };
         drain(true); // warm
         let blk_s = drain(false);
+        let calls0 = rtw.run_count();
         let pipe_s = drain(true);
+        emit_json(
+            &format!("serve_pipelined_w{workers}"),
+            reqs.len() as f64 / pipe_s,
+            rtw.run_count() - calls0,
+        );
         println!(
             "pipelined drain, {workers} worker(s): blocking {:.1} ms ({:.1} plans/s) vs \
              pipelined {:.1} ms ({:.1} plans/s) -> overlap win {:.2}x",
@@ -187,7 +196,13 @@ fn main() {
         single(); // warm
         sharded();
         let single_s = single();
+        let calls0 = rtw.run_count();
         let sharded_s = sharded();
+        emit_json(
+            &format!("serve_sharded_w{workers}"),
+            mixed.len() as f64 / sharded_s,
+            rtw.run_count() - calls0,
+        );
         println!(
             "sharded front end, {workers} worker(s), 2/4/8/128 mix: single FIFO {:.1} ms \
              ({:.1} plans/s) vs sharded {:.1} ms ({:.1} plans/s) -> {:.2}x",

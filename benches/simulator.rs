@@ -1,17 +1,20 @@
 //! Simulator micro-benchmarks: evaluation throughput at several task
 //! scales (the simulator is on the data-collection path and inside the
 //! RNN baseline's reward loop, so it must stay in the microsecond range).
+use dreamshard::bench::common::emit_json;
 use dreamshard::sim::{SimConfig, Simulator};
 use dreamshard::tables::{gen_dlrm, gen_prod, sample_tasks, split_pools};
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     f();
     let t0 = Instant::now(); // lint: allow(clock-transitive) — wall-clock timing section is what this bench measures
     for _ in 0..iters {
         f();
     }
-    println!("{name}: {:.1} us/call", t0.elapsed().as_secs_f64() / iters as f64 * 1e6);
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name}: {:.1} us/call", per * 1e6);
+    per
 }
 
 fn main() {
@@ -21,12 +24,14 @@ fn main() {
         let task = sample_tasks(&pool, n_tables.min(pool.len()), n_dev, 1, 7).remove(0);
         let sim = Simulator::new(SimConfig::default());
         let placement: Vec<usize> = (0..task.n_tables()).map(|i| i % n_dev).collect();
-        bench(
+        let per = bench(
             &format!("evaluate {n_tables} tables x {n_dev} devices"),
             200,
             || {
                 sim.evaluate(&ds, &task, &placement);
             },
         );
+        // pure-CPU bench: the simulator never touches the runtime
+        emit_json(&format!("sim_evaluate_{n_tables}x{n_dev}"), 1.0 / per, 0);
     }
 }

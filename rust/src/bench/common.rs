@@ -61,6 +61,19 @@ impl Ctx {
     }
 }
 
+/// Emit one machine-readable benchmark record on its own line. Every
+/// bench binary funnels its headline numbers through this so CI (or any
+/// log scraper) can `grep ^BENCH_JSON` and parse without touching the
+/// human-oriented prose lines. Keys are fixed: `bench` (name),
+/// `plans_per_sec` (throughput of whatever unit the bench counts —
+/// plans, calls, or evaluations), `backend_calls` (runtime dispatches
+/// attributed to the measured section; 0 for pure-CPU benches).
+pub fn emit_json(name: &str, plans_per_sec: f64, backend_calls: u64) {
+    println!(
+        "BENCH_JSON {{\"bench\":\"{name}\",\"plans_per_sec\":{plans_per_sec:.2},\"backend_calls\":{backend_calls}}}"
+    );
+}
+
 /// One benchmark suite: `dataset-n_tables (n_devices)`.
 pub struct Suite {
     pub name: String,

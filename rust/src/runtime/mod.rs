@@ -154,8 +154,20 @@ impl Runtime {
     }
 
     /// The pure-Rust reference backend (no artifacts, no native code).
+    ///
+    /// Pool width and the backend's intra-op split width share the one
+    /// `DREAMSHARD_WORKERS` knob (read here, per the env-discipline
+    /// rule): the same setting that sizes the session pool also bounds
+    /// how many scoped helper threads a single large `table_cost`
+    /// dispatch may fan out to. [`Runtime::with_workers`] later resizes
+    /// only the pool — the intra-op width is fixed at construction; use
+    /// [`ReferenceBackend::with_intra_op`] + [`Runtime::with_backend`]
+    /// to pick it explicitly.
     pub fn reference() -> Self {
-        Self::with_backend(reference::reference_manifest(), Box::new(ReferenceBackend::new()))
+        Self::with_backend(
+            reference::reference_manifest(),
+            Box::new(ReferenceBackend::with_intra_op(default_workers())),
+        )
     }
 
     /// A runtime over any [`Backend`] implementation and its manifest

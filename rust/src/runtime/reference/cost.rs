@@ -2,9 +2,14 @@
 //! / `cost_train_step`): shared table-MLP over the padded `[E, D, S, F]`
 //! feature batch, masked table/device reductions, three per-device cost
 //! heads + one overall head, and the Eq.-1 MSE training step.
+//!
+//! All entry points acquire the thread-local [`Scratch`] pool once per
+//! call and recycle every intermediate (including the [`Mlp2Cache`]
+//! activations) on return, so steady-state dispatches allocate nothing.
 
 use super::math::{
-    masked_reduce, masked_reduce_bwd, mlp2_bwd, mlp2_fwd, Mlp2Cache, Red, RedCache,
+    masked_reduce, masked_reduce_bwd, mlp2_bwd, mlp2_fwd, with_scratch, Mlp2Cache, Red, RedCache,
+    Scratch,
 };
 use super::spec::{cost_spec, Spec, F, L};
 
@@ -24,10 +29,22 @@ struct Caches {
     ovr: Mlp2Cache,
 }
 
+impl Caches {
+    fn recycle(self, scr: &mut Scratch) {
+        self.tbl.recycle(scr);
+        self.red1.recycle(scr);
+        for c in self.heads {
+            c.recycle(scr);
+        }
+        self.red2.recycle(scr);
+        self.ovr.recycle(scr);
+    }
+}
+
 const HEADS: [&str; 3] = ["fwd", "bwd", "comm"];
 
-fn x_masked(feats: &[f32], fmask: &[f32], rows: usize) -> Vec<f32> {
-    let mut x = vec![0.0f32; rows * F];
+fn x_masked(feats: &[f32], fmask: &[f32], rows: usize, scr: &mut Scratch) -> Vec<f32> {
+    let mut x = scr.take(rows * F);
     for r in 0..rows {
         for (i, &fm) in fmask.iter().enumerate() {
             x[r * F + i] = feats[r * F + i] * fm;
@@ -49,28 +66,35 @@ fn forward_inner(
     s: usize,
     tr: Red,
     dr: Red,
+    scr: &mut Scratch,
 ) -> (CostOut, Caches) {
     let rows = e * d * s;
-    let x = x_masked(feats, fmask, rows);
-    let (h, tbl) = mlp2_fwd(theta, spec.lin("tbl1"), spec.lin("tbl2"), x, rows);
-    let (hdev, red1) = masked_reduce(&h, mask, e * d, s, L, tr);
+    let x = x_masked(feats, fmask, rows, scr);
+    let (h, tbl) = mlp2_fwd(theta, spec.lin("tbl1"), spec.lin("tbl2"), x, rows, scr);
+    let (hdev, red1) = masked_reduce(&h, mask, e * d, s, L, tr, scr);
+    scr.give(h);
     let mut q = vec![0.0f32; e * d * 3];
     let mut heads = Vec::with_capacity(3);
     for (k, head) in HEADS.iter().enumerate() {
+        let mut hin = scr.take(e * d * L);
+        hin.copy_from_slice(&hdev);
         let (qh, cache) = mlp2_fwd(
             theta,
             spec.lin(&format!("{head}1")),
             spec.lin(&format!("{head}2")),
-            hdev.clone(),
+            hin,
             e * d,
+            scr,
         );
         for ed in 0..e * d {
             q[ed * 3 + k] = qh[ed] * dmask[ed];
         }
+        scr.give(qh);
         heads.push(cache);
     }
-    let (hall, red2) = masked_reduce(&hdev, dmask, e, d, L, dr);
-    let (cost, ovr) = mlp2_fwd(theta, spec.lin("ovr1"), spec.lin("ovr2"), hall, e);
+    let (hall, red2) = masked_reduce(&hdev, dmask, e, d, L, dr, scr);
+    scr.give(hdev);
+    let (cost, ovr) = mlp2_fwd(theta, spec.lin("ovr1"), spec.lin("ovr2"), hall, e, scr);
     (CostOut { q, cost }, Caches { tbl, red1, heads, red2, ovr })
 }
 
@@ -89,7 +113,12 @@ pub fn cost_forward(
     dr: Red,
 ) -> CostOut {
     let spec = cost_spec();
-    forward_inner(&spec, theta, feats, mask, dmask, fmask, e, d, s, tr, dr).0
+    with_scratch(|scr| {
+        let (out, caches) =
+            forward_inner(&spec, theta, feats, mask, dmask, fmask, e, d, s, tr, dr, scr);
+        caches.recycle(scr);
+        out
+    })
 }
 
 /// Eq.-1 loss (cost-feature MSE + overall-cost MSE) and its full
@@ -110,81 +139,130 @@ pub fn cost_loss_grad(
     dr: Red,
 ) -> (f32, Vec<f32>) {
     let spec = cost_spec();
-    let (out, caches) = forward_inner(&spec, theta, feats, mask, dmask, fmask, e, d, s, tr, dr);
-    let dn: f32 = dmask.iter().sum::<f32>().max(1.0);
+    with_scratch(|scr| {
+        let (out, caches) =
+            forward_inner(&spec, theta, feats, mask, dmask, fmask, e, d, s, tr, dr, scr);
+        let dn: f32 = dmask.iter().sum::<f32>().max(1.0);
 
-    let mut loss = 0.0f32;
-    // dq for the dmask-gated q (dmask is 0/1, so gating twice is exact)
-    let mut dq = vec![0.0f32; e * d * 3];
-    for ed in 0..e * d {
-        for k in 0..3 {
-            let diff = out.q[ed * 3 + k] - q_tgt[ed * 3 + k];
-            loss += diff * diff * dmask[ed] / (dn * 3.0);
-            dq[ed * 3 + k] = 2.0 * diff * dmask[ed] / (dn * 3.0);
-        }
-    }
-    let mut dc = vec![0.0f32; e];
-    for lane in 0..e {
-        let diff = out.cost[lane] - c_tgt[lane];
-        loss += diff * diff / e as f32;
-        dc[lane] = 2.0 * diff / e as f32;
-    }
-
-    let mut grad = vec![0.0f32; spec.total];
-    // overall head -> hall -> hdev
-    let dhall = mlp2_bwd(theta, &mut grad, spec.lin("ovr1"), spec.lin("ovr2"), &caches.ovr, &dc, true);
-    let mut dhdev = masked_reduce_bwd(&dhall, dmask, e, d, L, dr, &caches.red2);
-    // three per-device heads -> hdev
-    for (k, head) in HEADS.iter().enumerate() {
-        let mut dy = vec![0.0f32; e * d];
+        let mut loss = 0.0f32;
+        // dq for the dmask-gated q (dmask is 0/1, so gating twice is exact)
+        let mut dq = scr.take(e * d * 3);
         for ed in 0..e * d {
-            dy[ed] = dq[ed * 3 + k] * dmask[ed];
+            for k in 0..3 {
+                let diff = out.q[ed * 3 + k] - q_tgt[ed * 3 + k];
+                loss += diff * diff * dmask[ed] / (dn * 3.0);
+                dq[ed * 3 + k] = 2.0 * diff * dmask[ed] / (dn * 3.0);
+            }
         }
-        let dh = mlp2_bwd(
+        let mut dc = scr.take(e);
+        for lane in 0..e {
+            let diff = out.cost[lane] - c_tgt[lane];
+            loss += diff * diff / e as f32;
+            dc[lane] = 2.0 * diff / e as f32;
+        }
+
+        let mut grad = vec![0.0f32; spec.total];
+        // overall head -> hall -> hdev
+        let dhall = mlp2_bwd(
             theta,
             &mut grad,
-            spec.lin(&format!("{head}1")),
-            spec.lin(&format!("{head}2")),
-            &caches.heads[k],
-            &dy,
+            spec.lin("ovr1"),
+            spec.lin("ovr2"),
+            &caches.ovr,
+            &dc,
             true,
+            scr,
         );
-        for (a, b) in dhdev.iter_mut().zip(dh.iter()) {
-            *a += b;
+        let mut dhdev = masked_reduce_bwd(&dhall, dmask, e, d, L, dr, &caches.red2, scr);
+        scr.give(dhall);
+        scr.give(dc);
+        // three per-device heads -> hdev
+        for (k, head) in HEADS.iter().enumerate() {
+            let mut dy = scr.take(e * d);
+            for ed in 0..e * d {
+                dy[ed] = dq[ed * 3 + k] * dmask[ed];
+            }
+            let dh = mlp2_bwd(
+                theta,
+                &mut grad,
+                spec.lin(&format!("{head}1")),
+                spec.lin(&format!("{head}2")),
+                &caches.heads[k],
+                &dy,
+                true,
+                scr,
+            );
+            for (a, b) in dhdev.iter_mut().zip(dh.iter()) {
+                *a += b;
+            }
+            scr.give(dh);
+            scr.give(dy);
         }
-    }
-    // table reduction -> shared table MLP
-    let dh = masked_reduce_bwd(&dhdev, mask, e * d, s, L, tr, &caches.red1);
-    mlp2_bwd(theta, &mut grad, spec.lin("tbl1"), spec.lin("tbl2"), &caches.tbl, &dh, false);
-    (loss, grad)
+        scr.give(dq);
+        // table reduction -> shared table MLP
+        let dh = masked_reduce_bwd(&dhdev, mask, e * d, s, L, tr, &caches.red1, scr);
+        scr.give(dhdev);
+        mlp2_bwd(theta, &mut grad, spec.lin("tbl1"), spec.lin("tbl2"), &caches.tbl, &dh, false, scr);
+        scr.give(dh);
+        caches.recycle(scr);
+        (loss, grad)
+    })
 }
 
 /// Predicted single-table total cost (sum of the three heads) for each of
 /// `n` feature rows (model.py `table_cost_forward`).
+///
+/// Rows are strictly independent — each row's cost depends only on that
+/// row's `F` features — which is what lets the reference backend
+/// row-split one large `[N, F]` batch across intra-op helper threads
+/// (see `runtime/reference/mod.rs`).
 pub fn table_cost_forward(theta: &[f32], feats: &[f32], fmask: &[f32], n: usize) -> Vec<f32> {
-    let spec = cost_spec();
-    let x = x_masked(feats, fmask, n);
-    let (h, _) = mlp2_fwd(theta, spec.lin("tbl1"), spec.lin("tbl2"), x, n);
     let mut total = vec![0.0f32; n];
-    for head in HEADS {
-        let (qh, _) = mlp2_fwd(
-            theta,
-            spec.lin(&format!("{head}1")),
-            spec.lin(&format!("{head}2")),
-            h.clone(),
-            n,
-        );
-        for (t, &v) in total.iter_mut().zip(qh.iter()) {
-            *t += v;
-        }
-    }
+    table_cost_forward_into(theta, feats, fmask, n, &mut total);
     total
+}
+
+/// [`table_cost_forward`] writing into a caller slice: the intra-op
+/// split hands each helper thread a disjoint chunk of one output buffer.
+pub fn table_cost_forward_into(
+    theta: &[f32],
+    feats: &[f32],
+    fmask: &[f32],
+    n: usize,
+    total: &mut [f32],
+) {
+    debug_assert_eq!(total.len(), n);
+    let spec = cost_spec();
+    with_scratch(|scr| {
+        let x = x_masked(feats, fmask, n, scr);
+        let (h, tbl) = mlp2_fwd(theta, spec.lin("tbl1"), spec.lin("tbl2"), x, n, scr);
+        total.fill(0.0);
+        for head in HEADS {
+            let mut hin = scr.take(n * L);
+            hin.copy_from_slice(&h);
+            let (qh, cache) = mlp2_fwd(
+                theta,
+                spec.lin(&format!("{head}1")),
+                spec.lin(&format!("{head}2")),
+                hin,
+                n,
+                scr,
+            );
+            for (t, &v) in total.iter_mut().zip(qh.iter()) {
+                *t += v;
+            }
+            scr.give(qh);
+            cache.recycle(scr);
+        }
+        scr.give(h);
+        tbl.recycle(scr);
+    });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::reference::math::tests::{fd_check, rand_vec};
+    use crate::runtime::reference::math::{fd_check, rand_vec};
     use crate::util::Rng;
 
     fn tiny_inputs(
@@ -223,7 +301,7 @@ mod tests {
         assert_eq!(out.q.len(), e * d * 3);
         assert_eq!(out.cost.len(), e);
         assert!(out.q.iter().chain(out.cost.iter()).all(|v| v.is_finite()));
-        // deterministic
+        // deterministic (and scratch reuse across calls changes nothing)
         let out2 = cost_forward(&theta, &feats, &mask, &dmask, &fmask, e, d, s, Red::Sum, Red::Max);
         assert_eq!(out.q, out2.q);
         assert_eq!(out.cost, out2.cost);
@@ -274,5 +352,18 @@ mod tests {
         let t = table_cost_forward(&theta, &feats, &fmask, 3);
         assert_eq!(t.len(), 3);
         assert!(t.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn table_cost_into_matches_alloc() {
+        let mut rng = Rng::new(15);
+        let spec = cost_spec();
+        let theta = rand_vec(spec.total, 0.1, &mut rng);
+        let feats = rand_vec(5 * F, 1.0, &mut rng);
+        let fmask = vec![1.0f32; F];
+        let a = table_cost_forward(&theta, &feats, &fmask, 5);
+        let mut b = vec![7.0f32; 5]; // pre-dirtied: _into must fully overwrite
+        table_cost_forward_into(&theta, &feats, &fmask, 5, &mut b);
+        assert_eq!(a, b);
     }
 }

@@ -6,17 +6,162 @@
 //! same row-major layout the tensors use), and every backward helper
 //! *accumulates* into a caller-owned flat gradient vector so shared
 //! layers (e.g. the table MLP used by two input paths) compose naturally.
+//!
+//! # Blocking scheme and the bit-identity guarantee
+//!
+//! The dense kernels are cache-blocked: [`linear_fwd`] tiles over rows
+//! ([`ROW_BLOCK`]) and output columns ([`COL_BLOCK`]) so a tile of the
+//! weight matrix stays hot across a block of input rows, and
+//! [`linear_bwd`] tiles its dW accumulation and dx row sweeps the same
+//! way. The blocking **never reorders the floating-point operations that
+//! feed any single output element**: the k-accumulation in the forward
+//! pass still walks `i = 0..n_in` in order within each (row, column-tile)
+//! pair, the dW/db accumulations still walk rows in ascending order per
+//! (i, j) element, and the dx inner sum still walks `j = 0..n_out` in
+//! order. Tiles only change *which element* is computed next, never the
+//! operand sequence *within* an element — so every f32 sum is exactly
+//! the value the naive triple loop produces, and the backend parity
+//! tests stay byte-for-byte pins rather than tolerance checks. The naive
+//! implementations are kept as oracles ([`linear_fwd_naive`],
+//! [`linear_bwd_naive`], [`mlp2_fwd_naive`], [`mlp2_bwd_naive`]) and
+//! `rust/tests/kernels.rs` asserts bit-identity across a randomized
+//! shape sweep.
+//!
+//! # Scratch buffers
+//!
+//! The per-dispatch `vec![0.0; …]` churn is replaced by a per-thread
+//! [`Scratch`] free-list ([`with_scratch`]): forward/backward entry
+//! points take buffers from the pool (always zeroed, so behavior is
+//! bit-identical to a fresh allocation) and recycle them — including
+//! the [`Mlp2Cache`] activations — when the call returns. Worker-pool
+//! threads are persistent, so steady-state serving reuses the same
+//! handful of buffers across every dispatch.
 
-use super::spec::Lin;
 use crate::err;
 use crate::util::error::Result;
+use std::cell::RefCell;
+
+pub use super::spec::Lin;
+
+/// Row-tile size for the blocked dense kernels.
+pub const ROW_BLOCK: usize = 64;
+/// Output-column (and dW input-row) tile size for the blocked kernels.
+pub const COL_BLOCK: usize = 64;
+
+// ---------------------------------------------------------------------
+// scratch buffers
+// ---------------------------------------------------------------------
+
+/// Free-list of flat `f32` buffers reused across kernel calls.
+///
+/// [`Scratch::take`] hands out a buffer zeroed to the requested length —
+/// bit-identical to `vec![0.0; len]` but reusing capacity — and
+/// [`Scratch::give`] returns one for later reuse. The pool is
+/// thread-local (see [`with_scratch`]); buffers that escape a call (e.g.
+/// an output tensor) simply never come back, which is fine.
+#[derive(Default)]
+pub struct Scratch {
+    pool: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    /// A zeroed buffer of exactly `len` elements, reusing pooled capacity.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.pool.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return a buffer to the pool for a later [`Scratch::take`].
+    pub fn give(&mut self, v: Vec<f32>) {
+        self.pool.push(v);
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+/// Run `f` against this thread's scratch pool.
+///
+/// Worker-pool threads are persistent, so the pool amortizes across
+/// dispatches. Calls must not nest (the entry points in
+/// `runtime/reference/{cost,policy,rnn}.rs` each acquire the pool once
+/// per dispatch and thread `&mut Scratch` through their helpers).
+pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    SCRATCH.with(|cell| f(&mut cell.borrow_mut()))
+}
 
 // ---------------------------------------------------------------------
 // dense layers
 // ---------------------------------------------------------------------
 
 /// `y = x @ w + b` (+ optional ReLU). x: [rows, n_in] -> [rows, n_out].
+///
+/// Cache-blocked; bit-identical to [`linear_fwd_naive`] (see module docs).
 pub fn linear_fwd(theta: &[f32], l: Lin, x: &[f32], rows: usize, relu: bool) -> Vec<f32> {
+    let mut y = vec![0.0f32; rows * l.n_out];
+    linear_fwd_into(theta, l, x, rows, relu, &mut y);
+    y
+}
+
+/// [`linear_fwd`] writing into a caller buffer (pooled via [`Scratch`]).
+pub fn linear_fwd_s(
+    theta: &[f32],
+    l: Lin,
+    x: &[f32],
+    rows: usize,
+    relu: bool,
+    scr: &mut Scratch,
+) -> Vec<f32> {
+    let mut y = scr.take(rows * l.n_out);
+    linear_fwd_into(theta, l, x, rows, relu, &mut y);
+    y
+}
+
+/// Blocked forward kernel. Every element of `y` is written (bias copy
+/// first), so the buffer's prior contents never leak through.
+pub fn linear_fwd_into(theta: &[f32], l: Lin, x: &[f32], rows: usize, relu: bool, y: &mut [f32]) {
+    let (k, m) = (l.n_in, l.n_out);
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(y.len(), rows * m);
+    let w = &theta[l.w..l.w + k * m];
+    let b = &theta[l.b..l.b + m];
+    for r0 in (0..rows).step_by(ROW_BLOCK) {
+        let r1 = (r0 + ROW_BLOCK).min(rows);
+        for j0 in (0..m).step_by(COL_BLOCK) {
+            let j1 = (j0 + COL_BLOCK).min(m);
+            for r in r0..r1 {
+                let yr = &mut y[r * m + j0..r * m + j1];
+                yr.copy_from_slice(&b[j0..j1]);
+                let xr = &x[r * k..(r + 1) * k];
+                // k-accumulation order is i = 0..k ascending per output
+                // element, exactly as in the naive loop (bit-identity).
+                for (i, &xi) in xr.iter().enumerate() {
+                    if xi != 0.0 {
+                        let wr = &w[i * m + j0..i * m + j1];
+                        for (yj, &wj) in yr.iter_mut().zip(wr.iter()) {
+                            *yj += xi * wj;
+                        }
+                    }
+                }
+                if relu {
+                    for yj in yr.iter_mut() {
+                        if *yj < 0.0 {
+                            *yj = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The original naive triple loop, kept as the bit-identity oracle for
+/// `rust/tests/kernels.rs` and the blocked-vs-naive bench section. Do
+/// not optimize this one.
+pub fn linear_fwd_naive(theta: &[f32], l: Lin, x: &[f32], rows: usize, relu: bool) -> Vec<f32> {
     let (k, m) = (l.n_in, l.n_out);
     debug_assert_eq!(x.len(), rows * k);
     let w = &theta[l.w..l.w + k * m];
@@ -45,9 +190,113 @@ pub fn linear_fwd(theta: &[f32], l: Lin, x: &[f32], rows: usize, relu: bool) -> 
     y
 }
 
+/// dW/db accumulation phase of the blocked backward. Rows are walked in
+/// ascending order within and across row blocks, so each (i, j) element
+/// of dW (and each j of db) sees exactly the naive accumulation order.
+fn linear_bwd_params(grad: &mut [f32], l: Lin, x: &[f32], dy: &[f32], rows: usize) {
+    let (k, m) = (l.n_in, l.n_out);
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(dy.len(), rows * m);
+    for r0 in (0..rows).step_by(ROW_BLOCK) {
+        let r1 = (r0 + ROW_BLOCK).min(rows);
+        for r in r0..r1 {
+            let dyr = &dy[r * m..(r + 1) * m];
+            for (gb, &d) in grad[l.b..l.b + m].iter_mut().zip(dyr.iter()) {
+                *gb += d;
+            }
+        }
+        // dW: tile the input-row (i) axis so a band of grad rows stays
+        // cache-hot across the whole row block.
+        for i0 in (0..k).step_by(COL_BLOCK) {
+            let i1 = (i0 + COL_BLOCK).min(k);
+            for r in r0..r1 {
+                let xr = &x[r * k..(r + 1) * k];
+                let dyr = &dy[r * m..(r + 1) * m];
+                for (i, &xi) in xr[i0..i1].iter().enumerate() {
+                    if xi != 0.0 {
+                        let row = i0 + i;
+                        let gw = &mut grad[l.w + row * m..l.w + (row + 1) * m];
+                        for (g, &d) in gw.iter_mut().zip(dyr.iter()) {
+                            *g += xi * d;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// dx phase of the blocked backward: `dx[r,i] = sum_j dy[r,j] w[i,j]`.
+/// The j-sum stays sequential per element; only the (r, i) visit order
+/// is tiled (each element is written exactly once), so values are
+/// bit-identical to the naive loop.
+fn linear_bwd_dx_into(theta: &[f32], l: Lin, dy: &[f32], rows: usize, dx: &mut [f32]) {
+    let (k, m) = (l.n_in, l.n_out);
+    debug_assert_eq!(dy.len(), rows * m);
+    debug_assert_eq!(dx.len(), rows * k);
+    let w = &theta[l.w..l.w + k * m];
+    for r0 in (0..rows).step_by(ROW_BLOCK) {
+        let r1 = (r0 + ROW_BLOCK).min(rows);
+        for i in 0..k {
+            let wr = &w[i * m..(i + 1) * m];
+            for r in r0..r1 {
+                let dyr = &dy[r * m..(r + 1) * m];
+                let mut acc = 0.0f32;
+                for (&d, &wj) in dyr.iter().zip(wr.iter()) {
+                    acc += d * wj;
+                }
+                dx[r * k + i] = acc;
+            }
+        }
+    }
+}
+
 /// Backward of [`linear_fwd`] (callers gate `dy` for ReLU themselves).
 /// Accumulates dW/db into `grad`; returns dx when `want_dx`.
+///
+/// Blocked; bit-identical to [`linear_bwd_naive`] (see module docs).
 pub fn linear_bwd(
+    theta: &[f32],
+    grad: &mut [f32],
+    l: Lin,
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    want_dx: bool,
+) -> Vec<f32> {
+    linear_bwd_params(grad, l, x, dy, rows);
+    if !want_dx {
+        return Vec::new();
+    }
+    let mut dx = vec![0.0f32; rows * l.n_in];
+    linear_bwd_dx_into(theta, l, dy, rows, &mut dx);
+    dx
+}
+
+/// [`linear_bwd`] with the dx buffer pooled via [`Scratch`].
+#[allow(clippy::too_many_arguments)]
+pub fn linear_bwd_s(
+    theta: &[f32],
+    grad: &mut [f32],
+    l: Lin,
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    want_dx: bool,
+    scr: &mut Scratch,
+) -> Vec<f32> {
+    linear_bwd_params(grad, l, x, dy, rows);
+    if !want_dx {
+        return Vec::new();
+    }
+    let mut dx = scr.take(rows * l.n_in);
+    linear_bwd_dx_into(theta, l, dy, rows, &mut dx);
+    dx
+}
+
+/// The original naive backward, kept as the bit-identity oracle for
+/// `rust/tests/kernels.rs`. Do not optimize this one.
+pub fn linear_bwd_naive(
     theta: &[f32],
     grad: &mut [f32],
     l: Lin,
@@ -102,18 +351,52 @@ pub struct Mlp2Cache {
     pub x: Vec<f32>,
     /// Post-ReLU hidden rows [rows, l1.n_out].
     pub h: Vec<f32>,
+    /// Number of rows.
     pub rows: usize,
 }
 
+impl Mlp2Cache {
+    /// Return the cached activations to the pool for reuse by a later call.
+    pub fn recycle(self, scr: &mut Scratch) {
+        scr.give(self.x);
+        scr.give(self.h);
+    }
+}
+
 /// Two-layer MLP with ReLU hidden, over `rows` rows of `x` (consumed).
-pub fn mlp2_fwd(theta: &[f32], l1: Lin, l2: Lin, x: Vec<f32>, rows: usize) -> (Vec<f32>, Mlp2Cache) {
-    let h = linear_fwd(theta, l1, &x, rows, true);
-    let y = linear_fwd(theta, l2, &h, rows, false);
+/// The hidden and output buffers come from `scr`.
+pub fn mlp2_fwd(
+    theta: &[f32],
+    l1: Lin,
+    l2: Lin,
+    x: Vec<f32>,
+    rows: usize,
+    scr: &mut Scratch,
+) -> (Vec<f32>, Mlp2Cache) {
+    let mut h = scr.take(rows * l1.n_out);
+    linear_fwd_into(theta, l1, &x, rows, true, &mut h);
+    let mut y = scr.take(rows * l2.n_out);
+    linear_fwd_into(theta, l2, &h, rows, false, &mut y);
+    (y, Mlp2Cache { x, h, rows })
+}
+
+/// Naive-oracle variant of [`mlp2_fwd`] (plain allocations, naive
+/// linear kernels). Kept for the kernel parity suite.
+pub fn mlp2_fwd_naive(
+    theta: &[f32],
+    l1: Lin,
+    l2: Lin,
+    x: Vec<f32>,
+    rows: usize,
+) -> (Vec<f32>, Mlp2Cache) {
+    let h = linear_fwd_naive(theta, l1, &x, rows, true);
+    let y = linear_fwd_naive(theta, l2, &h, rows, false);
     (y, Mlp2Cache { x, h, rows })
 }
 
 /// Backward of [`mlp2_fwd`]. Accumulates parameter grads; returns dx
-/// when `want_dx`.
+/// when `want_dx`. The dh intermediate is pooled and recycled.
+#[allow(clippy::too_many_arguments)]
 pub fn mlp2_bwd(
     theta: &[f32],
     grad: &mut [f32],
@@ -122,14 +405,36 @@ pub fn mlp2_bwd(
     cache: &Mlp2Cache,
     dy: &[f32],
     want_dx: bool,
+    scr: &mut Scratch,
 ) -> Vec<f32> {
-    let mut dh = linear_bwd(theta, grad, l2, &cache.h, dy, cache.rows, true);
+    let mut dh = linear_bwd_s(theta, grad, l2, &cache.h, dy, cache.rows, true, scr);
     for (d, &h) in dh.iter_mut().zip(cache.h.iter()) {
         if h <= 0.0 {
             *d = 0.0;
         }
     }
-    linear_bwd(theta, grad, l1, &cache.x, &dh, cache.rows, want_dx)
+    let dx = linear_bwd_s(theta, grad, l1, &cache.x, &dh, cache.rows, want_dx, scr);
+    scr.give(dh);
+    dx
+}
+
+/// Naive-oracle variant of [`mlp2_bwd`]. Kept for the kernel parity suite.
+pub fn mlp2_bwd_naive(
+    theta: &[f32],
+    grad: &mut [f32],
+    l1: Lin,
+    l2: Lin,
+    cache: &Mlp2Cache,
+    dy: &[f32],
+    want_dx: bool,
+) -> Vec<f32> {
+    let mut dh = linear_bwd_naive(theta, grad, l2, &cache.h, dy, cache.rows, true);
+    for (d, &h) in dh.iter_mut().zip(cache.h.iter()) {
+        if h <= 0.0 {
+            *d = 0.0;
+        }
+    }
+    linear_bwd_naive(theta, grad, l1, &cache.x, &dh, cache.rows, want_dx)
 }
 
 // ---------------------------------------------------------------------
@@ -139,11 +444,15 @@ pub fn mlp2_bwd(
 /// Reduction flavor over the masked item axis.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Red {
+    /// Masked sum.
     Sum,
+    /// Masked mean (empty groups divide by 1).
     Mean,
+    /// Masked max (empty groups reduce to 0).
     Max,
 }
 
+/// Parse a reduction name (`sum` / `mean` / `max`).
 pub fn parse_red(s: &str) -> Result<Red> {
     match s {
         "sum" => Ok(Red::Sum),
@@ -161,9 +470,16 @@ pub struct RedCache {
     pub argmax: Vec<usize>,
 }
 
+impl RedCache {
+    /// Return the poolable buffers for reuse by a later call.
+    pub fn recycle(self, scr: &mut Scratch) {
+        scr.give(self.count);
+    }
+}
+
 /// Reduce `h` [g, n, l] over its item axis under `mask` [g, n] -> [g, l].
 /// Sum/mean as in jnp; max fills empty groups with 0 (model.py's
-/// `where(count > 0, max, 0)` guard).
+/// `where(count > 0, max, 0)` guard). Output buffers are pooled.
 pub fn masked_reduce(
     h: &[f32],
     mask: &[f32],
@@ -171,11 +487,12 @@ pub fn masked_reduce(
     n: usize,
     l: usize,
     red: Red,
+    scr: &mut Scratch,
 ) -> (Vec<f32>, RedCache) {
     debug_assert_eq!(h.len(), g * n * l);
     debug_assert_eq!(mask.len(), g * n);
-    let mut out = vec![0.0f32; g * l];
-    let mut count = vec![0.0f32; g];
+    let mut out = scr.take(g * l);
+    let mut count = scr.take(g);
     let mut argmax = Vec::new();
     if red == Red::Max {
         argmax = vec![usize::MAX; g * l];
@@ -225,7 +542,8 @@ pub fn masked_reduce(
     (out, RedCache { count, argmax })
 }
 
-/// Backward of [`masked_reduce`]: dout [g, l] -> dh [g, n, l].
+/// Backward of [`masked_reduce`]: dout [g, l] -> dh [g, n, l] (pooled).
+#[allow(clippy::too_many_arguments)]
 pub fn masked_reduce_bwd(
     dout: &[f32],
     mask: &[f32],
@@ -234,8 +552,9 @@ pub fn masked_reduce_bwd(
     l: usize,
     red: Red,
     cache: &RedCache,
+    scr: &mut Scratch,
 ) -> Vec<f32> {
-    let mut dh = vec![0.0f32; g * n * l];
+    let mut dh = scr.take(g * n * l);
     for gi in 0..g {
         let drow = &dout[gi * l..(gi + 1) * l];
         match red {
@@ -272,6 +591,7 @@ pub fn masked_reduce_bwd(
 ///
 /// logits/legal: [rows, d]; action/adv/smask: [rows]. Gradient is zeroed
 /// where `legal <= 0` (in the model the -1e9 fill blocks it anyway).
+#[allow(clippy::too_many_arguments)]
 pub fn reinforce_loss_grad(
     logits: &[f32],
     legal: &[f32],
@@ -359,47 +679,50 @@ pub fn adam(theta: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], t: f32, 
 }
 
 // ---------------------------------------------------------------------
-// tests (finite-difference gradient checks)
+// test oracles (finite-difference gradient checks)
 // ---------------------------------------------------------------------
 
+/// Central finite-difference check of `analytic` against `f` at
+/// `theta`, probing `probes` random coordinates. Test oracle — public
+/// so the integration suites (`rust/tests/kernels.rs`) and the sibling
+/// reference modules can gradcheck through the public API.
+pub fn fd_check<F: FnMut(&[f32]) -> f32>(
+    mut f: F,
+    theta: &[f32],
+    analytic: &[f32],
+    probes: usize,
+    seed: u64,
+) {
+    let mut rng = crate::util::Rng::new(seed);
+    let mut th = theta.to_vec();
+    for _ in 0..probes {
+        let i = rng.below(th.len());
+        let eps = 3e-3f32;
+        let orig = th[i];
+        th[i] = orig + eps;
+        let up = f(&th);
+        th[i] = orig - eps;
+        let down = f(&th);
+        th[i] = orig;
+        let fd = (up - down) / (2.0 * eps);
+        let an = analytic[i];
+        let tol = 2e-3 + 0.05 * an.abs().max(fd.abs());
+        assert!(
+            (fd - an).abs() <= tol,
+            "grad mismatch at {i}: fd {fd} vs analytic {an}"
+        );
+    }
+}
+
+/// Uniform random vector in `[-scale, scale]` (test oracle helper).
+pub fn rand_vec(n: usize, scale: f32, rng: &mut crate::util::Rng) -> Vec<f32> {
+    (0..n).map(|_| (rng.f32() - 0.5) * 2.0 * scale).collect()
+}
+
 #[cfg(test)]
-pub mod tests {
+mod tests {
     use super::*;
     use crate::util::Rng;
-
-    /// Central finite-difference check of `analytic` against `f` at
-    /// `theta`, probing `probes` random coordinates.
-    pub fn fd_check<F: FnMut(&[f32]) -> f32>(
-        mut f: F,
-        theta: &[f32],
-        analytic: &[f32],
-        probes: usize,
-        seed: u64,
-    ) {
-        let mut rng = Rng::new(seed);
-        let mut th = theta.to_vec();
-        for _ in 0..probes {
-            let i = rng.below(th.len());
-            let eps = 3e-3f32;
-            let orig = th[i];
-            th[i] = orig + eps;
-            let up = f(&th);
-            th[i] = orig - eps;
-            let down = f(&th);
-            th[i] = orig;
-            let fd = (up - down) / (2.0 * eps);
-            let an = analytic[i];
-            let tol = 2e-3 + 0.05 * an.abs().max(fd.abs());
-            assert!(
-                (fd - an).abs() <= tol,
-                "grad mismatch at {i}: fd {fd} vs analytic {an}"
-            );
-        }
-    }
-
-    pub fn rand_vec(n: usize, scale: f32, rng: &mut Rng) -> Vec<f32> {
-        (0..n).map(|_| (rng.f32() - 0.5) * 2.0 * scale).collect()
-    }
 
     #[test]
     fn linear_matches_by_hand() {
@@ -422,12 +745,19 @@ pub mod tests {
         let x = rand_vec(6, 1.0, &mut rng); // 2 rows
         // loss = sum(y^2)/2 so dy = y
         let loss = |th: &[f32]| -> f32 {
-            let (y, _) = mlp2_fwd(th, l1, l2, x.clone(), 2);
-            y.iter().map(|v| v * v).sum::<f32>() / 2.0
+            with_scratch(|scr| {
+                let (y, c) = mlp2_fwd(th, l1, l2, x.clone(), 2, scr);
+                let s = y.iter().map(|v| v * v).sum::<f32>() / 2.0;
+                scr.give(y);
+                c.recycle(scr);
+                s
+            })
         };
-        let (y, cache) = mlp2_fwd(&theta, l1, l2, x.clone(), 2);
+        let (y, cache) = with_scratch(|scr| mlp2_fwd(&theta, l1, l2, x.clone(), 2, scr));
         let mut grad = vec![0.0f32; total];
-        mlp2_bwd(&theta, &mut grad, l1, l2, &cache, &y, false);
+        with_scratch(|scr| {
+            mlp2_bwd(&theta, &mut grad, l1, l2, &cache, &y, false, scr);
+        });
         fd_check(loss, &theta, &grad, 20, 7);
     }
 
@@ -439,12 +769,17 @@ pub mod tests {
         let theta = rand_vec(26, 0.5, &mut rng);
         let x = rand_vec(3, 1.0, &mut rng);
         let loss = |xv: &[f32]| -> f32 {
-            let (y, _) = mlp2_fwd(&theta, l1, l2, xv.to_vec(), 1);
-            y.iter().map(|v| v * v).sum::<f32>() / 2.0
+            with_scratch(|scr| {
+                let (y, c) = mlp2_fwd(&theta, l1, l2, xv.to_vec(), 1, scr);
+                let s = y.iter().map(|v| v * v).sum::<f32>() / 2.0;
+                scr.give(y);
+                c.recycle(scr);
+                s
+            })
         };
-        let (y, cache) = mlp2_fwd(&theta, l1, l2, x.clone(), 1);
+        let (y, cache) = with_scratch(|scr| mlp2_fwd(&theta, l1, l2, x.clone(), 1, scr));
         let mut grad = vec![0.0f32; 26];
-        let dx = mlp2_bwd(&theta, &mut grad, l1, l2, &cache, &y, true);
+        let dx = with_scratch(|scr| mlp2_bwd(&theta, &mut grad, l1, l2, &cache, &y, true, scr));
         fd_check(loss, &x, &dx, 3, 8);
     }
 
@@ -453,16 +788,18 @@ pub mod tests {
         // g=1, n=3, l=2; mask drops item 1
         let h = vec![1.0, 10.0, 5.0, 50.0, 3.0, -2.0];
         let mask = vec![1.0, 0.0, 1.0];
-        let (s, _) = masked_reduce(&h, &mask, 1, 3, 2, Red::Sum);
-        assert_eq!(s, vec![4.0, 8.0]);
-        let (m, _) = masked_reduce(&h, &mask, 1, 3, 2, Red::Mean);
-        assert_eq!(m, vec![2.0, 4.0]);
-        let (x, c) = masked_reduce(&h, &mask, 1, 3, 2, Red::Max);
-        assert_eq!(x, vec![3.0, 10.0]);
-        assert_eq!(&c.argmax, &[2, 0]);
-        // empty group -> zeros
-        let (x0, _) = masked_reduce(&h, &[0.0, 0.0, 0.0], 1, 3, 2, Red::Max);
-        assert_eq!(x0, vec![0.0, 0.0]);
+        with_scratch(|scr| {
+            let (s, _) = masked_reduce(&h, &mask, 1, 3, 2, Red::Sum, scr);
+            assert_eq!(s, vec![4.0, 8.0]);
+            let (m, _) = masked_reduce(&h, &mask, 1, 3, 2, Red::Mean, scr);
+            assert_eq!(m, vec![2.0, 4.0]);
+            let (x, c) = masked_reduce(&h, &mask, 1, 3, 2, Red::Max, scr);
+            assert_eq!(x, vec![3.0, 10.0]);
+            assert_eq!(&c.argmax, &[2, 0]);
+            // empty group -> zeros
+            let (x0, _) = masked_reduce(&h, &[0.0, 0.0, 0.0], 1, 3, 2, Red::Max, scr);
+            assert_eq!(x0, vec![0.0, 0.0]);
+        });
     }
 
     #[test]
@@ -473,11 +810,16 @@ pub mod tests {
         let mask = vec![1.0, 1.0, 0.0, 1.0, 0.0, 1.0];
         for red in [Red::Sum, Red::Mean, Red::Max] {
             let loss = |hv: &[f32]| -> f32 {
-                let (o, _) = masked_reduce(hv, &mask, g, n, l, red);
-                o.iter().map(|v| v * v).sum::<f32>() / 2.0
+                with_scratch(|scr| {
+                    let (o, c) = masked_reduce(hv, &mask, g, n, l, red, scr);
+                    let s = o.iter().map(|v| v * v).sum::<f32>() / 2.0;
+                    scr.give(o);
+                    c.recycle(scr);
+                    s
+                })
             };
-            let (o, cache) = masked_reduce(&h, &mask, g, n, l, red);
-            let dh = masked_reduce_bwd(&o, &mask, g, n, l, red, &cache);
+            let (o, cache) = with_scratch(|scr| masked_reduce(&h, &mask, g, n, l, red, scr));
+            let dh = with_scratch(|scr| masked_reduce_bwd(&o, &mask, g, n, l, red, &cache, scr));
             fd_check(loss, &h, &dh, 12, 40 + red as u64);
         }
     }
@@ -519,5 +861,18 @@ pub mod tests {
         assert!((theta[0] - (1.0 - 0.1)).abs() < 1e-4, "{}", theta[0]);
         assert!((theta[1] - (-1.0 + 0.1)).abs() < 1e-4, "{}", theta[1]);
         assert!((m[0] - 0.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn scratch_take_is_zeroed_after_reuse() {
+        let mut scr = Scratch::default();
+        let mut a = scr.take(4);
+        a.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        scr.give(a);
+        let b = scr.take(6);
+        assert_eq!(b, vec![0.0; 6]);
+        scr.give(b);
+        let c = scr.take(2);
+        assert_eq!(c, vec![0.0; 2]);
     }
 }

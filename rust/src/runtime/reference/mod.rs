@@ -16,9 +16,30 @@
 //! DLRM example) is intentionally *not* implemented: it needs the Pallas
 //! kernels and is the one workload that genuinely requires
 //! `make artifacts` + `--features xla`.
+//!
+//! # Kernels, scratch, and the intra-op split
+//!
+//! The numeric core ([`math`]) uses cache-blocked dense kernels and a
+//! per-thread scratch-buffer pool; both are **bit-identical** to the
+//! original naive loops (the blocking never reorders the operand
+//! sequence feeding any single output element — see the [`math`] module
+//! docs). On top of that, the one shape that dominates serving — the
+//! chunk-concatenated `[N, F]` `table_cost` batch — is row-split across
+//! intra-op helper threads when `N >=` [`INTRA_OP_MIN_ROWS`] and the
+//! backend was built with [`ReferenceBackend::with_intra_op`]` > 1`
+//! ([`Runtime::reference`](crate::runtime::Runtime::reference) passes
+//! the `DREAMSHARD_WORKERS` pool width). The split happens *inside* the
+//! backend with `std::thread::scope` — never a nested `submit` onto the
+//! session pool, which preserves the no-nested-dispatch contract (pool
+//! workers stay leaf executors, so a 1-worker pool cannot deadlock) and
+//! keeps the per-artifact call counters counting one logical call. Rows
+//! of `table_cost` are strictly independent (see
+//! `cost::table_cost_forward`), so the split is bit-identical to the
+//! serial pass at every width; `rust/tests/kernels.rs` pins that, the
+//! budget invariant, and the panic-in-helper path.
 
 mod cost;
-mod math;
+pub mod math;
 mod policy;
 mod rnn;
 mod spec;
@@ -33,13 +54,44 @@ use crate::util::error::{Context, Result};
 
 pub use math::Red;
 
-/// The dependency-free reference backend (stateless).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct ReferenceBackend;
+/// Minimum `[N, F]` row count before `table_cost` is worth row-splitting
+/// across intra-op helper threads: below this the per-thread spawn/join
+/// overhead outweighs the kernel work.
+pub const INTRA_OP_MIN_ROWS: usize = 64;
+
+/// The dependency-free reference backend.
+///
+/// Stateless apart from one knob: `intra_op`, the number of threads a
+/// single large `table_cost` execution may fan out across (see the
+/// module docs). [`ReferenceBackend::new`] gives a strictly serial
+/// backend; [`Runtime::reference`](crate::runtime::Runtime::reference)
+/// constructs it with the `DREAMSHARD_WORKERS` pool width.
+#[derive(Clone, Copy, Debug)]
+pub struct ReferenceBackend {
+    intra_op: usize,
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 impl ReferenceBackend {
+    /// Serial backend: no intra-op splitting.
     pub fn new() -> Self {
-        ReferenceBackend
+        ReferenceBackend { intra_op: 1 }
+    }
+
+    /// Backend whose large `table_cost` batches row-split across up to
+    /// `threads` scoped helper threads (values < 1 behave as 1).
+    pub fn with_intra_op(threads: usize) -> Self {
+        ReferenceBackend { intra_op: threads.max(1) }
+    }
+
+    /// The configured intra-op split width.
+    pub fn intra_op(&self) -> usize {
+        self.intra_op.max(1)
     }
 }
 
@@ -351,7 +403,7 @@ fn run_mdp_step(inputs: &[Value]) -> Result<Vec<Value>> {
     Ok(vec![out_f32(logits, &[e, d]), out_f32(q, &[e, d, 3]), out_f32(cost, &[e])])
 }
 
-fn run_table_cost(inputs: &[Value]) -> Result<Vec<Value>> {
+fn run_table_cost(inputs: &[Value], intra_op: usize) -> Result<Vec<Value>> {
     let theta = f32_in(inputs, 0, "theta")?;
     let feats = f32_in(inputs, 1, "feats")?;
     let fmask = f32_in(inputs, 2, "fmask")?;
@@ -367,8 +419,58 @@ fn run_table_cost(inputs: &[Value]) -> Result<Vec<Value>> {
     // here would be a content-based guess that makes a row's score
     // depend on what happens to follow it — concatenated multi-task
     // ordering batches require strict per-row independence.
-    let total = cost::table_cost_forward(&theta.data, &feats.data, &fmask.data, n);
+    let total = table_cost_split(&theta.data, &feats.data, &fmask.data, n, intra_op);
     Ok(vec![out_f32(total, &[n])])
+}
+
+/// Row-split `table_cost` driver: one large `[N, F]` batch is chunked
+/// across `intra_op` scoped helper threads (plus the dispatching worker
+/// itself, which computes the first chunk inline). Because each output
+/// row depends only on its own feature row, every width produces
+/// bit-identical results to the serial pass.
+///
+/// This deliberately does NOT `submit` onto the session worker pool:
+/// workers are leaf executors, and nesting a dispatch inside a dispatch
+/// would deadlock a 1-worker pool. `std::thread::scope` also gives the
+/// panic semantics the pool relies on — a panicking helper's payload is
+/// re-raised here exactly once, unwinds through the one logical
+/// `execute` call, and is caught by the worker's `catch_unwind`, so the
+/// caller sees a single `Err` and the pool and call counters survive.
+fn table_cost_split(
+    theta: &[f32],
+    feats: &[f32],
+    fmask: &[f32],
+    n: usize,
+    intra_op: usize,
+) -> Vec<f32> {
+    if intra_op <= 1 || n < INTRA_OP_MIN_ROWS {
+        return cost::table_cost_forward(theta, feats, fmask, n);
+    }
+    let chunk = n.div_ceil(intra_op);
+    let mut total = vec![0.0f32; n];
+    std::thread::scope(|scope| {
+        let mut shards = total.chunks_mut(chunk);
+        let first = shards.next();
+        let mut handles = Vec::new();
+        for (ci, out) in shards.enumerate() {
+            let lo = (ci + 1) * chunk;
+            let rows = out.len();
+            let fpart = &feats[lo * spec::F..(lo + rows) * spec::F];
+            handles.push(scope.spawn(move || {
+                cost::table_cost_forward_into(theta, fpart, fmask, rows, out);
+            }));
+        }
+        if let Some(out) = first {
+            let rows = out.len();
+            cost::table_cost_forward_into(theta, &feats[..rows * spec::F], fmask, rows, out);
+        }
+        for h in handles {
+            if let Err(payload) = h.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+    });
+    total
 }
 
 fn run_rnn_fwd(inputs: &[Value]) -> Result<Vec<Value>> {
@@ -428,7 +530,7 @@ impl Backend for ReferenceBackend {
 
     fn execute(&self, artifact: &str, inputs: &[Value]) -> Result<Vec<Value>> {
         if artifact == "table_cost" {
-            return run_table_cost(inputs);
+            return run_table_cost(inputs, self.intra_op);
         }
         if let Some(rest) = artifact.strip_prefix("cost_fwd_red_") {
             let (tr, dr) = parse_red_pair(rest)?;

@@ -3,10 +3,13 @@
 //! reduction), a cost-feature MLP over the estimated-MDP `q`, the
 //! current-table representation, and a linear head over the
 //! concatenation — plus the REINFORCE training step (Eq. 2).
+//!
+//! Entry points acquire the thread-local [`Scratch`] pool once per call
+//! and recycle every intermediate on return (see `math.rs` module docs).
 
 use super::math::{
-    linear_bwd, linear_fwd, masked_reduce, masked_reduce_bwd, mlp2_bwd, mlp2_fwd,
-    reinforce_loss_grad, Mlp2Cache, Red, RedCache,
+    linear_bwd_s, linear_fwd_s, masked_reduce, masked_reduce_bwd, mlp2_bwd, mlp2_fwd,
+    reinforce_loss_grad, with_scratch, Mlp2Cache, Red, RedCache, Scratch,
 };
 use super::spec::{policy_spec, Spec, ENTROPY_W, F, L};
 
@@ -17,6 +20,16 @@ struct Caches {
     cur: Mlp2Cache,
     /// Concatenated head input rows [e*d, 3L].
     x: Vec<f32>,
+}
+
+impl Caches {
+    fn recycle(self, scr: &mut Scratch) {
+        self.tbl.recycle(scr);
+        self.red.recycle(scr);
+        self.cost.recycle(scr);
+        self.cur.recycle(scr);
+        scr.give(self.x);
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -33,35 +46,37 @@ fn forward_inner(
     e: usize,
     d: usize,
     s: usize,
+    scr: &mut Scratch,
 ) -> (Vec<f32>, Caches) {
     let rows = e * d * s;
-    let mut x = vec![0.0f32; rows * F];
+    let mut x = scr.take(rows * F);
     for r in 0..rows {
         for (i, &fm) in fmask.iter().enumerate() {
             x[r * F + i] = feats[r * F + i] * fm;
         }
     }
-    let (h, tbl) = mlp2_fwd(phi, spec.lin("tbl1"), spec.lin("tbl2"), x, rows);
-    let (hdev, red) = masked_reduce(&h, mask, e * d, s, L, Red::Sum);
+    let (h, tbl) = mlp2_fwd(phi, spec.lin("tbl1"), spec.lin("tbl2"), x, rows, scr);
+    let (hdev, red) = masked_reduce(&h, mask, e * d, s, L, Red::Sum, scr);
+    scr.give(h);
 
-    let mut qx = vec![0.0f32; e * d * 3];
+    let mut qx = scr.take(e * d * 3);
     for ed in 0..e * d {
         for k in 0..3 {
             qx[ed * 3 + k] = q[ed * 3 + k] * qscale[k];
         }
     }
-    let (hq, cost) = mlp2_fwd(phi, spec.lin("cost1"), spec.lin("cost2"), qx, e * d);
+    let (hq, cost) = mlp2_fwd(phi, spec.lin("cost1"), spec.lin("cost2"), qx, e * d, scr);
 
-    let mut xc = vec![0.0f32; e * F];
+    let mut xc = scr.take(e * F);
     for r in 0..e {
         for (i, &fm) in fmask.iter().enumerate() {
             xc[r * F + i] = cur[r * F + i] * fm;
         }
     }
-    let (hcur, curc) = mlp2_fwd(phi, spec.lin("tbl1"), spec.lin("tbl2"), xc, e);
+    let (hcur, curc) = mlp2_fwd(phi, spec.lin("tbl1"), spec.lin("tbl2"), xc, e, scr);
 
     // head input rows: [hdev[ed] ; hq[ed] ; hcur[e]] -> [e*d, 3L]
-    let mut xh = vec![0.0f32; e * d * 3 * L];
+    let mut xh = scr.take(e * d * 3 * L);
     for lane in 0..e {
         for dev in 0..d {
             let ed = lane * d + dev;
@@ -71,11 +86,15 @@ fn forward_inner(
             row[2 * L..].copy_from_slice(&hcur[lane * L..(lane + 1) * L]);
         }
     }
-    let score = linear_fwd(phi, spec.lin("head"), &xh, e * d, false);
+    scr.give(hdev);
+    scr.give(hq);
+    scr.give(hcur);
+    let score = linear_fwd_s(phi, spec.lin("head"), &xh, e * d, false, scr);
     let mut logits = vec![0.0f32; e * d];
     for ed in 0..e * d {
         logits[ed] = if legal[ed] > 0.0 { score[ed] } else { -1e9 };
     }
+    scr.give(score);
     (logits, Caches { tbl, red, cost, cur: curc, x: xh })
 }
 
@@ -95,7 +114,12 @@ pub fn policy_forward(
     s: usize,
 ) -> Vec<f32> {
     let spec = policy_spec();
-    forward_inner(&spec, phi, feats, mask, q, cur, legal, fmask, qscale, e, d, s).0
+    with_scratch(|scr| {
+        let (logits, caches) =
+            forward_inner(&spec, phi, feats, mask, q, cur, legal, fmask, qscale, e, d, s, scr);
+        caches.recycle(scr);
+        logits
+    })
 }
 
 /// REINFORCE loss and full parameter gradient over `b` recorded steps.
@@ -117,39 +141,47 @@ pub fn policy_loss_grad(
     s: usize,
 ) -> (f32, Vec<f32>) {
     let spec = policy_spec();
-    let (logits, caches) =
-        forward_inner(&spec, phi, feats, mask, q, cur, legal, fmask, qscale, b, d, s);
-    let (loss, dlogits) =
-        reinforce_loss_grad(&logits, legal, action, adv, smask, b, d, ENTROPY_W);
+    with_scratch(|scr| {
+        let (logits, caches) =
+            forward_inner(&spec, phi, feats, mask, q, cur, legal, fmask, qscale, b, d, s, scr);
+        let (loss, dlogits) =
+            reinforce_loss_grad(&logits, legal, action, adv, smask, b, d, ENTROPY_W);
 
-    let mut grad = vec![0.0f32; spec.total];
-    // linear head: dy [b*d, 1] -> dx [b*d, 3L]
-    let dx = linear_bwd(phi, &mut grad, spec.lin("head"), &caches.x, &dlogits, b * d, true);
-    let mut dhdev = vec![0.0f32; b * d * L];
-    let mut dhq = vec![0.0f32; b * d * L];
-    let mut dhcur = vec![0.0f32; b * L];
-    for lane in 0..b {
-        for dev in 0..d {
-            let ed = lane * d + dev;
-            let row = &dx[ed * 3 * L..(ed + 1) * 3 * L];
-            dhdev[ed * L..(ed + 1) * L].copy_from_slice(&row[..L]);
-            dhq[ed * L..(ed + 1) * L].copy_from_slice(&row[L..2 * L]);
-            for ch in 0..L {
-                dhcur[lane * L + ch] += row[2 * L + ch]; // broadcast over devices
+        let mut grad = vec![0.0f32; spec.total];
+        // linear head: dy [b*d, 1] -> dx [b*d, 3L]
+        let dx = linear_bwd_s(phi, &mut grad, spec.lin("head"), &caches.x, &dlogits, b * d, true, scr);
+        let mut dhdev = scr.take(b * d * L);
+        let mut dhq = scr.take(b * d * L);
+        let mut dhcur = scr.take(b * L);
+        for lane in 0..b {
+            for dev in 0..d {
+                let ed = lane * d + dev;
+                let row = &dx[ed * 3 * L..(ed + 1) * 3 * L];
+                dhdev[ed * L..(ed + 1) * L].copy_from_slice(&row[..L]);
+                dhq[ed * L..(ed + 1) * L].copy_from_slice(&row[L..2 * L]);
+                for ch in 0..L {
+                    dhcur[lane * L + ch] += row[2 * L + ch]; // broadcast over devices
+                }
             }
         }
-    }
-    mlp2_bwd(phi, &mut grad, spec.lin("cost1"), spec.lin("cost2"), &caches.cost, &dhq, false);
-    mlp2_bwd(phi, &mut grad, spec.lin("tbl1"), spec.lin("tbl2"), &caches.cur, &dhcur, false);
-    let dh = masked_reduce_bwd(&dhdev, mask, b * d, s, L, Red::Sum, &caches.red);
-    mlp2_bwd(phi, &mut grad, spec.lin("tbl1"), spec.lin("tbl2"), &caches.tbl, &dh, false);
-    (loss, grad)
+        scr.give(dx);
+        mlp2_bwd(phi, &mut grad, spec.lin("cost1"), spec.lin("cost2"), &caches.cost, &dhq, false, scr);
+        mlp2_bwd(phi, &mut grad, spec.lin("tbl1"), spec.lin("tbl2"), &caches.cur, &dhcur, false, scr);
+        let dh = masked_reduce_bwd(&dhdev, mask, b * d, s, L, Red::Sum, &caches.red, scr);
+        mlp2_bwd(phi, &mut grad, spec.lin("tbl1"), spec.lin("tbl2"), &caches.tbl, &dh, false, scr);
+        scr.give(dh);
+        scr.give(dhdev);
+        scr.give(dhq);
+        scr.give(dhcur);
+        caches.recycle(scr);
+        (loss, grad)
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::reference::math::tests::{fd_check, rand_vec};
+    use crate::runtime::reference::math::{fd_check, rand_vec};
     use crate::util::Rng;
 
     #[allow(clippy::type_complexity)]

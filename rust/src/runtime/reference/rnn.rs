@@ -3,9 +3,14 @@
 //! over the table sequence, dot-product content attention over the
 //! sequence, a per-step device head — and full backpropagation through
 //! time for the REINFORCE update.
+//!
+//! Entry points acquire the thread-local [`Scratch`] pool once per call;
+//! the GRU scan and the BPTT loop draw every per-step buffer from it, so
+//! repeated dispatches (and long sequences) stop churning the allocator.
 
 use super::math::{
-    linear_bwd, linear_fwd, mlp2_bwd, mlp2_fwd, reinforce_loss_grad, Lin, Mlp2Cache,
+    linear_bwd_s, linear_fwd_s, mlp2_bwd, mlp2_fwd, reinforce_loss_grad, with_scratch, Lin,
+    Mlp2Cache, Scratch,
 };
 use super::spec::{rnn_spec, Spec, ENTROPY_W, F, L};
 
@@ -22,6 +27,17 @@ struct GruStep {
     rh: Vec<f32>,
 }
 
+impl GruStep {
+    fn recycle(self, scr: &mut Scratch) {
+        scr.give(self.x);
+        scr.give(self.h_prev);
+        scr.give(self.z);
+        scr.give(self.r);
+        scr.give(self.n);
+        scr.give(self.rh);
+    }
+}
+
 struct Caches {
     tbl: Mlp2Cache,
     steps: Vec<GruStep>,
@@ -33,16 +49,37 @@ struct Caches {
     xcat: Vec<f32>,
 }
 
+impl Caches {
+    fn recycle(self, scr: &mut Scratch) {
+        self.tbl.recycle(scr);
+        for st in self.steps {
+            st.recycle(scr);
+        }
+        scr.give(self.hs);
+        scr.give(self.att);
+        scr.give(self.xcat);
+    }
+}
+
 fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
-fn gru_linear2(psi: &[f32], lx: Lin, lh: Lin, x: &[f32], h: &[f32], e: usize) -> Vec<f32> {
-    let mut a = linear_fwd(psi, lx, x, e, false);
-    let b = linear_fwd(psi, lh, h, e, false);
+fn gru_linear2(
+    psi: &[f32],
+    lx: Lin,
+    lh: Lin,
+    x: &[f32],
+    h: &[f32],
+    e: usize,
+    scr: &mut Scratch,
+) -> Vec<f32> {
+    let mut a = linear_fwd_s(psi, lx, x, e, false, scr);
+    let b = linear_fwd_s(psi, lh, h, e, false, scr);
     for (av, &bv) in a.iter_mut().zip(b.iter()) {
         *av += bv;
     }
+    scr.give(b);
     a
 }
 
@@ -60,10 +97,11 @@ fn forward_inner(
     t_cap: usize,
     d: usize,
     t_eff: usize,
+    scr: &mut Scratch,
 ) -> (Vec<f32>, Caches) {
     // table reps over the trimmed [e, t_eff, F] grid
     let rows = e * t_eff;
-    let mut x = vec![0.0f32; rows * F];
+    let mut x = scr.take(rows * F);
     for lane in 0..e {
         for t in 0..t_eff {
             let src = (lane * t_cap + t) * F;
@@ -73,38 +111,39 @@ fn forward_inner(
             }
         }
     }
-    let (reps, tbl) = mlp2_fwd(psi, spec.lin("tbl1"), spec.lin("tbl2"), x, rows);
+    let (reps, tbl) = mlp2_fwd(psi, spec.lin("tbl1"), spec.lin("tbl2"), x, rows, scr);
 
     // GRU scan
     let (lxz, lhz) = (spec.lin("gru_xz"), spec.lin("gru_hz"));
     let (lxr, lhr) = (spec.lin("gru_xr"), spec.lin("gru_hr"));
     let (lxn, lhn) = (spec.lin("gru_xn"), spec.lin("gru_hn"));
-    let mut h = vec![0.0f32; e * L];
+    let mut h = scr.take(e * L);
     let mut steps = Vec::with_capacity(t_eff);
-    let mut hs = vec![0.0f32; e * t_eff * L];
+    let mut hs = scr.take(e * t_eff * L);
     for t in 0..t_eff {
-        let mut xt = vec![0.0f32; e * L];
+        let mut xt = scr.take(e * L);
         for lane in 0..e {
             let src = (lane * t_eff + t) * L;
             xt[lane * L..(lane + 1) * L].copy_from_slice(&reps[src..src + L]);
         }
-        let mut z = gru_linear2(psi, lxz, lhz, &xt, &h, e);
-        let mut r = gru_linear2(psi, lxr, lhr, &xt, &h, e);
+        let mut z = gru_linear2(psi, lxz, lhz, &xt, &h, e, scr);
+        let mut r = gru_linear2(psi, lxr, lhr, &xt, &h, e, scr);
         for v in z.iter_mut() {
             *v = sigmoid(*v);
         }
         for v in r.iter_mut() {
             *v = sigmoid(*v);
         }
-        let mut rh = vec![0.0f32; e * L];
+        let mut rh = scr.take(e * L);
         for i in 0..e * L {
             rh[i] = r[i] * h[i];
         }
-        let mut n = gru_linear2(psi, lxn, lhn, &xt, &rh, e);
+        let mut n = gru_linear2(psi, lxn, lhn, &xt, &rh, e, scr);
         for v in n.iter_mut() {
             *v = v.tanh();
         }
-        let h_prev = h.clone();
+        let mut h_prev = scr.take(e * L);
+        h_prev.copy_from_slice(&h);
         for i in 0..e * L {
             h[i] = (1.0 - z[i]) * h_prev[i] + z[i] * n[i];
         }
@@ -114,11 +153,13 @@ fn forward_inner(
         }
         steps.push(GruStep { x: xt, h_prev, z, r, n, rh });
     }
+    scr.give(reps);
+    scr.give(h);
 
     // content attention per lane: softmax(hs hs^T / sqrt(L)) over keys
     let scale = 1.0 / (L as f32).sqrt();
-    let mut att = vec![0.0f32; e * t_eff * t_eff];
-    let mut ctx = vec![0.0f32; e * t_eff * L];
+    let mut att = scr.take(e * t_eff * t_eff);
+    let mut ctx = scr.take(e * t_eff * L);
     for lane in 0..e {
         for t in 0..t_eff {
             let qrow = &hs[(lane * t_eff + t) * L..(lane * t_eff + t + 1) * L];
@@ -156,14 +197,15 @@ fn forward_inner(
     }
 
     // head over [hs ; ctx]
-    let mut xcat = vec![0.0f32; rows * 2 * L];
+    let mut xcat = scr.take(rows * 2 * L);
     for rowi in 0..rows {
         xcat[rowi * 2 * L..rowi * 2 * L + L].copy_from_slice(&hs[rowi * L..(rowi + 1) * L]);
         xcat[rowi * 2 * L + L..(rowi + 1) * 2 * L]
             .copy_from_slice(&ctx[rowi * L..(rowi + 1) * L]);
     }
-    let score = linear_fwd(psi, spec.lin("head"), &xcat, rows, false);
-    let mut logits = vec![0.0f32; rows * d];
+    scr.give(ctx);
+    let score = linear_fwd_s(psi, spec.lin("head"), &xcat, rows, false, scr);
+    let mut logits = scr.take(rows * d);
     for lane in 0..e {
         for t in 0..t_eff {
             for j in 0..d {
@@ -176,6 +218,7 @@ fn forward_inner(
             }
         }
     }
+    scr.give(score);
     (logits, Caches { tbl, steps, hs, att, xcat })
 }
 
@@ -211,14 +254,19 @@ pub fn rnn_forward(
     if t_eff == 0 {
         return out;
     }
-    let (logits, _) = forward_inner(&spec, psi, feats, tmask, legal, fmask, e, t_cap, d, t_eff);
-    for lane in 0..e {
-        for t in 0..t_eff {
-            let src = (lane * t_eff + t) * d;
-            let dst = (lane * t_cap + t) * d;
-            out[dst..dst + d].copy_from_slice(&logits[src..src + d]);
+    with_scratch(|scr| {
+        let (logits, caches) =
+            forward_inner(&spec, psi, feats, tmask, legal, fmask, e, t_cap, d, t_eff, scr);
+        for lane in 0..e {
+            for t in 0..t_eff {
+                let src = (lane * t_eff + t) * d;
+                let dst = (lane * t_cap + t) * d;
+                out[dst..dst + d].copy_from_slice(&logits[src..src + d]);
+            }
         }
-    }
+        scr.give(logits);
+        caches.recycle(scr);
+    });
     out
 }
 
@@ -242,153 +290,185 @@ pub fn rnn_loss_grad(
     if t_eff == 0 {
         return (0.0, vec![0.0f32; spec.total]);
     }
-    let (logits, caches) =
-        forward_inner(&spec, psi, feats, tmask, legal, fmask, e, t_cap, d, t_eff);
-    let rows = e * t_eff;
+    with_scratch(|scr| {
+        let (logits, caches) =
+            forward_inner(&spec, psi, feats, tmask, legal, fmask, e, t_cap, d, t_eff, scr);
+        let rows = e * t_eff;
 
-    // flatten the per-(lane, step) loss inputs to the trimmed region
-    let mut legal_f = vec![0.0f32; rows * d];
-    let mut action_f = vec![0i32; rows];
-    let mut adv_f = vec![0.0f32; rows];
-    let mut smask_f = vec![0.0f32; rows];
-    for lane in 0..e {
-        for t in 0..t_eff {
-            let rowi = lane * t_eff + t;
-            legal_f[rowi * d..(rowi + 1) * d]
-                .copy_from_slice(&legal[(lane * t_cap + t) * d..(lane * t_cap + t + 1) * d]);
-            action_f[rowi] = action[lane * t_cap + t];
-            adv_f[rowi] = adv[lane];
-            smask_f[rowi] = tmask[lane * t_cap + t];
-        }
-    }
-    let (loss, dlogits) =
-        reinforce_loss_grad(&logits, &legal_f, &action_f, &adv_f, &smask_f, rows, d, ENTROPY_W);
-
-    let mut grad = vec![0.0f32; spec.total];
-    // head -> [dhs ; dctx]
-    let dxcat = linear_bwd(psi, &mut grad, spec.lin("head"), &caches.xcat, &dlogits, rows, true);
-    let mut dhs = vec![0.0f32; rows * L];
-    let mut dctx = vec![0.0f32; rows * L];
-    for rowi in 0..rows {
-        dhs[rowi * L..(rowi + 1) * L].copy_from_slice(&dxcat[rowi * 2 * L..rowi * 2 * L + L]);
-        dctx[rowi * L..(rowi + 1) * L]
-            .copy_from_slice(&dxcat[rowi * 2 * L + L..(rowi + 1) * 2 * L]);
-    }
-
-    // attention backward: ctx = A hs, A = softmax(hs hs^T * scale, keys masked)
-    let scale = 1.0 / (L as f32).sqrt();
-    for lane in 0..e {
-        let base = lane * t_eff;
-        for t in 0..t_eff {
-            let arow = &caches.att[(base + t) * t_eff..(base + t + 1) * t_eff];
-            let dcrow = &dctx[(base + t) * L..(base + t + 1) * L];
-            // dA[t,u] = dctx[t] . hs[u]; dhs[u] += A[t,u] * dctx[t]
-            let mut da = vec![0.0f32; t_eff];
-            let mut dot_sum = 0.0f32; // sum_u A[t,u] dA[t,u]
-            for u in 0..t_eff {
-                let a = arow[u];
-                let krow = &caches.hs[(base + u) * L..(base + u + 1) * L];
-                let mut dot = 0.0f32;
-                for ch in 0..L {
-                    dot += dcrow[ch] * krow[ch];
-                }
-                da[u] = dot;
-                dot_sum += a * dot;
-                if a != 0.0 {
-                    let dk = &mut dhs[(base + u) * L..(base + u + 1) * L];
-                    for ch in 0..L {
-                        dk[ch] += a * dcrow[ch];
-                    }
-                }
+        // flatten the per-(lane, step) loss inputs to the trimmed region
+        let mut legal_f = scr.take(rows * d);
+        let mut action_f = vec![0i32; rows];
+        let mut adv_f = scr.take(rows);
+        let mut smask_f = scr.take(rows);
+        for lane in 0..e {
+            for t in 0..t_eff {
+                let rowi = lane * t_eff + t;
+                legal_f[rowi * d..(rowi + 1) * d]
+                    .copy_from_slice(&legal[(lane * t_cap + t) * d..(lane * t_cap + t + 1) * d]);
+                action_f[rowi] = action[lane * t_cap + t];
+                adv_f[rowi] = adv[lane];
+                smask_f[rowi] = tmask[lane * t_cap + t];
             }
-            // softmax backward, then the bilinear hs hs^T term
-            let qrow = &caches.hs[(base + t) * L..(base + t + 1) * L];
-            let mut dq = vec![0.0f32; L];
-            for u in 0..t_eff {
-                let datt = arow[u] * (da[u] - dot_sum);
-                if datt != 0.0 {
+        }
+        let (loss, dlogits) = reinforce_loss_grad(
+            &logits, &legal_f, &action_f, &adv_f, &smask_f, rows, d, ENTROPY_W,
+        );
+        scr.give(logits);
+        scr.give(legal_f);
+        scr.give(adv_f);
+        scr.give(smask_f);
+
+        let mut grad = vec![0.0f32; spec.total];
+        // head -> [dhs ; dctx]
+        let dxcat =
+            linear_bwd_s(psi, &mut grad, spec.lin("head"), &caches.xcat, &dlogits, rows, true, scr);
+        let mut dhs = scr.take(rows * L);
+        let mut dctx = scr.take(rows * L);
+        for rowi in 0..rows {
+            dhs[rowi * L..(rowi + 1) * L].copy_from_slice(&dxcat[rowi * 2 * L..rowi * 2 * L + L]);
+            dctx[rowi * L..(rowi + 1) * L]
+                .copy_from_slice(&dxcat[rowi * 2 * L + L..(rowi + 1) * 2 * L]);
+        }
+        scr.give(dxcat);
+
+        // attention backward: ctx = A hs, A = softmax(hs hs^T * scale, keys masked)
+        let scale = 1.0 / (L as f32).sqrt();
+        let mut da = scr.take(t_eff);
+        let mut dq = scr.take(L);
+        for lane in 0..e {
+            let base = lane * t_eff;
+            for t in 0..t_eff {
+                let arow = &caches.att[(base + t) * t_eff..(base + t + 1) * t_eff];
+                let dcrow = &dctx[(base + t) * L..(base + t + 1) * L];
+                // dA[t,u] = dctx[t] . hs[u]; dhs[u] += A[t,u] * dctx[t]
+                let mut dot_sum = 0.0f32; // sum_u A[t,u] dA[t,u]
+                for u in 0..t_eff {
+                    let a = arow[u];
                     let krow = &caches.hs[(base + u) * L..(base + u + 1) * L];
-                    let dk = &mut dhs[(base + u) * L..(base + u + 1) * L];
+                    let mut dot = 0.0f32;
                     for ch in 0..L {
-                        dq[ch] += datt * krow[ch] * scale;
-                        dk[ch] += datt * qrow[ch] * scale;
+                        dot += dcrow[ch] * krow[ch];
+                    }
+                    da[u] = dot;
+                    dot_sum += a * dot;
+                    if a != 0.0 {
+                        let dk = &mut dhs[(base + u) * L..(base + u + 1) * L];
+                        for ch in 0..L {
+                            dk[ch] += a * dcrow[ch];
+                        }
                     }
                 }
-            }
-            let dqr = &mut dhs[(base + t) * L..(base + t + 1) * L];
-            for ch in 0..L {
-                dqr[ch] += dq[ch];
+                // softmax backward, then the bilinear hs hs^T term
+                let qrow = &caches.hs[(base + t) * L..(base + t + 1) * L];
+                dq.fill(0.0);
+                for u in 0..t_eff {
+                    let datt = arow[u] * (da[u] - dot_sum);
+                    if datt != 0.0 {
+                        let krow = &caches.hs[(base + u) * L..(base + u + 1) * L];
+                        let dk = &mut dhs[(base + u) * L..(base + u + 1) * L];
+                        for ch in 0..L {
+                            dq[ch] += datt * krow[ch] * scale;
+                            dk[ch] += datt * qrow[ch] * scale;
+                        }
+                    }
+                }
+                let dqr = &mut dhs[(base + t) * L..(base + t + 1) * L];
+                for ch in 0..L {
+                    dqr[ch] += dq[ch];
+                }
             }
         }
-    }
+        scr.give(da);
+        scr.give(dq);
+        scr.give(dctx);
 
-    // BPTT through the GRU
-    let (lxz, lhz) = (spec.lin("gru_xz"), spec.lin("gru_hz"));
-    let (lxr, lhr) = (spec.lin("gru_xr"), spec.lin("gru_hr"));
-    let (lxn, lhn) = (spec.lin("gru_xn"), spec.lin("gru_hn"));
-    let mut dreps = vec![0.0f32; rows * L];
-    let mut carry = vec![0.0f32; e * L];
-    for t in (0..t_eff).rev() {
-        let st = &caches.steps[t];
-        // total gradient on h_t
-        let mut dht = carry.clone();
-        for lane in 0..e {
-            let src = (lane * t_eff + t) * L;
-            for ch in 0..L {
-                dht[lane * L + ch] += dhs[src + ch];
+        // BPTT through the GRU
+        let (lxz, lhz) = (spec.lin("gru_xz"), spec.lin("gru_hz"));
+        let (lxr, lhr) = (spec.lin("gru_xr"), spec.lin("gru_hr"));
+        let (lxn, lhn) = (spec.lin("gru_xn"), spec.lin("gru_hn"));
+        let mut dreps = scr.take(rows * L);
+        let mut carry = scr.take(e * L);
+        for t in (0..t_eff).rev() {
+            let st = &caches.steps[t];
+            // total gradient on h_t
+            let mut dht = scr.take(e * L);
+            dht.copy_from_slice(&carry);
+            for lane in 0..e {
+                let src = (lane * t_eff + t) * L;
+                for ch in 0..L {
+                    dht[lane * L + ch] += dhs[src + ch];
+                }
             }
-        }
-        let el = e * L;
-        let mut dz = vec![0.0f32; el];
-        let mut dn = vec![0.0f32; el];
-        let mut new_carry = vec![0.0f32; el];
-        for i in 0..el {
-            dz[i] = dht[i] * (st.n[i] - st.h_prev[i]);
-            dn[i] = dht[i] * st.z[i];
-            new_carry[i] = dht[i] * (1.0 - st.z[i]);
-        }
-        // n = tanh(a_n)
-        let mut da_n = vec![0.0f32; el];
-        for i in 0..el {
-            da_n[i] = dn[i] * (1.0 - st.n[i] * st.n[i]);
-        }
-        let dxt_n = linear_bwd(psi, &mut grad, lxn, &st.x, &da_n, e, true);
-        let drh = linear_bwd(psi, &mut grad, lhn, &st.rh, &da_n, e, true);
-        let mut dr = vec![0.0f32; el];
-        for i in 0..el {
-            dr[i] = drh[i] * st.h_prev[i];
-            new_carry[i] += drh[i] * st.r[i];
-        }
-        // z = sigmoid(a_z), r = sigmoid(a_r)
-        let mut da_z = vec![0.0f32; el];
-        let mut da_r = vec![0.0f32; el];
-        for i in 0..el {
-            da_z[i] = dz[i] * st.z[i] * (1.0 - st.z[i]);
-            da_r[i] = dr[i] * st.r[i] * (1.0 - st.r[i]);
-        }
-        let dxt_z = linear_bwd(psi, &mut grad, lxz, &st.x, &da_z, e, true);
-        let dh_z = linear_bwd(psi, &mut grad, lhz, &st.h_prev, &da_z, e, true);
-        let dxt_r = linear_bwd(psi, &mut grad, lxr, &st.x, &da_r, e, true);
-        let dh_r = linear_bwd(psi, &mut grad, lhr, &st.h_prev, &da_r, e, true);
-        for i in 0..el {
-            new_carry[i] += dh_z[i] + dh_r[i];
-        }
-        carry = new_carry;
-        for lane in 0..e {
-            let dst = (lane * t_eff + t) * L;
-            for ch in 0..L {
-                dreps[dst + ch] += dxt_n[lane * L + ch] + dxt_z[lane * L + ch] + dxt_r[lane * L + ch];
+            let el = e * L;
+            let mut dz = scr.take(el);
+            let mut dn = scr.take(el);
+            let mut new_carry = scr.take(el);
+            for i in 0..el {
+                dz[i] = dht[i] * (st.n[i] - st.h_prev[i]);
+                dn[i] = dht[i] * st.z[i];
+                new_carry[i] = dht[i] * (1.0 - st.z[i]);
             }
+            // n = tanh(a_n)
+            let mut da_n = scr.take(el);
+            for i in 0..el {
+                da_n[i] = dn[i] * (1.0 - st.n[i] * st.n[i]);
+            }
+            let dxt_n = linear_bwd_s(psi, &mut grad, lxn, &st.x, &da_n, e, true, scr);
+            let drh = linear_bwd_s(psi, &mut grad, lhn, &st.rh, &da_n, e, true, scr);
+            let mut dr = scr.take(el);
+            for i in 0..el {
+                dr[i] = drh[i] * st.h_prev[i];
+                new_carry[i] += drh[i] * st.r[i];
+            }
+            // z = sigmoid(a_z), r = sigmoid(a_r)
+            let mut da_z = scr.take(el);
+            let mut da_r = scr.take(el);
+            for i in 0..el {
+                da_z[i] = dz[i] * st.z[i] * (1.0 - st.z[i]);
+                da_r[i] = dr[i] * st.r[i] * (1.0 - st.r[i]);
+            }
+            let dxt_z = linear_bwd_s(psi, &mut grad, lxz, &st.x, &da_z, e, true, scr);
+            let dh_z = linear_bwd_s(psi, &mut grad, lhz, &st.h_prev, &da_z, e, true, scr);
+            let dxt_r = linear_bwd_s(psi, &mut grad, lxr, &st.x, &da_r, e, true, scr);
+            let dh_r = linear_bwd_s(psi, &mut grad, lhr, &st.h_prev, &da_r, e, true, scr);
+            for i in 0..el {
+                new_carry[i] += dh_z[i] + dh_r[i];
+            }
+            scr.give(std::mem::replace(&mut carry, new_carry));
+            for lane in 0..e {
+                let dst = (lane * t_eff + t) * L;
+                for ch in 0..L {
+                    dreps[dst + ch] +=
+                        dxt_n[lane * L + ch] + dxt_z[lane * L + ch] + dxt_r[lane * L + ch];
+                }
+            }
+            scr.give(dht);
+            scr.give(dz);
+            scr.give(dn);
+            scr.give(da_n);
+            scr.give(dxt_n);
+            scr.give(drh);
+            scr.give(dr);
+            scr.give(da_z);
+            scr.give(da_r);
+            scr.give(dxt_z);
+            scr.give(dh_z);
+            scr.give(dxt_r);
+            scr.give(dh_r);
         }
-    }
-    mlp2_bwd(psi, &mut grad, spec.lin("tbl1"), spec.lin("tbl2"), &caches.tbl, &dreps, false);
-    (loss, grad)
+        scr.give(carry);
+        scr.give(dhs);
+        mlp2_bwd(psi, &mut grad, spec.lin("tbl1"), spec.lin("tbl2"), &caches.tbl, &dreps, false, scr);
+        scr.give(dreps);
+        caches.recycle(scr);
+        (loss, grad)
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::reference::math::tests::{fd_check, rand_vec};
+    use crate::runtime::reference::math::{fd_check, rand_vec};
     use crate::util::Rng;
 
     #[test]

@@ -1,0 +1,406 @@
+//! Kernel parity / property suite for the blocked reference kernels.
+//!
+//! The blocked `linear_fwd` / `linear_bwd` tilings and the scratch-pooled
+//! MLP paths in `runtime/reference/math.rs` promise BIT-IDENTICAL results
+//! to the naive kernels they replaced (the naive versions are kept as
+//! oracles, suffixed `_naive`). This suite pins that promise:
+//!
+//! * randomized sweeps over (rows, n_in, n_out) crossing every block
+//!   boundary (`ROW_BLOCK`/`COL_BLOCK` ± 1), with injected all-zero rows
+//!   to exercise the sparsity skip guard, compared with `to_bits()`;
+//! * finite-difference gradchecks through the blocked backward paths at
+//!   shapes that straddle a block boundary;
+//! * masked-reduce edge cases whose semantics are easy to break silently
+//!   (NaN under Max, argmax ties, all-masked groups, l=0 / n=0);
+//! * the `table_cost` intra-op row split: bit-identical outputs and
+//!   identical dispatch budgets at widths 1/2/4, and a panicking split
+//!   that must surface exactly one error while the pool and counters
+//!   survive.
+
+use dreamshard::runtime::reference::math::{
+    fd_check, linear_bwd, linear_bwd_naive, linear_fwd, linear_fwd_naive, masked_reduce,
+    masked_reduce_bwd, mlp2_bwd, mlp2_bwd_naive, mlp2_fwd, mlp2_fwd_naive, with_scratch, Lin, Red,
+    COL_BLOCK, ROW_BLOCK,
+};
+use dreamshard::runtime::reference::{reference_manifest, INTRA_OP_MIN_ROWS};
+use dreamshard::runtime::{to_f32_vec, ReferenceBackend, Runtime, TensorF32, Value};
+use dreamshard::util::Rng;
+
+// ---------------------------------------------------------------------
+// deterministic value generator (self-contained so the suite's inputs
+// can never drift with changes to util::Rng)
+// ---------------------------------------------------------------------
+
+struct Lcg(u64);
+
+impl Lcg {
+    fn new(seed: u64) -> Self {
+        Lcg(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1))
+    }
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0
+    }
+    /// Uniform-ish f32 in [-0.5, 0.5] with plenty of distinct mantissas.
+    fn f32(&mut self) -> f32 {
+        ((self.next() >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+    }
+    fn vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32() * scale).collect()
+    }
+}
+
+fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: bit mismatch at index {i}: {x} vs {y}"
+        );
+    }
+}
+
+/// A single dense layer laid out at the front of a flat theta.
+fn lin(k: usize, m: usize) -> (Lin, usize) {
+    (Lin { w: 0, b: k * m, n_in: k, n_out: m }, k * m + m)
+}
+
+// ---------------------------------------------------------------------
+// blocked linear kernels vs the naive oracles
+// ---------------------------------------------------------------------
+
+#[test]
+fn linear_fwd_blocked_matches_naive_bitwise() {
+    let rows_sweep = [1, 3, ROW_BLOCK - 1, ROW_BLOCK, ROW_BLOCK + 1, 2 * ROW_BLOCK + 2];
+    let k_sweep = [1, 3, COL_BLOCK, COL_BLOCK + 1];
+    let m_sweep = [1, 5, COL_BLOCK - 1, COL_BLOCK, COL_BLOCK + 1];
+    let mut lcg = Lcg::new(42);
+    for &rows in &rows_sweep {
+        for &k in &k_sweep {
+            for &m in &m_sweep {
+                let (l, total) = lin(k, m);
+                let theta = lcg.vec(total, 1.0);
+                let mut x = lcg.vec(rows * k, 1.0);
+                // all-zero rows and scattered exact zeros exercise the
+                // `xi != 0.0` skip guard on both sides
+                for r in (0..rows).step_by(3) {
+                    x[r * k..(r + 1) * k].fill(0.0);
+                }
+                if rows * k > 1 {
+                    x[1] = 0.0;
+                }
+                for relu in [false, true] {
+                    let fast = linear_fwd(&theta, l, &x, rows, relu);
+                    let slow = linear_fwd_naive(&theta, l, &x, rows, relu);
+                    assert_bits(&fast, &slow, &format!("fwd rows={rows} k={k} m={m} relu={relu}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn linear_bwd_blocked_matches_naive_bitwise() {
+    let rows_sweep = [1, ROW_BLOCK - 1, ROW_BLOCK, ROW_BLOCK + 1, 97];
+    let k_sweep = [1, 3, COL_BLOCK + 1];
+    let m_sweep = [1, COL_BLOCK - 1, COL_BLOCK + 1];
+    let mut lcg = Lcg::new(1007);
+    for &rows in &rows_sweep {
+        for &k in &k_sweep {
+            for &m in &m_sweep {
+                let (l, total) = lin(k, m);
+                let theta = lcg.vec(total, 1.0);
+                let mut x = lcg.vec(rows * k, 1.0);
+                for r in (0..rows).step_by(4) {
+                    x[r * k..(r + 1) * k].fill(0.0);
+                }
+                let dy = lcg.vec(rows * m, 1.0);
+                // pre-seed both grad buffers identically: the kernels
+                // ACCUMULATE, and the += order is part of the contract
+                let seed_grad = lcg.vec(total, 0.25);
+                let mut g_fast = seed_grad.clone();
+                let mut g_slow = seed_grad;
+                let dx_fast = linear_bwd(&theta, &mut g_fast, l, &x, &dy, rows, true);
+                let dx_slow = linear_bwd_naive(&theta, &mut g_slow, l, &x, &dy, rows, true);
+                let what = format!("bwd rows={rows} k={k} m={m}");
+                assert_bits(&g_fast, &g_slow, &format!("{what} grad"));
+                assert_bits(&dx_fast, &dx_slow, &format!("{what} dx"));
+            }
+        }
+    }
+}
+
+#[test]
+fn mlp2_blocked_scratch_matches_naive_bitwise_and_is_pool_stable() {
+    let (rows, k, hid, m) = (ROW_BLOCK + 3, 7, COL_BLOCK + 1, 5);
+    let l1 = Lin { w: 0, b: k * hid, n_in: k, n_out: hid };
+    let w2 = k * hid + hid;
+    let l2 = Lin { w: w2, b: w2 + hid * m, n_in: hid, n_out: m };
+    let total = w2 + hid * m + m;
+    let mut lcg = Lcg::new(9);
+    let theta = lcg.vec(total, 0.5);
+    let x = lcg.vec(rows * k, 1.0);
+    let dy = lcg.vec(rows * m, 1.0);
+
+    let (y_naive, cache_naive) = mlp2_fwd_naive(&theta, l1, l2, x.clone(), rows);
+    let mut g_naive = vec![0.0f32; total];
+    let dx_naive = mlp2_bwd_naive(&theta, &mut g_naive, l1, l2, &cache_naive, &dy, true);
+
+    // two passes: the second runs against a warm scratch pool whose
+    // buffers hold the first pass's garbage — take() must re-zero them
+    for pass in 0..2 {
+        let (y, dx, g) = with_scratch(|scr| {
+            let (y, cache) = mlp2_fwd(&theta, l1, l2, x.clone(), rows, scr);
+            let mut g = vec![0.0f32; total];
+            let dx = mlp2_bwd(&theta, &mut g, l1, l2, &cache, &dy, true, scr);
+            cache.recycle(scr);
+            let out = (y.clone(), dx.clone(), g);
+            scr.give(y);
+            scr.give(dx);
+            out
+        });
+        assert_bits(&y, &y_naive, &format!("mlp2 fwd pass={pass}"));
+        assert_bits(&dx, &dx_naive, &format!("mlp2 dx pass={pass}"));
+        assert_bits(&g, &g_naive, &format!("mlp2 grad pass={pass}"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// finite-difference gradchecks through the blocked backward paths
+// ---------------------------------------------------------------------
+
+#[test]
+fn linear_bwd_gradcheck_across_block_boundary() {
+    // n_out straddles COL_BLOCK so the dW tiling's second tile is live
+    let (rows, k, m) = (5usize, 3usize, COL_BLOCK + 1);
+    let (l, total) = lin(k, m);
+    let mut lcg = Lcg::new(77);
+    let theta = lcg.vec(total, 0.3);
+    let x = lcg.vec(rows * k, 1.0);
+    // loss = 0.5 * sum(y^2)  =>  dL/dy = y
+    let loss = |th: &[f32]| -> f32 {
+        let y = linear_fwd(th, l, &x, rows, false);
+        y.iter().map(|v| 0.5 * v * v).sum()
+    };
+    let y = linear_fwd(&theta, l, &x, rows, false);
+    let mut grad = vec![0.0f32; total];
+    linear_bwd(&theta, &mut grad, l, &x, &y, rows, false);
+    fd_check(loss, &theta, &grad, 25, 7);
+}
+
+#[test]
+fn mlp2_bwd_gradcheck_across_block_boundary() {
+    let (rows, k, hid, m) = (ROW_BLOCK + 1, 4usize, COL_BLOCK + 1, 3usize);
+    let l1 = Lin { w: 0, b: k * hid, n_in: k, n_out: hid };
+    let w2 = k * hid + hid;
+    let l2 = Lin { w: w2, b: w2 + hid * m, n_in: hid, n_out: m };
+    let total = w2 + hid * m + m;
+    let mut lcg = Lcg::new(78);
+    let theta = lcg.vec(total, 0.3);
+    let x = lcg.vec(rows * k, 1.0);
+    let loss = |th: &[f32]| -> f32 {
+        with_scratch(|scr| {
+            let (y, cache) = mlp2_fwd(th, l1, l2, x.clone(), rows, scr);
+            let v: f32 = y.iter().map(|v| 0.5 * v * v).sum();
+            cache.recycle(scr);
+            scr.give(y);
+            v
+        })
+    };
+    let grad = with_scratch(|scr| {
+        let (y, cache) = mlp2_fwd(&theta, l1, l2, x.clone(), rows, scr);
+        let mut grad = vec![0.0f32; total];
+        mlp2_bwd(&theta, &mut grad, l1, l2, &cache, &y, false, scr);
+        cache.recycle(scr);
+        scr.give(y);
+        grad
+    });
+    fd_check(loss, &theta, &grad, 25, 8);
+}
+
+// ---------------------------------------------------------------------
+// masked-reduce edge cases (pinned semantics)
+// ---------------------------------------------------------------------
+
+#[test]
+fn masked_max_nan_first_sticks_and_pins_argmax_zero() {
+    // first masked item is NaN: it wins initially and every later
+    // `hv > NaN` comparison is false, so NaN and argmax=0 both stick
+    with_scratch(|scr| {
+        let h = [f32::NAN, 2.0, 1.0];
+        let mask = [1.0f32, 1.0, 1.0];
+        let (out, cache) = masked_reduce(&h, &mask, 1, 3, 1, Red::Max, scr);
+        assert!(out[0].is_nan(), "NaN-first must propagate, got {}", out[0]);
+        assert_eq!(cache.argmax[0], 0);
+        let dh = masked_reduce_bwd(&[1.5], &mask, 1, 3, 1, Red::Max, &cache, scr);
+        assert_eq!(dh, vec![1.5, 0.0, 0.0]);
+    });
+}
+
+#[test]
+fn masked_max_nan_later_is_ignored() {
+    with_scratch(|scr| {
+        let h = [2.0f32, f32::NAN, 5.0];
+        let mask = [1.0f32, 1.0, 1.0];
+        let (out, cache) = masked_reduce(&h, &mask, 1, 3, 1, Red::Max, scr);
+        assert_eq!(out[0], 5.0);
+        assert_eq!(cache.argmax[0], 2);
+    });
+}
+
+#[test]
+fn masked_max_tie_picks_earliest_index() {
+    with_scratch(|scr| {
+        let h = [3.0f32, 3.0];
+        let mask = [1.0f32, 1.0];
+        let (out, cache) = masked_reduce(&h, &mask, 1, 2, 1, Red::Max, scr);
+        assert_eq!(out[0], 3.0);
+        assert_eq!(cache.argmax[0], 0, "strict > must keep the earliest winner");
+        let dh = masked_reduce_bwd(&[1.0], &mask, 1, 2, 1, Red::Max, &cache, scr);
+        assert_eq!(dh, vec![1.0, 0.0], "tie gradient flows to one item only");
+    });
+}
+
+#[test]
+fn all_masked_group_reduces_to_zero_with_empty_argmax() {
+    with_scratch(|scr| {
+        let h = [7.0f32, -2.0, 9.0, 1.0];
+        let mask = [0.0f32, 0.0, 1.0, 1.0]; // group 0 fully masked out
+        for red in [Red::Sum, Red::Mean, Red::Max] {
+            let (out, cache) = masked_reduce(&h, &mask, 2, 2, 1, red, scr);
+            assert_eq!(out[0], 0.0, "{red:?}: empty group must reduce to 0");
+            if red == Red::Max {
+                assert_eq!(cache.argmax[0], usize::MAX);
+                assert_ne!(cache.argmax[1], usize::MAX);
+            }
+            let dh = masked_reduce_bwd(&[1.0, 1.0], &mask, 2, 2, 1, red, &cache, scr);
+            assert_eq!(&dh[..2], &[0.0, 0.0], "{red:?}: no gradient into a masked-out group");
+            cache.recycle(scr);
+        }
+    });
+}
+
+#[test]
+fn degenerate_shapes_l0_and_n0() {
+    with_scratch(|scr| {
+        // l = 0: zero channels, outputs are empty but counts still tally
+        let mask = [1.0f32, 0.0];
+        let (out, cache) = masked_reduce(&[], &mask, 1, 2, 0, Red::Max, scr);
+        assert!(out.is_empty());
+        assert_eq!(cache.count[0], 1.0);
+        let dh = masked_reduce_bwd(&[], &mask, 1, 2, 0, Red::Max, &cache, scr);
+        assert!(dh.is_empty());
+        cache.recycle(scr);
+
+        // n = 0: zero items per group, every group is empty
+        for red in [Red::Sum, Red::Mean, Red::Max] {
+            let (out, cache) = masked_reduce(&[], &[], 2, 0, 3, red, scr);
+            assert_eq!(out, vec![0.0f32; 6], "{red:?}: n=0 groups reduce to 0");
+            assert_eq!(cache.count, vec![0.0f32, 0.0]);
+            let dh = masked_reduce_bwd(&[1.0; 6], &[], 2, 0, 3, red, &cache, scr);
+            assert!(dh.is_empty());
+            cache.recycle(scr);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// table_cost intra-op split: bit-identity, budgets, panic containment
+// ---------------------------------------------------------------------
+
+fn rt_with_intra(intra: usize) -> Runtime {
+    Runtime::with_backend(reference_manifest(), Box::new(ReferenceBackend::with_intra_op(intra)))
+}
+
+/// Deterministic `table_cost` inputs for an arbitrary row count `n`
+/// (execution is shape-polymorphic: dims are read from the inputs).
+fn table_cost_inputs(rt: &Runtime, n: usize, seed: u64) -> Vec<Value> {
+    let mut rng = Rng::new(seed);
+    let theta = rt.init_params("cost", &mut rng).unwrap();
+    let f = rt.manifest.consts["F"] as usize;
+    let mut feats = TensorF32::zeros(&[n, f]);
+    for x in feats.data.iter_mut() {
+        *x = rng.uniform(0.0, 1.0) as f32;
+    }
+    vec![
+        TensorF32::from_vec(theta, &[rt.manifest.params["cost"].total]).value(),
+        feats.value(),
+        TensorF32::ones(&[f]).value(),
+    ]
+}
+
+#[test]
+fn table_cost_split_is_bit_identical_across_widths() {
+    // odd n: chunks of unequal size, last one short
+    let n = 3 * INTRA_OP_MIN_ROWS + 7;
+    let serial = {
+        let rt = rt_with_intra(1);
+        let out = rt.run("table_cost", &table_cost_inputs(&rt, n, 5)).unwrap();
+        to_f32_vec(&out[0], n).unwrap()
+    };
+    for intra in [2usize, 4] {
+        let rt = rt_with_intra(intra);
+        let before = rt.run_count_for("table_cost");
+        let out = rt.run("table_cost", &table_cost_inputs(&rt, n, 5)).unwrap();
+        let got = to_f32_vec(&out[0], n).unwrap();
+        assert_bits(&got, &serial, &format!("table_cost intra={intra}"));
+        assert_eq!(
+            rt.run_count_for("table_cost") - before,
+            1,
+            "a split dispatch is ONE logical call, not {intra}"
+        );
+    }
+}
+
+#[test]
+fn table_cost_below_threshold_stays_serial_and_identical() {
+    let n = INTRA_OP_MIN_ROWS - 1;
+    let serial = {
+        let rt = rt_with_intra(1);
+        let out = rt.run("table_cost", &table_cost_inputs(&rt, n, 6)).unwrap();
+        to_f32_vec(&out[0], n).unwrap()
+    };
+    let rt = rt_with_intra(4);
+    let out = rt.run("table_cost", &table_cost_inputs(&rt, n, 6)).unwrap();
+    assert_bits(&to_f32_vec(&out[0], n).unwrap(), &serial, "below-threshold table_cost");
+}
+
+#[test]
+fn default_runtime_split_matches_serial_reference() {
+    // Runtime::reference() wires intra_op from DREAMSHARD_WORKERS — CI
+    // runs this suite at 1 and 4 workers, so this covers the env path
+    let n = rt_with_intra(1).manifest.artifact_meta("table_cost", "N").unwrap() as usize;
+    let serial = {
+        let rt = rt_with_intra(1);
+        let out = rt.run("table_cost", &table_cost_inputs(&rt, n, 11)).unwrap();
+        to_f32_vec(&out[0], n).unwrap()
+    };
+    let rt = Runtime::reference();
+    let out = rt.run("table_cost", &table_cost_inputs(&rt, n, 11)).unwrap();
+    assert_bits(&to_f32_vec(&out[0], n).unwrap(), &serial, "default-runtime table_cost");
+}
+
+#[test]
+fn panicking_split_surfaces_one_error_and_pool_survives() {
+    let rt = rt_with_intra(4);
+    let n = 4 * INTRA_OP_MIN_ROWS;
+    let f = rt.manifest.consts["F"] as usize;
+    // theta far too short: every shard's kernel slices out of bounds and
+    // panics; the scoped join must re-raise exactly ONE panic, which the
+    // session worker converts to exactly one Err
+    let bad = vec![
+        TensorF32::from_vec(vec![0.0f32; 8], &[8]).value(),
+        TensorF32::zeros(&[n, f]).value(),
+        TensorF32::ones(&[f]).value(),
+    ];
+    let err = rt.run("table_cost", &bad).expect_err("short theta must panic inside the kernel");
+    assert!(err.to_string().contains("panicked"), "unexpected error: {err}");
+    assert_eq!(rt.run_count_for("table_cost"), 1, "panicked dispatch still counted once");
+
+    // the pool survives: a valid run on the same runtime succeeds
+    let out = rt.run("table_cost", &table_cost_inputs(&rt, n, 12)).unwrap();
+    let got = to_f32_vec(&out[0], n).unwrap();
+    assert!(got.iter().all(|x| x.is_finite()));
+    assert_eq!(rt.run_count_for("table_cost"), 2);
+}
